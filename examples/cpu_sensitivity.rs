@@ -1,0 +1,70 @@
+//! CPU single-thread sensitivity sweep (paper §VI, generalized).
+//!
+//! The paper compares two concrete hosts; this example sweeps a
+//! continuum of single-thread speeds around them (same GPU) to show
+//! that for host-bound workloads CPU speed is a first-order design
+//! parameter — and how the effect is gated by HDBI.
+//!
+//! ```bash
+//! cargo run --release --example cpu_sensitivity
+//! ```
+
+use taxbreak::hardware::Platform;
+use taxbreak::models;
+use taxbreak::sim::{simulate_summary, Workload};
+use taxbreak::util::table::{ms, Table};
+
+fn main() -> anyhow::Result<()> {
+    let speeds = [0.8, 1.0, 1.15, 1.3, 1.5, 2.0];
+
+    for (model, wl, label) in [
+        (
+            models::llama_1b(),
+            Workload::decode(1, 512, 10),
+            "Llama-3.2-1B decode BS=1/SL=512 (host-visible)",
+        ),
+        (
+            models::llama_1b(),
+            Workload::prefill(4, 2048),
+            "Llama-3.2-1B prefill BS=4/SL=2048 (device-bound)",
+        ),
+        (
+            models::qwen_moe(),
+            Workload::decode(1, 512, 10),
+            "Qwen1.5-MoE decode BS=1/SL=512 (host-bound)",
+        ),
+    ] {
+        let mut t = Table::new(
+            &format!("CPU single-thread sweep — {label}"),
+            &["st speed", "e2e (ms)", "host busy (ms)", "device (ms)", "e2e gain vs 1.0x"],
+        );
+        let base = {
+            let mut p = Platform::h100();
+            p.cpu.st_speed = 1.0;
+            simulate_summary(&model, &p, &wl, 2026).wall_us
+        };
+        for &s in &speeds {
+            let mut p = Platform::h100();
+            p.cpu.st_speed = s;
+            p.cpu.name = format!("hypothetical x{s:.2} single-thread");
+            let sum = simulate_summary(&model, &p, &wl, 2026);
+            t.row(vec![
+                format!("{s:.2}x"),
+                ms(sum.wall_us / 1000.0),
+                ms(sum.host_busy_us / 1000.0),
+                ms(sum.device_active_us / 1000.0),
+                format!("{:+.1}%", 100.0 * (1.0 - sum.wall_us / base)),
+            ]);
+        }
+        print!("{}", t.render());
+        println!();
+    }
+
+    println!(
+        "Takeaway #5: host-bound workloads (MoE decode) convert CPU \
+         single-thread speed into end-to-end latency almost 1:1, while \
+         device-bound points are insensitive — additional *cores* would \
+         help neither (eager dispatch is single-threaded)."
+    );
+    Ok(())
+}

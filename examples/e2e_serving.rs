@@ -1,0 +1,59 @@
+//! End-to-end driver: the full three-layer stack on a real workload.
+//!
+//! Loads the AOT-compiled model (JAX L2 + Pallas L1, lowered to HLO
+//! text by `make artifacts`), serves a batched synthetic request mix
+//! through the rust coordinator (continuous batcher + paged-KV
+//! admission over PJRT), reports latency/throughput KPIs (TTFT/TPOT,
+//! tok/s), measures the real null-executable launch floor, and runs
+//! the TaxBreak host/device split on the captured real trace.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_serving
+//! ```
+//!
+//! Results are recorded in EXPERIMENTS.md §Real-mode.
+
+use std::path::Path;
+
+use taxbreak::serving::run_server_demo;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "artifacts".to_string());
+    anyhow::ensure!(
+        Path::new(&dir).join("index.json").exists(),
+        "no artifacts at {dir}/ — run `make artifacts` first"
+    );
+
+    println!("=== dense (fused Pallas attention) ===");
+    let dense = run_server_demo(Path::new(&dir), "dense_fused", 16, 4, 2026)?;
+    print!("{}", dense.render());
+
+    println!("\n=== MoE (grouped Pallas expert FFN) ===");
+    let moe = run_server_demo(Path::new(&dir), "moe", 16, 4, 2026)?;
+    print!("{}", moe.render());
+
+    println!("\n=== comparison ===");
+    println!(
+        "throughput: dense {:.1} tok/s vs moe {:.1} tok/s ({:.2}x)",
+        dense.throughput_tps(),
+        moe.throughput_tps(),
+        dense.throughput_tps() / moe.throughput_tps().max(1e-9)
+    );
+    println!(
+        "TPOT: dense {:.2} ms vs moe {:.2} ms",
+        dense.tpot_us.mean / 1000.0,
+        moe.tpot_us.mean / 1000.0
+    );
+    println!(
+        "HDBI (real): dense {:.2} vs moe {:.2}",
+        dense.hdbi(),
+        moe.hdbi()
+    );
+    println!(
+        "real launch floor: dense-run {:.1} us / moe-run {:.1} us",
+        dense.null_floor_us.mean, moe.null_floor_us.mean
+    );
+    Ok(())
+}

@@ -1,0 +1,101 @@
+//! MoE diagnosis walkthrough: why aggregate metrics mislead, and how
+//! the TaxBreak decomposition finds the real optimization target.
+//!
+//! Compares Llama-3.2-1B (dense) with OLMoE-1B/7B (similar *active*
+//! parameter count) at the same decode point, showing: the fragmentation
+//! statistics (Table II style), the misleading aggregate views, the
+//! decomposition, and the resulting prescriptions.
+//!
+//! ```bash
+//! cargo run --release --example moe_diagnosis
+//! ```
+
+use taxbreak::hardware::Platform;
+use taxbreak::kernels::KernelDb;
+use taxbreak::models;
+use taxbreak::sim::{simulate, Workload};
+use taxbreak::taxbreak::{analyze, ReplayConfig, SimReplayBackend};
+use taxbreak::util::table::{count, Table};
+
+fn main() -> anyhow::Result<()> {
+    let platform = Platform::h100();
+    let wl = Workload::decode(4, 2048, 10);
+
+    let dense = models::llama_1b();
+    let moe = models::olmoe();
+    println!(
+        "comparing {} ({:.1}B params) vs {} ({:.1}B total / {:.1}B active)\n",
+        dense.display,
+        dense.params_total() / 1e9,
+        moe.display,
+        moe.params_total() / 1e9,
+        moe.params_active() / 1e9
+    );
+
+    let mut rows: Vec<(String, Vec<String>)> = Vec::new();
+    let mut analyses = Vec::new();
+    for model in [&dense, &moe] {
+        let trace = simulate(model, &platform, &wl, 2026);
+        let db = KernelDb::from_trace(&trace);
+        let mut backend = SimReplayBackend::new(platform.clone(), 7);
+        let a = analyze(&trace, &mut backend, &ReplayConfig::paper());
+        rows.push((
+            model.display.clone(),
+            vec![
+                count(db.total_invocations()),
+                db.unique_names().to_string(),
+                format!("{:.4}", db.diversity_ratio()),
+                format!("{:.1}ms", trace.e2e_us() / 1000.0),
+                format!("{:.1}%", 100.0 * a.decomposition.gpu_utilization()),
+                format!("{:.2}", a.decomposition.hdbi()),
+            ],
+        ));
+        analyses.push((model.display.clone(), a));
+    }
+
+    let mut t = Table::new(
+        "decode BS=4/SL=2048 (m=10) on H100",
+        &["model", "launches", "unique", "diversity", "e2e", "GPU util", "HDBI"],
+    );
+    for (name, cells) in &rows {
+        let mut row = vec![name.clone()];
+        row.extend(cells.iter().cloned());
+        t.row(row);
+    }
+    print!("{}", t.render());
+
+    println!("\n--- what the aggregate views say ---");
+    for (name, a) in &analyses {
+        println!(
+            "{name}: framework tax {:.0} ms (residual — no attribution); \
+             TKLQT {:.0} ms (launch path only)",
+            a.baselines.framework_tax_us / 1000.0,
+            a.baselines.tklqt_us / 1000.0
+        );
+    }
+
+    println!("\n--- what TaxBreak attributes ---");
+    for (name, a) in &analyses {
+        let d = &a.decomposition;
+        println!(
+            "{name}: dFT {:.0} ms ({:.0}%) | dCT {:.0} ms ({:.0}%) | dKT {:.0} ms ({:.0}%)",
+            d.dft_us() / 1000.0,
+            100.0 * a.diagnosis.shares.0,
+            d.dct_us / 1000.0,
+            100.0 * a.diagnosis.shares.1,
+            d.dkt_us / 1000.0,
+            100.0 * a.diagnosis.shares.2,
+        );
+        println!("  -> [{}] {}", a.diagnosis.target.as_str(), a.diagnosis.rationale);
+    }
+
+    println!(
+        "\nKey takeaway #2: the MoE dispatches {}x more kernels per token \
+         from a *smaller* relative kernel vocabulary — fix the expert \
+         dispatch loop (fusion/grouped experts), not the memory system.",
+        (rows[1].1[0].replace(',', "").parse::<f64>().unwrap()
+            / rows[0].1[0].replace(',', "").parse::<f64>().unwrap())
+        .round()
+    );
+    Ok(())
+}

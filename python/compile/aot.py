@@ -1,0 +1,269 @@
+"""AOT pipeline: lower the L2 model to HLO text + weights for rust/PJRT.
+
+Interchange is HLO *text*, not serialized ``HloModuleProto``: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` 0.1.6 rust crate links) rejects
+(``proto.id() <= INT_MAX``).  The text parser reassigns ids and
+round-trips cleanly — see /opt/xla-example/load_hlo/.
+
+Outputs, per (variant, entry, bucket):
+
+* ``artifacts/<name>.hlo.txt``       — the lowered computation
+* ``artifacts/<name>.manifest.json`` — positional input/output specs
+* ``artifacts/<variant>.params.bin`` — flat little-endian f32 weights
+* ``artifacts/<variant>.params.json``— name/shape/offset table
+* ``artifacts/index.json``           — everything above, for discovery
+
+Weights are passed as *inputs* (not folded constants) so HLO text stays
+small and one weights file serves every bucket of a variant.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts [--variant moe]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import struct
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# (batch, seq) buckets compiled for prefill; decode is bucketed by batch
+# only (the KV cache is always max_seq-sized).
+PREFILL_BUCKETS: List[Tuple[int, int]] = [(1, 32), (1, 64), (4, 32), (4, 64)]
+DECODE_BUCKETS: List[int] = [1, 4]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(name: str, shape: Tuple[int, ...], dtype: str) -> Dict:
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def _param_structs(cfg: M.ModelConfig):
+    return [
+        jax.ShapeDtypeStruct(shape, jnp.float32) for _, shape in M.param_specs(cfg)
+    ]
+
+
+def _make_prefill_fn(cfg: M.ModelConfig):
+    names = [n for n, _ in M.param_specs(cfg)]
+
+    def fn(*args):
+        params = dict(zip(names, args[: len(names)]))
+        tokens = args[len(names)]
+        return M.prefill(cfg, params, tokens)
+
+    return fn
+
+
+def _make_decode_fn(cfg: M.ModelConfig):
+    names = [n for n, _ in M.param_specs(cfg)]
+
+    def fn(*args):
+        params = dict(zip(names, args[: len(names)]))
+        cache, pos, tokens = args[len(names) :]
+        return M.decode_step(cfg, params, cache, pos, tokens)
+
+    return fn
+
+
+def lower_prefill(cfg: M.ModelConfig, batch: int, seq: int) -> Tuple[str, Dict]:
+    fn = _make_prefill_fn(cfg)
+    args = _param_structs(cfg) + [jax.ShapeDtypeStruct((batch, seq), jnp.int32)]
+    lowered = jax.jit(fn).lower(*args)
+    inputs = [
+        _spec(n, s, "f32") for n, s in M.param_specs(cfg)
+    ] + [_spec("tokens", (batch, seq), "i32")]
+    outputs = [
+        _spec("logits", (batch, seq, cfg.vocab), "f32"),
+        _spec("cache", M.cache_shape(cfg, batch), "f32"),
+    ]
+    return to_hlo_text(lowered), {"inputs": inputs, "outputs": outputs}
+
+
+def lower_decode(cfg: M.ModelConfig, batch: int) -> Tuple[str, Dict]:
+    fn = _make_decode_fn(cfg)
+    n_params = len(M.param_specs(cfg))
+    args = _param_structs(cfg) + [
+        jax.ShapeDtypeStruct(M.cache_shape(cfg, batch), jnp.float32),
+        jax.ShapeDtypeStruct((1,), jnp.int32),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+    ]
+    # Donate the KV cache: lowers to input_output_alias in the HLO, so
+    # PJRT updates the cache in place instead of copying it every step
+    # (EXPERIMENTS.md §Perf L2.1).
+    lowered = jax.jit(fn, donate_argnums=(n_params,)).lower(*args)
+    inputs = (
+        [_spec(n, s, "f32") for n, s in M.param_specs(cfg)]
+        + [
+            _spec("cache", M.cache_shape(cfg, batch), "f32"),
+            _spec("pos", (1,), "i32"),
+            _spec("tokens", (batch,), "i32"),
+        ]
+    )
+    outputs = [
+        _spec("logits", (batch, cfg.vocab), "f32"),
+        _spec("cache", M.cache_shape(cfg, batch), "f32"),
+    ]
+    return to_hlo_text(lowered), {"inputs": inputs, "outputs": outputs}
+
+
+def lower_null() -> Tuple[str, Dict]:
+    """The null-kernel floor probe (paper §III-B / Table III analog)."""
+    lowered = jax.jit(M.null_kernel).lower(jax.ShapeDtypeStruct((8,), jnp.float32))
+    return to_hlo_text(lowered), {
+        "inputs": [_spec("x", (8,), "f32")],
+        "outputs": [_spec("y", (8,), "f32")],
+    }
+
+
+def write_params(cfg: M.ModelConfig, variant: str, out_dir: str, seed: int) -> Dict:
+    """Serialize weights: flat LE f32 bin + offset table json."""
+    params = M.init_params(cfg, seed=seed)
+    entries = []
+    offset = 0
+    bin_path = os.path.join(out_dir, f"{variant}.params.bin")
+    with open(bin_path, "wb") as f:
+        for name, shape in M.param_specs(cfg):
+            arr = np.asarray(params[name], dtype="<f4")
+            assert tuple(arr.shape) == tuple(shape), (name, arr.shape, shape)
+            data = arr.tobytes()
+            entries.append(
+                {
+                    "name": name,
+                    "shape": list(shape),
+                    "offset": offset,
+                    "bytes": len(data),
+                }
+            )
+            f.write(data)
+            offset += len(data)
+    table = {"variant": variant, "total_bytes": offset, "params": entries}
+    with open(os.path.join(out_dir, f"{variant}.params.json"), "w") as f:
+        json.dump(table, f, indent=1)
+    return table
+
+
+def _config_dict(cfg: M.ModelConfig) -> Dict:
+    return dataclasses.asdict(cfg)
+
+
+def build(out_dir: str, variants: List[str], seed: int = 0) -> Dict:
+    os.makedirs(out_dir, exist_ok=True)
+    # Merge with any existing index so `--variant X` refreshes one
+    # variant without orphaning the others' entries.
+    index = {"artifacts": [], "params": []}
+    index_path = os.path.join(out_dir, "index.json")
+    if os.path.exists(index_path):
+        with open(index_path) as f:
+            old = json.load(f)
+        index["artifacts"] = [
+            a for a in old.get("artifacts", [])
+            if a != "null_kernel" and a.rsplit("_prefill", 1)[0].rsplit("_decode", 1)[0]
+            not in variants
+        ]
+        index["params"] = [
+            p for p in old.get("params", []) if p.removesuffix(".params") not in variants
+        ]
+
+    hlo, io = lower_null()
+    name = "null_kernel"
+    _write_artifact(out_dir, name, hlo, io, entry="null", variant="", batch=0, seq=0)
+    index["artifacts"].append(name)
+
+    for variant in variants:
+        cfg = M.VARIANTS[variant]
+        write_params(cfg, variant, out_dir, seed)
+        index["params"].append(f"{variant}.params")
+
+        for batch, seq in PREFILL_BUCKETS:
+            name = f"{variant}_prefill_b{batch}_s{seq}"
+            print(f"lowering {name} ...", flush=True)
+            hlo, io = lower_prefill(cfg, batch, seq)
+            _write_artifact(
+                out_dir, name, hlo, io,
+                entry="prefill", variant=variant, batch=batch, seq=seq,
+                config=_config_dict(cfg),
+            )
+            index["artifacts"].append(name)
+
+        for batch in DECODE_BUCKETS:
+            name = f"{variant}_decode_b{batch}"
+            print(f"lowering {name} ...", flush=True)
+            hlo, io = lower_decode(cfg, batch)
+            _write_artifact(
+                out_dir, name, hlo, io,
+                entry="decode", variant=variant, batch=batch, seq=cfg.max_seq,
+                config=_config_dict(cfg),
+            )
+            index["artifacts"].append(name)
+
+    with open(os.path.join(out_dir, "index.json"), "w") as f:
+        json.dump(index, f, indent=1)
+    return index
+
+
+def _write_artifact(
+    out_dir: str,
+    name: str,
+    hlo: str,
+    io: Dict,
+    *,
+    entry: str,
+    variant: str,
+    batch: int,
+    seq: int,
+    config: Dict | None = None,
+):
+    with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+        f.write(hlo)
+    manifest = {
+        "name": name,
+        "entry": entry,
+        "variant": variant,
+        "batch": batch,
+        "seq": seq,
+        "params_file": f"{variant}.params.bin" if variant else "",
+        "inputs": io["inputs"],
+        "outputs": io["outputs"],
+    }
+    if config is not None:
+        manifest["config"] = config
+    with open(os.path.join(out_dir, f"{name}.manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--variant",
+        action="append",
+        choices=sorted(M.VARIANTS),
+        help="restrict to specific variants (default: all)",
+    )
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    variants = args.variant or sorted(M.VARIANTS)
+    index = build(args.out_dir, variants, seed=args.seed)
+    print(f"wrote {len(index['artifacts'])} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Layer-1 Pallas kernels (build-time only).
+
+Kernels are authored for the TPU execution model (VMEM tiles + MXU
+matmuls via BlockSpec) but always lowered with ``interpret=True`` so the
+resulting HLO runs on the CPU PJRT client that the rust coordinator
+embeds.  Real-TPU efficiency is estimated structurally in DESIGN.md §8.
+"""
+
+from .attention import flash_attention
+from .moe import expert_ffn
+
+__all__ = ["flash_attention", "expert_ffn"]

@@ -1,0 +1,208 @@
+"""Fused attention Pallas kernel (FlashAttention-2 re-derived for TPU).
+
+The paper's Fig. 9 ablation contrasts eager multi-kernel attention with
+FlashAttention-2.  FA2 is a CUDA warp/threadblock kernel; per
+DESIGN.md §3 we re-derive its core insight for the TPU execution model:
+
+* the N x N score matrix is never materialized to HBM — each q-tile
+  holds online-softmax state (running max ``m``, normalizer ``l`` and
+  the weighted accumulator ``acc``) while streaming kv-tiles;
+* CUDA shared memory becomes VMEM tiles expressed through ``BlockSpec``;
+* tensor-core WMMA becomes MXU-shaped ``jnp.dot`` over
+  (block_q, d) x (d, block_k) tiles with f32 accumulation;
+* the CUDA grid over (batch*heads, q-blocks) becomes the Pallas grid,
+  and the kv stream is the innermost ``fori_loop``.
+
+Always lowered with ``interpret=True``: the CPU PJRT plugin cannot run
+Mosaic custom-calls, so interpret mode is the correctness path and real
+TPU efficiency is estimated structurally (DESIGN.md §8).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attention_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    kv_len_ref,
+    o_ref,
+    *,
+    block_q: int,
+    block_k: int,
+    seq_k: int,
+    causal: bool,
+    scale: float,
+):
+    """One (batch*head, q-block) grid step of the fused attention.
+
+    ``q_ref``: (block_q, d) VMEM tile of queries.
+    ``k_ref``/``v_ref``: (seq_k, d) — the kv stream for this head; tiles
+      of ``block_k`` rows are loaded per inner iteration (HBM->VMEM
+      schedule; on real TPU the BlockSpec pipeline double-buffers this).
+    ``kv_len_ref``: (1,) i32 — valid kv length (decode masks the tail of
+      a fixed-size cache; prefill passes seq_k).
+    ``o_ref``: (block_q, d) output tile.
+    """
+    q_blk = pl.program_id(1)
+    d = q_ref.shape[-1]
+
+    q = q_ref[...].astype(jnp.float32) * scale
+    kv_len = kv_len_ref[0]
+
+    num_kv_blocks = pl.cdiv(seq_k, block_k)
+    if causal:
+        # Blocks strictly above the diagonal contribute nothing; the
+        # upper bound for this q-block is the last kv-block that
+        # intersects row (q_blk+1)*block_q - 1.
+        hi = lax.min(
+            num_kv_blocks,
+            lax.div((q_blk + 1) * block_q + block_k - 1, block_k),
+        )
+    else:
+        hi = num_kv_blocks
+
+    def body(kv_blk, carry):
+        m_prev, l_prev, acc_prev = carry
+        k_tile = pl.load(k_ref, (pl.dslice(kv_blk * block_k, block_k), slice(None)))
+        v_tile = pl.load(v_ref, (pl.dslice(kv_blk * block_k, block_k), slice(None)))
+
+        # MXU matmul: (block_q, d) x (d, block_k).
+        s = jnp.dot(q, k_tile.astype(jnp.float32).T)
+
+        # Validity / causal masks on global indices.
+        k_idx = kv_blk * block_k + lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = k_idx < kv_len
+        if causal:
+            q_idx = q_blk * block_q + lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0
+            )
+            mask = jnp.logical_and(mask, k_idx <= q_idx)
+        s = jnp.where(mask, s, NEG_INF)
+
+        # Online softmax update (FA2 eq. 10-12).
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        # Re-mask explicitly: on a fully-masked tile m_new == NEG_INF and
+        # exp(s - m_new) would be exp(0) == 1 for the masked entries.
+        p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc_prev * alpha[:, None] + jnp.dot(
+            p, v_tile.astype(jnp.float32)
+        )
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((block_q,), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((block_q,), dtype=jnp.float32)
+    acc0 = jnp.zeros((block_q, d), dtype=jnp.float32)
+    m, l, acc = lax.fori_loop(0, hi, body, (m0, l0, acc0))
+
+    # Fully-masked rows (kv_len == 0, or causal rows past kv_len) have
+    # l == 0; emit zeros rather than NaN.
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    o_ref[...] = (acc / l_safe[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    kv_len=None,
+    causal: bool = True,
+    block_q: int = 32,
+    block_k: int = 32,
+    interpret: bool = True,
+):
+    """Fused multi-head attention.
+
+    Args:
+      q: (batch, heads, seq_q, d)
+      k, v: (batch, heads, seq_k, d)
+      kv_len: optional scalar i32 — number of valid kv positions
+        (decode over a fixed-size cache); defaults to ``seq_k``.
+      causal: apply a causal mask on absolute positions (prefill).
+      block_q / block_k: VMEM tile shapes (the HBM<->VMEM schedule).
+      interpret: must stay True for CPU-PJRT lowering.
+
+    Returns:
+      (batch, heads, seq_q, d) attention output in q's dtype.
+    """
+    batch, heads, seq_q, d = q.shape
+    seq_k = k.shape[2]
+    if k.shape != (batch, heads, seq_k, d) or v.shape != k.shape:
+        raise ValueError(f"shape mismatch: q={q.shape} k={k.shape} v={v.shape}")
+    block_q = min(block_q, seq_q)
+    block_k = min(block_k, seq_k)
+    if seq_q % block_q != 0 or seq_k % block_k != 0:
+        raise ValueError(
+            f"seq_q={seq_q} / seq_k={seq_k} must divide block_q={block_q} / "
+            f"block_k={block_k}"
+        )
+    scale = 1.0 / math.sqrt(d)
+
+    if kv_len is None:
+        kv_len = jnp.full((1,), seq_k, dtype=jnp.int32)
+    else:
+        kv_len = jnp.asarray(kv_len, dtype=jnp.int32).reshape((1,))
+
+    bh = batch * heads
+    q3 = q.reshape(bh, seq_q, d)
+    k3 = k.reshape(bh, seq_k, d)
+    v3 = v.reshape(bh, seq_k, d)
+
+    kernel = functools.partial(
+        _attention_kernel,
+        block_q=block_q,
+        block_k=block_k,
+        seq_k=seq_k,
+        causal=causal,
+        scale=scale,
+    )
+
+    grid = (bh, seq_q // block_q)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((None, seq_k, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((None, seq_k, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1,), lambda b, i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, seq_q, d), q.dtype),
+        interpret=interpret,
+    )(q3, k3, v3, kv_len)
+    return out.reshape(batch, heads, seq_q, d)
+
+
+def vmem_bytes(block_q: int, block_k: int, d: int, dtype_bytes: int = 4) -> int:
+    """Structural VMEM footprint of one grid step (DESIGN.md §8).
+
+    q-tile + k-tile + v-tile + acc + (m, l) state; used by the perf
+    report to estimate real-TPU residency/double-buffering headroom.
+    """
+    return (
+        block_q * d * dtype_bytes  # q tile
+        + block_k * d * dtype_bytes  # k tile
+        + block_k * d * dtype_bytes  # v tile
+        + block_q * d * 4  # f32 accumulator
+        + 2 * block_q * 4  # m, l
+    )
+
+
+def mxu_flops_per_step(block_q: int, block_k: int, d: int) -> int:
+    """MXU FLOPs per inner kv iteration: QK^T + PV matmuls."""
+    return 2 * block_q * block_k * d * 2

@@ -1,0 +1,92 @@
+"""Grouped expert-FFN Pallas kernel.
+
+MoE layers fragment execution into many small expert GEMMs — the very
+behaviour TaxBreak diagnoses (Table II: 8-11x more kernels per token).
+On the device side we implement the expert compute as ONE grouped
+kernel: the Pallas grid iterates over experts, and each grid step runs
+the expert's two MXU matmuls over its token tile held in VMEM.
+
+This is the TPU analog of grouped/batched expert GEMms (e.g.
+FlashDMoE): instead of E separate cuBLAS launches, a single kernel with
+an expert-indexed BlockSpec — exactly the "reduce N directly" remedy the
+paper's diagnostic prescribes for launch-floor-dominated workloads.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _expert_ffn_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    """One expert: o = gelu(x @ w1 + b1) @ w2 + b2.
+
+    ``x_ref``: (tokens, d) VMEM tile — this expert's token group.
+    ``w1_ref``: (d, hidden), ``w2_ref``: (hidden, d) weight tiles.
+    """
+    x = x_ref[...].astype(jnp.float32)
+    h = jnp.dot(x, w1_ref[...].astype(jnp.float32)) + b1_ref[...].astype(jnp.float32)
+    h = jax.nn.gelu(h)
+    o = jnp.dot(h, w2_ref[...].astype(jnp.float32)) + b2_ref[...].astype(jnp.float32)
+    o_ref[...] = o.astype(o_ref.dtype)
+
+
+def expert_ffn(
+    x: jax.Array,
+    w1: jax.Array,
+    b1: jax.Array,
+    w2: jax.Array,
+    b2: jax.Array,
+    *,
+    interpret: bool = True,
+):
+    """Run every expert's FFN over its token tile in one grouped kernel.
+
+    Args:
+      x:  (experts, tokens, d) — token tile per expert (dense routing:
+          every expert sees all tokens; the router mask zeroes the
+          non-selected combinations afterwards).
+      w1: (experts, d, hidden); b1: (experts, hidden)
+      w2: (experts, hidden, d); b2: (experts, d)
+
+    Returns:
+      (experts, tokens, d) expert outputs.
+    """
+    e, t, d = x.shape
+    hidden = w1.shape[-1]
+    if w1.shape != (e, d, hidden) or w2.shape != (e, hidden, d):
+        raise ValueError(f"weight shape mismatch: {w1.shape} / {w2.shape}")
+    if b1.shape != (e, hidden) or b2.shape != (e, d):
+        raise ValueError(f"bias shape mismatch: {b1.shape} / {b2.shape}")
+
+    out = pl.pallas_call(
+        _expert_ffn_kernel,
+        grid=(e,),
+        in_specs=[
+            pl.BlockSpec((None, t, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, d, hidden), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, hidden), lambda i: (i, 0)),
+            pl.BlockSpec((None, hidden, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, t, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, t, d), x.dtype),
+        interpret=interpret,
+    )(x, w1, b1, w2, b2)
+    return out
+
+
+def vmem_bytes(tokens: int, d: int, hidden: int, dtype_bytes: int = 4) -> int:
+    """Structural VMEM footprint of one expert grid step."""
+    return (
+        tokens * d * dtype_bytes  # x tile
+        + d * hidden * dtype_bytes  # w1
+        + hidden * dtype_bytes  # b1
+        + hidden * d * dtype_bytes  # w2
+        + d * dtype_bytes  # b2
+        + tokens * hidden * 4  # h intermediate
+        + tokens * d * 4  # out
+    )

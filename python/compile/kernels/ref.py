@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the "eager" reference implementations: they materialize the
+full N x N attention matrix (the behaviour FlashAttention-2 removes) and
+run each expert FFN as separate dense ops.  pytest checks the Pallas
+kernels against these with ``assert_allclose`` across shape/dtype sweeps
+(hypothesis), and the L2 model's ``attention_impl="eager"`` variant uses
+them directly — giving the real-mode Fig. 9 comparison.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    kv_len=None,
+    causal: bool = True,
+):
+    """Eager attention: scores -> mask -> softmax -> weighted sum.
+
+    Shapes as in ``flash_attention``: q (B,H,Sq,D), k/v (B,H,Sk,D).
+    Materializes the (Sq, Sk) score matrix per head — the HBM
+    round-trip FA2 eliminates.
+    """
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    scale = 1.0 / math.sqrt(d)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+
+    k_idx = jnp.arange(sk)[None, :]
+    if kv_len is None:
+        valid = jnp.ones((1, sk), dtype=bool)
+    else:
+        valid = k_idx < jnp.asarray(kv_len, dtype=jnp.int32).reshape(())
+    mask = jnp.broadcast_to(valid, (sq, sk))
+    if causal:
+        q_idx = jnp.arange(sq)[:, None]
+        mask = jnp.logical_and(mask, k_idx <= q_idx)
+    s = jnp.where(mask[None, None], s, NEG_INF)
+
+    # Guard fully-masked rows against NaN, matching the kernel.
+    row_any = jnp.any(mask, axis=-1)[None, None, :, None]
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(row_any, p, 0.0)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def expert_ffn_ref(x, w1, b1, w2, b2):
+    """Per-expert eager FFN: E separate (gelu(x@w1+b1))@w2+b2 chains."""
+    outs = []
+    for i in range(x.shape[0]):
+        h = jax.nn.gelu(
+            x[i].astype(jnp.float32) @ w1[i].astype(jnp.float32)
+            + b1[i].astype(jnp.float32)
+        )
+        outs.append(h @ w2[i].astype(jnp.float32) + b2[i].astype(jnp.float32))
+    return jnp.stack(outs).astype(x.dtype)

@@ -1,0 +1,296 @@
+"""Layer-2 JAX model: small dense / MoE transformer for the real-mode path.
+
+The rust coordinator serves these models through PJRT (see
+``rust/src/runtime``): ``prefill`` and ``decode_step`` are AOT-lowered by
+``aot.py`` to HLO text, once per (variant, batch, seq) bucket.  Weights
+are *inputs* (not baked constants) so the HLO stays small; ``aot.py``
+serializes them to a flat binary the rust side memory-maps.
+
+Three variants map to the paper's workload axes:
+
+* ``dense_fused`` — dense transformer, Pallas fused attention (the
+  FA2-on-TPU kernel from ``kernels.attention``).
+* ``dense_eager`` — identical weights/architecture, eager attention from
+  ``kernels.ref`` (materializes the score matrix).  The Fig. 9 pair.
+* ``moe``         — top-k routed MoE FFN via the grouped Pallas expert
+  kernel (``kernels.moe``), the fragmentation workload of Table II.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels.attention import flash_attention
+from .kernels.moe import expert_ffn
+from .kernels.ref import attention_ref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture descriptor. Defaults give a ~0.6 M-param model whose
+    HLO artifacts stay small enough for text interchange."""
+
+    vocab: int = 256
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    head_dim: int = 32
+    ffn_hidden: int = 512
+    max_seq: int = 128
+    n_experts: int = 0  # 0 => dense FFN
+    top_k: int = 2
+    expert_hidden: int = 256
+    attention_impl: str = "fused"  # "fused" | "eager"
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def qkv_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+
+DENSE_FUSED = ModelConfig(attention_impl="fused")
+DENSE_EAGER = ModelConfig(attention_impl="eager")
+MOE = ModelConfig(n_experts=4, top_k=2, attention_impl="fused")
+
+VARIANTS: Dict[str, ModelConfig] = {
+    "dense_fused": DENSE_FUSED,
+    "dense_eager": DENSE_EAGER,
+    "moe": MOE,
+}
+
+
+def param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Deterministic (name, shape) list — the flat weights-file order."""
+    specs: List[Tuple[str, Tuple[int, ...]]] = [
+        ("tok_emb", (cfg.vocab, cfg.d_model)),
+        ("pos_emb", (cfg.max_seq, cfg.d_model)),
+    ]
+    for i in range(cfg.n_layers):
+        p = f"l{i}."
+        specs += [
+            (p + "ln1", (cfg.d_model,)),
+            (p + "wq", (cfg.d_model, cfg.qkv_dim)),
+            (p + "wk", (cfg.d_model, cfg.qkv_dim)),
+            (p + "wv", (cfg.d_model, cfg.qkv_dim)),
+            (p + "wo", (cfg.qkv_dim, cfg.d_model)),
+            (p + "ln2", (cfg.d_model,)),
+        ]
+        if cfg.is_moe:
+            specs += [
+                (p + "router", (cfg.d_model, cfg.n_experts)),
+                (p + "exp_w1", (cfg.n_experts, cfg.d_model, cfg.expert_hidden)),
+                (p + "exp_b1", (cfg.n_experts, cfg.expert_hidden)),
+                (p + "exp_w2", (cfg.n_experts, cfg.expert_hidden, cfg.d_model)),
+                (p + "exp_b2", (cfg.n_experts, cfg.d_model)),
+            ]
+        else:
+            specs += [
+                (p + "ffn_w1", (cfg.d_model, cfg.ffn_hidden)),
+                (p + "ffn_b1", (cfg.ffn_hidden,)),
+                (p + "ffn_w2", (cfg.ffn_hidden, cfg.d_model)),
+                (p + "ffn_b2", (cfg.d_model,)),
+            ]
+    specs += [
+        ("ln_f", (cfg.d_model,)),
+        ("lm_head", (cfg.d_model, cfg.vocab)),
+    ]
+    return specs
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, jax.Array]:
+    """Scaled-normal init; norm gains start at 1."""
+    key = jax.random.PRNGKey(seed)
+    params: Dict[str, jax.Array] = {}
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("ln1", "ln2", "ln_f")):
+            params[name] = jnp.ones(shape, dtype=jnp.float32)
+        elif name.endswith(("_b1", "_b2")) or ".ffn_b" in name:
+            params[name] = jnp.zeros(shape, dtype=jnp.float32)
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            params[name] = (
+                jax.random.normal(sub, shape, dtype=jnp.float32)
+                * (1.0 / jnp.sqrt(fan_in))
+            )
+    return params
+
+
+def cache_shape(cfg: ModelConfig, batch: int) -> Tuple[int, ...]:
+    """(layers, k/v, batch, max_seq, heads, head_dim) KV cache."""
+    return (cfg.n_layers, 2, batch, cfg.max_seq, cfg.n_heads, cfg.head_dim)
+
+
+def _rmsnorm(x: jax.Array, g: jax.Array) -> jax.Array:
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + 1e-6) * g
+
+
+def _split_heads(x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """(B, S, H*D) -> (B, H, S, D)."""
+    b, s, _ = x.shape
+    return x.reshape(b, s, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:
+    """(B, H, S, D) -> (B, S, H*D)."""
+    b, h, s, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * d)
+
+
+def _attention(cfg: ModelConfig, q, k, v, *, kv_len=None, causal: bool):
+    if cfg.attention_impl == "fused":
+        return flash_attention(q, k, v, kv_len=kv_len, causal=causal)
+    return attention_ref(q, k, v, kv_len=kv_len, causal=causal)
+
+
+def _top_k(probs: jax.Array, k: int):
+    """Iterative argmax top-k.
+
+    ``lax.top_k`` lowers to an HLO ``topk(..., largest=true)`` custom
+    attribute that xla_extension 0.5.1's text parser rejects; k rounds
+    of argmax + one-hot masking lower to plain reduce/select/gather ops
+    that round-trip cleanly (k <= 2 for the artifact models).
+    """
+    vals, idxs = [], []
+    p = probs
+    for _ in range(k):
+        i = jnp.argmax(p, axis=-1)  # (T,)
+        v = jnp.take_along_axis(p, i[:, None], axis=-1)[:, 0]
+        vals.append(v)
+        idxs.append(i)
+        p = p * (1.0 - jax.nn.one_hot(i, p.shape[-1], dtype=p.dtype))
+    return jnp.stack(vals, axis=-1), jnp.stack(idxs, axis=-1)
+
+
+def _moe_ffn(cfg: ModelConfig, params, prefix: str, x2d: jax.Array) -> jax.Array:
+    """Top-k routed MoE FFN over tokens x2d: (T, d) -> (T, d).
+
+    Routing uses dense combine (every expert computes every token via
+    the grouped Pallas kernel; router weights zero the non-selected
+    pairs).  For the tiny artifact models E is small, and this keeps
+    shapes static for AOT lowering.
+    """
+    logits = x2d @ params[prefix + "router"]  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = _top_k(probs, cfg.top_k)  # (T, K)
+    topv = topv / jnp.sum(topv, axis=-1, keepdims=True)
+    onehot = jax.nn.one_hot(topi, cfg.n_experts, dtype=x2d.dtype)  # (T, K, E)
+    w_full = jnp.einsum("tk,tke->te", topv, onehot)  # (T, E)
+
+    xe = jnp.broadcast_to(x2d[None], (cfg.n_experts,) + x2d.shape)
+    outs = expert_ffn(
+        xe,
+        params[prefix + "exp_w1"],
+        params[prefix + "exp_b1"],
+        params[prefix + "exp_w2"],
+        params[prefix + "exp_b2"],
+    )  # (E, T, d)
+    return jnp.einsum("te,etd->td", w_full, outs)
+
+
+def _dense_ffn(params, prefix: str, x2d: jax.Array) -> jax.Array:
+    h = jax.nn.gelu(x2d @ params[prefix + "ffn_w1"] + params[prefix + "ffn_b1"])
+    return h @ params[prefix + "ffn_w2"] + params[prefix + "ffn_b2"]
+
+
+def _ffn(cfg: ModelConfig, params, prefix: str, x: jax.Array) -> jax.Array:
+    b, s, d = x.shape
+    x2d = x.reshape(b * s, d)
+    y = _moe_ffn(cfg, params, prefix, x2d) if cfg.is_moe else _dense_ffn(
+        params, prefix, x2d
+    )
+    return y.reshape(b, s, d)
+
+
+def prefill(cfg: ModelConfig, params: Dict[str, jax.Array], tokens: jax.Array):
+    """Process the prompt; return (logits (B,S,vocab), cache).
+
+    The cache is sized at ``cfg.max_seq`` so decode artifacts are
+    bucket-independent: positions >= S are zero and masked by decode's
+    kv_len.
+    """
+    b, s = tokens.shape
+    x = params["tok_emb"][tokens] + params["pos_emb"][None, :s]
+    cache = jnp.zeros(cache_shape(cfg, b), dtype=jnp.float32)
+
+    for i in range(cfg.n_layers):
+        p = f"l{i}."
+        h = _rmsnorm(x, params[p + "ln1"])
+        q = _split_heads(h @ params[p + "wq"], cfg)
+        k = _split_heads(h @ params[p + "wk"], cfg)
+        v = _split_heads(h @ params[p + "wv"], cfg)
+
+        # Persist k/v into the fixed-size cache at positions [0, S).
+        kv = jnp.stack([k, v])  # (2, B, H, S, D)
+        kv = kv.transpose(0, 1, 3, 2, 4)  # (2, B, S, H, D)
+        cache = lax.dynamic_update_slice(cache, kv[None], (i, 0, 0, 0, 0, 0))
+
+        att = _attention(cfg, q, k, v, causal=True)
+        x = x + _merge_heads(att) @ params[p + "wo"]
+        x = x + _ffn(cfg, params, p, _rmsnorm(x, params[p + "ln2"]))
+
+    x = _rmsnorm(x, params["ln_f"])
+    logits = x @ params["lm_head"]
+    return logits, cache
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: Dict[str, jax.Array],
+    cache: jax.Array,
+    pos: jax.Array,
+    tokens: jax.Array,
+):
+    """One autoregressive step.
+
+    Args:
+      cache: (L, 2, B, max_seq, H, D) from prefill / previous steps.
+      pos: scalar i32 — index the new token occupies (== #valid tokens).
+      tokens: (B,) i32 current input token per sequence.
+
+    Returns (logits (B, vocab), updated cache).
+    """
+    b = tokens.shape[0]
+    pos = jnp.asarray(pos, dtype=jnp.int32).reshape(())
+    pos_emb = lax.dynamic_slice(params["pos_emb"], (pos, 0), (1, cfg.d_model))
+    x = params["tok_emb"][tokens][:, None, :] + pos_emb[None]  # (B, 1, d)
+
+    for i in range(cfg.n_layers):
+        p = f"l{i}."
+        h = _rmsnorm(x, params[p + "ln1"])
+        q = _split_heads(h @ params[p + "wq"], cfg)  # (B, H, 1, D)
+        k = _split_heads(h @ params[p + "wk"], cfg)
+        v = _split_heads(h @ params[p + "wv"], cfg)
+
+        kv = jnp.stack([k, v]).transpose(0, 1, 3, 2, 4)  # (2, B, 1, H, D)
+        cache = lax.dynamic_update_slice(cache, kv[None], (i, 0, 0, pos, 0, 0))
+
+        # Attend over the cache prefix [0, pos]; tail masked via kv_len.
+        k_all = lax.dynamic_slice(
+            cache, (i, 0, 0, 0, 0, 0), (1, 1, b, cfg.max_seq, cfg.n_heads, cfg.head_dim)
+        )[0, 0].transpose(0, 2, 1, 3)  # (B, H, max_seq, D)
+        v_all = lax.dynamic_slice(
+            cache, (i, 1, 0, 0, 0, 0), (1, 1, b, cfg.max_seq, cfg.n_heads, cfg.head_dim)
+        )[0, 0].transpose(0, 2, 1, 3)
+
+        att = _attention(cfg, q, k_all, v_all, kv_len=pos + 1, causal=False)
+        x = x + _merge_heads(att) @ params[p + "wo"]
+        x = x + _ffn(cfg, params, p, _rmsnorm(x, params[p + "ln2"]))
+
+    x = _rmsnorm(x, params["ln_f"])
+    logits = (x @ params["lm_head"])[:, 0, :]  # (B, vocab)
+    return logits, cache
+
+
+def null_kernel(x: jax.Array) -> jax.Array:
+    """The paper's null-kernel floor probe: minimal device work."""
+    return x + 0.0

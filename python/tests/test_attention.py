@@ -1,0 +1,174 @@
+"""Pallas fused attention vs the pure-jnp oracle (the core L1 signal)."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import (
+    flash_attention,
+    mxu_flops_per_step,
+    vmem_bytes,
+)
+from compile.kernels.ref import attention_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype=jnp.float32).astype(dtype)
+
+
+def _qkv(seed, b, h, sq, sk, d, dtype=jnp.float32):
+    k0, k1, k2 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (
+        _rand(k0, (b, h, sq, d), dtype),
+        _rand(k1, (b, h, sk, d), dtype),
+        _rand(k2, (b, h, sk, d), dtype),
+    )
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=1e-5, atol=1e-5
+    )
+
+
+class TestCausalPrefill:
+    @pytest.mark.parametrize("b,h,s,d", [(1, 1, 32, 16), (2, 4, 64, 32), (1, 2, 128, 64)])
+    def test_matches_ref(self, b, h, s, d):
+        q, k, v = _qkv(0, b, h, s, s, d)
+        got = flash_attention(q, k, v, causal=True)
+        want = attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(got, want, **_tol(jnp.float32))
+
+    def test_first_row_is_v0(self):
+        # Causal: position 0 can only attend to itself.
+        q, k, v = _qkv(1, 1, 1, 32, 32, 16)
+        got = flash_attention(q, k, v, causal=True)
+        np.testing.assert_allclose(got[0, 0, 0], v[0, 0, 0], rtol=1e-5, atol=1e-5)
+
+    def test_block_shape_invariance(self):
+        q, k, v = _qkv(2, 1, 2, 64, 64, 32)
+        a = flash_attention(q, k, v, causal=True, block_q=16, block_k=16)
+        b_ = flash_attention(q, k, v, causal=True, block_q=32, block_k=64)
+        np.testing.assert_allclose(a, b_, rtol=1e-5, atol=1e-5)
+
+    def test_scale_applied(self):
+        # Uniform q,k => softmax uniform over prefix, so row i == mean(v[:i+1]).
+        d = 16
+        q = jnp.ones((1, 1, 8, d))
+        k = jnp.ones((1, 1, 8, d))
+        v = jnp.arange(8, dtype=jnp.float32)[None, None, :, None].repeat(d, -1)
+        got = flash_attention(q, k, v, causal=True, block_q=8, block_k=8)
+        for i in range(8):
+            np.testing.assert_allclose(got[0, 0, i, 0], np.mean(np.arange(i + 1)),
+                                       rtol=1e-5, atol=1e-5)
+
+
+class TestDecodeMasking:
+    @pytest.mark.parametrize("kv_len", [1, 7, 32, 100, 128])
+    def test_kv_len_mask_matches_ref(self, kv_len):
+        q, k, v = _qkv(3, 2, 2, 1, 128, 32)
+        got = flash_attention(q, k, v, kv_len=kv_len, causal=False, block_q=1)
+        want = attention_ref(q, k, v, kv_len=kv_len, causal=False)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_tail_is_ignored(self):
+        # Garbage past kv_len must not change the output.
+        q, k, v = _qkv(4, 1, 1, 1, 64, 16)
+        k_dirty = k.at[:, :, 32:].set(1e6)
+        v_dirty = v.at[:, :, 32:].set(-1e6)
+        a = flash_attention(q, k, v, kv_len=32, causal=False, block_q=1)
+        b = flash_attention(q, k_dirty, v_dirty, kv_len=32, causal=False, block_q=1)
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+    def test_zero_len_emits_zeros(self):
+        q, k, v = _qkv(5, 1, 1, 1, 32, 16)
+        got = flash_attention(q, k, v, kv_len=0, causal=False, block_q=1)
+        np.testing.assert_array_equal(np.asarray(got), np.zeros_like(got))
+
+
+class TestDtypes:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtype_roundtrip(self, dtype):
+        q, k, v = _qkv(6, 1, 2, 32, 32, 16, dtype)
+        got = flash_attention(q, k, v, causal=True)
+        assert got.dtype == dtype
+        want = attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(
+            np.asarray(got, dtype=np.float32),
+            np.asarray(want, dtype=np.float32),
+            **_tol(dtype),
+        )
+
+
+class TestHypothesisSweep:
+    """hypothesis sweeps of the kernel's shape/dtype space vs ref."""
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        b=st.integers(1, 3),
+        h=st.integers(1, 4),
+        sq_blocks=st.integers(1, 4),
+        d=st.sampled_from([8, 16, 32, 64]),
+        block=st.sampled_from([8, 16, 32]),
+        causal=st.booleans(),
+        seed=st.integers(0, 2**16),
+        dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    )
+    def test_fused_matches_ref(self, b, h, sq_blocks, d, block, causal, seed, dtype):
+        s = sq_blocks * block
+        q, k, v = _qkv(seed, b, h, s, s, d, dtype)
+        got = flash_attention(q, k, v, causal=causal, block_q=block, block_k=block)
+        want = attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(
+            np.asarray(got, dtype=np.float32),
+            np.asarray(want, dtype=np.float32),
+            **_tol(dtype),
+        )
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        sk_blocks=st.integers(1, 8),
+        block=st.sampled_from([8, 16]),
+        kv_frac=st.floats(0.0, 1.0),
+        seed=st.integers(0, 2**16),
+    )
+    def test_decode_kv_len_sweep(self, sk_blocks, block, kv_frac, seed):
+        sk = sk_blocks * block
+        kv_len = int(round(kv_frac * sk))
+        q, k, v = _qkv(seed, 1, 2, 1, sk, 16)
+        got = flash_attention(q, k, v, kv_len=kv_len, causal=False,
+                              block_q=1, block_k=block)
+        want = attention_ref(q, k, v, kv_len=kv_len, causal=False)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+class TestValidation:
+    def test_rejects_mismatched_shapes(self):
+        q, k, v = _qkv(7, 1, 1, 16, 16, 8)
+        with pytest.raises(ValueError):
+            flash_attention(q, k[:, :, :8], v, causal=True)
+
+    def test_rejects_non_divisible_blocks(self):
+        q, k, v = _qkv(8, 1, 1, 48, 48, 8)
+        with pytest.raises(ValueError):
+            flash_attention(q, k, v, block_q=32, block_k=32)
+
+
+class TestStructuralEstimates:
+    def test_vmem_fits_tpu_budget(self):
+        # DESIGN.md §8: default tiles must sit far below 16 MB VMEM.
+        assert vmem_bytes(128, 128, 64) < 16 * 2**20 / 8
+
+    def test_mxu_flops_formula(self):
+        assert mxu_flops_per_step(128, 128, 64) == 2 * 128 * 128 * 64 * 2
+
+    def test_vmem_monotone_in_blocks(self):
+        assert vmem_bytes(64, 64, 64) < vmem_bytes(128, 64, 64) < vmem_bytes(
+            128, 128, 64
+        )

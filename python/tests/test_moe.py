@@ -1,0 +1,72 @@
+"""Grouped expert-FFN Pallas kernel vs the per-expert eager oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.moe import expert_ffn, vmem_bytes
+from compile.kernels.ref import expert_ffn_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _weights(seed, e, t, d, hidden):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = jax.random.normal(keys[0], (e, t, d))
+    w1 = jax.random.normal(keys[1], (e, d, hidden)) / np.sqrt(d)
+    b1 = jax.random.normal(keys[2], (e, hidden)) * 0.1
+    w2 = jax.random.normal(keys[3], (e, hidden, d)) / np.sqrt(hidden)
+    b2 = jax.random.normal(keys[4], (e, d)) * 0.1
+    return x, w1, b1, w2, b2
+
+
+class TestExpertFfn:
+    @pytest.mark.parametrize("e,t,d,hidden", [(1, 4, 8, 16), (4, 32, 16, 32),
+                                              (8, 16, 32, 64)])
+    def test_matches_ref(self, e, t, d, hidden):
+        x, w1, b1, w2, b2 = _weights(0, e, t, d, hidden)
+        got = expert_ffn(x, w1, b1, w2, b2)
+        want = expert_ffn_ref(x, w1, b1, w2, b2)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_experts_are_independent(self):
+        # Perturbing expert j's weights must not change expert i's output.
+        x, w1, b1, w2, b2 = _weights(1, 4, 8, 16, 32)
+        base = expert_ffn(x, w1, b1, w2, b2)
+        w1_mod = w1.at[3].set(w1[3] * 10.0)
+        mod = expert_ffn(x, w1_mod, b1, w2, b2)
+        np.testing.assert_allclose(base[:3], mod[:3], rtol=1e-6, atol=1e-6)
+        assert not np.allclose(base[3], mod[3])
+
+    def test_zero_input_gives_bias_path(self):
+        x, w1, b1, w2, b2 = _weights(2, 2, 4, 8, 16)
+        x = jnp.zeros_like(x)
+        got = expert_ffn(x, w1, b1, w2, b2)
+        want = expert_ffn_ref(x, w1, b1, w2, b2)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        e=st.integers(1, 8),
+        t=st.sampled_from([1, 4, 16, 64]),
+        d=st.sampled_from([4, 8, 32]),
+        hidden=st.sampled_from([8, 16, 64]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_sweep(self, e, t, d, hidden, seed):
+        x, w1, b1, w2, b2 = _weights(seed, e, t, d, hidden)
+        got = expert_ffn(x, w1, b1, w2, b2)
+        want = expert_ffn_ref(x, w1, b1, w2, b2)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_rejects_bad_shapes(self):
+        x, w1, b1, w2, b2 = _weights(3, 2, 4, 8, 16)
+        with pytest.raises(ValueError):
+            expert_ffn(x, w1[:, :, :8], b1, w2, b2)
+        with pytest.raises(ValueError):
+            expert_ffn(x, w1, b1[:, :4], w2, b2)
+
+    def test_vmem_estimate_positive_and_monotone(self):
+        assert 0 < vmem_bytes(16, 32, 64) < vmem_bytes(64, 32, 64)

@@ -1,0 +1,123 @@
+//! Ablation benches for the design choices DESIGN.md §9 calls out.
+//!
+//! * `dedup cache` — Phase-2 replay cost with vs without the global
+//!   dedup cache (the paper: "saving significant runtime").
+//! * `baseline estimator` — median (Eq. 7) vs mean dispatch baseline
+//!   under outlier contamination: robustness of ΔCT attribution.
+//! * `fused attention` — lowering-level kernel-count/bytes deltas.
+//! * `replay protocol` — paper (W=50/R=150) vs fast protocol: accuracy
+//!   of the floor estimate vs cost.
+//!
+//! Run: `cargo bench --bench ablations`
+
+use std::collections::HashMap;
+
+use taxbreak::hardware::Platform;
+use taxbreak::lowering::{self, LowerOpts, PassKind};
+use taxbreak::models;
+use taxbreak::sim::{simulate, Workload};
+use taxbreak::taxbreak::{phase2, Phase1, ReplayConfig, SimReplayBackend};
+use taxbreak::util::bench::{bench, black_box, report};
+use taxbreak::util::rng::Rng;
+use taxbreak::util::stats;
+
+fn main() {
+    let platform = Platform::h100();
+    let model = models::llama_1b();
+    let trace = simulate(&model, &platform, &Workload::prefill(1, 512), 7);
+    let p1 = Phase1::from_trace(&trace);
+    let mut results = Vec::new();
+
+    // --- dedup cache on/off ---------------------------------------------
+    results.push(bench("phase2::cold (every entry profiled)", 1, 5, || {
+        let mut backend = SimReplayBackend::new(platform.clone(), 3);
+        black_box(phase2::run(&p1.db, &mut backend, &ReplayConfig::paper()));
+    }));
+    let mut warm_cache = HashMap::new();
+    {
+        let mut backend = SimReplayBackend::new(platform.clone(), 3);
+        phase2::run_with_cache(&p1.db, &mut backend, &ReplayConfig::paper(), &mut warm_cache);
+    }
+    results.push(bench("phase2::warm (global dedup cache hit)", 1, 5, || {
+        let mut backend = SimReplayBackend::new(platform.clone(), 3);
+        let mut cache = warm_cache.clone();
+        black_box(phase2::run_with_cache(
+            &p1.db,
+            &mut backend,
+            &ReplayConfig::paper(),
+            &mut cache,
+        ));
+    }));
+
+    // --- baseline estimator robustness ------------------------------------
+    // Contaminate 5% of framework-native dispatch samples with 10x
+    // outliers; compare median vs mean baseline drift.
+    let mut rng = Rng::new(9);
+    let clean: Vec<f64> = (0..500).map(|_| rng.lognormal_med(10.2, 0.10)).collect();
+    let mut dirty = clean.clone();
+    let n = dirty.len();
+    for i in 0..25 {
+        dirty[i * 17 % n] *= 10.0;
+    }
+    let med_drift = (stats::median(&dirty) - stats::median(&clean)).abs();
+    let mean_drift = (stats::mean(&dirty) - stats::mean(&clean)).abs();
+    println!(
+        "baseline-estimator ablation: 5% 10x outliers -> median drifts \
+         {med_drift:.3} us, mean drifts {mean_drift:.3} us \
+         ({}x more) — Eq. 7's median is the right choice",
+        (mean_drift / med_drift.max(1e-9)).round()
+    );
+    results.push(bench("stats::median_500", 10, 200, || {
+        black_box(stats::median(&dirty));
+    }));
+    results.push(bench("stats::mean_500", 10, 200, || {
+        black_box(stats::mean(&dirty));
+    }));
+
+    // --- fused vs eager lowering ------------------------------------------
+    let count_bytes = |fused: bool| {
+        let mut rng = Rng::new(1);
+        let seq = lowering::lower_pass(
+            &model,
+            PassKind::Prefill,
+            8,
+            2048,
+            2048,
+            &LowerOpts {
+                fused_attention: fused,
+            },
+            &mut rng,
+        );
+        let bytes: f64 = seq.iter().map(|k| k.bytes).sum();
+        (seq.len(), bytes)
+    };
+    let (ek, eb) = count_bytes(false);
+    let (fk, fb) = count_bytes(true);
+    println!(
+        "fused-attention ablation (BS=8/SL=2048): kernels {ek} -> {fk} \
+         (-{:.0}%), HBM bytes {:.1} GB -> {:.1} GB (-{:.0}%)",
+        100.0 * (1.0 - fk as f64 / ek as f64),
+        eb / 1e9,
+        fb / 1e9,
+        100.0 * (1.0 - fb / eb)
+    );
+
+    // --- replay protocol cost/accuracy -------------------------------------
+    for (name, cfg) in [
+        ("paper (W=50/R=150)", ReplayConfig::paper()),
+        ("fast (W=2/R=20)", ReplayConfig::fast()),
+    ] {
+        let mut backend = SimReplayBackend::new(platform.clone(), 3);
+        let p2 = phase2::run(&p1.db, &mut backend, &cfg);
+        println!(
+            "protocol {name}: floor {:.3} ± (p5 {:.3} / p95 {:.3}) us, base {:.2} us",
+            p2.floor.mean, p2.floor.p5, p2.floor.p95, p2.dispatch_base_us
+        );
+        results.push(bench(&format!("phase2::{name}"), 1, 5, || {
+            let mut b = SimReplayBackend::new(platform.clone(), 3);
+            black_box(phase2::run(&p1.db, &mut b, &cfg));
+        }));
+    }
+
+    report("ablations", &results);
+}

@@ -1,0 +1,155 @@
+//! Hot-path microbenches for the §Perf pass: lowering, simulation,
+//! Phase-1/2, decomposition, trace IO, serving scheduler.
+//!
+//! Run: `cargo bench --bench hot_paths`
+
+use taxbreak::hardware::Platform;
+use taxbreak::kernels::KernelDb;
+use taxbreak::lowering::{self, LowerOpts, PassKind};
+use taxbreak::models;
+use taxbreak::serving::synthetic_requests;
+use taxbreak::sim::{simulate, simulate_summary, Workload};
+use taxbreak::taxbreak::{analyze, decompose, phase2, Phase1, ReplayConfig, SimReplayBackend};
+use taxbreak::util::bench::{bench, bench_items, black_box, report};
+use taxbreak::util::json::Json;
+use taxbreak::util::rng::Rng;
+
+fn main() {
+    let platform = Platform::h100();
+    let gpt2 = models::gpt2();
+    let olmoe = models::olmoe();
+    let mut results = Vec::new();
+
+    // --- lowering ------------------------------------------------------
+    let olmoe_kernels = {
+        let mut rng = Rng::new(1);
+        lowering::lower_pass(&olmoe, PassKind::DecodeStep, 4, 1, 2048,
+                             &LowerOpts::default(), &mut rng).len()
+    };
+    results.push(bench_items(
+        "lowering::olmoe_decode_step (9.3k kernels)",
+        2,
+        30,
+        olmoe_kernels as f64,
+        || {
+            let mut rng = Rng::new(1);
+            black_box(lowering::lower_pass(
+                &olmoe, PassKind::DecodeStep, 4, 1, 2048,
+                &LowerOpts::default(), &mut rng,
+            ));
+        },
+    ));
+
+    // --- simulation ------------------------------------------------------
+    let wl = Workload::decode(4, 2048, 10);
+    let sum = simulate_summary(&olmoe, &platform, &wl, 7);
+    results.push(bench_items(
+        "sim::summary_olmoe_decode_m10 (93k kernels)",
+        1,
+        10,
+        sum.kernels as f64,
+        || {
+            black_box(simulate_summary(&olmoe, &platform, &wl, 7));
+        },
+    ));
+    let wl_small = Workload::prefill(1, 512);
+    results.push(bench(
+        "sim::full_trace_gpt2_prefill (380 kernels)",
+        2,
+        50,
+        || {
+            black_box(simulate(&gpt2, &platform, &wl_small, 7));
+        },
+    ));
+
+    // --- TaxBreak pipeline ----------------------------------------------
+    let trace = simulate(&gpt2, &platform, &wl_small, 7);
+    results.push(bench_items(
+        "phase1::from_trace (gpt2)",
+        2,
+        50,
+        trace.kernel_count() as f64,
+        || {
+            black_box(Phase1::from_trace(&trace));
+        },
+    ));
+    let p1 = Phase1::from_trace(&trace);
+    results.push(bench(
+        "phase2::replay (paper W=50/R=150, dedup'd)",
+        1,
+        10,
+        || {
+            let mut backend = SimReplayBackend::new(platform.clone(), 3);
+            black_box(phase2::run(&p1.db, &mut backend, &ReplayConfig::paper()));
+        },
+    ));
+    let mut backend = SimReplayBackend::new(platform.clone(), 3);
+    let p2 = phase2::run(&p1.db, &mut backend, &ReplayConfig::paper());
+    results.push(bench(
+        "decompose::eq1_eq2 (gpt2 trace)",
+        2,
+        100,
+        || {
+            black_box(decompose::decompose(&trace, &p1, &p2));
+        },
+    ));
+    results.push(bench(
+        "analyze::end_to_end (gpt2, fast protocol)",
+        1,
+        10,
+        || {
+            let mut b = SimReplayBackend::new(platform.clone(), 3);
+            black_box(analyze(&trace, &mut b, &ReplayConfig::fast()));
+        },
+    ));
+
+    // --- trace / json IO -------------------------------------------------
+    let json_text = trace.to_json().dump();
+    results.push(bench_items(
+        "json::parse_trace",
+        2,
+        20,
+        json_text.len() as f64,
+        || {
+            black_box(Json::parse(&json_text).unwrap());
+        },
+    ));
+    results.push(bench(
+        "trace::to_json + dump",
+        2,
+        20,
+        || {
+            black_box(trace.to_json().dump());
+        },
+    ));
+    results.push(bench(
+        "kernel_db::from_trace",
+        2,
+        50,
+        || {
+            black_box(KernelDb::from_trace(&trace));
+        },
+    ));
+
+    // --- serving scheduler (mock-speed control loop) -----------------------
+    results.push(bench(
+        "serving::scheduler_16req (kv+batcher bookkeeping)",
+        2,
+        30,
+        || {
+            // In-sim scheduling cost only: measured against the
+            // simulator-free mock in unit tests; here we time the
+            // bookkeeping around a tiny simulated backend.
+            let reqs = synthetic_requests(16, 251, 128, 3);
+            black_box(&reqs);
+            let mut kv = taxbreak::serving::PagedKvManager::new(64, 16);
+            for r in &reqs {
+                kv.register(r.id, r.prompt.len()).unwrap();
+            }
+            for r in &reqs {
+                kv.release(r.id).unwrap();
+            }
+        },
+    ));
+    report("hot_paths", &results);
+}

@@ -1,0 +1,27 @@
+//! One end-to-end benchmark per paper table/figure: times the full
+//! regeneration pipeline (simulate → two-phase TaxBreak → render) for
+//! each artifact on its reduced grid.
+//!
+//! Run: `cargo bench --bench paper_tables`
+
+use taxbreak::repro::{self, ReproOpts};
+use taxbreak::util::bench::{bench, black_box, report};
+
+fn main() {
+    let opts = ReproOpts {
+        full: false,
+        seed: 2026,
+    };
+    let mut results = Vec::new();
+    for id in repro::ALL {
+        // Heavy sweeps get fewer iterations; all still run end-to-end.
+        let iters = match id {
+            "fig5" | "fig6" | "fig8" | "table2" => 1,
+            _ => 3,
+        };
+        results.push(bench(&format!("repro::{id}"), 0, iters, || {
+            black_box(repro::run(id, &opts).expect("repro runs"));
+        }));
+    }
+    report("paper_tables (end-to-end regeneration)", &results);
+}

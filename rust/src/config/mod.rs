@@ -1,0 +1,202 @@
+//! Typed run configuration with JSON load/save.
+//!
+//! A [`RunConfig`] fully describes one measurement: model, platform,
+//! workload point, replay protocol and mitigation mode. The CLI accepts
+//! `--config file.json` (flags override file values), and sweep drivers
+//! serialize the exact config next to every result for provenance.
+
+use std::path::Path;
+
+use crate::hardware::Platform;
+use crate::models::{self, ModelSpec};
+use crate::sim::{Mitigation, Phase, Workload};
+use crate::taxbreak::ReplayConfig;
+use crate::util::json::Json;
+
+/// One fully-specified measurement run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunConfig {
+    pub model: String,
+    pub platform: String,
+    pub phase: Phase,
+    pub batch: usize,
+    pub seq: usize,
+    pub m_tokens: usize,
+    pub fused_attention: bool,
+    pub mitigation: Mitigation,
+    pub seed: u64,
+    pub warmup: usize,
+    pub runs: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            model: "gpt2".to_string(),
+            platform: "h200".to_string(),
+            phase: Phase::Prefill,
+            batch: 1,
+            seq: 512,
+            m_tokens: 10,
+            fused_attention: false,
+            mitigation: Mitigation::None,
+            seed: 2026,
+            // Paper §IV: W=50 warm-up, R=150 measured runs.
+            warmup: 50,
+            runs: 150,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn workload(&self) -> Workload {
+        let wl = match self.phase {
+            Phase::Prefill => Workload::prefill(self.batch, self.seq),
+            Phase::Decode => Workload::decode(self.batch, self.seq, self.m_tokens),
+        };
+        wl.with_fused_attention(self.fused_attention)
+            .with_mitigation(self.mitigation)
+    }
+
+    pub fn model_spec(&self) -> anyhow::Result<ModelSpec> {
+        models::by_name(&self.model)
+    }
+
+    pub fn platform_spec(&self) -> anyhow::Result<Platform> {
+        Platform::by_name(&self.platform)
+    }
+
+    pub fn replay_config(&self) -> ReplayConfig {
+        ReplayConfig {
+            warmup: self.warmup,
+            runs: self.runs,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("model", self.model.as_str())
+            .with("platform", self.platform.as_str())
+            .with("phase", self.phase.as_str())
+            .with("batch", self.batch)
+            .with("seq", self.seq)
+            .with("m_tokens", self.m_tokens)
+            .with("fused_attention", self.fused_attention)
+            .with("mitigation", self.mitigation.as_str())
+            .with("seed", self.seed)
+            .with("warmup", self.warmup)
+            .with("runs", self.runs)
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<RunConfig> {
+        let d = RunConfig::default();
+        let phase = match v.get("phase").and_then(|p| p.as_str()) {
+            None => d.phase,
+            Some("prefill") => Phase::Prefill,
+            Some("decode") => Phase::Decode,
+            Some(other) => anyhow::bail!("bad phase '{other}'"),
+        };
+        let mitigation = match v.get("mitigation").and_then(|m| m.as_str()) {
+            None => d.mitigation,
+            Some(tag) => Mitigation::parse(tag)?,
+        };
+        let get_usize = |key: &str, dv: usize| -> anyhow::Result<usize> {
+            match v.get(key) {
+                None => Ok(dv),
+                Some(x) => x
+                    .as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("'{key}' must be an unsigned integer")),
+            }
+        };
+        Ok(RunConfig {
+            model: v
+                .get("model")
+                .and_then(|m| m.as_str())
+                .unwrap_or(&d.model)
+                .to_string(),
+            platform: v
+                .get("platform")
+                .and_then(|m| m.as_str())
+                .unwrap_or(&d.platform)
+                .to_string(),
+            phase,
+            batch: get_usize("batch", d.batch)?,
+            seq: get_usize("seq", d.seq)?,
+            m_tokens: get_usize("m_tokens", d.m_tokens)?,
+            fused_attention: v
+                .get("fused_attention")
+                .and_then(|b| b.as_bool())
+                .unwrap_or(d.fused_attention),
+            mitigation,
+            seed: v.get("seed").and_then(|s| s.as_u64()).unwrap_or(d.seed),
+            warmup: get_usize("warmup", d.warmup)?,
+            runs: get_usize("runs", d.runs)?,
+        })
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<RunConfig> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        RunConfig::from_json(&Json::parse(&text)?)
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().pretty())
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let c = RunConfig {
+            model: "olmoe-1b-7b".into(),
+            phase: Phase::Decode,
+            mitigation: Mitigation::CudaGraphs,
+            batch: 4,
+            ..RunConfig::default()
+        };
+        let back = RunConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn partial_json_fills_defaults() {
+        let c = RunConfig::from_json(&Json::parse(r#"{"model": "gpt2", "batch": 8}"#).unwrap())
+            .unwrap();
+        assert_eq!(c.batch, 8);
+        assert_eq!(c.seq, 512);
+        assert_eq!(c.runs, 150);
+        assert_eq!(c.mitigation, Mitigation::None);
+    }
+
+    #[test]
+    fn rejects_bad_phase_and_mitigation() {
+        assert!(RunConfig::from_json(&Json::parse(r#"{"phase": "warp"}"#).unwrap()).is_err());
+        assert!(
+            RunConfig::from_json(&Json::parse(r#"{"mitigation": "magic"}"#).unwrap()).is_err()
+        );
+    }
+
+    #[test]
+    fn resolves_specs() {
+        let c = RunConfig::default();
+        assert_eq!(c.model_spec().unwrap().name, "gpt2");
+        assert_eq!(c.platform_spec().unwrap().name, "h200");
+        assert_eq!(c.replay_config().runs, 150);
+        assert_eq!(c.workload().batch, 1);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("taxbreak_config_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.json");
+        let c = RunConfig::default();
+        c.save(&path).unwrap();
+        assert_eq!(RunConfig::load(&path).unwrap(), c);
+    }
+}

@@ -1,0 +1,117 @@
+//! Device-side stream timeline: a FIFO CUDA stream.
+//!
+//! Kernels start at `max(api_start + launch_gap, previous kernel end)`;
+//! the second term is the queue delay that makes TKLQT blow up once the
+//! GPU saturates (Fig. 7a) while the launch *floor* stays constant.
+
+/// One in-order device stream.
+#[derive(Debug, Clone, Default)]
+pub struct Stream {
+    /// Time the last-enqueued kernel finishes.
+    cursor_us: f64,
+    /// Total kernel-active time on this stream.
+    active_us: f64,
+    launched: usize,
+}
+
+/// Result of submitting one kernel.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KernelTiming {
+    pub start_us: f64,
+    pub end_us: f64,
+    /// start - api_start: launch gap + queue delay (the TKLQT per-kernel
+    /// term of [30]).
+    pub launch_plus_queue_us: f64,
+    /// Queue-induced extra over the pure launch gap.
+    pub queue_delay_us: f64,
+}
+
+impl Stream {
+    pub fn new() -> Stream {
+        Stream::default()
+    }
+
+    /// Submit a kernel launched at `api_start_us` with the sampled
+    /// empty-queue launch gap and device duration.
+    pub fn submit(&mut self, api_start_us: f64, launch_gap_us: f64, dur_us: f64) -> KernelTiming {
+        let ready = api_start_us + launch_gap_us;
+        let start = ready.max(self.cursor_us);
+        let end = start + dur_us;
+        self.cursor_us = end;
+        self.active_us += dur_us;
+        self.launched += 1;
+        KernelTiming {
+            start_us: start,
+            end_us: end,
+            launch_plus_queue_us: start - api_start_us,
+            queue_delay_us: start - ready,
+        }
+    }
+
+    /// When the stream drains (cudaDeviceSynchronize).
+    pub fn sync_point(&self) -> f64 {
+        self.cursor_us
+    }
+
+    pub fn active_us(&self) -> f64 {
+        self.active_us
+    }
+
+    pub fn launched(&self) -> usize {
+        self.launched
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_stream_starts_after_gap() {
+        let mut s = Stream::new();
+        let t = s.submit(10.0, 4.7, 2.0);
+        assert_eq!(t.start_us, 14.7);
+        assert_eq!(t.end_us, 16.7);
+        assert!((t.launch_plus_queue_us - 4.7).abs() < 1e-12);
+        assert_eq!(t.queue_delay_us, 0.0);
+    }
+
+    #[test]
+    fn busy_stream_queues() {
+        let mut s = Stream::new();
+        s.submit(0.0, 4.7, 100.0); // ends at 104.7
+        let t = s.submit(10.0, 4.7, 5.0);
+        assert_eq!(t.start_us, 104.7);
+        assert!((t.queue_delay_us - 90.0).abs() < 1e-9);
+        assert!((t.launch_plus_queue_us - 94.7).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut s = Stream::new();
+        let a = s.submit(0.0, 1.0, 10.0);
+        let b = s.submit(0.0, 1.0, 10.0);
+        assert!(b.start_us >= a.end_us);
+    }
+
+    #[test]
+    fn accounting() {
+        let mut s = Stream::new();
+        s.submit(0.0, 1.0, 3.0);
+        s.submit(0.0, 1.0, 4.0);
+        assert_eq!(s.active_us(), 7.0);
+        assert_eq!(s.launched(), 2);
+        assert_eq!(s.sync_point(), 8.0);
+    }
+
+    #[test]
+    fn idle_gap_when_host_is_slow() {
+        // Host-bound regime: kernels finish before the next is
+        // submitted, so the GPU sits idle between them.
+        let mut s = Stream::new();
+        let a = s.submit(0.0, 4.7, 1.0); // ends 5.7
+        let b = s.submit(20.0, 4.7, 1.0); // starts 24.7 — 19 us idle
+        assert!(b.start_us - a.end_us > 18.0);
+        assert_eq!(b.queue_delay_us, 0.0);
+    }
+}

@@ -1,0 +1,185 @@
+//! Host dispatch-path model: the single-threaded chain every eager-mode
+//! kernel traverses before the GPU sees it (paper Fig. 3):
+//!
+//! ```text
+//! torch op ──T_Py──▶ ATen dispatch ──T_dispatch_base──▶
+//!     [vendor-library front-end ──ΔCT──▶]  cudaLaunchKernel ──▶
+//!         (launch gap: T_sys_floor + ΔKT_fw) ──▶ kernel start
+//! ```
+//!
+//! All host components divide by the platform CPU's single-thread speed
+//! (the paper's §VI variable); the launch floor is GPU/driver territory
+//! and does not.
+
+use crate::hardware::Platform;
+use crate::kernels::family::{
+    Family, CT_SIGMA, DISPATCH_BASE_MED_US, DISPATCH_SIGMA, PY_SIGMA,
+};
+use crate::util::rng::Rng;
+
+/// Host-side duration of the `cudaLaunchKernel` call itself (the call
+/// returns asynchronously well before the kernel starts), us at the
+/// reference CPU.
+pub const API_CALL_MED_US: f64 = 0.8;
+const API_SIGMA: f64 = 0.08;
+
+/// One kernel's sampled host-path latencies (all us).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HostSample {
+    /// Python-side dispatch overhead T_Py (torch op start → ATen).
+    pub t_py: f64,
+    /// Irreducible ATen dispatch cost.
+    pub t_base: f64,
+    /// Vendor-library front-end excess ΔCT (0 for framework-native).
+    pub t_ct: f64,
+    /// Host-visible duration of the launch API call.
+    pub api_dur: f64,
+    /// API call → kernel start when the stream is empty:
+    /// `T_sys_floor + ΔKT_fw`.
+    pub launch_gap: f64,
+    /// The floor component of `launch_gap` alone.
+    pub floor: f64,
+}
+
+impl HostSample {
+    /// Host-thread occupancy for this kernel (what serial dispatch
+    /// spends before it can touch the next op).
+    pub fn occupancy(&self) -> f64 {
+        self.t_py + self.t_base + self.t_ct + self.api_dur
+    }
+}
+
+/// Draws per-kernel host latencies for a platform.
+#[derive(Debug, Clone)]
+pub struct HostModel {
+    pub platform: Platform,
+}
+
+impl HostModel {
+    pub fn new(platform: Platform) -> HostModel {
+        HostModel { platform }
+    }
+
+    /// Sample the full host path for one kernel of `family`.
+    pub fn sample(&self, family: Family, rng: &mut Rng) -> HostSample {
+        let p = family.params();
+        let st = self.platform.cpu.st_speed;
+        let t_py = rng.lognormal_med(p.py_med_us, PY_SIGMA) / st;
+        let t_base = rng.lognormal_med(DISPATCH_BASE_MED_US, DISPATCH_SIGMA) / st;
+        let t_ct = if p.lib_mediated {
+            rng.lognormal_med(p.ct_med_us, CT_SIGMA) / st
+        } else {
+            0.0
+        };
+        let api_dur = rng.lognormal_med(API_CALL_MED_US, API_SIGMA) / st;
+        let floor = self.sample_floor(rng);
+        // ΔKT_fw is driver/runtime software — scales with the host CPU.
+        let excess = rng.lognormal_med(p.launch_excess_med_us, p.launch_excess_sigma) / st;
+        HostSample {
+            t_py,
+            t_base,
+            t_ct,
+            api_dur,
+            launch_gap: floor + excess,
+            floor,
+        }
+    }
+
+    /// Null-kernel floor draw: `T_sys_floor` alone (Table III protocol).
+    pub fn sample_floor(&self, rng: &mut Rng) -> f64 {
+        let g = &self.platform.gpu;
+        rng.lognormal_med(g.t_sys_floor_us, g.floor_sigma)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    fn samples(platform: Platform, family: Family, n: usize) -> Vec<HostSample> {
+        let model = HostModel::new(platform);
+        let mut rng = Rng::new(42);
+        (0..n).map(|_| model.sample(family, &mut rng)).collect()
+    }
+
+    #[test]
+    fn ct_zero_for_framework_native() {
+        for s in samples(Platform::h100(), Family::ElemVector, 100) {
+            assert_eq!(s.t_ct, 0.0);
+        }
+        let cublas = samples(Platform::h100(), Family::GemmCublas, 100);
+        assert!(cublas.iter().all(|s| s.t_ct > 0.0));
+    }
+
+    #[test]
+    fn medians_match_family_params() {
+        let xs: Vec<f64> = samples(Platform::h100(), Family::Scan, 4000)
+            .iter()
+            .map(|s| s.launch_gap - s.floor)
+            .collect();
+        let med = stats::median(&xs);
+        assert!((med - 0.32).abs() < 0.05, "ΔKT_fw median {med} (Table IV: 0.32)");
+    }
+
+    #[test]
+    fn h200_host_components_are_faster() {
+        let h100: Vec<f64> = samples(Platform::h100(), Family::ElemVector, 2000)
+            .iter()
+            .map(|s| s.occupancy())
+            .collect();
+        let h200: Vec<f64> = samples(Platform::h200(), Family::ElemVector, 2000)
+            .iter()
+            .map(|s| s.occupancy())
+            .collect();
+        let ratio = stats::mean(&h200) / stats::mean(&h100);
+        assert!(
+            (ratio - 1.0 / 1.30).abs() < 0.03,
+            "occupancy ratio {ratio} should track CPU st_speed"
+        );
+    }
+
+    #[test]
+    fn floor_does_not_scale_with_cpu() {
+        let f100: Vec<f64> = samples(Platform::h100(), Family::Reduce, 3000)
+            .iter()
+            .map(|s| s.floor)
+            .collect();
+        let f200: Vec<f64> = samples(Platform::h200(), Family::Reduce, 3000)
+            .iter()
+            .map(|s| s.floor)
+            .collect();
+        // Table III: floors differ only via the GPU (4.72 vs 4.50).
+        assert!((stats::mean(&f100) - 4.72).abs() < 0.1);
+        assert!((stats::mean(&f200) - 4.503).abs() < 0.1);
+    }
+
+    #[test]
+    fn gpt2_per_kernel_host_cost_matches_paper() {
+        // §V-C: GPT-2 on H200 — per-kernel host cost ≈ 13.7 us
+        // decomposed as T_Py ≈ 1.35 + base ≈ 7.85 + floor ≈ 4.5.
+        let xs: Vec<f64> = samples(Platform::h200(), Family::GemmNvjet, 4000)
+            .iter()
+            .map(|s| s.t_py + s.t_base + s.floor)
+            .collect();
+        let mean = stats::mean(&xs);
+        assert!((mean - 13.7).abs() < 0.8, "per-kernel host cost {mean}");
+    }
+
+    #[test]
+    fn occupancy_excludes_floor() {
+        let s = samples(Platform::h100(), Family::ElemUnroll, 1)[0];
+        assert!((s.occupancy() - (s.t_py + s.t_base + s.t_ct + s.api_dur)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deterministic_with_seed() {
+        let m = HostModel::new(Platform::h100());
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        assert_eq!(
+            m.sample(Family::TopK, &mut r1),
+            m.sample(Family::TopK, &mut r2)
+        );
+    }
+}

@@ -1,0 +1,144 @@
+//! Analytic device-duration model.
+//!
+//! Each kernel's GPU execution time is the roofline maximum of its
+//! compute time (FLOPs over family-efficiency-scaled peak) and its
+//! memory time (bytes over bandwidth), plus a fixed ramp/tail, with a
+//! size-dependent efficiency ramp so tiny kernels (MoE expert GEMMs,
+//! decode GEMVs) cannot reach peak — the device-side half of the MoE
+//! fragmentation story (§V-B).
+
+use crate::hardware::GpuSpec;
+use crate::kernels::family::Family;
+use crate::util::rng::Rng;
+
+/// Fixed per-kernel ramp/drain overhead on the device, us.
+pub const KERNEL_TAIL_US: f64 = 0.8;
+/// Minimum kernel duration, us (nothing completes faster on Hopper).
+pub const MIN_KERNEL_US: f64 = 1.0;
+/// FLOPs at which a compute kernel reaches half its family efficiency.
+const COMPUTE_RAMP_FLOPS: f64 = 2.0e8;
+/// Bytes at which a memory-bound kernel reaches half its bandwidth
+/// efficiency.
+const MEM_RAMP_BYTES: f64 = 1.5e6;
+/// Multiplicative lognormal jitter sigma on device durations.
+const DEVICE_JITTER_SIGMA: f64 = 0.03;
+
+/// Deterministic (jitter-free) device duration in us.
+pub fn device_duration_us(family: Family, flops: f64, bytes: f64, gpu: &GpuSpec) -> f64 {
+    let p = family.params();
+    let mut dur = KERNEL_TAIL_US;
+
+    let compute_us = if p.compute_eff > 0.0 && flops > 0.0 {
+        let ramp = flops / (flops + COMPUTE_RAMP_FLOPS);
+        flops / (gpu.flops_per_us() * p.compute_eff * ramp.max(1e-6))
+    } else {
+        0.0
+    };
+    let mem_us = if p.mem_eff > 0.0 && bytes > 0.0 {
+        let ramp = bytes / (bytes + MEM_RAMP_BYTES);
+        bytes / (gpu.bytes_per_us() * p.mem_eff * ramp.max(1e-6))
+    } else {
+        0.0
+    };
+    dur += compute_us.max(mem_us);
+    dur.max(MIN_KERNEL_US)
+}
+
+/// Device duration with per-invocation jitter (used by the simulator).
+pub fn sample_duration_us(
+    family: Family,
+    flops: f64,
+    bytes: f64,
+    gpu: &GpuSpec,
+    rng: &mut Rng,
+) -> f64 {
+    device_duration_us(family, flops, bytes, gpu) * rng.lognormal_med(1.0, DEVICE_JITTER_SIGMA)
+}
+
+/// Achieved-vs-peak compute utilization for a kernel sample — feeds the
+/// Table II "GPU utilization" column and the §Perf roofline report.
+pub fn compute_utilization(flops: f64, dur_us: f64, gpu: &GpuSpec) -> f64 {
+    if dur_us <= 0.0 {
+        return 0.0;
+    }
+    (flops / dur_us) / gpu.flops_per_us()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::Platform;
+
+    fn gpu() -> GpuSpec {
+        Platform::h100().gpu
+    }
+
+    #[test]
+    fn tiny_kernels_hit_min_duration() {
+        let d = device_duration_us(Family::ElemVector, 0.0, 64.0, &gpu());
+        assert!((MIN_KERNEL_US..2.0).contains(&d), "{d}");
+    }
+
+    #[test]
+    fn large_gemm_approaches_roofline() {
+        // 4096^3 GEMM: 137 GFLOP at 60% of 989 TFLOPs ≈ 232 us.
+        let flops = 2.0 * 4096.0f64.powi(3);
+        let bytes = 2.0 * 3.0 * 4096.0f64.powi(2);
+        let d = device_duration_us(Family::GemmCublas, flops, bytes, &gpu());
+        let ideal = flops / (gpu().flops_per_us() * 0.60);
+        assert!(d > ideal && d < ideal * 1.1, "d={d} ideal={ideal}");
+    }
+
+    #[test]
+    fn small_gemm_is_inefficient() {
+        // A 128x128x128 expert-GEMM fragment must run far below peak.
+        let flops = 2.0 * 128.0f64.powi(3);
+        let d = device_duration_us(Family::GemmCublas, flops, 3.0 * 2.0 * 128.0 * 128.0, &gpu());
+        let util = compute_utilization(flops, d, &gpu());
+        assert!(util < 0.05, "util={util}");
+    }
+
+    #[test]
+    fn memory_bound_kernel_scales_with_bytes() {
+        let d1 = device_duration_us(Family::ElemVector, 0.0, 100e6, &gpu());
+        let d2 = device_duration_us(Family::ElemVector, 0.0, 200e6, &gpu());
+        assert!(d2 > 1.8 * d1 && d2 < 2.2 * d1, "{d1} {d2}");
+    }
+
+    #[test]
+    fn h200_bandwidth_helps_memory_bound() {
+        let h100 = Platform::h100().gpu;
+        let h200 = Platform::h200().gpu;
+        let d100 = device_duration_us(Family::ElemVector, 0.0, 500e6, &h100);
+        let d200 = device_duration_us(Family::ElemVector, 0.0, 500e6, &h200);
+        assert!(d200 < d100);
+    }
+
+    #[test]
+    fn h200_clock_hurts_compute_bound() {
+        let h100 = Platform::h100().gpu;
+        let h200 = Platform::h200().gpu;
+        let flops = 2.0 * 8192.0f64.powi(3);
+        let d100 = device_duration_us(Family::GemmCublas, flops, 1e6, &h100);
+        let d200 = device_duration_us(Family::GemmCublas, flops, 1e6, &h200);
+        assert!(d200 > d100, "H200 is clocked -9.9%");
+    }
+
+    #[test]
+    fn jitter_is_small_and_deterministic() {
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        let a = sample_duration_us(Family::Reduce, 0.0, 1e6, &gpu(), &mut r1);
+        let b = sample_duration_us(Family::Reduce, 0.0, 1e6, &gpu(), &mut r2);
+        assert_eq!(a, b);
+        let base = device_duration_us(Family::Reduce, 0.0, 1e6, &gpu());
+        assert!((a / base - 1.0).abs() < 0.2);
+    }
+
+    #[test]
+    fn utilization_bounds() {
+        assert_eq!(compute_utilization(0.0, 1.0, &gpu()), 0.0);
+        let u = compute_utilization(gpu().flops_per_us() * 10.0, 10.0, &gpu());
+        assert!((u - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,220 @@
+//! The Phase-1 kernel database (paper §III-B).
+//!
+//! Built from a full-model trace: each *unique* kernel — keyed on ATen
+//! metadata (operator, shapes, dtypes, scalars), cleaned kernel name and
+//! launch configuration — gets one entry recording its invocation count
+//! and classification.  Phase 2 replays exactly one invocation per entry
+//! (the dedup cache that "saves significant runtime").
+
+use std::collections::HashMap;
+
+use crate::trace::{KernelMeta, Trace};
+
+/// One unique kernel entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelEntry {
+    pub meta: KernelMeta,
+    /// How many times this exact kernel was invoked in the trace.
+    pub invocations: usize,
+    /// Mean observed device duration in the full-model trace, us.
+    pub mean_device_us: f64,
+}
+
+/// Database of unique kernels from one (or more) traces.
+#[derive(Debug, Clone, Default)]
+pub struct KernelDb {
+    entries: Vec<KernelEntry>,
+    index: HashMap<String, usize>,
+}
+
+impl KernelDb {
+    pub fn new() -> KernelDb {
+        KernelDb::default()
+    }
+
+    /// Build from a trace's kernel events.
+    pub fn from_trace(trace: &Trace) -> KernelDb {
+        let mut db = KernelDb::new();
+        for ev in trace.kernels() {
+            if let Some(meta) = &ev.meta {
+                db.record(meta, ev.dur_us);
+            }
+        }
+        db
+    }
+
+    /// Record one invocation.
+    pub fn record(&mut self, meta: &KernelMeta, device_us: f64) {
+        let key = meta.dedup_key();
+        match self.index.get(&key) {
+            Some(&i) => {
+                let e = &mut self.entries[i];
+                // Streaming mean of the device duration.
+                e.mean_device_us += (device_us - e.mean_device_us) / (e.invocations + 1) as f64;
+                e.invocations += 1;
+            }
+            None => {
+                self.index.insert(key, self.entries.len());
+                self.entries.push(KernelEntry {
+                    meta: meta.clone(),
+                    invocations: 1,
+                    mean_device_us: device_us,
+                });
+            }
+        }
+    }
+
+    pub fn entries(&self) -> &[KernelEntry] {
+        &self.entries
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn get(&self, key: &str) -> Option<&KernelEntry> {
+        self.index.get(key).map(|&i| &self.entries[i])
+    }
+
+    /// Total invocations across all entries (== trace kernel count).
+    pub fn total_invocations(&self) -> usize {
+        self.entries.iter().map(|e| e.invocations).sum()
+    }
+
+    /// Unique *cleaned kernel names* (Table II numerator) — weaker than
+    /// the dedup key (a name may appear with several launch configs).
+    pub fn unique_names(&self) -> usize {
+        let mut names: Vec<&str> = self
+            .entries
+            .iter()
+            .map(|e| e.meta.kernel_name.as_str())
+            .collect();
+        names.sort();
+        names.dedup();
+        names.len()
+    }
+
+    /// Kernel diversity ratio: unique names / total launches (Table II).
+    pub fn diversity_ratio(&self) -> f64 {
+        let total = self.total_invocations();
+        if total == 0 {
+            0.0
+        } else {
+            self.unique_names() as f64 / total as f64
+        }
+    }
+
+    /// Entries partitioned by the dedup cache: `(uncached, cached)`
+    /// given a set of already-profiled keys. Mirrors the paper's global
+    /// replay cache partitioning.
+    pub fn partition_cached<'a>(
+        &'a self,
+        cached_keys: &HashMap<String, f64>,
+    ) -> (Vec<&'a KernelEntry>, Vec<&'a KernelEntry>) {
+        let mut uncached = Vec::new();
+        let mut cached = Vec::new();
+        for e in &self.entries {
+            if cached_keys.contains_key(&e.meta.dedup_key()) {
+                cached.push(e);
+            } else {
+                uncached.push(e);
+            }
+        }
+        (uncached, cached)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{EventKind, Track, TraceEvent, TraceMeta};
+
+    fn meta(name: &str, shapes: &str) -> KernelMeta {
+        KernelMeta {
+            kernel_name: name.to_string(),
+            family: "elem_vector".into(),
+            aten_op: "aten::mul".into(),
+            shapes_key: shapes.to_string(),
+            grid: [1, 1, 1],
+            block: [256, 1, 1],
+            lib_mediated: false,
+            flops: 0.0,
+            bytes: 1024.0,
+        }
+    }
+
+    #[test]
+    fn dedups_identical_kernels() {
+        let mut db = KernelDb::new();
+        db.record(&meta("k1", "f32[8]"), 2.0);
+        db.record(&meta("k1", "f32[8]"), 4.0);
+        db.record(&meta("k1", "f32[16]"), 3.0);
+        assert_eq!(db.len(), 2);
+        assert_eq!(db.total_invocations(), 3);
+        let e = db.get(&meta("k1", "f32[8]").dedup_key()).unwrap();
+        assert_eq!(e.invocations, 2);
+        assert!((e.mean_device_us - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unique_names_and_diversity() {
+        let mut db = KernelDb::new();
+        for i in 0..10 {
+            db.record(&meta("same_kernel", &format!("f32[{i}]")), 1.0);
+        }
+        db.record(&meta("other_kernel", "f32[1]"), 1.0);
+        assert_eq!(db.len(), 11);
+        assert_eq!(db.unique_names(), 2);
+        assert!((db.diversity_ratio() - 2.0 / 11.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_trace_collects_kernels_only() {
+        let mut t = Trace::new(TraceMeta::default());
+        t.push(TraceEvent {
+            kind: EventKind::RuntimeApi,
+            name: "cudaLaunchKernel".into(),
+            ts_us: 0.0,
+            dur_us: 1.0,
+            correlation_id: 1,
+            track: Track::Host,
+            meta: None,
+        });
+        t.push(TraceEvent {
+            kind: EventKind::Kernel,
+            name: "k".into(),
+            ts_us: 5.0,
+            dur_us: 2.0,
+            correlation_id: 1,
+            track: Track::Device(0),
+            meta: Some(meta("k", "f32[4]")),
+        });
+        let db = KernelDb::from_trace(&t);
+        assert_eq!(db.len(), 1);
+        assert_eq!(db.total_invocations(), 1);
+    }
+
+    #[test]
+    fn cache_partition() {
+        let mut db = KernelDb::new();
+        db.record(&meta("a", "x"), 1.0);
+        db.record(&meta("b", "y"), 1.0);
+        let mut cache = HashMap::new();
+        cache.insert(meta("a", "x").dedup_key(), 1.0);
+        let (uncached, cached) = db.partition_cached(&cache);
+        assert_eq!(uncached.len(), 1);
+        assert_eq!(cached.len(), 1);
+        assert_eq!(uncached[0].meta.kernel_name, "b");
+    }
+
+    #[test]
+    fn empty_db() {
+        let db = KernelDb::new();
+        assert!(db.is_empty());
+        assert_eq!(db.diversity_ratio(), 0.0);
+    }
+}

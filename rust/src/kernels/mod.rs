@@ -1,0 +1,15 @@
+//! Kernel taxonomy, database and device cost model.
+//!
+//! * [`family`] — the paper's kernel-family taxonomy (§III-A + Table IV)
+//!   with per-family host-path latency parameters.
+//! * [`cost`] — analytic device-duration model (roofline GEMM +
+//!   bandwidth-bound families).
+//! * [`database`] — the Phase-1 kernel database: unique kernels keyed on
+//!   ATen metadata + launch config, with invocation counts.
+
+pub mod cost;
+pub mod database;
+pub mod family;
+
+pub use database::KernelDb;
+pub use family::{Family, FamilyParams};

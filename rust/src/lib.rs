@@ -1,0 +1,62 @@
+//! # TaxBreak
+//!
+//! Production reproduction of *"TaxBreak: Unmasking the Hidden Costs of
+//! LLM Inference Through Overhead Decomposition"* (CS.DC 2026).
+//!
+//! TaxBreak decomposes host-visible LLM-inference orchestration overhead
+//! into three mutually exclusive, collectively exhaustive per-kernel
+//! components (paper Eq. 1):
+//!
+//! ```text
+//! T_Host = ΔFT + I_lib · ΔCT + ΔKT
+//! ```
+//!
+//! * `ΔFT` — framework translation (Python dispatch + irreducible ATen
+//!   dispatch base),
+//! * `ΔCT` — CUDA-library front-end translation, charged only to
+//!   library-mediated kernels,
+//! * `ΔKT` — the launch-path hardware floor (`T_sys_floor`).
+//!
+//! Summed over a run they give `T_Orchestration` (Eq. 2); together with
+//! device-active time they define the **Host-Device Balance Index**
+//! (Eq. 3): `HDBI = T_dev / (T_dev + T_orch) ∈ (0, 1)`.
+//!
+//! ## Crate layout (three-layer architecture, DESIGN.md §4)
+//!
+//! | module | role |
+//! |---|---|
+//! | [`util`] | substrates: minijson, stats, RNG, CLI (offline environment) |
+//! | [`trace`] | nsys/CUPTI-like event model + IO — the interface every analysis consumes |
+//! | [`hardware`] | GPU/CPU specs, H100/H200 platform presets |
+//! | [`models`] | dense / MoE architecture descriptors + paper model catalog |
+//! | [`kernels`] | kernel-family taxonomy, kernel database, device cost model |
+//! | [`lowering`] | model × phase × (BS, SL) → eager kernel launch sequence |
+//! | [`host`] | single-threaded host dispatch path (Python/ATen/library/launch) |
+//! | [`device`] | GPU stream FIFO + timeline |
+//! | [`sim`] | host+device co-simulation → traces |
+//! | [`taxbreak`] | **the paper's contribution**: two-phase pipeline, Eq. 1-3, baselines, diagnostics |
+//! | [`serving`] | request router, continuous batcher, paged-KV manager, scheduler |
+//! | [`runtime`] | PJRT client, AOT artifact + weights loading, real-trace instrumentation |
+//! | [`config`] | typed run configuration |
+//! | [`repro`] | regeneration harnesses for every paper table & figure |
+//!
+//! Python/JAX/Pallas exist only on the `make artifacts` compile path;
+//! this crate is self-contained at run time.
+
+pub mod config;
+pub mod device;
+pub mod hardware;
+pub mod host;
+pub mod kernels;
+pub mod lowering;
+pub mod models;
+pub mod repro;
+pub mod runtime;
+pub mod serving;
+pub mod sim;
+pub mod taxbreak;
+pub mod trace;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

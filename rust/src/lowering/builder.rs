@@ -1,0 +1,369 @@
+//! Kernel-sequence builder: op-level helpers that append fully-formed
+//! [`KernelMeta`] records with analytic FLOPs/bytes and synthesized
+//! kernel symbols.
+//!
+//! Kernel symbols encode the op and a shape signature, mimicking how
+//! real profiles distinguish autotuned GEMM variants — this is what
+//! drives the unique-name / diversity-ratio statistics of Table II.
+
+use crate::kernels::family::Family;
+use crate::models::{GemmLib, ModelSpec};
+use crate::trace::KernelMeta;
+
+/// Elements per thread-block used to synthesize launch configs.
+const BLOCK_THREADS: u32 = 256;
+/// BF16 element size.
+const EB: f64 = 2.0;
+
+pub struct SeqBuilder<'m> {
+    pub model: &'m ModelSpec,
+    pub batch: usize,
+    pub seq_q: usize,
+    pub ctx: usize,
+    out: Vec<KernelMeta>,
+    /// Symbol/shape-key cache: kernel names repeat heavily (layers ×
+    /// experts × steps), and `format!` per invocation dominated the
+    /// lowering profile (§Perf L3.2). Keyed by FNV of the inputs.
+    name_cache: std::collections::HashMap<u64, String>,
+}
+
+impl<'m> SeqBuilder<'m> {
+    pub fn new(model: &'m ModelSpec, batch: usize, seq_q: usize, ctx: usize) -> SeqBuilder<'m> {
+        SeqBuilder {
+            model,
+            batch,
+            seq_q,
+            ctx,
+            out: Vec::with_capacity(1024),
+            name_cache: std::collections::HashMap::with_capacity(256),
+        }
+    }
+
+    /// Memoized string build: returns a clone of the cached rendering.
+    fn cached(&mut self, key_parts: (&str, &str, usize), build: impl FnOnce() -> String) -> String {
+        let mut h = crate::util::rng::fnv1a(key_parts.0.as_bytes());
+        h ^= crate::util::rng::fnv1a(key_parts.1.as_bytes()).rotate_left(17);
+        h ^= (key_parts.2 as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        self.name_cache.entry(h).or_insert_with(build).clone()
+    }
+
+    pub fn len(&self) -> usize {
+        self.out.len()
+    }
+
+    pub fn finish(self) -> Vec<KernelMeta> {
+        self.out
+    }
+
+    fn grid_for(&self, elements: usize) -> [u32; 3] {
+        let blocks = (elements as u32).div_ceil(BLOCK_THREADS).max(1);
+        [blocks, 1, 1]
+    }
+
+    fn push(
+        &mut self,
+        family: Family,
+        aten_op: &str,
+        kernel_name: String,
+        shapes_key: String,
+        grid: [u32; 3],
+        flops: f64,
+        bytes: f64,
+    ) {
+        self.out.push(KernelMeta {
+            kernel_name,
+            family: family.tag().to_string(),
+            aten_op: aten_op.to_string(),
+            shapes_key,
+            grid,
+            block: [BLOCK_THREADS, 1, 1],
+            lib_mediated: family.params().lib_mediated,
+            flops,
+            bytes,
+        });
+    }
+
+    /// Elementwise op on `elements` scalars. The family (and hence the
+    /// kernel symbol) depends on size — vectorized for large aligned
+    /// tensors, unrolled for small ones, generic otherwise — matching
+    /// the family split real ATen kernels exhibit (Table IV rows).
+    pub fn elem(&mut self, aten_op: &str, tag: &str, elements: usize) {
+        let family = if elements >= 4096 && elements % 4 == 0 {
+            Family::ElemVector
+        } else if elements < 1024 {
+            Family::ElemUnroll
+        } else {
+            Family::ElemGeneric
+        };
+        let sym = self.cached(("elem", tag, family as usize), || match family {
+            Family::ElemVector => format!("vectorized_elementwise_kernel<4, {tag}>"),
+            Family::ElemUnroll => format!("unrolled_elementwise_kernel<{tag}>"),
+            _ => format!("elementwise_kernel<128, 2, {tag}>"),
+        });
+        let shapes = self.cached(("elem-shape", "", elements), || format!("bf16[{elements}]"));
+        self.push(
+            family,
+            aten_op,
+            sym,
+            shapes,
+            self.grid_for(elements),
+            elements as f64,
+            3.0 * EB * elements as f64,
+        );
+    }
+
+    /// Reduction over `elements` (mean/max/softmax/norm inner loops).
+    pub fn reduce(&mut self, aten_op: &str, tag: &str, elements: usize) {
+        self.push(
+            Family::Reduce,
+            aten_op,
+            format!("reduce_kernel<512, {tag}>"),
+            format!("bf16[{elements}]"),
+            self.grid_for(elements),
+            elements as f64,
+            EB * elements as f64,
+        );
+    }
+
+    /// Prefix-scan (cumsum — MoE routing bookkeeping).
+    pub fn scan(&mut self, aten_op: &str, tag: &str, elements: usize) {
+        self.push(
+            Family::Scan,
+            aten_op,
+            format!("scan_kernel<{tag}>"),
+            format!("i32[{elements}]"),
+            self.grid_for(elements),
+            elements as f64,
+            2.0 * 4.0 * elements as f64,
+        );
+    }
+
+    /// Gather / index_select of `rows` rows of width `width`.
+    pub fn gather(&mut self, aten_op: &str, tag: &str, rows: usize, width: usize) {
+        let elements = rows * width;
+        let sym = self.cached(("gather", tag, 0), || format!("index_elementwise_kernel<{tag}>"));
+        let shapes = self.cached(("rw-shape", "", (rows << 20) ^ width), || {
+            format!("bf16[{rows},{width}]")
+        });
+        self.push(
+            Family::Gather,
+            aten_op,
+            sym,
+            shapes,
+            self.grid_for(elements),
+            0.0,
+            2.0 * EB * elements as f64,
+        );
+    }
+
+    /// Scatter / index_add (MoE combine).
+    pub fn scatter(&mut self, aten_op: &str, tag: &str, rows: usize, width: usize) {
+        let elements = rows * width;
+        let sym = self.cached(("scatter", tag, 0), || format!("index_put_kernel<{tag}>"));
+        let shapes = self.cached(("rw-shape", "", (rows << 20) ^ width), || {
+            format!("bf16[{rows},{width}]")
+        });
+        self.push(
+            Family::Scatter,
+            aten_op,
+            sym,
+            shapes,
+            self.grid_for(elements),
+            0.0,
+            3.0 * EB * elements as f64,
+        );
+    }
+
+    /// top-k over `rows` rows of `cols` (router).
+    pub fn topk(&mut self, aten_op: &str, rows: usize, cols: usize) {
+        let elements = rows * cols;
+        self.push(
+            Family::TopK,
+            aten_op,
+            format!("radix_topk_kernel<{cols}>"),
+            format!("f32[{rows},{cols}]"),
+            self.grid_for(elements),
+            elements as f64,
+            2.0 * 4.0 * elements as f64,
+        );
+    }
+
+    /// cudaMemsetAsync of `bytes`.
+    pub fn memset(&mut self, bytes: usize) {
+        self.push(
+            Family::Memset,
+            "cudaMemsetAsync",
+            "memset_kernel".to_string(),
+            format!("u8[{bytes}]"),
+            self.grid_for(bytes / 16),
+            0.0,
+            bytes as f64,
+        );
+    }
+
+    /// Batched GEMM: `bcount` × (m × n × k). Library routing (and so
+    /// `I_lib`) follows the model's GEMM path; the symbol carries the
+    /// shape signature like autotuned cuBLAS/nvjet variant names do.
+    pub fn gemm(&mut self, aten_op: &str, tag: &str, m: usize, n: usize, k: usize, bcount: usize) {
+        let shape_hash = (m << 42) ^ (n << 21) ^ k;
+        let family = match self.model.gemm_lib {
+            GemmLib::Cublas => Family::GemmCublas,
+            GemmLib::Nvjet => Family::GemmNvjet,
+        };
+        // Autotuned variant *names* are tile-quantized: nearby m values
+        // select the same kernel (cuBLAS tiles, not exact shapes), so
+        // the symbol uses the next power of two of m while FLOPs/bytes
+        // stay exact — keeps Table II unique-name counts realistic.
+        let mq = m.next_power_of_two();
+        let name_hash = (mq << 42) ^ (n << 21) ^ k;
+        let sym = self.cached(("gemm", tag, name_hash), || match family {
+            Family::GemmCublas => format!("ampere_bf16_s16816gemm_{tag}_{mq}x{n}x{k}_tn"),
+            _ => format!("nvjet_tst_{tag}_{mq}x{n}x{k}"),
+        });
+        let flops = 2.0 * bcount as f64 * m as f64 * n as f64 * k as f64;
+        let bytes = EB * bcount as f64 * (m * k + k * n + m * n) as f64;
+        let grid = [
+            (m as u32).div_ceil(128).max(1),
+            (n as u32).div_ceil(128).max(1),
+            bcount as u32,
+        ];
+        let shapes = self.cached(("gemm-shape", "", shape_hash ^ (bcount << 10)), || {
+            format!("bf16[{bcount},{m},{k}]x[{k},{n}]")
+        });
+        self.push(family, aten_op, sym, shapes, grid, flops, bytes);
+    }
+
+    /// The fused FlashAttention-2-style kernel: both matmuls + online
+    /// softmax in one launch; HBM traffic excludes the S×S matrix.
+    pub fn fused_attention(&mut self, heads: usize, head_dim: usize) {
+        let (b, sq, ctx) = (self.batch, self.seq_q, self.ctx);
+        let flops = 4.0 * (b * heads * sq * ctx * head_dim) as f64;
+        let bytes = EB * (b * heads) as f64 * (2.0 * (sq * head_dim) as f64
+            + 2.0 * (ctx * head_dim) as f64);
+        self.push(
+            Family::FusedAttention,
+            "flash::attention_fwd",
+            format!("flash_fwd_kernel_hdim{head_dim}"),
+            format!("bf16[{b},{heads},{sq},{head_dim}]x[{ctx}]"),
+            [(b * heads) as u32, (sq as u32).div_ceil(128).max(1), 1],
+            flops,
+            bytes,
+        );
+    }
+
+    /// RMSNorm as its eager 4-kernel chain (pow, mean, rsqrt·mul, gain).
+    pub fn rmsnorm(&mut self, tag: &str) {
+        let t = self.batch * self.seq_q * self.model.d_model;
+        self.elem("aten::pow", &format!("{tag}_pow2"), t);
+        self.reduce("aten::mean", &format!("{tag}_mean"), t);
+        self.elem("aten::rsqrt", &format!("{tag}_rsqrt_mul"), t);
+        self.elem("aten::mul", &format!("{tag}_gain"), t);
+    }
+
+    /// LayerNorm (GPT-2 path): fused reduce + affine pair.
+    pub fn layernorm(&mut self, tag: &str) {
+        let t = self.batch * self.seq_q * self.model.d_model;
+        self.reduce("aten::native_layer_norm", &format!("{tag}_stats"), t);
+        self.elem("aten::native_layer_norm", &format!("{tag}_affine"), t);
+    }
+}
+
+/// Per-layer eager glue: contiguity copies, dtype casts, mask/position
+/// index ops. Count is the model's calibration constant; a 4-op rotation
+/// keeps symbols realistic without inflating unique-name counts.
+pub fn lower_glue(b: &mut SeqBuilder, layer: usize, count: usize) {
+    let t = (b.batch * b.seq_q * b.model.d_model / 4).max(64);
+    for i in 0..count {
+        match (layer + i) % 4 {
+            0 => b.elem("aten::copy_", "copy_contiguous", t),
+            1 => b.elem("aten::to", "cast_bf16", t),
+            2 => b.elem("aten::slice", "slice_copy", t / 2),
+            _ => b.gather("aten::index", "pos_index", b.batch * b.seq_q, 8),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+
+    #[test]
+    fn elem_family_by_size() {
+        let m = models::gpt2();
+        let mut b = SeqBuilder::new(&m, 1, 1, 1);
+        b.elem("aten::mul", "t", 8192); // vector
+        b.elem("aten::mul", "t", 100); // unroll
+        b.elem("aten::mul", "t", 2000); // generic
+        let seq = b.finish();
+        assert_eq!(seq[0].family, "elem_vector");
+        assert_eq!(seq[1].family, "elem_unroll");
+        assert_eq!(seq[2].family, "elem_generic");
+    }
+
+    #[test]
+    fn gemm_lib_follows_model() {
+        let g = models::gpt2();
+        let mut b = SeqBuilder::new(&g, 1, 8, 8);
+        b.gemm("aten::mm", "qkv", 8, 2304, 768, 1);
+        let seq = b.finish();
+        assert_eq!(seq[0].family, "gemm_nvjet");
+        assert!(!seq[0].lib_mediated);
+
+        let l = models::llama_1b();
+        let mut b = SeqBuilder::new(&l, 1, 8, 8);
+        b.gemm("aten::mm", "q", 8, 2048, 2048, 1);
+        let seq = b.finish();
+        assert_eq!(seq[0].family, "gemm_cublas");
+        assert!(seq[0].lib_mediated);
+    }
+
+    #[test]
+    fn gemm_flops_bytes() {
+        let l = models::llama_1b();
+        let mut b = SeqBuilder::new(&l, 1, 4, 4);
+        b.gemm("aten::mm", "x", 4, 8, 16, 2);
+        let k = &b.finish()[0];
+        assert_eq!(k.flops, 2.0 * 2.0 * 4.0 * 8.0 * 16.0);
+        assert_eq!(k.bytes, 2.0 * 2.0 * (4 * 16 + 16 * 8 + 4 * 8) as f64);
+    }
+
+    #[test]
+    fn fused_attention_traffic_excludes_score_matrix() {
+        let l = models::llama_1b();
+        let mut b = SeqBuilder::new(&l, 1, 2048, 2048);
+        b.fused_attention(32, 64);
+        let k = &b.finish()[0];
+        // Bytes must be linear in S, far below the S^2 score matrix.
+        let s2 = 2.0 * (1 * 32 * 2048 * 2048) as f64;
+        assert!(k.bytes < s2 / 4.0, "bytes={} s2={}", k.bytes, s2);
+        assert_eq!(k.family, "fused_attention");
+    }
+
+    #[test]
+    fn rmsnorm_is_four_kernels() {
+        let l = models::llama_1b();
+        let mut b = SeqBuilder::new(&l, 1, 16, 16);
+        b.rmsnorm("ln1");
+        assert_eq!(b.len(), 4);
+    }
+
+    #[test]
+    fn glue_count_matches() {
+        let l = models::llama_1b();
+        let mut b = SeqBuilder::new(&l, 1, 16, 16);
+        lower_glue(&mut b, 0, 9);
+        assert_eq!(b.len(), 9);
+    }
+
+    #[test]
+    fn shapes_key_distinguishes_sizes() {
+        let l = models::llama_1b();
+        let mut b = SeqBuilder::new(&l, 1, 4, 4);
+        b.gemm("aten::mm", "x", 4, 8, 16, 1);
+        b.gemm("aten::mm", "x", 4, 8, 32, 1);
+        let seq = b.finish();
+        assert_ne!(seq[0].shapes_key, seq[1].shapes_key);
+        assert_ne!(seq[0].kernel_name, seq[1].kernel_name);
+    }
+}

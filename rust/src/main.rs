@@ -1,0 +1,229 @@
+//! `taxbreak` — CLI for the TaxBreak reproduction.
+//!
+//! Subcommands:
+//! * `repro <fig2|fig5|fig6|table2|table3|table4|fig7|fig8|fig9|fig10|fig11|all>`
+//!   — regenerate a paper table/figure.
+//! * `analyze` — simulate one workload point and print the full
+//!   TaxBreak decomposition, diagnosis and baselines.
+//! * `trace` — simulate and dump a trace (json / chrome format).
+//! * `serve` — real-mode serving over PJRT artifacts (see
+//!   `examples/e2e_serving.rs` for the scripted version).
+//! * `models` / `platforms` — list the catalog.
+
+use taxbreak::hardware::Platform;
+use taxbreak::models;
+use taxbreak::repro::{self, ReproOpts};
+use taxbreak::sim::{simulate, Phase};
+use taxbreak::taxbreak::{analyze, report, SimReplayBackend};
+use taxbreak::trace::chrome;
+use taxbreak::util::cli::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> anyhow::Result<()> {
+    let mut args = Args::from_env();
+    let cmd = args.shift().unwrap_or_else(|| "help".to_string());
+    match cmd.as_str() {
+        "repro" => cmd_repro(args),
+        "analyze" => cmd_analyze(args),
+        "trace" => cmd_trace(args),
+        "serve" => cmd_serve(args),
+        "models" => {
+            for m in models::catalog() {
+                println!(
+                    "{:<22} {:<20} layers={:<3} params={:.2}B active={:.2}B {}",
+                    m.name,
+                    m.display,
+                    m.layers,
+                    m.params_total() / 1e9,
+                    m.params_active() / 1e9,
+                    if m.is_moe() { "moe" } else { "dense" }
+                );
+            }
+            Ok(())
+        }
+        "platforms" => {
+            for p in Platform::all() {
+                println!(
+                    "{:<6} gpu={} ({} MHz, {} GB/s, floor {:.2}us) cpu={} (st x{:.2})",
+                    p.name,
+                    p.gpu.name,
+                    p.gpu.clock_mhz,
+                    p.gpu.hbm_gbps,
+                    p.gpu.t_sys_floor_us,
+                    p.cpu.name,
+                    p.cpu.st_speed
+                );
+            }
+            Ok(())
+        }
+        "help" | "--help" => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command '{other}' — try `taxbreak help`"),
+    }
+}
+
+const HELP: &str = "\
+taxbreak — trace-driven decomposition of host-side LLM inference overhead
+
+USAGE:
+  taxbreak repro <id|all> [--full] [--seed N] [--out FILE]
+  taxbreak analyze [--config run.json] --model M --platform h100|h200
+                   [--phase prefill|decode] [--bs N] [--sl N] [--m N]
+                   [--fused] [--mitigation none|torch-compile|cuda-graphs|
+                    kernel-fusion] [--json]
+  taxbreak trace   --model M --platform P [--phase ...] [--bs] [--sl] [--m]
+                   --out FILE [--chrome FILE]
+  taxbreak serve   --artifacts DIR [--variant dense_fused] [--requests N]
+                   [--max-batch N] [--report FILE]
+  taxbreak models | platforms | help
+
+Artifact ids: fig2 fig5 fig6 table2 table3 table4 fig7 fig8 fig9 fig10 fig11";
+
+/// Build a RunConfig from `--config file.json` (if given) overridden by
+/// explicit flags.
+fn parse_run_config(args: &mut Args) -> anyhow::Result<taxbreak::config::RunConfig> {
+    let mut cfg = match args.opt("config") {
+        Some(path) => taxbreak::config::RunConfig::load(std::path::Path::new(path))?,
+        None => taxbreak::config::RunConfig::default(),
+    };
+    if let Some(m) = args.opt("model") {
+        cfg.model = m.to_string();
+    }
+    if let Some(p) = args.opt("platform") {
+        cfg.platform = p.to_string();
+    }
+    if let Some(ph) = args.opt("phase") {
+        cfg.phase = match ph {
+            "prefill" => Phase::Prefill,
+            "decode" => Phase::Decode,
+            other => anyhow::bail!("--phase must be prefill|decode, got '{other}'"),
+        };
+    }
+    cfg.batch = args.opt_usize("bs", cfg.batch)?;
+    cfg.seq = args.opt_usize("sl", cfg.seq)?;
+    cfg.m_tokens = args.opt_usize("m", cfg.m_tokens)?;
+    if args.flag("fused") {
+        cfg.fused_attention = true;
+    }
+    if let Some(mit) = args.opt("mitigation") {
+        cfg.mitigation = taxbreak::sim::Mitigation::parse(mit)?;
+    }
+    cfg.seed = args.opt_u64("seed", cfg.seed)?;
+    Ok(cfg)
+}
+
+fn cmd_repro(mut args: Args) -> anyhow::Result<()> {
+    let id = args
+        .shift()
+        .ok_or_else(|| anyhow::anyhow!("usage: taxbreak repro <id|all>"))?;
+    let opts = ReproOpts {
+        full: args.flag("full"),
+        seed: args.opt_u64("seed", 2026)?,
+    };
+    let out_path = args.opt("out").map(|s| s.to_string());
+    args.finish()?;
+    let output = repro::run(&id, &opts)?;
+    match out_path {
+        Some(p) => {
+            std::fs::write(&p, &output)?;
+            println!("wrote {p}");
+        }
+        None => print!("{output}"),
+    }
+    Ok(())
+}
+
+fn cmd_analyze(mut args: Args) -> anyhow::Result<()> {
+    let cfg = parse_run_config(&mut args)?;
+    let as_json = args.flag("json");
+    args.finish()?;
+    let model = cfg.model_spec()?;
+    let platform = cfg.platform_spec()?;
+    let wl = cfg.workload();
+    let seed = cfg.seed;
+
+    let trace = simulate(&model, &platform, &wl, seed);
+    let mut backend = SimReplayBackend::new(platform.clone(), seed ^ 0x9E37);
+    let a = analyze(&trace, &mut backend, &cfg.replay_config());
+
+    if as_json {
+        println!("{}", report::to_json(&a).pretty());
+        return Ok(());
+    }
+    let title = format!(
+        "{} {} BS={} SL={} ({}, m={})",
+        model.display, wl.phase.as_str(), wl.batch, wl.seq, platform.name, wl.m_tokens
+    );
+    print!("{}", report::decomposition_table(&title, &a.decomposition).render());
+    print!("{}", report::family_launch_table("per-family launch latency (us)", &a).render());
+    println!(
+        "baselines: framework-tax {:.2} ms | TKLQT {:.2} ms (queue share {:.0}%)",
+        a.baselines.framework_tax_us / 1000.0,
+        a.baselines.tklqt_us / 1000.0,
+        100.0 * a.baselines.queue_share
+    );
+    println!(
+        "phase-2: floor {:.2} us, dispatch base {:.2} us, {} unique kernels ({} cache hits)",
+        a.phase2.floor.mean,
+        a.phase2.dispatch_base_us,
+        a.phase2.kernels.len(),
+        a.phase2.cache_hits
+    );
+    println!("diagnosis [{}]: {}", a.diagnosis.target.as_str(), a.diagnosis.rationale);
+    Ok(())
+}
+
+fn cmd_trace(mut args: Args) -> anyhow::Result<()> {
+    let cfg = parse_run_config(&mut args)?;
+    let out = args.opt_string("out", "trace.json");
+    let chrome_out = args.opt("chrome").map(|s| s.to_string());
+    args.finish()?;
+    let model = cfg.model_spec()?;
+    let platform = cfg.platform_spec()?;
+    let wl = cfg.workload();
+
+    let trace = simulate(&model, &platform, &wl, cfg.seed);
+    trace.save(std::path::Path::new(&out))?;
+    println!(
+        "wrote {} ({} kernels, {:.2} ms wall)",
+        out,
+        trace.kernel_count(),
+        trace.meta.wall_us / 1000.0
+    );
+    if let Some(p) = chrome_out {
+        chrome::save_chrome(&trace, std::path::Path::new(&p))?;
+        println!("wrote {p} (chrome://tracing format)");
+    }
+    Ok(())
+}
+
+fn cmd_serve(mut args: Args) -> anyhow::Result<()> {
+    let artifacts = args.opt_string("artifacts", "artifacts");
+    let variant = args.opt_string("variant", "dense_fused");
+    let requests = args.opt_usize("requests", 16)?;
+    let max_batch = args.opt_usize("max-batch", 4)?;
+    let report_path = args.opt("report").map(|s| s.to_string());
+    let seed = args.opt_u64("seed", 2026)?;
+    args.finish()?;
+    let summary = taxbreak::serving::run_server_demo(
+        std::path::Path::new(&artifacts),
+        &variant,
+        requests,
+        max_batch,
+        seed,
+    )?;
+    print!("{}", summary.render());
+    if let Some(p) = report_path {
+        std::fs::write(&p, summary.to_json().pretty())?;
+        println!("wrote {p}");
+    }
+    Ok(())
+}

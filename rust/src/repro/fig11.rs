@@ -1,0 +1,70 @@
+//! Fig. 11: end-to-end latency gain (H100→H200) vs HDBI scatter —
+//! host-bound points benefit most from the faster CPU; device-bound
+//! points see attenuated gains.
+
+use crate::hardware::Platform;
+use crate::repro::{points, ReproOpts};
+use crate::sim::{Phase, Workload};
+use crate::util::table::{ratio, Table};
+
+pub fn run(opts: &ReproOpts) -> anyhow::Result<String> {
+    let mut t = Table::new(
+        "Fig. 11 — e2e latency gain (H100→H200) vs HDBI",
+        &["model", "phase", "BS/SL", "HDBI (H100)", "e2e gain (%)"],
+    );
+    let mut series: Vec<(f64, f64)> = Vec::new();
+    for name in super::fig10::MODELS {
+        let model = points::model(name);
+        for phase in [Phase::Prefill, Phase::Decode] {
+            for (bs, sl) in super::fig10::CONFIGS {
+                let wl = match phase {
+                    Phase::Prefill => Workload::prefill(bs, sl),
+                    Phase::Decode => Workload::decode(bs, sl, points::M_TOKENS),
+                };
+                let a100 = points::analyze_point(&model, &Platform::h100(), &wl, opts.seed);
+                let a200 = points::analyze_point(&model, &Platform::h200(), &wl, opts.seed);
+                let hdbi = a100.decomposition.hdbi();
+                let gain =
+                    100.0 * (1.0 - a200.decomposition.e2e_us / a100.decomposition.e2e_us);
+                series.push((hdbi, gain));
+                t.row(vec![
+                    model.display.clone(),
+                    phase.as_str().to_string(),
+                    format!("{bs}/{sl}"),
+                    ratio(hdbi),
+                    format!("{gain:.1}"),
+                ]);
+            }
+        }
+    }
+    // Rank correlation between (1 - HDBI) and the gain: host-bound
+    // points should gain most.
+    let n = series.len() as f64;
+    let mean_h: f64 = series.iter().map(|(h, _)| h).sum::<f64>() / n;
+    let mean_g: f64 = series.iter().map(|(_, g)| g).sum::<f64>() / n;
+    let cov: f64 = series
+        .iter()
+        .map(|(h, g)| (h - mean_h) * (g - mean_g))
+        .sum::<f64>();
+    let var_h: f64 = series.iter().map(|(h, _)| (h - mean_h).powi(2)).sum::<f64>();
+    let var_g: f64 = series.iter().map(|(_, g)| (g - mean_g).powi(2)).sum::<f64>();
+    let corr = cov / (var_h * var_g).sqrt().max(1e-12);
+    Ok(format!(
+        "{}\ncorr(HDBI, gain) = {corr:.2} — negative: the lower the HDBI \
+         (more host-bound), the larger the end-to-end win from the \
+         faster host CPU. The effect weakens as HDBI rises above ≈0.3.\n",
+        t.render()
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    #[ignore = "16 analysis points; run in release via `taxbreak repro fig11`"]
+    fn renders() {
+        let out = run(&ReproOpts::default()).unwrap();
+        assert!(out.contains("corr(HDBI, gain)"));
+    }
+}

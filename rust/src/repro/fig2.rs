@@ -1,0 +1,61 @@
+//! Fig. 2: the prior-work view of GPT-2 across batch sizes —
+//! end-to-end latency (framework-bound → compute-bound transition,
+//! the framework-tax characterization [14]) and TKLQT (the kernel
+//! launch/queue tax [30]).
+
+use crate::hardware::Platform;
+use crate::repro::{points, ReproOpts};
+use crate::sim::Workload;
+use crate::taxbreak::baselines;
+use crate::trace::Trace;
+use crate::util::table::{ms, Table};
+
+pub fn run(opts: &ReproOpts) -> anyhow::Result<String> {
+    let model = points::model("gpt2");
+    let platform = Platform::h200();
+    let batches: &[usize] = if opts.full {
+        &[1, 2, 4, 8, 16]
+    } else {
+        &[1, 4, 16]
+    };
+
+    let mut t = Table::new(
+        "Fig. 2 — GPT-2 prior-work characterizations (SL=512, H200 prefill)",
+        &["BS", "e2e (ms)", "device (ms)", "fw tax (ms)", "TKLQT (us)", "TKLQT/kern (us)"],
+    );
+    for &bs in batches {
+        let trace: Trace = crate::sim::simulate(
+            &model,
+            &platform,
+            &Workload::prefill(bs, 512),
+            opts.seed,
+        );
+        let b = baselines::compute(&trace);
+        t.row(vec![
+            bs.to_string(),
+            ms(trace.e2e_us() / 1000.0),
+            ms(trace.device_active_us() / 1000.0),
+            ms(b.framework_tax_us / 1000.0),
+            format!("{:.0}", b.tklqt_us),
+            format!("{:.1}", b.tklqt_us / b.n_kernels.max(1) as f64),
+        ]);
+    }
+    Ok(format!(
+        "{}\nShape check: latency transitions framework-bound (flat) → \
+         compute-bound (scaling), while TKLQT/kernel rises with GPU \
+         occupancy at large BS.\n",
+        t.render()
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_rows() {
+        let out = run(&ReproOpts::default()).unwrap();
+        assert!(out.contains("Fig. 2"));
+        assert!(out.lines().count() >= 6);
+    }
+}

@@ -1,0 +1,63 @@
+//! Fig. 6: GPU idle fraction across BS × SL on H200 — dense
+//! (Llama-3.2-3B) vs MoE (Qwen1.5-MoE-A2.7B), prefill and decode.
+
+use crate::hardware::Platform;
+use crate::repro::{points, ReproOpts};
+use crate::sim::{Phase, Workload};
+use crate::util::table::Table;
+
+pub fn run(opts: &ReproOpts) -> anyhow::Result<String> {
+    let platform = Platform::h200();
+    let mut out = String::new();
+    let batches = points::batch_grid(opts.full);
+    let seqs = points::seq_grid(opts.full);
+
+    for name in ["llama-3.2-3b", "qwen1.5-moe-a2.7b"] {
+        let model = points::model(name);
+        for phase in [Phase::Prefill, Phase::Decode] {
+            let mut header: Vec<String> = vec!["BS \\ SL".to_string()];
+            header.extend(seqs.iter().map(|s| s.to_string()));
+            let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+            let mut t = Table::new(
+                &format!(
+                    "Fig. 6 — {} {} idle fraction (%), H200",
+                    model.display,
+                    phase.as_str()
+                ),
+                &header_refs,
+            );
+            for &bs in &batches {
+                let mut row = vec![bs.to_string()];
+                for &sl in &seqs {
+                    let wl = match phase {
+                        Phase::Prefill => Workload::prefill(bs, sl),
+                        Phase::Decode => Workload::decode(bs, sl, points::M_TOKENS),
+                    };
+                    let s = points::summarize(&model, &platform, &wl, opts.seed);
+                    row.push(format!("{:.1}", 100.0 * s.idle_fraction()));
+                }
+                t.row(row);
+            }
+            out.push_str(&t.render());
+            out.push('\n');
+        }
+    }
+    out.push_str(
+        "Shape checks: dense idle fraction collapses to <3% once BS/SL \
+         grow (compute-bound); MoE idle stays high across the entire \
+         sweep — batching does not remove expert-routing dispatch.\n",
+    );
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    #[ignore = "sweep: run with --ignored (release) or via `taxbreak repro fig6`"]
+    fn grid_renders() {
+        let out = run(&ReproOpts::default()).unwrap();
+        assert!(out.contains("idle fraction"));
+    }
+}

@@ -1,0 +1,72 @@
+//! Fig. 7: the GPT-2/H200 case study comparing TaxBreak's HDBI against
+//! prior TKLQT characterization across batch sizes.
+//!
+//! (a) HDBI rises monotonically with BS (host→device crossover between
+//!     BS=4 and BS=8) while TKLQT blows up at saturation;
+//! (b) the host orchestration decomposition stays nearly flat while
+//!     T_DeviceActive grows ~10x — the crossover is device-work-driven.
+
+use crate::hardware::Platform;
+use crate::repro::{points, ReproOpts};
+use crate::sim::Workload;
+use crate::util::table::{ms, ratio, Table};
+
+pub fn run(opts: &ReproOpts) -> anyhow::Result<String> {
+    let model = points::model("gpt2");
+    let platform = Platform::h200();
+    let batches: &[usize] = if opts.full {
+        &[1, 2, 4, 8, 16]
+    } else {
+        &[1, 4, 8, 16]
+    };
+
+    let mut a_tab = Table::new(
+        "Fig. 7a — HDBI vs TKLQT, GPT-2 (SL=512) on H200",
+        &["BS", "HDBI", "TKLQT (us)", "queue share"],
+    );
+    let mut b_tab = Table::new(
+        "Fig. 7b — host orchestration decomposition vs device-active (ms)",
+        &["BS", "T_Py", "T_base", "dCT", "T_sys", "T_orch", "T_dev", "per-kern host (us)"],
+    );
+
+    for &bs in batches {
+        let a = points::analyze_point(&model, &platform, &Workload::prefill(bs, 512), opts.seed);
+        let d = &a.decomposition;
+        a_tab.row(vec![
+            bs.to_string(),
+            ratio(d.hdbi()),
+            format!("{:.0}", a.baselines.tklqt_us),
+            format!("{:.0}%", 100.0 * a.baselines.queue_share),
+        ]);
+        b_tab.row(vec![
+            bs.to_string(),
+            ms(d.t_py_us / 1000.0),
+            ms(d.t_base_us / 1000.0),
+            ms(d.dct_us / 1000.0),
+            ms(d.dkt_us / 1000.0),
+            ms(d.orchestration_us() / 1000.0),
+            ms(d.device_active_us / 1000.0),
+            format!("{:.1}", d.per_kernel_host_us()),
+        ]);
+    }
+    Ok(format!(
+        "{}\n{}\nShape checks: HDBI 0.25→0.74 with crossover between \
+         BS=4 and BS=8; T_orch flat (~5 ms) and dCT == 0 \
+         (framework-native nvjet GEMMs); per-kernel host cost ≈ 13.7 us \
+         constant; T_dev grows ~10x.\n",
+        a_tab.render(),
+        b_tab.render()
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    #[ignore = "multi-point replay; run in release via `taxbreak repro fig7`"]
+    fn renders() {
+        let out = run(&ReproOpts::default()).unwrap();
+        assert!(out.contains("Fig. 7a"));
+    }
+}

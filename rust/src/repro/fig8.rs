@@ -1,0 +1,69 @@
+//! Fig. 8: H200 T_Orchestration decomposition + HDBI across dense and
+//! MoE workloads — prefill (m=1) and decode (m=10 totals) at
+//! {BS1/SL512, BS4/SL512, BS1/SL4096, BS4/SL4096}.
+
+use crate::hardware::Platform;
+use crate::repro::{points, ReproOpts};
+use crate::sim::{Phase, Workload};
+use crate::util::table::{ms, ratio, Table};
+
+const MODELS: [&str; 4] = ["llama-3.2-1b", "llama-3.2-3b", "olmoe-1b-7b", "qwen1.5-moe-a2.7b"];
+const POINTS: [(usize, usize); 4] = [(1, 512), (4, 512), (1, 4096), (4, 4096)];
+
+pub fn run(opts: &ReproOpts) -> anyhow::Result<String> {
+    let platform = Platform::h200();
+    let mut out = String::new();
+    for name in MODELS {
+        let model = points::model(name);
+        let mut t = Table::new(
+            &format!(
+                "Fig. 8 — {} T_Orchestration decomposition + HDBI, H200 (decode totals over m=10)",
+                model.display
+            ),
+            &["phase", "BS/SL", "T_Py", "T_base", "dCT", "T_sys", "T_orch(ms)", "T_dev(ms)", "HDBI"],
+        );
+        for phase in [Phase::Prefill, Phase::Decode] {
+            for (bs, sl) in POINTS {
+                let wl = match phase {
+                    Phase::Prefill => Workload::prefill(bs, sl),
+                    Phase::Decode => Workload::decode(bs, sl, points::M_TOKENS),
+                };
+                let a = points::analyze_point(&model, &platform, &wl, opts.seed);
+                let d = &a.decomposition;
+                t.row(vec![
+                    phase.as_str().to_string(),
+                    format!("{bs}/{sl}"),
+                    ms(d.t_py_us / 1000.0),
+                    ms(d.t_base_us / 1000.0),
+                    ms(d.dct_us / 1000.0),
+                    ms(d.dkt_us / 1000.0),
+                    ms(d.orchestration_us() / 1000.0),
+                    ms(d.device_active_us / 1000.0),
+                    ratio(d.hdbi()),
+                ]);
+            }
+        }
+        out.push_str(&t.render());
+        out.push('\n');
+    }
+    out.push_str(
+        "Shape checks: dense — balanced prefill (HDBI≈0.4), host-visible \
+         small decode (≈0.23), returning device-dominant as BS/SL grow. \
+         MoE — host-bound in prefill (HDBI≈0.15) and stays host-bound \
+         across ALL decode points; decode orchestration ≈ 10x the \
+         single-pass prefill value (m=10 multiplicative).\n",
+    );
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    #[ignore = "32 analysis points; run in release via `taxbreak repro fig8`"]
+    fn renders() {
+        let out = run(&ReproOpts::default()).unwrap();
+        assert!(out.contains("Fig. 8"));
+    }
+}

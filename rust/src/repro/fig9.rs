@@ -1,0 +1,71 @@
+//! Fig. 9: eager vs FlashAttention-2 for Llama-3.2-1B on H200 —
+//! e2e runtime, T_Orchestration, GPU utilization, HDBI and kernel
+//! counts at BS=1/SL=512 and BS=8/SL=2048 (prefill).
+
+use crate::hardware::Platform;
+use crate::repro::{points, ReproOpts};
+use crate::sim::Workload;
+use crate::util::table::{ms, ratio, Table};
+
+pub fn run(opts: &ReproOpts) -> anyhow::Result<String> {
+    let model = points::model("llama-3.2-1b");
+    let platform = Platform::h200();
+
+    let mut t = Table::new(
+        "Fig. 9 — eager vs FlashAttention-2, Llama-3.2-1B on H200 (prefill)",
+        &["BS/SL", "mode", "e2e (ms)", "T_orch (ms)", "T_dev (ms)", "GPU util", "HDBI", "kernels"],
+    );
+    let mut summary = String::new();
+    for (bs, sl) in [(1usize, 512usize), (8, 2048)] {
+        let mut cells: Vec<(f64, f64, usize)> = Vec::new();
+        for fused in [false, true] {
+            let wl = Workload::prefill(bs, sl).with_fused_attention(fused);
+            let a = points::analyze_point(&model, &platform, &wl, opts.seed);
+            let d = &a.decomposition;
+            cells.push((d.e2e_us, d.orchestration_us(), d.n_kernels));
+            t.row(vec![
+                format!("{bs}/{sl}"),
+                if fused { "FA2" } else { "eager" }.to_string(),
+                ms(d.e2e_us / 1000.0),
+                ms(d.orchestration_us() / 1000.0),
+                ms(d.device_active_us / 1000.0),
+                format!("{:.1}%", 100.0 * d.gpu_utilization()),
+                ratio(d.hdbi()),
+                d.n_kernels.to_string(),
+            ]);
+        }
+        let (e_eager, o_eager, k_eager) = cells[0];
+        let (e_fa2, o_fa2, k_fa2) = cells[1];
+        summary.push_str(&format!(
+            "BS={bs}/SL={sl}: e2e -{:.1}%, T_orch -{:.1}%, kernels -{:.0}% \
+             ({} -> {})\n",
+            100.0 * (1.0 - e_fa2 / e_eager),
+            100.0 * (1.0 - o_fa2 / o_eager),
+            100.0 * (1.0 - k_fa2 as f64 / k_eager as f64),
+            k_eager,
+            k_fa2,
+        ));
+    }
+    Ok(format!(
+        "{}\n{}Shape checks: small config — modest e2e and orch gains; \
+         large config — large e2e collapse driven by device-side \
+         attention-traffic elimination while orchestration falls only \
+         modestly. HDBI *decreases* despite both absolute values \
+         improving: FA2 removes device work faster than host overhead \
+         (the boundedness-ratio pitfall TaxBreak resolves).\n",
+        t.render(),
+        summary
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    #[ignore = "4 analysis points; run in release via `taxbreak repro fig9`"]
+    fn renders() {
+        let out = run(&ReproOpts::default()).unwrap();
+        assert!(out.contains("FA2"));
+    }
+}

@@ -1,0 +1,91 @@
+//! Regeneration harnesses for every table and figure in the paper's
+//! evaluation (DESIGN.md §5 experiment index).
+//!
+//! Each `figN`/`tableN` function reproduces the corresponding artifact's
+//! rows/series as text tables. Absolute values come from the calibrated
+//! simulator; the *shape* (who wins, by what factor, where crossovers
+//! fall) is the reproduction target.
+//!
+//! Run via `taxbreak repro <id>` (or `repro all`).
+
+pub mod points;
+
+mod fig10;
+mod fig11;
+mod fig2;
+mod fig5;
+mod fig6;
+mod fig7;
+mod fig8;
+mod fig9;
+mod table2;
+mod table3;
+mod table4;
+
+/// All artifact ids in paper order.
+pub const ALL: [&str; 11] = [
+    "fig2", "fig5", "fig6", "table2", "table3", "table4", "fig7", "fig8",
+    "fig9", "fig10", "fig11",
+];
+
+/// Options common to the harnesses.
+#[derive(Debug, Clone, Copy)]
+pub struct ReproOpts {
+    /// Full paper grids (slower) vs reduced grids.
+    pub full: bool,
+    pub seed: u64,
+}
+
+impl Default for ReproOpts {
+    fn default() -> Self {
+        ReproOpts {
+            full: false,
+            seed: 2026,
+        }
+    }
+}
+
+/// Run one artifact regeneration; returns the rendered report.
+pub fn run(id: &str, opts: &ReproOpts) -> anyhow::Result<String> {
+    match id {
+        "fig2" => fig2::run(opts),
+        "fig5" => fig5::run(opts),
+        "fig6" => fig6::run(opts),
+        "table2" => table2::run(opts),
+        "table3" => table3::run(opts),
+        "table4" => table4::run(opts),
+        "fig7" => fig7::run(opts),
+        "fig8" => fig8::run(opts),
+        "fig9" => fig9::run(opts),
+        "fig10" => fig10::run(opts),
+        "fig11" => fig11::run(opts),
+        "all" => {
+            let mut out = String::new();
+            for id in ALL {
+                out.push_str(&run(id, opts)?);
+                out.push('\n');
+            }
+            Ok(out)
+        }
+        other => anyhow::bail!(
+            "unknown artifact '{other}' (expected one of: {}, all)",
+            ALL.join(", ")
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_id_errors() {
+        assert!(run("fig99", &ReproOpts::default()).is_err());
+    }
+
+    #[test]
+    fn fig2_runs_reduced() {
+        let out = run("fig2", &ReproOpts::default()).unwrap();
+        assert!(out.contains("TKLQT"));
+    }
+}

@@ -1,0 +1,55 @@
+//! Shared helpers for the repro harnesses: run a workload point through
+//! the simulator and the TaxBreak pipeline.
+
+use crate::hardware::Platform;
+use crate::models::{self, ModelSpec};
+use crate::sim::{simulate, simulate_summary, SimSummary, Workload};
+use crate::taxbreak::{analyze, Analysis, ReplayConfig, SimReplayBackend};
+
+/// Decode window used throughout the paper's evaluation (m = 10).
+pub const M_TOKENS: usize = 10;
+
+/// Resolve a model or panic with context (repro ids are hard-coded).
+pub fn model(name: &str) -> ModelSpec {
+    models::by_name(name).expect("catalog model")
+}
+
+/// Full TaxBreak analysis of one workload point (trace + 2-phase
+/// pipeline with the paper's W=50/R=150 protocol).
+pub fn analyze_point(
+    model: &ModelSpec,
+    platform: &Platform,
+    wl: &Workload,
+    seed: u64,
+) -> Analysis {
+    let trace = simulate(model, platform, wl, seed);
+    let mut backend = SimReplayBackend::new(platform.clone(), seed ^ 0x9E37);
+    analyze(&trace, &mut backend, &ReplayConfig::paper())
+}
+
+/// Aggregates-only simulation of one point.
+pub fn summarize(model: &ModelSpec, platform: &Platform, wl: &Workload, seed: u64) -> SimSummary {
+    simulate_summary(model, platform, wl, seed)
+}
+
+/// The Fig. 5/6 heatmap grids.
+pub fn batch_grid(full: bool) -> Vec<usize> {
+    if full {
+        vec![1, 4, 8, 16]
+    } else {
+        vec![1, 4, 16]
+    }
+}
+
+pub fn seq_grid(full: bool) -> Vec<usize> {
+    if full {
+        vec![512, 1024, 2048, 4096, 8192]
+    } else {
+        vec![512, 2048, 8192]
+    }
+}
+
+/// OLMoE does not support SL=8192 (paper Fig. 5 note).
+pub fn model_supports_seq(model: &ModelSpec, seq: usize) -> bool {
+    !(model.name == "olmoe-1b-7b" && seq >= 8192)
+}

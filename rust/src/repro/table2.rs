@@ -1,0 +1,79 @@
+//! Table II: kernel fragmentation for dense vs MoE models on H100
+//! (BS=4 / SL=2048, m=10 decode): total launches, unique names,
+//! kernels/token, diversity ratio, GPU utilization.
+
+use crate::hardware::Platform;
+use crate::kernels::KernelDb;
+use crate::repro::{points, ReproOpts};
+use crate::sim::{simulate, Workload};
+use crate::util::table::{count, Table};
+
+const MODELS: [&str; 4] = ["llama-3.2-1b", "llama-3.2-3b", "olmoe-1b-7b", "qwen1.5-moe-a2.7b"];
+
+pub fn run(opts: &ReproOpts) -> anyhow::Result<String> {
+    let platform = Platform::h100();
+    let wl = Workload::decode(4, 2048, points::M_TOKENS);
+
+    let mut t = Table::new(
+        "Table II — kernel fragmentation, H100 (BS=4/SL=2048, m=10)",
+        &[
+            "Metric",
+            "Llama-3.2-1B",
+            "Llama-3.2-3B",
+            "OLMoE-1B/7B",
+            "Qwen1.5-MoE",
+        ],
+    );
+
+    let mut totals = Vec::new();
+    let mut uniques = Vec::new();
+    let mut per_tok = Vec::new();
+    let mut diversity = Vec::new();
+    let mut util = Vec::new();
+    for name in MODELS {
+        let model = points::model(name);
+        let trace = simulate(&model, &platform, &wl, opts.seed);
+        let db = KernelDb::from_trace(&trace);
+        totals.push(count(db.total_invocations()));
+        uniques.push(db.unique_names().to_string());
+        per_tok.push(format!(
+            "{:.1}",
+            db.total_invocations() as f64 / points::M_TOKENS as f64
+        ));
+        diversity.push(format!("{:.4}", db.diversity_ratio()));
+        util.push(format!(
+            "{:.1}",
+            100.0 * trace.device_active_us() / trace.e2e_us()
+        ));
+    }
+    let mut push = |label: &str, vals: &[String]| {
+        let mut row = vec![label.to_string()];
+        row.extend(vals.iter().cloned());
+        t.row(row);
+    };
+    push("Total kernel launches", &totals);
+    push("Unique kernel names", &uniques);
+    push("Kernels per token", &per_tok);
+    push("Diversity ratio", &diversity);
+    push("GPU utilization (%)", &util);
+
+    Ok(format!(
+        "{}\nShape checks: MoE launches 8-11x dense per token; MoE \
+         diversity ratio LOWER than dense (repeated routing/expert \
+         kernels, not heterogeneity); MoE GPU utilization far below \
+         dense.\n",
+        t.render()
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    #[ignore = "heavy trace (93k kernels); run in release via `taxbreak repro table2`"]
+    fn fragmentation_shape() {
+        let out = run(&ReproOpts::default()).unwrap();
+        assert!(out.contains("Diversity ratio"));
+    }
+}

@@ -1,0 +1,293 @@
+//! AOT artifact discovery and loading: manifests, weights, index.
+//!
+//! File layout produced by `python/compile/aot.py` (one weights file per
+//! variant, one HLO + manifest per (variant, entry, bucket)):
+//!
+//! ```text
+//! artifacts/index.json
+//! artifacts/<name>.hlo.txt
+//! artifacts/<name>.manifest.json
+//! artifacts/<variant>.params.bin   (flat little-endian f32)
+//! artifacts/<variant>.params.json  (name/shape/offset table)
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// One tensor's (name, shape, dtype) from a manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    fn from_json(v: &Json) -> anyhow::Result<TensorSpec> {
+        let shape = v
+            .arr_of("shape")?
+            .iter()
+            .map(|d| {
+                d.as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("non-integer dim in shape"))
+            })
+            .collect::<anyhow::Result<Vec<usize>>>()?;
+        Ok(TensorSpec {
+            name: v.str_of("name")?.to_string(),
+            shape,
+            dtype: v.str_of("dtype")?.to_string(),
+        })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// A compiled entry point's manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub name: String,
+    /// "prefill" | "decode" | "null".
+    pub entry: String,
+    pub variant: String,
+    pub batch: usize,
+    pub seq: usize,
+    pub params_file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Model config echoed by the AOT pipeline (vocab, max_seq, ...).
+    pub config: Option<Json>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        let v = Json::parse(&text)?;
+        let specs = |key: &str| -> anyhow::Result<Vec<TensorSpec>> {
+            v.arr_of(key)?.iter().map(TensorSpec::from_json).collect()
+        };
+        Ok(Manifest {
+            name: v.str_of("name")?.to_string(),
+            entry: v.str_of("entry")?.to_string(),
+            variant: v.str_of("variant")?.to_string(),
+            batch: v.usize_of("batch")?,
+            seq: v.usize_of("seq")?,
+            params_file: v.str_of("params_file")?.to_string(),
+            inputs: specs("inputs")?,
+            outputs: specs("outputs")?,
+            config: v.get("config").cloned(),
+        })
+    }
+
+    /// Number of leading inputs that are weights (everything before the
+    /// non-param runtime inputs: tokens / cache / pos).
+    pub fn n_param_inputs(&self) -> usize {
+        self.inputs
+            .iter()
+            .take_while(|s| !matches!(s.name.as_str(), "tokens" | "cache" | "pos" | "x"))
+            .count()
+    }
+
+    /// Config field accessor (vocab, max_seq ...).
+    pub fn config_usize(&self, key: &str) -> anyhow::Result<usize> {
+        self.config
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("manifest {} has no config", self.name))?
+            .usize_of(key)
+    }
+}
+
+/// One weight tensor's placement in the flat file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub bytes: usize,
+}
+
+/// The variant's flat weights file + offset table.
+#[derive(Debug, Clone)]
+pub struct ParamsFile {
+    pub variant: String,
+    pub entries: Vec<ParamEntry>,
+    pub data: Vec<u8>,
+}
+
+impl ParamsFile {
+    pub fn load(dir: &Path, variant: &str) -> anyhow::Result<ParamsFile> {
+        let table_path = dir.join(format!("{variant}.params.json"));
+        let text = std::fs::read_to_string(&table_path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", table_path.display()))?;
+        let v = Json::parse(&text)?;
+        let mut entries = Vec::new();
+        for e in v.arr_of("params")? {
+            entries.push(ParamEntry {
+                name: e.str_of("name")?.to_string(),
+                shape: e
+                    .arr_of("shape")?
+                    .iter()
+                    .map(|d| d.as_usize().unwrap_or(0))
+                    .collect(),
+                offset: e.usize_of("offset")?,
+                bytes: e.usize_of("bytes")?,
+            });
+        }
+        let bin_path = dir.join(format!("{variant}.params.bin"));
+        let data = std::fs::read(&bin_path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", bin_path.display()))?;
+        let total = v.usize_of("total_bytes")?;
+        anyhow::ensure!(
+            data.len() == total,
+            "weights file size {} != table total {total}",
+            data.len()
+        );
+        Ok(ParamsFile {
+            variant: variant.to_string(),
+            entries,
+            data,
+        })
+    }
+
+    /// Raw bytes of one tensor.
+    pub fn bytes_of(&self, entry: &ParamEntry) -> &[u8] {
+        &self.data[entry.offset..entry.offset + entry.bytes]
+    }
+
+    /// Build PJRT literals for every tensor, in file order (which is
+    /// the manifest input order by construction).
+    pub fn literals(&self) -> anyhow::Result<Vec<xla::Literal>> {
+        self.entries
+            .iter()
+            .map(|e| {
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::F32,
+                    &e.shape,
+                    self.bytes_of(e),
+                )
+                .map_err(|err| anyhow::anyhow!("literal for {}: {err:?}", e.name))
+            })
+            .collect()
+    }
+}
+
+/// The artifacts directory index.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactIndex {
+    pub dir: PathBuf,
+    pub artifacts: Vec<String>,
+}
+
+impl ArtifactIndex {
+    pub fn load(dir: &Path) -> anyhow::Result<ArtifactIndex> {
+        let text = std::fs::read_to_string(dir.join("index.json"))
+            .map_err(|e| anyhow::anyhow!("no artifacts at {} ({e}); run `make artifacts`", dir.display()))?;
+        let v = Json::parse(&text)?;
+        let artifacts = v
+            .arr_of("artifacts")?
+            .iter()
+            .filter_map(|a| a.as_str().map(|s| s.to_string()))
+            .collect();
+        Ok(ArtifactIndex {
+            dir: dir.to_path_buf(),
+            artifacts,
+        })
+    }
+
+    pub fn hlo_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    pub fn manifest_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.manifest.json"))
+    }
+
+    /// Artifact names of one variant + entry kind.
+    pub fn of_variant<'a>(&'a self, variant: &'a str, entry: &'a str) -> impl Iterator<Item = &'a String> {
+        self.artifacts
+            .iter()
+            .filter(move |n| n.starts_with(&format!("{variant}_{entry}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("index.json").exists()
+    }
+
+    #[test]
+    fn index_lists_all_variants() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let idx = ArtifactIndex::load(&artifacts_dir()).unwrap();
+        assert!(idx.artifacts.iter().any(|a| a == "null_kernel"));
+        assert!(idx.of_variant("dense_fused", "prefill").count() >= 2);
+        assert!(idx.of_variant("dense_fused", "decode").count() >= 1);
+        assert!(idx.of_variant("moe", "prefill").count() >= 2);
+    }
+
+    #[test]
+    fn manifest_roundtrip() {
+        if !have_artifacts() {
+            return;
+        }
+        let idx = ArtifactIndex::load(&artifacts_dir()).unwrap();
+        let m = Manifest::load(&idx.manifest_path("dense_fused_prefill_b1_s32")).unwrap();
+        assert_eq!(m.entry, "prefill");
+        assert_eq!((m.batch, m.seq), (1, 32));
+        // params..., tokens
+        assert_eq!(m.inputs.last().unwrap().name, "tokens");
+        assert_eq!(m.inputs.last().unwrap().shape, vec![1, 32]);
+        assert_eq!(m.n_param_inputs(), m.inputs.len() - 1);
+        assert_eq!(m.outputs[0].name, "logits");
+        assert!(m.config_usize("vocab").unwrap() > 0);
+    }
+
+    #[test]
+    fn params_file_matches_manifest_order() {
+        if !have_artifacts() {
+            return;
+        }
+        let idx = ArtifactIndex::load(&artifacts_dir()).unwrap();
+        let m = Manifest::load(&idx.manifest_path("dense_fused_prefill_b1_s32")).unwrap();
+        let p = ParamsFile::load(&artifacts_dir(), "dense_fused").unwrap();
+        assert_eq!(p.entries.len(), m.n_param_inputs());
+        for (pe, spec) in p.entries.iter().zip(m.inputs.iter()) {
+            assert_eq!(pe.name, spec.name);
+            assert_eq!(pe.shape, spec.shape);
+            assert_eq!(pe.bytes, 4 * spec.elements());
+        }
+    }
+
+    #[test]
+    fn params_literals_build() {
+        if !have_artifacts() {
+            return;
+        }
+        let p = ParamsFile::load(&artifacts_dir(), "dense_fused").unwrap();
+        let lits = p.literals().unwrap();
+        assert_eq!(lits.len(), p.entries.len());
+        assert_eq!(
+            lits[0].element_count(),
+            p.entries[0].shape.iter().product::<usize>()
+        );
+    }
+
+    #[test]
+    fn missing_dir_errors_helpfully() {
+        let err = ArtifactIndex::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,320 @@
+//! The PJRT execution engine: compiled entry points, weights, and the
+//! typed prefill/decode/null operations with trace instrumentation.
+
+use std::path::Path;
+
+use crate::runtime::artifact::{ArtifactIndex, Manifest, ParamsFile};
+use crate::runtime::recorder::TraceRecorder;
+use crate::trace::TraceMeta;
+
+/// One compiled entry point (executable + its manifest).
+struct Compiled {
+    manifest: Manifest,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Model facts the engine needs at run time (from the manifests).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EngineConfig {
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub cache_elems_b1: usize,
+}
+
+/// PJRT engine for one model variant.
+///
+/// Holds the CPU PJRT client, every compiled (entry, bucket) executable
+/// of the variant, the weights as device-ready literals, and a
+/// [`TraceRecorder`] capturing the real dispatch path.
+pub struct Engine {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    variant: String,
+    config: EngineConfig,
+    prefills: Vec<Compiled>, // sorted by (batch, seq)
+    decodes: Vec<Compiled>,  // sorted by batch
+    null: Compiled,
+    params: Vec<xla::Literal>,
+    pub recorder: TraceRecorder,
+}
+
+/// Result of one prefill: last-real-position logits per sequence + the
+/// cache literal (max_seq-sized, bucket batch).
+pub struct PrefillOut {
+    pub logits: Vec<Vec<f32>>,
+    pub cache: xla::Literal,
+    /// Bucket batch the cache is shaped for.
+    pub bucket_batch: usize,
+}
+
+/// Result of one decode step.
+pub struct DecodeOut {
+    pub logits: Vec<Vec<f32>>,
+    pub cache: xla::Literal,
+}
+
+impl Engine {
+    /// Load and compile every artifact of `variant` from `dir`.
+    pub fn load(dir: &Path, variant: &str) -> anyhow::Result<Engine> {
+        let idx = ArtifactIndex::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+
+        let compile = |name: &str| -> anyhow::Result<Compiled> {
+            let manifest = Manifest::load(&idx.manifest_path(name))?;
+            let proto = xla::HloModuleProto::from_text_file(idx.hlo_path(name))
+                .map_err(|e| anyhow::anyhow!("parsing HLO for {name}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
+            Ok(Compiled { manifest, exe })
+        };
+
+        let mut prefills = Vec::new();
+        for name in idx.of_variant(variant, "prefill").cloned().collect::<Vec<_>>() {
+            prefills.push(compile(&name)?);
+        }
+        anyhow::ensure!(!prefills.is_empty(), "no prefill artifacts for '{variant}'");
+        prefills.sort_by_key(|c| (c.manifest.batch, c.manifest.seq));
+
+        let mut decodes = Vec::new();
+        for name in idx.of_variant(variant, "decode").cloned().collect::<Vec<_>>() {
+            decodes.push(compile(&name)?);
+        }
+        anyhow::ensure!(!decodes.is_empty(), "no decode artifacts for '{variant}'");
+        decodes.sort_by_key(|c| c.manifest.batch);
+
+        let null = compile("null_kernel")?;
+
+        let m0 = &prefills[0].manifest;
+        let vocab = m0.config_usize("vocab")?;
+        let max_seq = m0.config_usize("max_seq")?;
+        let cache_spec = &m0.outputs[1];
+        anyhow::ensure!(cache_spec.name == "cache", "unexpected output layout");
+        let cache_elems_b1 = cache_spec.elements() / m0.batch;
+
+        let params = ParamsFile::load(dir, variant)?.literals()?;
+
+        let recorder = TraceRecorder::new(TraceMeta {
+            platform: "pjrt-cpu".to_string(),
+            model: variant.to_string(),
+            phase: "serve".to_string(),
+            batch: 0,
+            seq: 0,
+            m_tokens: 0,
+            wall_us: 0.0,
+        });
+
+        Ok(Engine {
+            client,
+            variant: variant.to_string(),
+            config: EngineConfig {
+                vocab,
+                max_seq,
+                cache_elems_b1,
+            },
+            prefills,
+            decodes,
+            null,
+            params,
+            recorder,
+        })
+    }
+
+    pub fn variant(&self) -> &str {
+        &self.variant
+    }
+
+    pub fn config(&self) -> EngineConfig {
+        self.config
+    }
+
+    /// Available decode bucket batch sizes.
+    pub fn decode_buckets(&self) -> Vec<usize> {
+        self.decodes.iter().map(|c| c.manifest.batch).collect()
+    }
+
+    /// Smallest prefill bucket fitting (batch, len).
+    fn pick_prefill(&self, batch: usize, len: usize) -> anyhow::Result<usize> {
+        self.prefills
+            .iter()
+            .position(|c| c.manifest.batch >= batch && c.manifest.seq >= len)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no prefill bucket for batch={batch} len={len} (have {:?})",
+                    self.prefills
+                        .iter()
+                        .map(|c| (c.manifest.batch, c.manifest.seq))
+                        .collect::<Vec<_>>()
+                )
+            })
+    }
+
+    fn pick_decode(&self, batch: usize) -> anyhow::Result<usize> {
+        self.decodes
+            .iter()
+            .position(|c| c.manifest.batch >= batch)
+            .ok_or_else(|| anyhow::anyhow!("no decode bucket for batch={batch}"))
+    }
+
+    /// Run prefill over `prompts` (ragged), padding to the bucket.
+    /// Returns last-real-token logits per prompt + the cache.
+    pub fn prefill(&mut self, prompts: &[Vec<i32>]) -> anyhow::Result<PrefillOut> {
+        let batch = prompts.len();
+        anyhow::ensure!(batch > 0, "empty prefill batch");
+        let max_len = prompts.iter().map(|p| p.len()).max().unwrap();
+        let mut timer = self.recorder.begin();
+
+        let ci = self.pick_prefill(batch, max_len)?;
+        let (bb, bs) = (
+            self.prefills[ci].manifest.batch,
+            self.prefills[ci].manifest.seq,
+        );
+        // Pad tokens to the (bucket_batch, bucket_seq) grid.
+        let mut tokens = vec![0i32; bb * bs];
+        for (i, p) in prompts.iter().enumerate() {
+            tokens[i * bs..i * bs + p.len()].copy_from_slice(p);
+        }
+        let tokens_lit = xla::Literal::vec1(&tokens)
+            .reshape(&[bb as i64, bs as i64])
+            .map_err(|e| anyhow::anyhow!("tokens literal: {e:?}"))?;
+
+        let mut args: Vec<&xla::Literal> = self.params.iter().collect();
+        args.push(&tokens_lit);
+
+        self.recorder.mark_exec_start(&mut timer);
+        let result = self.prefills[ci]
+            .exe
+            .execute::<&xla::Literal>(&args)
+            .map_err(|e| anyhow::anyhow!("prefill execute: {e:?}"))?;
+        drop(args);
+        self.recorder.mark_exec_return(&mut timer);
+
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("prefill sync: {e:?}"))?;
+        let (logits_lit, cache) = out
+            .to_tuple2()
+            .map_err(|e| anyhow::anyhow!("prefill tuple: {e:?}"))?;
+        let flat: Vec<f32> = logits_lit
+            .to_vec()
+            .map_err(|e| anyhow::anyhow!("logits vec: {e:?}"))?;
+        // logits: (bb, bs, vocab) — pick each prompt's last real token.
+        let v = self.config.vocab;
+        let logits = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let base = (i * bs + (p.len() - 1)) * v;
+                flat[base..base + v].to_vec()
+            })
+            .collect();
+
+        let name = self.prefills[ci].manifest.name.clone();
+        self.recorder
+            .finish(timer, &name, 0.0, (tokens.len() * 4) as f64);
+        Ok(PrefillOut {
+            logits,
+            cache,
+            bucket_batch: bb,
+        })
+    }
+
+    /// One decode step over a bucket-shaped cache.
+    ///
+    /// `tokens.len()` must equal the cache's bucket batch; `pos` is the
+    /// index the new tokens occupy.
+    pub fn decode(
+        &mut self,
+        cache: xla::Literal,
+        pos: usize,
+        tokens: &[i32],
+    ) -> anyhow::Result<DecodeOut> {
+        let batch = tokens.len();
+        let mut timer = self.recorder.begin();
+        let ci = self.pick_decode(batch)?;
+        let bb = self.decodes[ci].manifest.batch;
+        anyhow::ensure!(
+            bb == batch,
+            "decode bucket batch {bb} != caller batch {batch} (pad tokens to the bucket)"
+        );
+        let tokens_lit = xla::Literal::vec1(tokens);
+        let pos_lit = xla::Literal::vec1(&[pos as i32]);
+
+        let mut args: Vec<&xla::Literal> = self.params.iter().collect();
+        args.push(&cache);
+        args.push(&pos_lit);
+        args.push(&tokens_lit);
+
+        self.recorder.mark_exec_start(&mut timer);
+        let result = self.decodes[ci]
+            .exe
+            .execute::<&xla::Literal>(&args)
+            .map_err(|e| anyhow::anyhow!("decode execute: {e:?}"))?;
+        drop(args);
+        self.recorder.mark_exec_return(&mut timer);
+
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("decode sync: {e:?}"))?;
+        let (logits_lit, new_cache) = out
+            .to_tuple2()
+            .map_err(|e| anyhow::anyhow!("decode tuple: {e:?}"))?;
+        let flat: Vec<f32> = logits_lit
+            .to_vec()
+            .map_err(|e| anyhow::anyhow!("logits vec: {e:?}"))?;
+        let v = self.config.vocab;
+        let logits = (0..batch).map(|i| flat[i * v..(i + 1) * v].to_vec()).collect();
+
+        let name = self.decodes[ci].manifest.name.clone();
+        self.recorder
+            .finish(timer, &name, 0.0, (batch * 4) as f64);
+        Ok(DecodeOut {
+            logits,
+            cache: new_cache,
+        })
+    }
+
+    /// Null-kernel run: the real-mode launch-floor probe (Table III
+    /// analog on PJRT).  Returns (dispatch_us, launch_to_result_us).
+    pub fn null_run(&mut self) -> anyhow::Result<(f64, f64)> {
+        let mut timer = self.recorder.begin();
+        let x = xla::Literal::vec1(&[0f32; 8]);
+        let args = [&x];
+        self.recorder.mark_exec_start(&mut timer);
+        let result = self
+            .null
+            .exe
+            .execute::<&xla::Literal>(&args)
+            .map_err(|e| anyhow::anyhow!("null execute: {e:?}"))?;
+        self.recorder.mark_exec_return(&mut timer);
+        let _ = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("null sync: {e:?}"))?;
+        let now = self.recorder.now_us();
+        let dispatch = timer.exec_start_us() - timer.prep_start_us();
+        let launch = now - timer.exec_start_us();
+        self.recorder.finish(timer, "null_kernel", 0.0, 32.0);
+        Ok((dispatch, launch))
+    }
+
+    /// Swap the recorder out, returning the captured trace.
+    pub fn take_trace(&mut self) -> crate::trace::Trace {
+        let meta = self.recorder.trace().meta.clone();
+        let fresh = TraceRecorder::new(meta);
+        std::mem::replace(&mut self.recorder, fresh).into_trace()
+    }
+
+    /// Greedy argmax over logits.
+    pub fn argmax(logits: &[f32]) -> i32 {
+        let mut best = 0usize;
+        for (i, &x) in logits.iter().enumerate() {
+            if x > logits[best] {
+                best = i;
+            }
+        }
+        best as i32
+    }
+}
+

@@ -1,0 +1,27 @@
+//! Real-mode runtime: load AOT artifacts (HLO text + weights) and run
+//! them on the PJRT CPU client from the rust hot path.
+//!
+//! Python/JAX runs only at `make artifacts`; this module is the entire
+//! request-path compute story.  Interchange is HLO *text* — jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects in
+//! proto form; the text parser reassigns ids (see
+//! /opt/xla-example/README.md and python/compile/aot.py).
+//!
+//! The real-mode analog of the paper's stack:
+//! * host buffer prep + executable selection  ↔ framework translation,
+//! * the PJRT `execute` call                   ↔ the launch API,
+//! * device computation (sync wait)            ↔ kernel execution.
+//!
+//! In real mode the unit of dispatch is one PJRT *executable* rather
+//! than one CUDA kernel — TaxBreak consumes the same trace format
+//! either way (trace-format-as-interface, DESIGN.md §9).
+
+pub mod artifact;
+pub mod engine;
+pub mod recorder;
+pub mod replay;
+
+pub use artifact::{ArtifactIndex, Manifest, ParamsFile, TensorSpec};
+pub use engine::Engine;
+pub use recorder::TraceRecorder;
+pub use replay::PjrtReplayBackend;

@@ -1,0 +1,185 @@
+//! Real-trace recorder: timestamps the rust→PJRT dispatch path into the
+//! same [`Trace`] format the simulator emits, so the identical TaxBreak
+//! pipeline analyzes real runs.
+//!
+//! Mapping (one record per executable invocation):
+//! * `TorchOp`   — host preparation (literal/batch assembly + executable
+//!   selection): the framework-translation analog;
+//! * `RuntimeApi`— the `execute` call itself (launch-path analog);
+//! * `Kernel`    — device computation: from `execute` return until the
+//!   result literal is materialized (CPU PJRT runs the computation
+//!   within this window).
+
+use std::time::Instant;
+
+use crate::trace::{EventKind, KernelMeta, Trace, TraceEvent, TraceMeta, Track};
+
+/// Records wall-clock events relative to a common origin.
+#[derive(Debug)]
+pub struct TraceRecorder {
+    origin: Instant,
+    trace: Trace,
+    next_corr: u64,
+}
+
+/// Handle for one in-flight invocation's timestamps.
+#[derive(Debug, Clone, Copy)]
+pub struct InvocationTimer {
+    corr: u64,
+    prep_start_us: f64,
+    exec_start_us: f64,
+    exec_return_us: f64,
+}
+
+impl InvocationTimer {
+    pub fn prep_start_us(&self) -> f64 {
+        self.prep_start_us
+    }
+
+    pub fn exec_start_us(&self) -> f64 {
+        self.exec_start_us
+    }
+
+    pub fn exec_return_us(&self) -> f64 {
+        self.exec_return_us
+    }
+}
+
+impl TraceRecorder {
+    pub fn new(meta: TraceMeta) -> TraceRecorder {
+        TraceRecorder {
+            origin: Instant::now(),
+            trace: Trace::new(meta),
+            next_corr: 0,
+        }
+    }
+
+    pub fn now_us(&self) -> f64 {
+        self.origin.elapsed().as_secs_f64() * 1e6
+    }
+
+    /// Begin an invocation (host preparation starts).
+    pub fn begin(&mut self) -> InvocationTimer {
+        self.next_corr += 1;
+        InvocationTimer {
+            corr: self.next_corr,
+            prep_start_us: self.now_us(),
+            exec_start_us: 0.0,
+            exec_return_us: 0.0,
+        }
+    }
+
+    /// Host preparation done; `execute` is about to be called.
+    pub fn mark_exec_start(&self, t: &mut InvocationTimer) {
+        t.exec_start_us = self.now_us();
+    }
+
+    /// `execute` returned (buffers issued).
+    pub fn mark_exec_return(&self, t: &mut InvocationTimer) {
+        t.exec_return_us = self.now_us();
+    }
+
+    /// Result literal materialized; emit the three events.
+    pub fn finish(&mut self, t: InvocationTimer, name: &str, flops: f64, bytes: f64) {
+        let sync_end = self.now_us();
+        let meta = KernelMeta {
+            kernel_name: format!("pjrt::{name}"),
+            family: "pjrt_exec".to_string(),
+            aten_op: format!("exec::{name}"),
+            shapes_key: name.to_string(),
+            grid: [1, 1, 1],
+            block: [1, 1, 1],
+            lib_mediated: false,
+            flops,
+            bytes,
+        };
+        self.trace.push(TraceEvent {
+            kind: EventKind::TorchOp,
+            name: format!("serve.{name}"),
+            ts_us: t.prep_start_us,
+            dur_us: t.exec_return_us - t.prep_start_us,
+            correlation_id: t.corr,
+            track: Track::Host,
+            meta: None,
+        });
+        self.trace.push(TraceEvent {
+            kind: EventKind::AtenOp,
+            name: format!("prep::{name}"),
+            ts_us: t.prep_start_us,
+            dur_us: t.exec_start_us - t.prep_start_us,
+            correlation_id: t.corr,
+            track: Track::Host,
+            meta: None,
+        });
+        self.trace.push(TraceEvent {
+            kind: EventKind::RuntimeApi,
+            name: "pjrt::execute".to_string(),
+            ts_us: t.exec_start_us,
+            dur_us: t.exec_return_us - t.exec_start_us,
+            correlation_id: t.corr,
+            track: Track::Host,
+            meta: None,
+        });
+        self.trace.push(TraceEvent {
+            kind: EventKind::Kernel,
+            name: format!("pjrt::{name}"),
+            ts_us: t.exec_return_us,
+            dur_us: sync_end - t.exec_return_us,
+            correlation_id: t.corr,
+            track: Track::Device(0),
+            meta: Some(meta),
+        });
+    }
+
+    /// Close the recorder, stamping the wall-clock.
+    pub fn into_trace(mut self) -> Trace {
+        self.trace.meta.wall_us = self.now_us();
+        self.trace
+    }
+
+    pub fn trace(&self) -> &Trace {
+        &self.trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_invocation_chain() {
+        let mut r = TraceRecorder::new(TraceMeta::default());
+        let mut t = r.begin();
+        std::thread::sleep(std::time::Duration::from_micros(200));
+        r.mark_exec_start(&mut t);
+        std::thread::sleep(std::time::Duration::from_micros(100));
+        r.mark_exec_return(&mut t);
+        std::thread::sleep(std::time::Duration::from_micros(100));
+        r.finish(t, "prefill_b1_s32", 1e6, 1e4);
+
+        let trace = r.into_trace();
+        assert_eq!(trace.events.len(), 4);
+        assert_eq!(trace.kernel_count(), 1);
+        let chains = trace.correlation_chains();
+        let c = &chains[&1];
+        assert!(c.torch_op.is_some() && c.runtime_api.is_some() && c.kernel.is_some());
+        // Ordering: prep <= exec_start <= exec_return <= kernel end.
+        let api = c.runtime_api.unwrap();
+        let k = c.kernel.unwrap();
+        assert!(api.ts_us >= c.torch_op.unwrap().ts_us);
+        assert!(k.ts_us >= api.ts_us);
+        assert!(trace.meta.wall_us >= k.end_us());
+    }
+
+    #[test]
+    fn correlation_ids_increment() {
+        let mut r = TraceRecorder::new(TraceMeta::default());
+        for i in 1..=3u64 {
+            let mut t = r.begin();
+            r.mark_exec_start(&mut t);
+            r.mark_exec_return(&mut t);
+            r.finish(t, "step", 0.0, 0.0);
+            assert_eq!(r.trace().events.last().unwrap().correlation_id, i);
+        }
+    }
+}

@@ -1,0 +1,517 @@
+//! Group-based continuous batcher + iteration-level scheduler.
+//!
+//! Orca-style iteration-level scheduling adapted to AOT static shapes:
+//! requests are admitted into *groups* sized to a compiled batch bucket;
+//! each scheduler iteration advances every active group by one step
+//! (prefill on admission, then one decode step), so new groups join at
+//! iteration boundaries rather than waiting for a full drain.  The
+//! paged-KV manager gates admission.
+//!
+//! Static-shape consequences (documented substitution, DESIGN.md §2):
+//! prompts inside a group are right-padded to the group maximum and the
+//! pad tokens are treated as real prompt content; a group retires when
+//! all real members hit their decode budgets.
+
+use std::collections::VecDeque;
+
+use crate::serving::kv::PagedKvManager;
+use crate::serving::request::{Request, RequestState};
+
+/// Abstract model execution so the scheduler is testable without PJRT.
+pub trait ModelBackend {
+    type Cache;
+
+    fn max_seq(&self) -> usize;
+    /// Decode batch buckets available (sorted ascending).
+    fn decode_buckets(&self) -> Vec<usize>;
+    /// Prefill a group of equal-padded prompts; returns the argmax next
+    /// token per prompt and the group cache (bucket-batch-shaped).
+    fn prefill_group(
+        &mut self,
+        prompts: &[Vec<i32>],
+    ) -> anyhow::Result<(Vec<i32>, Self::Cache)>;
+    /// One decode step; `tokens` is bucket-sized.
+    fn decode_group(
+        &mut self,
+        cache: Self::Cache,
+        pos: usize,
+        tokens: &[i32],
+    ) -> anyhow::Result<(Vec<i32>, Self::Cache)>;
+    /// Monotonic clock, us (trace-aligned in real mode).
+    fn now_us(&self) -> f64;
+}
+
+/// Scheduler configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct SchedulerConfig {
+    /// Max *real* requests per group (rounded up to a bucket).
+    pub max_batch: usize,
+    /// Max concurrently active groups.
+    pub max_groups: usize,
+    pub kv_pages: usize,
+    pub kv_page_tokens: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            max_batch: 4,
+            max_groups: 2,
+            kv_pages: 64,
+            kv_page_tokens: 16,
+        }
+    }
+}
+
+struct Group<C> {
+    members: Vec<RequestState>,
+    /// Padded prompt length shared by the group.
+    padded_len: usize,
+    cache: Option<C>,
+    /// Next position to decode (== tokens stored so far).
+    pos: usize,
+    /// Bucket batch the cache is shaped for.
+    bucket: usize,
+    /// Last emitted token per bucket slot (input to the next step).
+    last_tokens: Vec<i32>,
+}
+
+/// The serving scheduler.
+pub struct Scheduler<B: ModelBackend> {
+    pub backend: B,
+    pub kv: PagedKvManager,
+    cfg: SchedulerConfig,
+    waiting: VecDeque<Request>,
+    groups: Vec<Group<B::Cache>>,
+    finished: Vec<RequestState>,
+    /// Iterations executed (for stats).
+    pub iterations: usize,
+}
+
+impl<B: ModelBackend> Scheduler<B> {
+    pub fn new(backend: B, cfg: SchedulerConfig) -> Scheduler<B> {
+        let kv = PagedKvManager::new(cfg.kv_pages, cfg.kv_page_tokens);
+        Scheduler {
+            backend,
+            kv,
+            cfg,
+            waiting: VecDeque::new(),
+            groups: Vec::new(),
+            finished: Vec::new(),
+            iterations: 0,
+        }
+    }
+
+    pub fn submit(&mut self, request: Request) {
+        self.waiting.push_back(request);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.waiting.len() + self.groups.iter().map(|g| g.members.len()).sum::<usize>()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.pending() == 0
+    }
+
+    pub fn finished(&self) -> &[RequestState] {
+        &self.finished
+    }
+
+    /// (bucket, padded prompt length) of each active group — batching
+    /// observability for tests and reports.
+    pub fn active_group_shapes(&self) -> Vec<(usize, usize)> {
+        self.groups.iter().map(|g| (g.bucket, g.padded_len)).collect()
+    }
+
+    pub fn into_finished(self) -> Vec<RequestState> {
+        self.finished
+    }
+
+    /// Round a group size up to the smallest compiled bucket.
+    fn bucket_for(&self, n: usize) -> usize {
+        let buckets = self.backend.decode_buckets();
+        buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .unwrap_or_else(|| *buckets.last().expect("no decode buckets"))
+    }
+
+    /// One scheduler iteration: admit (prefill) then advance every
+    /// active group by one decode step.
+    pub fn step(&mut self) -> anyhow::Result<()> {
+        self.iterations += 1;
+        self.admit()?;
+        self.advance()?;
+        self.retire();
+        Ok(())
+    }
+
+    /// Run until every submitted request completed.
+    pub fn run_to_completion(&mut self) -> anyhow::Result<()> {
+        // Each iteration makes progress (a prefill or a decode token);
+        // bound by total work + admission stalls.
+        let mut stall = 0usize;
+        while !self.is_idle() {
+            let before = self.total_progress();
+            self.step()?;
+            if self.total_progress() == before {
+                stall += 1;
+                anyhow::ensure!(
+                    stall < 1000,
+                    "scheduler stalled: {} waiting, {} groups, {} kv pages free",
+                    self.waiting.len(),
+                    self.groups.len(),
+                    self.kv.free_pages()
+                );
+            } else {
+                stall = 0;
+            }
+        }
+        Ok(())
+    }
+
+    fn total_progress(&self) -> usize {
+        self.finished.len() * 1_000_000
+            + self
+                .groups
+                .iter()
+                .map(|g| g.pos + g.members.iter().map(|m| m.generated.len()).sum::<usize>())
+                .sum::<usize>()
+    }
+
+    fn admit(&mut self) -> anyhow::Result<()> {
+        // Group size is capped by both the configured max batch and the
+        // largest compiled decode bucket (static AOT shapes).
+        let bucket_cap = self
+            .backend
+            .decode_buckets()
+            .last()
+            .copied()
+            .unwrap_or(1);
+        while !self.waiting.is_empty() && self.groups.len() < self.cfg.max_groups {
+            let take = self
+                .waiting
+                .len()
+                .min(self.cfg.max_batch)
+                .min(bucket_cap);
+            // Worst-case KV demand of the candidate group.
+            let candidates: Vec<&Request> = self.waiting.iter().take(take).collect();
+            let padded_len = candidates.iter().map(|r| r.prompt.len()).max().unwrap();
+            let worst: usize = candidates
+                .iter()
+                .map(|r| self.kv.pages_for(padded_len + r.max_new_tokens))
+                .sum();
+            if worst > self.kv.free_pages() {
+                break; // wait for a group to retire
+            }
+            let members: Vec<Request> =
+                (0..take).map(|_| self.waiting.pop_front().unwrap()).collect();
+            self.start_group(members, padded_len)?;
+        }
+        Ok(())
+    }
+
+    fn start_group(&mut self, members: Vec<Request>, padded_len: usize) -> anyhow::Result<()> {
+        let bucket = self.bucket_for(members.len());
+        // Right-pad prompts to the shared length; pad tokens are real
+        // prompt content under static shapes.
+        let prompts: Vec<Vec<i32>> = members
+            .iter()
+            .map(|r| {
+                let mut p = r.prompt.clone();
+                p.resize(padded_len, 0);
+                p
+            })
+            .collect();
+        for r in &members {
+            self.kv.register(r.id, padded_len)?;
+        }
+        let (next, cache) = self.backend.prefill_group(&prompts)?;
+        let now = self.backend.now_us();
+
+        let mut states: Vec<RequestState> = members.into_iter().map(RequestState::new).collect();
+        let mut last_tokens = vec![0i32; bucket];
+        for (i, s) in states.iter_mut().enumerate() {
+            s.generated.push(next[i]);
+            s.first_token_us = Some(now);
+            last_tokens[i] = next[i];
+            if s.done() {
+                s.finish_us = Some(now);
+            }
+        }
+        self.groups.push(Group {
+            members: states,
+            padded_len,
+            cache: Some(cache),
+            pos: padded_len,
+            bucket,
+            last_tokens,
+        });
+        Ok(())
+    }
+
+    fn advance(&mut self) -> anyhow::Result<()> {
+        let max_seq = self.backend.max_seq();
+        for gi in 0..self.groups.len() {
+            let (pos, tokens, cache) = {
+                let g = &mut self.groups[gi];
+                if g.members.iter().all(|m| m.done()) || g.pos >= max_seq {
+                    continue;
+                }
+                (g.pos, g.last_tokens.clone(), g.cache.take().expect("cache present"))
+            };
+            let (next, cache) = self.backend.decode_group(cache, pos, &tokens)?;
+            let now = self.backend.now_us();
+            let g = &mut self.groups[gi];
+            g.cache = Some(cache);
+            g.pos += 1;
+            for (i, m) in g.members.iter_mut().enumerate() {
+                if m.done() {
+                    continue;
+                }
+                self.kv.extend(m.request.id, 1)?;
+                m.generated.push(next[i]);
+                g.last_tokens[i] = next[i];
+                if m.done() {
+                    m.finish_us = Some(now);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn retire(&mut self) {
+        let max_seq = self.backend.max_seq();
+        let mut kept = Vec::new();
+        for mut g in self.groups.drain(..) {
+            let exhausted = g.pos >= max_seq;
+            if g.members.iter().all(|m| m.done()) || exhausted {
+                let now = self.backend.now_us();
+                for mut m in g.members.drain(..) {
+                    if m.finish_us.is_none() {
+                        m.finish_us = Some(now); // context-exhausted cutoff
+                    }
+                    let _ = self.kv.release(m.request.id);
+                    self.finished.push(m);
+                }
+            } else {
+                kept.push(g);
+            }
+        }
+        self.groups = kept;
+        debug_assert!(self.kv.check_invariants().is_ok());
+    }
+}
+
+pub mod mock_backend {
+    //! Deterministic in-memory backend — used by unit, integration and
+    //! property tests (and the scheduler benches) to exercise the
+    //! coordinator without PJRT.
+    use super::*;
+
+    pub struct MockBackend {
+        pub max_seq: usize,
+        pub buckets: Vec<usize>,
+        pub clock_us: f64,
+        pub prefills: usize,
+        pub decodes: usize,
+    }
+
+    impl MockBackend {
+        pub fn new() -> MockBackend {
+            MockBackend {
+                max_seq: 128,
+                buckets: vec![1, 4],
+                clock_us: 0.0,
+                prefills: 0,
+                decodes: 0,
+            }
+        }
+    }
+
+    /// Mock cache: (bucket, last position written).
+    pub struct MockCache {
+        pub bucket: usize,
+        pub written_to: usize,
+    }
+
+    impl ModelBackend for MockBackend {
+        type Cache = MockCache;
+
+        fn max_seq(&self) -> usize {
+            self.max_seq
+        }
+
+        fn decode_buckets(&self) -> Vec<usize> {
+            self.buckets.clone()
+        }
+
+        fn prefill_group(
+            &mut self,
+            prompts: &[Vec<i32>],
+        ) -> anyhow::Result<(Vec<i32>, MockCache)> {
+            self.prefills += 1;
+            self.clock_us += 1000.0;
+            anyhow::ensure!(
+                prompts.len() <= *self.buckets.last().unwrap(),
+                "group of {} exceeds largest bucket {}",
+                prompts.len(),
+                self.buckets.last().unwrap()
+            );
+            let bucket = self
+                .buckets
+                .iter()
+                .copied()
+                .find(|&b| b >= prompts.len())
+                .unwrap();
+            let next = prompts
+                .iter()
+                .map(|p| (p.iter().map(|&t| t as i64).sum::<i64>() % 251) as i32)
+                .collect();
+            Ok((
+                next,
+                MockCache {
+                    bucket,
+                    written_to: prompts[0].len(),
+                },
+            ))
+        }
+
+        fn decode_group(
+            &mut self,
+            cache: MockCache,
+            pos: usize,
+            tokens: &[i32],
+        ) -> anyhow::Result<(Vec<i32>, MockCache)> {
+            anyhow::ensure!(tokens.len() == cache.bucket, "bucket mismatch");
+            anyhow::ensure!(pos == cache.written_to, "cache position continuity");
+            self.decodes += 1;
+            self.clock_us += 100.0;
+            let next = tokens.iter().map(|&t| (t + pos as i32) % 251).collect();
+            Ok((
+                next,
+                MockCache {
+                    bucket: cache.bucket,
+                    written_to: pos + 1,
+                },
+            ))
+        }
+
+        fn now_us(&self) -> f64 {
+            self.clock_us
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::mock_backend::MockBackend;
+    use super::*;
+    use crate::serving::request::synthetic_requests;
+
+    fn scheduler(cfg: SchedulerConfig) -> Scheduler<MockBackend> {
+        Scheduler::new(MockBackend::new(), cfg)
+    }
+
+    #[test]
+    fn completes_all_requests() {
+        let mut s = scheduler(SchedulerConfig::default());
+        for r in synthetic_requests(10, 251, 128, 42) {
+            s.submit(r);
+        }
+        s.run_to_completion().unwrap();
+        assert_eq!(s.finished().len(), 10);
+        for f in s.finished() {
+            assert_eq!(f.generated.len(), f.request.max_new_tokens);
+            assert!(f.first_token_us.is_some() && f.finish_us.is_some());
+        }
+        assert_eq!(s.kv.used_pages(), 0, "all KV reclaimed");
+    }
+
+    #[test]
+    fn every_output_token_is_deterministic() {
+        let run = || {
+            let mut s = scheduler(SchedulerConfig::default());
+            for r in synthetic_requests(6, 251, 128, 9) {
+                s.submit(r);
+            }
+            s.run_to_completion().unwrap();
+            let mut f = s.into_finished();
+            f.sort_by_key(|s| s.request.id);
+            f.into_iter().map(|s| s.generated).collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn admission_respects_kv_capacity() {
+        // Tiny KV pool: only one group fits at a time.
+        let cfg = SchedulerConfig {
+            max_batch: 4,
+            max_groups: 4,
+            kv_pages: 20,
+            kv_page_tokens: 16,
+        };
+        let mut s = scheduler(cfg);
+        for r in synthetic_requests(12, 251, 128, 3) {
+            s.submit(r);
+        }
+        s.step().unwrap();
+        assert!(
+            s.groups.len() <= 2,
+            "KV pool must limit concurrent groups, got {}",
+            s.groups.len()
+        );
+        s.run_to_completion().unwrap();
+        assert_eq!(s.finished().len(), 12);
+    }
+
+    #[test]
+    fn groups_round_up_to_buckets() {
+        let mut s = scheduler(SchedulerConfig::default());
+        for r in synthetic_requests(3, 251, 128, 5) {
+            s.submit(r);
+        }
+        s.step().unwrap();
+        assert_eq!(s.groups.len(), 1);
+        assert_eq!(s.groups[0].bucket, 4, "3 members round up to bucket 4");
+        assert_eq!(s.groups[0].members.len(), 3);
+    }
+
+    #[test]
+    fn iteration_level_admission() {
+        // A later request joins as soon as a group slot frees, not
+        // after a full drain.
+        let cfg = SchedulerConfig {
+            max_batch: 4,
+            max_groups: 1,
+            kv_pages: 64,
+            kv_page_tokens: 16,
+        };
+        let mut s = scheduler(cfg);
+        for r in synthetic_requests(8, 251, 128, 7) {
+            s.submit(r);
+        }
+        s.step().unwrap();
+        let first_batch = s.finished().len() + s.groups.iter().map(|g| g.members.len()).sum::<usize>();
+        assert_eq!(first_batch, 4);
+        assert_eq!(s.waiting.len(), 4);
+        s.run_to_completion().unwrap();
+        assert_eq!(s.finished().len(), 8);
+        assert!(s.backend.prefills >= 2);
+    }
+
+    #[test]
+    fn ttft_precedes_finish() {
+        let mut s = scheduler(SchedulerConfig::default());
+        for r in synthetic_requests(5, 251, 128, 11) {
+            s.submit(r);
+        }
+        s.run_to_completion().unwrap();
+        for f in s.finished() {
+            assert!(f.first_token_us.unwrap() <= f.finish_us.unwrap());
+        }
+    }
+}

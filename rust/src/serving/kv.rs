@@ -1,0 +1,221 @@
+//! Paged KV-cache manager (vLLM-style substrate).
+//!
+//! Tracks block-granular KV allocation per request: admission control
+//! reserves pages up to the request's maximum context; pages free on
+//! retirement.  With the tiny AOT models the physical cache tensor is
+//! dense (static shapes), so this manager is the *bookkeeping* layer —
+//! the allocator invariants (no double-use, exact reclamation, capacity
+//! ceiling) are exactly vLLM's and are property-tested.
+
+use std::collections::HashMap;
+
+/// Page/block identifier.
+pub type PageId = u32;
+
+/// Errors from the allocator.
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum KvError {
+    #[error("out of KV pages: need {need}, free {free}")]
+    OutOfPages { need: usize, free: usize },
+    #[error("unknown request {0}")]
+    UnknownRequest(u64),
+    #[error("request {0} already registered")]
+    AlreadyRegistered(u64),
+}
+
+/// Block-granular KV allocator.
+#[derive(Debug, Clone)]
+pub struct PagedKvManager {
+    page_tokens: usize,
+    free: Vec<PageId>,
+    total_pages: usize,
+    tables: HashMap<u64, Vec<PageId>>,
+    /// Tokens currently stored per request (for utilization stats).
+    lengths: HashMap<u64, usize>,
+}
+
+impl PagedKvManager {
+    pub fn new(total_pages: usize, page_tokens: usize) -> PagedKvManager {
+        assert!(page_tokens > 0);
+        PagedKvManager {
+            page_tokens,
+            free: (0..total_pages as PageId).rev().collect(),
+            total_pages,
+            tables: HashMap::new(),
+            lengths: HashMap::new(),
+        }
+    }
+
+    pub fn pages_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.page_tokens)
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_pages(&self) -> usize {
+        self.total_pages - self.free.len()
+    }
+
+    /// Can a request needing `tokens` of context be admitted now?
+    pub fn can_admit(&self, tokens: usize) -> bool {
+        self.pages_for(tokens) <= self.free.len()
+    }
+
+    /// Register a request and reserve pages for `initial_tokens`.
+    pub fn register(&mut self, req: u64, initial_tokens: usize) -> Result<(), KvError> {
+        if self.tables.contains_key(&req) {
+            return Err(KvError::AlreadyRegistered(req));
+        }
+        let need = self.pages_for(initial_tokens);
+        if need > self.free.len() {
+            return Err(KvError::OutOfPages {
+                need,
+                free: self.free.len(),
+            });
+        }
+        let pages = self.free.split_off(self.free.len() - need);
+        self.tables.insert(req, pages);
+        self.lengths.insert(req, initial_tokens);
+        Ok(())
+    }
+
+    /// Grow a request's context by `new_tokens` (decode appends),
+    /// allocating pages as needed.
+    pub fn extend(&mut self, req: u64, new_tokens: usize) -> Result<(), KvError> {
+        let len = *self
+            .lengths
+            .get(&req)
+            .ok_or(KvError::UnknownRequest(req))?;
+        let target = len + new_tokens;
+        let have = self.tables[&req].len();
+        let need_total = self.pages_for(target);
+        if need_total > have {
+            let extra = need_total - have;
+            if extra > self.free.len() {
+                return Err(KvError::OutOfPages {
+                    need: extra,
+                    free: self.free.len(),
+                });
+            }
+            let mut pages = self.free.split_off(self.free.len() - extra);
+            self.tables.get_mut(&req).unwrap().append(&mut pages);
+        }
+        self.lengths.insert(req, target);
+        Ok(())
+    }
+
+    /// Release all pages of a finished request.
+    pub fn release(&mut self, req: u64) -> Result<usize, KvError> {
+        let pages = self.tables.remove(&req).ok_or(KvError::UnknownRequest(req))?;
+        self.lengths.remove(&req);
+        let n = pages.len();
+        self.free.extend(pages);
+        Ok(n)
+    }
+
+    /// Fraction of reserved page capacity actually holding tokens —
+    /// internal fragmentation (vLLM's motivation).
+    pub fn occupancy(&self) -> f64 {
+        let reserved_tokens: usize = self
+            .tables
+            .values()
+            .map(|p| p.len() * self.page_tokens)
+            .sum();
+        if reserved_tokens == 0 {
+            return 1.0;
+        }
+        let used_tokens: usize = self.lengths.values().sum();
+        used_tokens as f64 / reserved_tokens as f64
+    }
+
+    pub fn active_requests(&self) -> usize {
+        self.tables.len()
+    }
+
+    /// Invariant check: page sets are disjoint and account for every
+    /// non-free page (used by property tests).
+    pub fn check_invariants(&self) -> anyhow::Result<()> {
+        let mut seen = std::collections::HashSet::new();
+        for p in &self.free {
+            anyhow::ensure!(seen.insert(*p), "page {p} duplicated in free list");
+        }
+        for (req, pages) in &self.tables {
+            for p in pages {
+                anyhow::ensure!(seen.insert(*p), "page {p} double-allocated (req {req})");
+            }
+        }
+        anyhow::ensure!(
+            seen.len() == self.total_pages,
+            "page accounting mismatch: {} != {}",
+            seen.len(),
+            self.total_pages
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_extend_release_cycle() {
+        let mut kv = PagedKvManager::new(10, 16);
+        kv.register(1, 20).unwrap(); // 2 pages
+        assert_eq!(kv.used_pages(), 2);
+        kv.extend(1, 12).unwrap(); // 32 tokens -> 2 pages still
+        assert_eq!(kv.used_pages(), 2);
+        kv.extend(1, 1).unwrap(); // 33 tokens -> 3 pages
+        assert_eq!(kv.used_pages(), 3);
+        assert_eq!(kv.release(1).unwrap(), 3);
+        assert_eq!(kv.used_pages(), 0);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn admission_control() {
+        let mut kv = PagedKvManager::new(4, 16);
+        assert!(kv.can_admit(64));
+        assert!(!kv.can_admit(65));
+        kv.register(1, 48).unwrap(); // 3 pages
+        assert!(kv.can_admit(16));
+        assert!(!kv.can_admit(17));
+        assert_eq!(
+            kv.register(2, 32).unwrap_err(),
+            KvError::OutOfPages { need: 2, free: 1 }
+        );
+    }
+
+    #[test]
+    fn double_register_rejected() {
+        let mut kv = PagedKvManager::new(4, 16);
+        kv.register(7, 1).unwrap();
+        assert_eq!(kv.register(7, 1).unwrap_err(), KvError::AlreadyRegistered(7));
+    }
+
+    #[test]
+    fn unknown_request_errors() {
+        let mut kv = PagedKvManager::new(4, 16);
+        assert_eq!(kv.extend(9, 1).unwrap_err(), KvError::UnknownRequest(9));
+        assert_eq!(kv.release(9).unwrap_err(), KvError::UnknownRequest(9));
+    }
+
+    #[test]
+    fn occupancy_tracks_fragmentation() {
+        let mut kv = PagedKvManager::new(10, 16);
+        kv.register(1, 17).unwrap(); // 2 pages for 17 tokens
+        let occ = kv.occupancy();
+        assert!((occ - 17.0 / 32.0).abs() < 1e-9, "{occ}");
+    }
+
+    #[test]
+    fn failed_register_leaves_state_clean() {
+        let mut kv = PagedKvManager::new(2, 16);
+        assert!(kv.register(1, 100).is_err());
+        assert_eq!(kv.active_requests(), 0);
+        assert_eq!(kv.free_pages(), 2);
+        kv.check_invariants().unwrap();
+    }
+}

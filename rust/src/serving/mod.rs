@@ -1,0 +1,262 @@
+//! Serving layer: request model, paged-KV manager, continuous batcher,
+//! and the real-mode serving demo that drives the PJRT engine.
+//!
+//! This is the vLLM/Orca-style substrate the paper's workloads sit on
+//! (§II-A): admission control against a paged KV pool, iteration-level
+//! scheduling, bucketed continuous batching — with the rust coordinator
+//! owning the event loop and the AOT-compiled model doing the math.
+
+pub mod batcher;
+pub mod kv;
+pub mod request;
+
+pub use batcher::{ModelBackend, Scheduler, SchedulerConfig};
+pub use kv::PagedKvManager;
+pub use request::{synthetic_requests, Request, RequestState};
+
+use std::path::Path;
+
+use crate::runtime::Engine;
+use crate::trace::{EventKind, Trace};
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+/// Real-mode cache handle: the PJRT cache literal + its bucket batch.
+pub struct EngineCache {
+    literal: xla::Literal,
+    bucket: usize,
+}
+
+impl ModelBackend for Engine {
+    type Cache = EngineCache;
+
+    fn max_seq(&self) -> usize {
+        self.config().max_seq
+    }
+
+    fn decode_buckets(&self) -> Vec<usize> {
+        Engine::decode_buckets(self)
+    }
+
+    fn prefill_group(
+        &mut self,
+        prompts: &[Vec<i32>],
+    ) -> anyhow::Result<(Vec<i32>, EngineCache)> {
+        let out = self.prefill(prompts)?;
+        let next = out.logits.iter().map(|l| Engine::argmax(l)).collect();
+        Ok((
+            next,
+            EngineCache {
+                literal: out.cache,
+                bucket: out.bucket_batch,
+            },
+        ))
+    }
+
+    fn decode_group(
+        &mut self,
+        cache: EngineCache,
+        pos: usize,
+        tokens: &[i32],
+    ) -> anyhow::Result<(Vec<i32>, EngineCache)> {
+        // Pad/trim the token vector to the cache's compiled bucket.
+        let mut toks = tokens.to_vec();
+        toks.resize(cache.bucket, 0);
+        let out = self.decode(cache.literal, pos, &toks)?;
+        let next = out
+            .logits
+            .iter()
+            .take(tokens.len())
+            .map(|l| Engine::argmax(l))
+            .collect();
+        Ok((
+            next,
+            EngineCache {
+                literal: out.cache,
+                bucket: cache.bucket,
+            },
+        ))
+    }
+
+    fn now_us(&self) -> f64 {
+        self.recorder.now_us()
+    }
+}
+
+/// Outcome of the real-mode serving demo.
+#[derive(Debug, Clone)]
+pub struct ServeSummary {
+    pub variant: String,
+    pub requests: usize,
+    pub iterations: usize,
+    pub wall_us: f64,
+    pub tokens_generated: usize,
+    pub ttft_us: Summary,
+    pub tpot_us: Summary,
+    /// Σ host prep + execute-call time from the real trace.
+    pub orchestration_us: f64,
+    /// Σ device computation time from the real trace.
+    pub device_us: f64,
+    /// Real null-executable launch floor.
+    pub null_floor_us: Summary,
+    pub executions: usize,
+}
+
+impl ServeSummary {
+    pub fn hdbi(&self) -> f64 {
+        let total = self.orchestration_us + self.device_us;
+        if total == 0.0 {
+            0.5
+        } else {
+            self.device_us / total
+        }
+    }
+
+    pub fn throughput_tps(&self) -> f64 {
+        if self.wall_us <= 0.0 {
+            0.0
+        } else {
+            self.tokens_generated as f64 / (self.wall_us / 1e6)
+        }
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "== real-mode serving ({}) ==\n\
+             requests          {}\n\
+             iterations        {}\n\
+             tokens generated  {}\n\
+             wall              {:.1} ms\n\
+             throughput        {:.1} tok/s\n\
+             TTFT mean/p95     {:.2} / {:.2} ms\n\
+             TPOT mean/p95     {:.2} / {:.2} ms\n\
+             orchestration     {:.2} ms ({} executions)\n\
+             device active     {:.2} ms\n\
+             HDBI (real)       {:.2}\n\
+             null floor        {:.1} us (p50 {:.1}, p95 {:.1})\n",
+            self.variant,
+            self.requests,
+            self.iterations,
+            self.tokens_generated,
+            self.wall_us / 1000.0,
+            self.throughput_tps(),
+            self.ttft_us.mean / 1000.0,
+            self.ttft_us.p95 / 1000.0,
+            self.tpot_us.mean / 1000.0,
+            self.tpot_us.p95 / 1000.0,
+            self.orchestration_us / 1000.0,
+            self.executions,
+            self.device_us / 1000.0,
+            self.hdbi(),
+            self.null_floor_us.mean,
+            self.null_floor_us.p50,
+            self.null_floor_us.p95,
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("variant", self.variant.as_str())
+            .with("requests", self.requests)
+            .with("iterations", self.iterations)
+            .with("wall_us", self.wall_us)
+            .with("tokens_generated", self.tokens_generated)
+            .with("throughput_tps", self.throughput_tps())
+            .with("ttft_mean_us", self.ttft_us.mean)
+            .with("ttft_p95_us", self.ttft_us.p95)
+            .with("tpot_mean_us", self.tpot_us.mean)
+            .with("tpot_p95_us", self.tpot_us.p95)
+            .with("orchestration_us", self.orchestration_us)
+            .with("device_us", self.device_us)
+            .with("hdbi", self.hdbi())
+            .with("null_floor_mean_us", self.null_floor_us.mean)
+            .with("executions", self.executions)
+    }
+}
+
+/// Host/device split of a real trace.
+///
+/// On the CPU PJRT backend the computation runs synchronously inside
+/// the `execute` call, so device-active time is the execute window
+/// (`RuntimeApi`) plus result materialization (`Kernel`), while the
+/// host-orchestration analog is the preparation span (`AtenOp`:
+/// batch/literal assembly + executable selection).
+pub fn real_trace_split(trace: &Trace) -> (f64, f64, usize) {
+    let mut host = 0.0;
+    let mut dev = 0.0;
+    let mut n = 0usize;
+    for e in &trace.events {
+        match e.kind {
+            EventKind::AtenOp => host += e.dur_us,
+            EventKind::RuntimeApi => dev += e.dur_us,
+            EventKind::Kernel => {
+                dev += e.dur_us;
+                n += 1;
+            }
+            _ => {}
+        }
+    }
+    (host, dev, n)
+}
+
+/// Run the full real-mode demo: load artifacts, serve a synthetic
+/// request mix through the continuous batcher over PJRT, measure the
+/// real null-kernel floor, and summarize.
+pub fn run_server_demo(
+    artifacts_dir: &Path,
+    variant: &str,
+    n_requests: usize,
+    max_batch: usize,
+    seed: u64,
+) -> anyhow::Result<ServeSummary> {
+    let engine = Engine::load(artifacts_dir, variant)?;
+    let vocab = engine.config().vocab;
+    let max_seq = engine.config().max_seq;
+
+    let cfg = SchedulerConfig {
+        max_batch,
+        max_groups: 2,
+        kv_pages: 64,
+        kv_page_tokens: 16,
+    };
+    let mut sched = Scheduler::new(engine, cfg);
+    for r in synthetic_requests(n_requests, vocab, max_seq, seed) {
+        sched.submit(r);
+    }
+    sched.run_to_completion()?;
+    let iterations = sched.iterations;
+
+    // Real launch-floor probe (Table III analog on PJRT).
+    let mut floor_runs = Vec::with_capacity(30);
+    {
+        let engine = &mut sched.backend;
+        for i in 0..35 {
+            let (_, launch) = engine.null_run()?;
+            if i >= 5 {
+                floor_runs.push(launch);
+            }
+        }
+    }
+
+    let finished = sched.finished().to_vec();
+    let trace = sched.backend.take_trace();
+    let (host, dev, execs) = real_trace_split(&trace);
+
+    let ttfts: Vec<f64> = finished.iter().filter_map(|f| f.ttft_us()).collect();
+    let tpots: Vec<f64> = finished.iter().filter_map(|f| f.tpot_us()).collect();
+    let tokens: usize = finished.iter().map(|f| f.generated.len()).sum();
+
+    Ok(ServeSummary {
+        variant: variant.to_string(),
+        requests: finished.len(),
+        iterations,
+        wall_us: trace.meta.wall_us,
+        tokens_generated: tokens,
+        ttft_us: Summary::of(&ttfts),
+        tpot_us: Summary::of(&tpots),
+        orchestration_us: host,
+        device_us: dev,
+        null_floor_us: Summary::of(&floor_runs),
+        executions: execs,
+    })
+}

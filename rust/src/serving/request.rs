@@ -1,0 +1,148 @@
+//! Request model + synthetic workload generation for the serving demo.
+
+use crate::util::rng::Rng;
+
+/// An inference request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    /// Arrival time offset, us (0 = all at once).
+    pub arrival_us: f64,
+}
+
+/// Lifecycle state tracked by the scheduler.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestState {
+    pub request: Request,
+    pub generated: Vec<i32>,
+    /// Set when the first output token is produced (TTFT), us.
+    pub first_token_us: Option<f64>,
+    /// Set when the request completes, us.
+    pub finish_us: Option<f64>,
+}
+
+impl RequestState {
+    pub fn new(request: Request) -> RequestState {
+        RequestState {
+            request,
+            generated: Vec::new(),
+            first_token_us: None,
+            finish_us: None,
+        }
+    }
+
+    pub fn done(&self) -> bool {
+        self.generated.len() >= self.request.max_new_tokens
+    }
+
+    /// Current sequence position (next token index).
+    pub fn pos(&self) -> usize {
+        self.request.prompt.len() + self.generated.len()
+    }
+
+    pub fn ttft_us(&self) -> Option<f64> {
+        self.first_token_us.map(|t| t - self.request.arrival_us)
+    }
+
+    /// Time per output token over the decode window.
+    pub fn tpot_us(&self) -> Option<f64> {
+        match (self.first_token_us, self.finish_us) {
+            (Some(first), Some(finish)) if self.generated.len() > 1 => {
+                Some((finish - first) / (self.generated.len() - 1) as f64)
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Deterministic synthetic request mix: prompt lengths and decode
+/// budgets sized for the AOT bucket grid (max prompt 64, max_seq 128).
+pub fn synthetic_requests(
+    n: usize,
+    vocab: usize,
+    max_seq: usize,
+    seed: u64,
+) -> Vec<Request> {
+    let mut rng = Rng::new(seed).fork_str("requests");
+    (0..n as u64)
+        .map(|id| {
+            let prompt_len = 8 + rng.below(41); // 8..=48
+            let prompt: Vec<i32> = (0..prompt_len)
+                .map(|_| rng.below(vocab) as i32)
+                .collect();
+            let budget = max_seq.saturating_sub(prompt_len + 1);
+            let max_new = (4 + rng.below(9)).min(budget); // 4..=12
+            Request {
+                id,
+                prompt,
+                max_new_tokens: max_new.max(1),
+                arrival_us: 0.0,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_fits_buckets() {
+        for r in synthetic_requests(64, 256, 128, 1) {
+            assert!((8..=48).contains(&r.prompt.len()));
+            assert!(r.prompt.len() + r.max_new_tokens < 128);
+            assert!(r.prompt.iter().all(|&t| (0..256).contains(&t)));
+        }
+    }
+
+    #[test]
+    fn synthetic_is_deterministic() {
+        assert_eq!(
+            synthetic_requests(8, 256, 128, 7),
+            synthetic_requests(8, 256, 128, 7)
+        );
+        assert_ne!(
+            synthetic_requests(8, 256, 128, 7),
+            synthetic_requests(8, 256, 128, 8)
+        );
+    }
+
+    #[test]
+    fn state_lifecycle() {
+        let r = Request {
+            id: 1,
+            prompt: vec![1, 2, 3],
+            max_new_tokens: 2,
+            arrival_us: 100.0,
+        };
+        let mut s = RequestState::new(r);
+        assert!(!s.done());
+        assert_eq!(s.pos(), 3);
+        s.generated.push(9);
+        s.first_token_us = Some(400.0);
+        assert_eq!(s.pos(), 4);
+        assert!(!s.done());
+        s.generated.push(10);
+        s.finish_us = Some(700.0);
+        assert!(s.done());
+        assert_eq!(s.ttft_us(), Some(300.0));
+        assert_eq!(s.tpot_us(), Some(300.0));
+    }
+
+    #[test]
+    fn tpot_requires_two_tokens() {
+        let r = Request {
+            id: 1,
+            prompt: vec![1],
+            max_new_tokens: 1,
+            arrival_us: 0.0,
+        };
+        let mut s = RequestState::new(r);
+        s.generated.push(5);
+        s.first_token_us = Some(10.0);
+        s.finish_us = Some(10.0);
+        assert_eq!(s.tpot_us(), None);
+    }
+}

@@ -1,0 +1,551 @@
+//! Host + device co-simulation: runs a workload through the eager
+//! dispatch path and a FIFO stream, emitting an nsys-like [`Trace`].
+//!
+//! Timeline semantics (eager mode, paper §II-C):
+//! * the host thread dispatches kernels serially — per kernel it spends
+//!   `T_Py + T_dispatch_base (+ ΔCT) + api_call`, then immediately moves
+//!   to the next op (launches are asynchronous);
+//! * each kernel becomes *ready* `launch_gap = T_sys_floor + ΔKT_fw`
+//!   after its API call and starts at `max(ready, stream cursor)`;
+//! * every pass ends with a device synchronization (decode needs the
+//!   logits host-side for sampling), so steps do not overlap;
+//! * non-kernel framework time (module-tree traversal, tokenization,
+//!   generate()-loop bookkeeping, and the *python* expert-loop control
+//!   flow for MoE) is modeled as per-pass glue that occupies the host
+//!   without touching the device — the "framework tax" residual that
+//!   makes observed idle fractions (Fig. 6) larger than orchestration
+//!   alone explains.
+
+use crate::device::Stream;
+use crate::hardware::Platform;
+use crate::host::HostModel;
+use crate::kernels::cost;
+use crate::kernels::family::Family;
+use crate::lowering::{self, LowerOpts, PassKind};
+use crate::models::ModelSpec;
+use crate::trace::{EventKind, Trace, TraceEvent, TraceMeta, Track};
+use crate::util::rng::Rng;
+
+/// Fixed per-pass python overhead at the reference CPU, us.
+pub const PASS_CONST_US: f64 = 1500.0;
+/// Per-layer python module-traversal overhead, us.
+pub const PER_LAYER_US: f64 = 300.0;
+/// Python control-flow cost of one expert iteration (MoE loop), us.
+pub const EXPERT_LOOP_US: f64 = 45.0;
+/// Host-side cost of the end-of-pass synchronization, us.
+pub const SYNC_US: f64 = 30.0;
+
+/// Inference phase of a workload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Prefill,
+    Decode,
+}
+
+impl Phase {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Phase::Prefill => "prefill",
+            Phase::Decode => "decode",
+        }
+    }
+}
+
+/// What-if mitigation modes — the paper's §III diagnostic
+/// prescriptions, modeled so the advisor's recommendations can be
+/// validated quantitatively (EXPERIMENTS.md §Prescriptions):
+///
+/// * `TorchCompile` — targets ΔFT: Python dispatch nearly vanishes, the
+///   ATen path shortens, and elementwise chains fuse (fewer kernels).
+/// * `CudaGraphs` — targets ΔKT/N: after a capture pass, each replayed
+///   pass issues ONE graph launch instead of N kernel launches; the
+///   paper notes the capture cost and static-shape requirement (§II-C).
+/// * `KernelFusion` — targets N directly: fused attention + fused
+///   elementwise chains, host path otherwise unchanged (eager).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mitigation {
+    None,
+    TorchCompile,
+    CudaGraphs,
+    KernelFusion,
+}
+
+impl Mitigation {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Mitigation::None => "none",
+            Mitigation::TorchCompile => "torch-compile",
+            Mitigation::CudaGraphs => "cuda-graphs",
+            Mitigation::KernelFusion => "kernel-fusion",
+        }
+    }
+
+    pub fn parse(tag: &str) -> anyhow::Result<Mitigation> {
+        Ok(match tag {
+            "none" => Mitigation::None,
+            "torch-compile" => Mitigation::TorchCompile,
+            "cuda-graphs" => Mitigation::CudaGraphs,
+            "kernel-fusion" => Mitigation::KernelFusion,
+            other => anyhow::bail!(
+                "unknown mitigation '{other}' (none|torch-compile|cuda-graphs|kernel-fusion)"
+            ),
+        })
+    }
+}
+
+/// torch.compile host-path savings: Python dispatch is compiled away,
+/// ATen dispatch shortens to the compiled-graph runner's cost.
+const COMPILE_PY_FACTOR: f64 = 0.10;
+const COMPILE_BASE_FACTOR: f64 = 0.35;
+/// Host cost of launching a captured CUDA graph, us (reference CPU).
+const GRAPH_LAUNCH_US: f64 = 12.0;
+/// One-time graph capture/instantiation overhead per unique pass shape.
+const GRAPH_CAPTURE_US: f64 = 8000.0;
+
+/// A workload point: model × phase × (BS, SL, m).
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub phase: Phase,
+    pub batch: usize,
+    pub seq: usize,
+    /// Output tokens for decode (the paper's m; decode traces aggregate
+    /// all m steps). Ignored for prefill.
+    pub m_tokens: usize,
+    pub fused_attention: bool,
+    pub mitigation: Mitigation,
+}
+
+impl Workload {
+    pub fn prefill(batch: usize, seq: usize) -> Workload {
+        Workload {
+            phase: Phase::Prefill,
+            batch,
+            seq,
+            m_tokens: 1,
+            fused_attention: false,
+            mitigation: Mitigation::None,
+        }
+    }
+
+    pub fn decode(batch: usize, seq: usize, m_tokens: usize) -> Workload {
+        Workload {
+            phase: Phase::Decode,
+            batch,
+            seq,
+            m_tokens,
+            fused_attention: false,
+            mitigation: Mitigation::None,
+        }
+    }
+
+    pub fn with_fused_attention(mut self, fused: bool) -> Workload {
+        self.fused_attention = fused;
+        self
+    }
+
+    pub fn with_mitigation(mut self, mitigation: Mitigation) -> Workload {
+        self.mitigation = mitigation;
+        self
+    }
+}
+
+/// Aggregate outcome of a simulated run (no event storage) — used by
+/// the large heatmap sweeps (Figs. 5/6) where whole traces of
+/// ~10⁶ events would dominate memory for no analytical gain.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SimSummary {
+    pub wall_us: f64,
+    pub device_active_us: f64,
+    pub kernels: usize,
+    /// Σ host-thread occupancy (dispatch path time).
+    pub host_busy_us: f64,
+    /// Σ (kernel start − api call): the TKLQT baseline [30].
+    pub tklqt_us: f64,
+}
+
+impl SimSummary {
+    /// GPU idle fraction (Fig. 6).
+    pub fn idle_fraction(&self) -> f64 {
+        if self.wall_us <= 0.0 {
+            0.0
+        } else {
+            ((self.wall_us - self.device_active_us) / self.wall_us).clamp(0.0, 1.0)
+        }
+    }
+}
+
+/// Simulate one profiled iteration of `workload` on `platform`.
+///
+/// Deterministic in `(model, platform, workload, seed)`.
+pub fn simulate(
+    model: &ModelSpec,
+    platform: &Platform,
+    workload: &Workload,
+    seed: u64,
+) -> Trace {
+    simulate_inner(model, platform, workload, seed, true).0
+}
+
+/// Aggregates-only simulation: identical timeline, no event storage.
+pub fn simulate_summary(
+    model: &ModelSpec,
+    platform: &Platform,
+    workload: &Workload,
+    seed: u64,
+) -> SimSummary {
+    simulate_inner(model, platform, workload, seed, false).1
+}
+
+fn simulate_inner(
+    model: &ModelSpec,
+    platform: &Platform,
+    workload: &Workload,
+    seed: u64,
+    record: bool,
+) -> (Trace, SimSummary) {
+    let host = HostModel::new(platform.clone());
+    let base = Rng::new(seed)
+        .fork_str(&model.name)
+        .fork_str(&platform.name);
+    let mut host_rng = base.fork(1);
+    let mut dev_rng = base.fork(2);
+    let mut lower_rng = base.fork(3);
+
+    let mut trace = Trace::new(TraceMeta {
+        platform: platform.name.clone(),
+        model: model.name.clone(),
+        phase: workload.phase.as_str().to_string(),
+        batch: workload.batch,
+        seq: workload.seq,
+        m_tokens: if workload.phase == Phase::Decode {
+            workload.m_tokens
+        } else {
+            1
+        },
+        wall_us: 0.0,
+    });
+
+    let mit = workload.mitigation;
+    let opts = LowerOpts {
+        fused_attention: workload.fused_attention
+            || matches!(mit, Mitigation::KernelFusion | Mitigation::TorchCompile),
+    };
+    let st = platform.cpu.st_speed;
+    let mut t = 0.0f64; // host cursor
+    let mut stream = Stream::new();
+    let mut corr: u64 = 0;
+    let mut host_busy_us = 0.0f64;
+    let mut tklqt_us = 0.0f64;
+
+    // The paper's m-token window is prefill (which produces output
+    // token 1) + m-1 decode steps: "prefill (m=1)" in Fig. 5, and §V-C's
+    // kernel arithmetic (8,437 = 850 prefill + 9 x ~843 decode steps).
+    let m = match workload.phase {
+        Phase::Prefill => 1,
+        Phase::Decode => workload.m_tokens.max(1),
+    };
+    let mut passes: Vec<(PassKind, usize, usize)> =
+        vec![(PassKind::Prefill, workload.seq, workload.seq)];
+    passes.extend((0..m - 1).map(|i| (PassKind::DecodeStep, 1, workload.seq + i + 1)));
+
+    let mut graph_captured = false;
+    for (pass_idx, (kind, seq_q, ctx)) in passes.into_iter().enumerate() {
+        // Non-kernel framework glue for this pass. Compiled execution
+        // skips the python module-tree traversal and the MoE python
+        // expert loop (the graph runner owns control flow).
+        let mut glue = PASS_CONST_US + PER_LAYER_US * model.layers as f64;
+        if let Some(moe) = &model.moe {
+            glue += EXPERT_LOOP_US
+                * (model.layers * (moe.n_experts + moe.shared_experts)) as f64;
+        }
+        if mit == Mitigation::TorchCompile || mit == Mitigation::CudaGraphs {
+            glue *= 0.25;
+        }
+        t += glue / st;
+
+        // CUDA graphs: decode steps after the capture pass replay the
+        // whole pass as one graph launch (static shapes; the prefill /
+        // first decode step pays the capture cost).
+        let graphed = mit == Mitigation::CudaGraphs && kind == PassKind::DecodeStep;
+        if graphed && !graph_captured {
+            t += GRAPH_CAPTURE_US / st;
+            graph_captured = true;
+        }
+
+        let mut seq = lowering::lower_pass(
+            model,
+            kind,
+            workload.batch,
+            seq_q,
+            ctx,
+            &opts,
+            &mut lower_rng,
+        );
+        if mit == Mitigation::TorchCompile || mit == Mitigation::KernelFusion {
+            seq = lowering::fuse_elementwise(seq);
+        }
+        if graphed {
+            // One host-side graph launch; kernels run back-to-back.
+            let graph_ts = t;
+            t += GRAPH_LAUNCH_US / st;
+            let floor = host.sample_floor(&mut host_rng);
+            for meta in seq {
+                corr += 1;
+                let family =
+                    Family::from_tag(&meta.family).expect("lowering emits valid tags");
+                let dur = cost::sample_duration_us(
+                    family,
+                    meta.flops,
+                    meta.bytes,
+                    &platform.gpu,
+                    &mut dev_rng,
+                );
+                let timing = stream.submit(graph_ts, floor, dur);
+                tklqt_us += timing.launch_plus_queue_us;
+                if record {
+                    trace.push(TraceEvent {
+                        kind: EventKind::Kernel,
+                        name: meta.kernel_name.clone(),
+                        ts_us: timing.start_us,
+                        dur_us: dur,
+                        correlation_id: corr,
+                        track: Track::Device(0),
+                        meta: Some(meta),
+                    });
+                }
+            }
+            host_busy_us += GRAPH_LAUNCH_US / st;
+            let _ = pass_idx;
+            t = t.max(stream.sync_point()) + SYNC_US / st;
+            continue;
+        }
+        for meta in seq {
+            corr += 1;
+            let family = Family::from_tag(&meta.family).expect("lowering emits valid tags");
+            let mut hs = host.sample(family, &mut host_rng);
+            if mit == Mitigation::TorchCompile {
+                hs.t_py *= COMPILE_PY_FACTOR;
+                hs.t_base *= COMPILE_BASE_FACTOR;
+            }
+            let dur = cost::sample_duration_us(
+                family,
+                meta.flops,
+                meta.bytes,
+                &platform.gpu,
+                &mut dev_rng,
+            );
+
+            let torch_ts = t;
+            let aten_ts = torch_ts + hs.t_py;
+            let api_ts = aten_ts + hs.t_base + hs.t_ct;
+            let api_end = api_ts + hs.api_dur;
+            let timing = stream.submit(api_ts, hs.launch_gap, dur);
+            host_busy_us += api_end - torch_ts;
+            tklqt_us += timing.launch_plus_queue_us;
+            t = api_end;
+
+            if !record {
+                continue;
+            }
+            trace.push(TraceEvent {
+                kind: EventKind::TorchOp,
+                name: format!("torch.{}", meta.aten_op.trim_start_matches("aten::")),
+                ts_us: torch_ts,
+                dur_us: api_end - torch_ts,
+                correlation_id: corr,
+                track: Track::Host,
+                meta: None,
+            });
+            trace.push(TraceEvent {
+                kind: EventKind::AtenOp,
+                name: meta.aten_op.clone(),
+                ts_us: aten_ts,
+                dur_us: api_end - aten_ts,
+                correlation_id: corr,
+                track: Track::Host,
+                meta: None,
+            });
+            trace.push(TraceEvent {
+                kind: EventKind::RuntimeApi,
+                name: "cudaLaunchKernel".to_string(),
+                ts_us: api_ts,
+                dur_us: hs.api_dur,
+                correlation_id: corr,
+                track: Track::Host,
+                meta: None,
+            });
+            trace.push(TraceEvent {
+                kind: EventKind::Kernel,
+                name: meta.kernel_name.clone(),
+                ts_us: timing.start_us,
+                dur_us: dur,
+                correlation_id: corr,
+                track: Track::Device(0),
+                meta: Some(meta),
+            });
+        }
+
+        // End-of-pass device sync (logits needed host-side).
+        t = t.max(stream.sync_point()) + SYNC_US / st;
+    }
+
+    trace.meta.wall_us = t.max(stream.sync_point());
+    let summary = SimSummary {
+        wall_us: trace.meta.wall_us,
+        device_active_us: stream.active_us(),
+        kernels: stream.launched(),
+        host_busy_us,
+        tklqt_us,
+    };
+    (trace, summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+
+    fn sim(model: &ModelSpec, platform: &Platform, wl: &Workload) -> Trace {
+        simulate(model, platform, wl, 42)
+    }
+
+    #[test]
+    fn trace_is_deterministic() {
+        let m = models::gpt2();
+        let p = Platform::h200();
+        let wl = Workload::prefill(1, 512);
+        assert_eq!(sim(&m, &p, &wl), sim(&m, &p, &wl));
+    }
+
+    #[test]
+    fn kernel_events_match_lowering_count() {
+        let m = models::gpt2();
+        let p = Platform::h200();
+        let tr = sim(&m, &p, &Workload::prefill(1, 512));
+        let mut rng = Rng::new(0);
+        let expect = lowering::lower_pass(
+            &m,
+            PassKind::Prefill,
+            1,
+            512,
+            512,
+            &LowerOpts::default(),
+            &mut rng,
+        )
+        .len();
+        assert_eq!(tr.kernel_count(), expect);
+        // Each kernel has its torch/aten/api chain.
+        assert_eq!(tr.events.len(), 4 * expect);
+    }
+
+    #[test]
+    fn kernels_are_fifo_on_device() {
+        let m = models::gpt2();
+        let tr = sim(&m, &Platform::h100(), &Workload::prefill(1, 512));
+        let mut last_end = 0.0;
+        for k in tr.kernels() {
+            assert!(k.ts_us >= last_end - 1e-9, "FIFO violated");
+            last_end = k.end_us();
+        }
+    }
+
+    #[test]
+    fn host_events_are_serial() {
+        let m = models::gpt2();
+        let tr = sim(&m, &Platform::h100(), &Workload::prefill(1, 128));
+        let mut last_end = 0.0;
+        for e in tr.events.iter().filter(|e| e.kind == EventKind::TorchOp) {
+            assert!(e.ts_us >= last_end - 1e-9, "host dispatch must be serial");
+            last_end = e.end_us();
+        }
+    }
+
+    #[test]
+    fn wall_covers_all_events() {
+        let m = models::llama_1b();
+        let tr = sim(&m, &Platform::h100(), &Workload::decode(1, 512, 3));
+        let span_end = tr
+            .events
+            .iter()
+            .map(|e| e.end_us())
+            .fold(0.0f64, f64::max);
+        assert!(tr.meta.wall_us >= span_end - 1e-6);
+    }
+
+    #[test]
+    fn decode_window_is_prefill_plus_steps() {
+        // §V-C arithmetic: the m-token window = 1 prefill pass + (m-1)
+        // decode steps (8,437 = 850 + 9 x ~843 for Llama-1B).
+        let m = models::gpt2();
+        let p = Platform::h200();
+        let prefill = sim(&m, &p, &Workload::prefill(1, 128));
+        let m1 = sim(&m, &p, &Workload::decode(1, 128, 1));
+        assert_eq!(m1.kernel_count(), prefill.kernel_count());
+        let m5 = sim(&m, &p, &Workload::decode(1, 128, 5));
+        let per_step = (m5.kernel_count() - prefill.kernel_count()) / 4;
+        // Decode steps carry a few extra kernels (cache writes,
+        // sampling) and drop the prefill mask.
+        assert!(
+            per_step.abs_diff(prefill.kernel_count()) < 20,
+            "per_step={per_step} prefill={}",
+            prefill.kernel_count()
+        );
+    }
+
+    #[test]
+    fn bigger_batch_increases_device_time_not_kernel_count() {
+        // The §V-C GPT-2 result: T_Orchestration flat, T_DeviceActive
+        // grows with batch.
+        let m = models::gpt2();
+        let p = Platform::h200();
+        let bs1 = sim(&m, &p, &Workload::prefill(1, 512));
+        let bs16 = sim(&m, &p, &Workload::prefill(16, 512));
+        assert_eq!(bs1.kernel_count(), bs16.kernel_count());
+        assert!(bs16.device_active_us() > 5.0 * bs1.device_active_us());
+    }
+
+    #[test]
+    fn h200_reduces_wall_for_host_bound_moe() {
+        // §VI: the faster host CPU wins end-to-end for MoE decode even
+        // though the H200 GPU is clocked lower.
+        let m = models::olmoe();
+        let wl = Workload::decode(1, 512, 2);
+        let h100 = sim(&m, &Platform::h100(), &wl);
+        let h200 = sim(&m, &Platform::h200(), &wl);
+        assert!(
+            h200.meta.wall_us < h100.meta.wall_us,
+            "h100={} h200={}",
+            h100.meta.wall_us,
+            h200.meta.wall_us
+        );
+    }
+}
+
+#[cfg(test)]
+mod summary_tests {
+    use super::*;
+    use crate::models;
+
+    #[test]
+    fn summary_matches_full_trace() {
+        let m = models::gpt2();
+        let p = Platform::h200();
+        let wl = Workload::prefill(2, 256);
+        let trace = simulate(&m, &p, &wl, 17);
+        let sum = simulate_summary(&m, &p, &wl, 17);
+        assert_eq!(sum.kernels, trace.kernel_count());
+        assert!((sum.wall_us - trace.meta.wall_us).abs() < 1e-9);
+        assert!((sum.device_active_us - trace.device_active_us()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tklqt_matches_baseline_computation() {
+        let m = models::gpt2();
+        let p = Platform::h200();
+        let wl = Workload::prefill(1, 128);
+        let trace = simulate(&m, &p, &wl, 3);
+        let sum = simulate_summary(&m, &p, &wl, 3);
+        let b = crate::taxbreak::baselines::compute(&trace);
+        assert!((sum.tklqt_us - b.tklqt_us).abs() < 1e-6);
+    }
+}

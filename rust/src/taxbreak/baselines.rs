@@ -1,0 +1,112 @@
+//! Prior-work baseline metrics that TaxBreak is compared against.
+//!
+//! * **Framework tax** [14]: the aggregate host residual
+//!   `T_e2e − T_DeviceActive` — tells you *that* something is wrong,
+//!   not *where* (Fig. 2-left).
+//! * **TKLQT** [30]: total kernel launch and queue time,
+//!   `Σ (t_kernel_start − t_api_call)` — launch path plus queue delay,
+//!   so it blows up once the GPU saturates (Fig. 7a) while HDBI stays
+//!   interpretable.
+
+use crate::trace::Trace;
+
+/// Both baseline metrics for one trace.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Baselines {
+    /// Aggregate framework tax, us: e2e minus device-active [14].
+    pub framework_tax_us: f64,
+    /// Total kernel launch + queue time, us [30].
+    pub tklqt_us: f64,
+    /// Queue-only share of TKLQT (delay beyond the launch gap whenever
+    /// the stream was still busy).
+    pub queue_share: f64,
+    pub n_kernels: usize,
+}
+
+/// Compute the baselines from a trace.
+pub fn compute(trace: &Trace) -> Baselines {
+    let chains = trace.correlation_chains();
+    let mut tklqt = 0.0f64;
+    let mut min_gap = f64::INFINITY;
+    let mut gaps: Vec<f64> = Vec::new();
+    for c in chains.values() {
+        if let (Some(api), Some(kernel)) = (c.runtime_api, c.kernel) {
+            let gap = (kernel.ts_us - api.ts_us).max(0.0);
+            tklqt += gap;
+            min_gap = min_gap.min(gap);
+            gaps.push(gap);
+        }
+    }
+    // Queue share: everything above the observed minimum gap (the
+    // best-case launch path) is attributed to queueing.
+    let queue = if min_gap.is_finite() {
+        gaps.iter().map(|g| g - min_gap).sum::<f64>()
+    } else {
+        0.0
+    };
+    Baselines {
+        framework_tax_us: (trace.e2e_us() - trace.device_active_us()).max(0.0),
+        tklqt_us: tklqt,
+        queue_share: if tklqt > 0.0 { queue / tklqt } else { 0.0 },
+        n_kernels: gaps.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::Platform;
+    use crate::models;
+    use crate::sim::{simulate, Workload};
+
+    #[test]
+    fn framework_tax_is_residual() {
+        let t = simulate(
+            &models::gpt2(),
+            &Platform::h200(),
+            &Workload::prefill(1, 256),
+            3,
+        );
+        let b = compute(&t);
+        assert!((b.framework_tax_us - (t.e2e_us() - t.device_active_us())).abs() < 1e-9);
+        assert!(b.framework_tax_us > 0.0);
+    }
+
+    #[test]
+    fn tklqt_counts_all_kernels() {
+        let t = simulate(
+            &models::gpt2(),
+            &Platform::h200(),
+            &Workload::prefill(1, 256),
+            3,
+        );
+        let b = compute(&t);
+        assert_eq!(b.n_kernels, t.kernel_count());
+        // Per-kernel gap ≥ floor ≈ 4.5us.
+        assert!(b.tklqt_us > 4.0 * b.n_kernels as f64);
+    }
+
+    #[test]
+    fn tklqt_rises_with_gpu_saturation() {
+        // Fig. 7a: queue delay appears at large batch; TKLQT rises much
+        // faster than the kernel count.
+        let p = Platform::h200();
+        let m = models::gpt2();
+        let small = compute(&simulate(&m, &p, &Workload::prefill(1, 512), 3));
+        let big = compute(&simulate(&m, &p, &Workload::prefill(16, 512), 3));
+        let per_small = small.tklqt_us / small.n_kernels as f64;
+        let per_big = big.tklqt_us / big.n_kernels as f64;
+        assert!(
+            per_big > 1.5 * per_small,
+            "saturated TKLQT/kernel {per_big} vs {per_small}"
+        );
+        assert!(big.queue_share > small.queue_share);
+    }
+
+    #[test]
+    fn empty_trace() {
+        let b = compute(&Trace::default());
+        assert_eq!(b.n_kernels, 0);
+        assert_eq!(b.tklqt_us, 0.0);
+    }
+}

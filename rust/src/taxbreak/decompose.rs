@@ -1,0 +1,220 @@
+//! The Eq. 1/2/3 decomposition: per-invocation components summed into
+//! `T_Orchestration`, per-family slices, HDBI and the derived metrics.
+
+use std::collections::BTreeMap;
+
+use crate::taxbreak::phase1::Phase1;
+use crate::taxbreak::phase2::Phase2Result;
+use crate::trace::Trace;
+
+/// Per-family slice of the decomposition.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct FamilySlice {
+    pub invocations: usize,
+    pub t_py_us: f64,
+    pub t_base_us: f64,
+    pub dct_us: f64,
+    pub dkt_us: f64,
+    pub device_us: f64,
+}
+
+impl FamilySlice {
+    pub fn orchestration_us(&self) -> f64 {
+        self.t_py_us + self.t_base_us + self.dct_us + self.dkt_us
+    }
+}
+
+/// Eq. 1 components aggregated over a run (Eq. 2), plus device-active
+/// time and wall-clock (Eq. 3 inputs and Fig. 6's idle fraction).
+#[derive(Debug, Clone, Default)]
+pub struct Decomposition {
+    pub n_kernels: usize,
+    /// Σ T_Py (measured per-invocation in Phase 1).
+    pub t_py_us: f64,
+    /// Σ T_dispatch_base (Phase-2 baseline × N).
+    pub t_base_us: f64,
+    /// Σ I_lib·ΔCT.
+    pub dct_us: f64,
+    /// Σ ΔKT = N × T_sys_floor.
+    pub dkt_us: f64,
+    /// Σ kernel execution time.
+    pub device_active_us: f64,
+    /// Wall-clock latency of the traced region.
+    pub e2e_us: f64,
+    /// The Phase-2 floor used for ΔKT, us.
+    pub floor_us: f64,
+    pub per_family: BTreeMap<String, FamilySlice>,
+}
+
+impl Decomposition {
+    /// ΔFT = Σ (T_Py + T_dispatch_base)  (framework translation).
+    pub fn dft_us(&self) -> f64 {
+        self.t_py_us + self.t_base_us
+    }
+
+    /// Eq. 2: T_Orchestration.
+    pub fn orchestration_us(&self) -> f64 {
+        self.dft_us() + self.dct_us + self.dkt_us
+    }
+
+    /// Eq. 3: HDBI ∈ (0, 1). → 0 host-bound; → 1 device-bound.
+    pub fn hdbi(&self) -> f64 {
+        let dev = self.device_active_us;
+        let orch = self.orchestration_us();
+        if dev + orch == 0.0 {
+            0.5
+        } else {
+            dev / (dev + orch)
+        }
+    }
+
+    /// GPU idle fraction (Fig. 6): (T_e2e − T_DeviceActive)/T_e2e.
+    pub fn idle_fraction(&self) -> f64 {
+        if self.e2e_us <= 0.0 {
+            0.0
+        } else {
+            ((self.e2e_us - self.device_active_us) / self.e2e_us).clamp(0.0, 1.0)
+        }
+    }
+
+    /// GPU utilization (Table II): device-active over wall-clock.
+    pub fn gpu_utilization(&self) -> f64 {
+        1.0 - self.idle_fraction()
+    }
+
+    /// Mean per-kernel host cost (§V-C's ≈13.7 us GPT-2 number).
+    pub fn per_kernel_host_us(&self) -> f64 {
+        if self.n_kernels == 0 {
+            0.0
+        } else {
+            self.orchestration_us() / self.n_kernels as f64
+        }
+    }
+}
+
+/// Combine Phase-1 per-invocation measurements with Phase-2 replay
+/// results into the full decomposition.
+///
+/// Per invocation *i* with Phase-2 entry *k(i)*:
+/// `ΔFT_i = T_Py_i + T_dispatch_base`, `ΔCT_i = dct(k(i))`,
+/// `ΔKT_i = T_sys_floor` — exactly Eq. 1's accounting. The raw launch
+/// cost `T_launch^raw` stays diagnostic-only (not added — its ΔKT_fw
+/// part is framework enqueue overhead already captured by ΔFT/ΔCT).
+pub fn decompose(trace: &Trace, p1: &Phase1, p2: &Phase2Result) -> Decomposition {
+    let mut d = Decomposition {
+        e2e_us: trace.e2e_us(),
+        floor_us: p2.floor.mean,
+        ..Default::default()
+    };
+    for inv in &p1.invocations {
+        let slice = d.per_family.entry(inv.family.clone()).or_default();
+        let dct = p2
+            .replay_of(&inv.dedup_key)
+            .map(|k| k.dct_us)
+            .unwrap_or(0.0);
+        let lib_dct = if inv.lib_mediated { dct } else { 0.0 };
+
+        d.n_kernels += 1;
+        d.t_py_us += inv.t_py_us;
+        d.t_base_us += p2.dispatch_base_us;
+        d.dct_us += lib_dct;
+        d.dkt_us += p2.floor.mean;
+        d.device_active_us += inv.device_us;
+
+        slice.invocations += 1;
+        slice.t_py_us += inv.t_py_us;
+        slice.t_base_us += p2.dispatch_base_us;
+        slice.dct_us += lib_dct;
+        slice.dkt_us += p2.floor.mean;
+        slice.device_us += inv.device_us;
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::Platform;
+    use crate::models;
+    use crate::sim::{simulate, Workload};
+    use crate::taxbreak::phase2::{run, ReplayConfig, SimReplayBackend};
+
+    fn decompose_model(
+        model: &crate::models::ModelSpec,
+        platform: Platform,
+        wl: &Workload,
+    ) -> Decomposition {
+        let trace = simulate(model, &platform, wl, 9);
+        let p1 = Phase1::from_trace(&trace);
+        let mut backend = SimReplayBackend::new(platform, 13);
+        let p2 = run(&p1.db, &mut backend, &ReplayConfig::fast());
+        decompose(&trace, &p1, &p2)
+    }
+
+    #[test]
+    fn components_sum_to_orchestration() {
+        let d = decompose_model(&models::gpt2(), Platform::h200(), &Workload::prefill(1, 256));
+        let total = d.t_py_us + d.t_base_us + d.dct_us + d.dkt_us;
+        assert!((total - d.orchestration_us()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn family_slices_sum_to_totals() {
+        let d = decompose_model(&models::llama_1b(), Platform::h100(), &Workload::prefill(1, 128));
+        let fam_orch: f64 = d.per_family.values().map(|s| s.orchestration_us()).sum();
+        assert!((fam_orch - d.orchestration_us()).abs() < 1e-6);
+        let fam_n: usize = d.per_family.values().map(|s| s.invocations).sum();
+        assert_eq!(fam_n, d.n_kernels);
+    }
+
+    #[test]
+    fn hdbi_in_unit_interval_and_monotone_in_device_work() {
+        let small = decompose_model(&models::gpt2(), Platform::h200(), &Workload::prefill(1, 128));
+        let big = decompose_model(&models::gpt2(), Platform::h200(), &Workload::prefill(16, 512));
+        assert!(small.hdbi() > 0.0 && small.hdbi() < 1.0);
+        assert!(
+            big.hdbi() > small.hdbi(),
+            "bigger batch => more device-bound: {} vs {}",
+            big.hdbi(),
+            small.hdbi()
+        );
+    }
+
+    #[test]
+    fn gpt2_dct_is_zero() {
+        let d = decompose_model(&models::gpt2(), Platform::h200(), &Workload::prefill(1, 512));
+        assert_eq!(d.dct_us, 0.0, "§V-C: GPT-2 has no vendor-library share");
+    }
+
+    #[test]
+    fn llama_dct_is_positive() {
+        let d = decompose_model(&models::llama_1b(), Platform::h100(), &Workload::prefill(1, 128));
+        assert!(d.dct_us > 0.0);
+    }
+
+    #[test]
+    fn idle_plus_utilization_is_one() {
+        let d = decompose_model(&models::gpt2(), Platform::h200(), &Workload::prefill(4, 256));
+        assert!((d.idle_fraction() + d.gpu_utilization() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn moe_is_more_host_bound_than_dense() {
+        let wl = Workload::decode(1, 256, 2);
+        let dense = decompose_model(&models::llama_1b(), Platform::h200(), &wl);
+        let moe = decompose_model(&models::olmoe(), Platform::h200(), &wl);
+        assert!(
+            moe.hdbi() < dense.hdbi(),
+            "MoE must be more host-bound: {} vs {}",
+            moe.hdbi(),
+            dense.hdbi()
+        );
+    }
+
+    #[test]
+    fn per_kernel_host_cost_near_paper_gpt2() {
+        let d = decompose_model(&models::gpt2(), Platform::h200(), &Workload::prefill(1, 512));
+        let c = d.per_kernel_host_us();
+        assert!((c - 13.7).abs() < 1.5, "per-kernel host cost {c} (paper ≈13.7)");
+    }
+}

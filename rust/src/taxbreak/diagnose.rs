@@ -1,0 +1,156 @@
+//! The diagnostic interpretation of a decomposition (paper §III):
+//! turn HDBI + the component breakdown into an optimization
+//! prescription.
+//!
+//! * host-bound + ΔFT/ΔCT dominant → optimize the software stack
+//!   (torch.compile, library dispatch paths);
+//! * host-bound + N·T_sys_floor dominant → reduce kernel count
+//!   (fusion);
+//! * host-bound + large ΔKT_fw → amortize the driver/runtime path
+//!   (CUDA Graphs, persistent kernels);
+//! * device-bound → optimize device-side work (better kernels,
+//!   memory traffic).
+
+use crate::taxbreak::decompose::Decomposition;
+
+/// HDBI below this is treated as host-bound (the paper's CPU-effect
+/// gate sits near ≈0.3; we use 0.5 as the balance midpoint for target
+/// selection and report the raw HDBI alongside).
+pub const HOST_BOUND_HDBI: f64 = 0.5;
+
+/// Where optimization effort should go.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OptimizationTarget {
+    /// Python dispatch + library front-end dominates: compile/runtime
+    /// work (torch.compile, dispatch-path streamlining).
+    SoftwareStack,
+    /// Launch-floor cost scales with N: fuse kernels.
+    KernelFusion,
+    /// Device-side work dominates: kernel/memory optimization.
+    DeviceWork,
+}
+
+impl OptimizationTarget {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            OptimizationTarget::SoftwareStack => "software-stack",
+            OptimizationTarget::KernelFusion => "kernel-fusion",
+            OptimizationTarget::DeviceWork => "device-work",
+        }
+    }
+}
+
+/// A diagnosis: boundedness + dominant component + prescription.
+#[derive(Debug, Clone)]
+pub struct Diagnosis {
+    pub hdbi: f64,
+    pub host_bound: bool,
+    pub target: OptimizationTarget,
+    /// Share of T_Orchestration per component: (ΔFT, ΔCT, ΔKT).
+    pub shares: (f64, f64, f64),
+    pub rationale: String,
+}
+
+/// Diagnose a decomposition (paper §III "Diagnostic interpretation").
+pub fn diagnose(d: &Decomposition) -> Diagnosis {
+    let hdbi = d.hdbi();
+    let orch = d.orchestration_us().max(1e-12);
+    let shares = (d.dft_us() / orch, d.dct_us / orch, d.dkt_us / orch);
+    let host_bound = hdbi < HOST_BOUND_HDBI;
+
+    let (target, rationale) = if !host_bound {
+        (
+            OptimizationTarget::DeviceWork,
+            format!(
+                "HDBI={hdbi:.2} (device-bound): reduce device-side work \
+                 (e.g. fused attention cuts HBM traffic — Fig. 9)"
+            ),
+        )
+    } else if shares.0 + shares.1 >= shares.2 {
+        (
+            OptimizationTarget::SoftwareStack,
+            format!(
+                "HDBI={hdbi:.2} (host-bound), ΔFT+ΔCT = {:.0}% of T_Orch: \
+                 bottleneck is Python dispatch / library front-end — \
+                 target runtime compilation or dispatch paths",
+                100.0 * (shares.0 + shares.1)
+            ),
+        )
+    } else {
+        (
+            OptimizationTarget::KernelFusion,
+            format!(
+                "HDBI={hdbi:.2} (host-bound), N·T_sys_floor = {:.0}% of \
+                 T_Orch: cost scales with kernel count — fuse kernels \
+                 (or amortize the launch path with CUDA Graphs)",
+                100.0 * shares.2
+            ),
+        )
+    };
+    Diagnosis {
+        hdbi,
+        host_bound,
+        target,
+        shares,
+        rationale,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn decomp(py: f64, base: f64, ct: f64, kt: f64, dev: f64) -> Decomposition {
+        Decomposition {
+            n_kernels: 100,
+            t_py_us: py,
+            t_base_us: base,
+            dct_us: ct,
+            dkt_us: kt,
+            device_active_us: dev,
+            e2e_us: py + base + ct + kt + dev,
+            floor_us: 4.7,
+            per_family: Default::default(),
+        }
+    }
+
+    #[test]
+    fn device_bound_targets_device() {
+        let d = decomp(10.0, 50.0, 0.0, 40.0, 10_000.0);
+        let dg = diagnose(&d);
+        assert!(!dg.host_bound);
+        assert_eq!(dg.target, OptimizationTarget::DeviceWork);
+    }
+
+    #[test]
+    fn host_bound_software_stack() {
+        let d = decomp(400.0, 500.0, 200.0, 100.0, 50.0);
+        let dg = diagnose(&d);
+        assert!(dg.host_bound);
+        assert_eq!(dg.target, OptimizationTarget::SoftwareStack);
+    }
+
+    #[test]
+    fn host_bound_floor_dominated_prescribes_fusion() {
+        let d = decomp(50.0, 100.0, 0.0, 900.0, 50.0);
+        let dg = diagnose(&d);
+        assert_eq!(dg.target, OptimizationTarget::KernelFusion);
+        assert!(dg.rationale.contains("fuse"));
+    }
+
+    #[test]
+    fn shares_sum_to_one() {
+        let d = decomp(100.0, 200.0, 50.0, 150.0, 1.0);
+        let dg = diagnose(&d);
+        let s = dg.shares.0 + dg.shares.1 + dg.shares.2;
+        assert!((s - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hdbi_boundary() {
+        // Exactly balanced: hdbi == 0.5 counts as device-bound side.
+        let d = decomp(0.0, 500.0, 0.0, 500.0, 1000.0);
+        let dg = diagnose(&d);
+        assert!(!dg.host_bound);
+    }
+}

@@ -1,0 +1,188 @@
+//! Kernel matching (paper Eq. 9).
+//!
+//! Phase-2 replay may dispatch a *variant* of the traced kernel
+//! (autotuning picks a different tile/stage configuration for the
+//! isolated shape).  After narrowing candidates to the target
+//! neighborhood, the final kernel resolves through a name-based
+//! fallback hierarchy over cleaned (canonical) names:
+//!
+//! ```text
+//! exact        n_replay == n_trace
+//! substring    n_replay ⊆ n_trace  or  n_trace ⊆ n_replay
+//! most-frequent  otherwise
+//! ```
+
+/// How a replayed kernel was matched back to the traced kernel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MatchKind {
+    Exact,
+    Substring,
+    MostFrequent,
+}
+
+impl MatchKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            MatchKind::Exact => "exact",
+            MatchKind::Substring => "substring",
+            MatchKind::MostFrequent => "most-frequent",
+        }
+    }
+}
+
+/// Clean a raw kernel symbol to its canonical name: strip template
+/// arguments, trailing digits-only variant suffixes and whitespace.
+pub fn clean_name(raw: &str) -> String {
+    let mut s = raw.trim();
+    // Strip template arguments.
+    if let Some(i) = s.find('<') {
+        s = &s[..i];
+    }
+    // Strip trailing `_v<digits>` / `_<digits>` variant suffixes.
+    let mut out = s.to_string();
+    loop {
+        let Some(pos) = out.rfind('_') else { break };
+        let tail = &out[pos + 1..];
+        let is_variant =
+            !tail.is_empty() && (tail.chars().all(|c| c.is_ascii_digit())
+                || (tail.starts_with('v') && tail[1..].chars().all(|c| c.is_ascii_digit()) && tail.len() > 1));
+        if is_variant {
+            out.truncate(pos);
+        } else {
+            break;
+        }
+    }
+    out
+}
+
+/// Resolve a replayed kernel against the traced target (Eq. 9).
+///
+/// `most_frequent` is the fallback candidate: the most frequently
+/// invoked kernel in the replay neighborhood.
+pub fn match_kernel(replay_name: &str, trace_name: &str) -> MatchKind {
+    let r = clean_name(replay_name);
+    let t = clean_name(trace_name);
+    if r == t {
+        MatchKind::Exact
+    } else if r.contains(&t) || t.contains(&r) {
+        MatchKind::Substring
+    } else {
+        MatchKind::MostFrequent
+    }
+}
+
+/// Pick the best match for `trace_name` among `candidates`
+/// (names paired with invocation frequency). Returns the winning index
+/// and its match kind; falls back to the most frequent candidate.
+pub fn resolve<'a>(
+    trace_name: &str,
+    candidates: &[(&'a str, usize)],
+) -> Option<(usize, MatchKind)> {
+    if candidates.is_empty() {
+        return None;
+    }
+    let mut best: Option<(usize, MatchKind)> = None;
+    for (i, (name, _)) in candidates.iter().enumerate() {
+        let kind = match_kernel(name, trace_name);
+        let rank = |k: MatchKind| match k {
+            MatchKind::Exact => 0,
+            MatchKind::Substring => 1,
+            MatchKind::MostFrequent => 2,
+        };
+        match best {
+            Some((_, b)) if rank(kind) >= rank(b) => {}
+            _ => best = Some((i, kind)),
+        }
+        if kind == MatchKind::Exact {
+            break;
+        }
+    }
+    let (i, kind) = best.unwrap();
+    if kind == MatchKind::MostFrequent {
+        // Fall back to the highest-frequency candidate.
+        let (mf, _) = candidates
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, (_, freq))| *freq)
+            .unwrap();
+        Some((mf, MatchKind::MostFrequent))
+    } else {
+        Some((i, kind))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clean_strips_templates() {
+        assert_eq!(
+            clean_name("vectorized_elementwise_kernel<4, add_bf16>"),
+            "vectorized_elementwise_kernel"
+        );
+    }
+
+    #[test]
+    fn clean_strips_variant_suffixes() {
+        assert_eq!(clean_name("gemm_kernel_v2"), "gemm_kernel");
+        assert_eq!(clean_name("gemm_kernel_128"), "gemm_kernel");
+        assert_eq!(clean_name("gemm_kernel_128_v3"), "gemm_kernel");
+        // Non-variant suffixes survive.
+        assert_eq!(clean_name("gemm_kernel_tn"), "gemm_kernel_tn");
+    }
+
+    #[test]
+    fn exact_match() {
+        assert_eq!(
+            match_kernel("flash_fwd_kernel", "flash_fwd_kernel"),
+            MatchKind::Exact
+        );
+        // Variant suffixes clean away to exact.
+        assert_eq!(
+            match_kernel("flash_fwd_kernel_v2", "flash_fwd_kernel"),
+            MatchKind::Exact
+        );
+    }
+
+    #[test]
+    fn substring_match_both_directions() {
+        assert_eq!(
+            match_kernel("ampere_gemm_128x64_tn", "ampere_gemm_128x64_tn_splitk"),
+            MatchKind::Substring
+        );
+        assert_eq!(
+            match_kernel("ampere_gemm_128x64_tn_splitk", "ampere_gemm_128x64_tn"),
+            MatchKind::Substring
+        );
+    }
+
+    #[test]
+    fn unrelated_falls_back() {
+        assert_eq!(
+            match_kernel("reduce_kernel", "gemm_kernel"),
+            MatchKind::MostFrequent
+        );
+    }
+
+    #[test]
+    fn resolve_prefers_exact_over_frequency() {
+        let cands = [("gemm_a", 1000usize), ("gemm_target", 1)];
+        let (i, kind) = resolve("gemm_target", &cands).unwrap();
+        assert_eq!(i, 1);
+        assert_eq!(kind, MatchKind::Exact);
+    }
+
+    #[test]
+    fn resolve_falls_back_to_most_frequent() {
+        let cands = [("alpha", 3usize), ("beta", 9), ("gamma", 5)];
+        let (i, kind) = resolve("unrelated_name", &cands).unwrap();
+        assert_eq!(i, 1);
+        assert_eq!(kind, MatchKind::MostFrequent);
+    }
+
+    #[test]
+    fn resolve_empty() {
+        assert!(resolve("x", &[]).is_none());
+    }
+}

@@ -1,0 +1,98 @@
+//! **TaxBreak** — the paper's contribution (§III).
+//!
+//! A trace-driven decomposition of host-visible orchestration overhead
+//! into three mutually exclusive, collectively exhaustive per-kernel
+//! components:
+//!
+//! ```text
+//! T_Host = ΔFT + I_lib·ΔCT + ΔKT                       (Eq. 1)
+//!   ΔFT = T_Py + T_dispatch_base     framework translation
+//!   ΔCT = max(0, T_dispatch − T_dispatch_base)  library front-end
+//!   ΔKT = T_sys_floor                launch-path hardware floor
+//! T_Orchestration = Σ_i (ΔFT_i + I_lib·ΔCT_i + ΔKT_i)  (Eq. 2)
+//! HDBI = T_dev / (T_dev + T_orch)                      (Eq. 3)
+//! ```
+//!
+//! measured in two phases:
+//! * **Phase 1** ([`phase1`]): a full-model trace yields per-invocation
+//!   `T_Py` and the kernel database;
+//! * **Phase 2** ([`phase2`]): a null-kernel run measures the floor,
+//!   then each unique kernel is replayed in isolation (deduplicated by
+//!   ATen metadata + launch config) to measure `T_dispatch` and
+//!   `T_launch` without queue interference, with the Eq. 9 name-matching
+//!   fallback for autotuned variant drift ([`matching`]).
+//!
+//! [`baselines`] implements the two prior-work metrics TaxBreak is
+//! compared against (aggregate framework tax [14], TKLQT [30]);
+//! [`diagnose`] turns a decomposition into the paper's optimization
+//! prescription.
+
+pub mod baselines;
+pub mod decompose;
+pub mod diagnose;
+pub mod matching;
+pub mod phase1;
+pub mod phase2;
+pub mod report;
+
+pub use decompose::{Decomposition, FamilySlice};
+pub use diagnose::{diagnose, Diagnosis, OptimizationTarget};
+pub use phase1::Phase1;
+pub use phase2::{Phase2Result, ReplayBackend, ReplayConfig, SimReplayBackend};
+
+use crate::trace::Trace;
+
+/// Full TaxBreak analysis of one trace.
+#[derive(Debug, Clone)]
+pub struct Analysis {
+    pub phase1: Phase1,
+    pub phase2: Phase2Result,
+    pub decomposition: Decomposition,
+    pub baselines: baselines::Baselines,
+    pub diagnosis: Diagnosis,
+}
+
+/// Run the complete two-phase pipeline on a trace.
+pub fn analyze(trace: &Trace, backend: &mut dyn ReplayBackend, cfg: &ReplayConfig) -> Analysis {
+    let phase1 = Phase1::from_trace(trace);
+    let phase2 = phase2::run(&phase1.db, backend, cfg);
+    let decomposition = decompose::decompose(trace, &phase1, &phase2);
+    let baselines = baselines::compute(trace);
+    let diagnosis = diagnose(&decomposition);
+    Analysis {
+        phase1,
+        phase2,
+        decomposition,
+        baselines,
+        diagnosis,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::Platform;
+    use crate::models;
+    use crate::sim::{simulate, Workload};
+
+    #[test]
+    fn end_to_end_analysis_runs() {
+        let trace = simulate(
+            &models::gpt2(),
+            &Platform::h200(),
+            &Workload::prefill(1, 128),
+            1,
+        );
+        let platform = Platform::h200();
+        let mut backend = SimReplayBackend::new(platform, 7);
+        let a = analyze(&trace, &mut backend, &ReplayConfig::fast());
+        assert_eq!(a.decomposition.n_kernels, trace.kernel_count());
+        let hdbi = a.decomposition.hdbi();
+        assert!(hdbi > 0.0 && hdbi < 1.0, "hdbi={hdbi}");
+        assert!(a.decomposition.orchestration_us() > 0.0);
+        // Components are mutually exclusive & collectively exhaustive:
+        let d = &a.decomposition;
+        let total = d.dft_us() + d.dct_us + d.dkt_us;
+        assert!((total - d.orchestration_us()).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,202 @@
+//! Phase 1: full-model trace analysis (paper §III-B).
+//!
+//! From the profiled iteration we extract, per kernel invocation, the
+//! Python-side dispatch overhead `T_Py = t_aten_op − t_torch_op` (the
+//! time before execution reaches the ATen C++ layer), and build the
+//! *kernel database* of unique kernels (cleaned name, launch config,
+//! ATen metadata, invocation frequency, `I_lib` classification).
+
+use crate::kernels::KernelDb;
+use crate::trace::{EventKind, Trace};
+
+/// One kernel invocation's Phase-1 measurements.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Invocation {
+    /// Index into the trace's kernel events (invocation order).
+    pub correlation_id: u64,
+    /// Dedup key into the kernel database.
+    pub dedup_key: String,
+    /// Measured T_Py for this invocation, us.
+    pub t_py_us: f64,
+    /// Kernel family tag.
+    pub family: String,
+    /// `I_lib`.
+    pub lib_mediated: bool,
+    /// Device execution time, us.
+    pub device_us: f64,
+    /// Launch-path interval (api call → kernel start: launch + queue).
+    pub launch_plus_queue_us: f64,
+}
+
+/// Phase-1 output: per-invocation measurements + the kernel database.
+#[derive(Debug, Clone, Default)]
+pub struct Phase1 {
+    pub invocations: Vec<Invocation>,
+    pub db: KernelDb,
+}
+
+impl Phase1 {
+    pub fn from_trace(trace: &Trace) -> Phase1 {
+        let chains = trace.correlation_chains();
+        let mut corr_ids: Vec<u64> = chains
+            .iter()
+            .filter(|(_, c)| c.kernel.is_some())
+            .map(|(&id, _)| id)
+            .collect();
+        corr_ids.sort();
+
+        let mut invocations = Vec::with_capacity(corr_ids.len());
+        let mut db = KernelDb::new();
+        for id in corr_ids {
+            let chain = &chains[&id];
+            let kernel = chain.kernel.expect("filtered for kernels");
+            let meta = match &kernel.meta {
+                Some(m) => m,
+                None => continue, // kernels without metadata are skipped
+            };
+            db.record(meta, kernel.dur_us);
+
+            // T_Py: torch-op start -> aten-op start. Falls back to 0
+            // when either event is missing (e.g. partial traces).
+            let t_py = match (chain.torch_op, chain.aten_op) {
+                (Some(t), Some(a)) => (a.ts_us - t.ts_us).max(0.0),
+                _ => 0.0,
+            };
+            let launch_plus_queue = match chain.runtime_api {
+                Some(api) => (kernel.ts_us - api.ts_us).max(0.0),
+                None => 0.0,
+            };
+            invocations.push(Invocation {
+                correlation_id: id,
+                dedup_key: meta.dedup_key(),
+                t_py_us: t_py,
+                family: meta.family.clone(),
+                lib_mediated: meta.lib_mediated,
+                device_us: kernel.dur_us,
+                launch_plus_queue_us: launch_plus_queue,
+            });
+        }
+        Phase1 { invocations, db }
+    }
+
+    /// Σ T_Py over all invocations.
+    pub fn total_t_py_us(&self) -> f64 {
+        self.invocations.iter().map(|i| i.t_py_us).sum()
+    }
+
+    /// Kernels per generated token (Table II).
+    pub fn kernels_per_token(&self, m_tokens: usize) -> f64 {
+        self.invocations.len() as f64 / m_tokens.max(1) as f64
+    }
+}
+
+/// Quick structural check that a trace is analyzable (every kernel has
+/// a runtime-api parent; host events are present).
+pub fn validate_trace(trace: &Trace) -> anyhow::Result<()> {
+    let chains = trace.correlation_chains();
+    let mut kernels = 0usize;
+    let mut orphans = 0usize;
+    for c in chains.values() {
+        if let Some(_k) = c.kernel {
+            kernels += 1;
+            if c.runtime_api.is_none() {
+                orphans += 1;
+            }
+        }
+    }
+    anyhow::ensure!(kernels > 0, "trace contains no kernel events");
+    anyhow::ensure!(
+        orphans == 0,
+        "{orphans}/{kernels} kernels lack a runtime-api event"
+    );
+    let has_host = trace
+        .events
+        .iter()
+        .any(|e| e.kind == EventKind::TorchOp || e.kind == EventKind::AtenOp);
+    anyhow::ensure!(has_host, "trace lacks host-side operator events");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::Platform;
+    use crate::models;
+    use crate::sim::{simulate, Workload};
+
+    fn gpt2_trace() -> Trace {
+        simulate(
+            &models::gpt2(),
+            &Platform::h200(),
+            &Workload::prefill(1, 128),
+            3,
+        )
+    }
+
+    #[test]
+    fn invocations_match_kernel_count() {
+        let t = gpt2_trace();
+        let p1 = Phase1::from_trace(&t);
+        assert_eq!(p1.invocations.len(), t.kernel_count());
+        assert_eq!(p1.db.total_invocations(), t.kernel_count());
+    }
+
+    #[test]
+    fn invocations_are_in_launch_order() {
+        let p1 = Phase1::from_trace(&gpt2_trace());
+        for w in p1.invocations.windows(2) {
+            assert!(w[0].correlation_id < w[1].correlation_id);
+        }
+    }
+
+    #[test]
+    fn t_py_positive_and_plausible() {
+        let p1 = Phase1::from_trace(&gpt2_trace());
+        for inv in &p1.invocations {
+            assert!(inv.t_py_us > 0.0);
+            assert!(inv.t_py_us < 50.0, "t_py={} too large", inv.t_py_us);
+        }
+    }
+
+    #[test]
+    fn launch_plus_queue_at_least_floor() {
+        let p1 = Phase1::from_trace(&gpt2_trace());
+        for inv in &p1.invocations {
+            assert!(
+                inv.launch_plus_queue_us > 3.0,
+                "launch path {} below any plausible floor",
+                inv.launch_plus_queue_us
+            );
+        }
+    }
+
+    #[test]
+    fn validate_accepts_sim_traces() {
+        validate_trace(&gpt2_trace()).unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_empty() {
+        assert!(validate_trace(&Trace::default()).is_err());
+    }
+
+    #[test]
+    fn db_dedup_is_effective() {
+        // 12 identical layers => far fewer unique kernels than launches.
+        let p1 = Phase1::from_trace(&gpt2_trace());
+        assert!(p1.db.len() * 3 < p1.db.total_invocations());
+    }
+
+    #[test]
+    fn kernels_per_token() {
+        let t = simulate(
+            &models::gpt2(),
+            &Platform::h200(),
+            &Workload::decode(1, 64, 5),
+            3,
+        );
+        let p1 = Phase1::from_trace(&t);
+        let per_tok = p1.kernels_per_token(5);
+        assert!((per_tok - t.kernel_count() as f64 / 5.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,78 @@
+//! Export traces to the chrome://tracing / Perfetto JSON array format,
+//! so captured runs can be inspected visually (nsys-timeline analog).
+
+use crate::trace::{Trace, Track};
+use crate::util::json::Json;
+
+/// Chrome trace "complete" events ("ph": "X"), one per trace event.
+/// Host events go to tid 0; device stream `s` to tid `100 + s`.
+pub fn to_chrome_json(trace: &Trace) -> Json {
+    let mut events = Vec::with_capacity(trace.events.len());
+    for e in &trace.events {
+        let tid = match e.track {
+            Track::Host => 0u32,
+            Track::Device(s) => 100 + s,
+        };
+        let cat = e.kind.as_str();
+        let mut args = Json::obj().with("correlation", e.correlation_id);
+        if let Some(meta) = &e.meta {
+            args.set("family", meta.family.as_str());
+            args.set("aten_op", meta.aten_op.as_str());
+            args.set("lib", meta.lib_mediated);
+        }
+        events.push(
+            Json::obj()
+                .with("name", e.name.as_str())
+                .with("cat", cat)
+                .with("ph", "X")
+                .with("ts", e.ts_us)
+                .with("dur", e.dur_us)
+                .with("pid", 1u32)
+                .with("tid", tid)
+                .with("args", args),
+        );
+    }
+    Json::Arr(events)
+}
+
+/// Write the chrome trace to a file.
+pub fn save_chrome(trace: &Trace, path: &std::path::Path) -> anyhow::Result<()> {
+    std::fs::write(path, to_chrome_json(trace).dump())
+        .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{EventKind, TraceEvent, TraceMeta};
+
+    #[test]
+    fn exports_tracks_and_cats() {
+        let mut t = Trace::new(TraceMeta::default());
+        t.push(TraceEvent {
+            kind: EventKind::RuntimeApi,
+            name: "cudaLaunchKernel".into(),
+            ts_us: 0.0,
+            dur_us: 1.0,
+            correlation_id: 1,
+            track: Track::Host,
+            meta: None,
+        });
+        t.push(TraceEvent {
+            kind: EventKind::Kernel,
+            name: "gemm".into(),
+            ts_us: 5.0,
+            dur_us: 2.0,
+            correlation_id: 1,
+            track: Track::Device(3),
+            meta: None,
+        });
+        let j = to_chrome_json(&t);
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].f64_of("tid").unwrap(), 0.0);
+        assert_eq!(arr[1].f64_of("tid").unwrap(), 103.0);
+        assert_eq!(arr[1].str_of("cat").unwrap(), "kernel");
+        assert_eq!(arr[0].str_of("ph").unwrap(), "X");
+    }
+}

@@ -1,0 +1,289 @@
+//! Trace event model — the nsys/CUPTI analog.
+//!
+//! The paper's Phase 1 consumes "timestamped Python/torch operators,
+//! ATen operators, CUDA runtime calls, and GPU kernels linked by
+//! correlation IDs" plus NVTX ranges in Phase 2.  These five event kinds
+//! are modeled here; both the simulator (`sim`) and the real PJRT
+//! runtime (`runtime`) emit them, and every TaxBreak analysis consumes
+//! only this representation (trace-format-as-interface, DESIGN.md §9).
+
+use crate::util::json::Json;
+
+/// Which trace source produced an event (CUPTI activity-kind analog).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EventKind {
+    /// Python-level framework operator (`torch.*` call).
+    TorchOp,
+    /// C++ dispatcher-level operator (`aten::*`).
+    AtenOp,
+    /// Host runtime API call (cudaLaunchKernel / cudaMemcpyAsync / ...).
+    RuntimeApi,
+    /// Device kernel execution on a stream.
+    Kernel,
+    /// NVTX instrumentation range (Phase-2 replay scoping).
+    Nvtx,
+}
+
+impl EventKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            EventKind::TorchOp => "torch_op",
+            EventKind::AtenOp => "aten_op",
+            EventKind::RuntimeApi => "runtime_api",
+            EventKind::Kernel => "kernel",
+            EventKind::Nvtx => "nvtx",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<EventKind> {
+        Ok(match s {
+            "torch_op" => EventKind::TorchOp,
+            "aten_op" => EventKind::AtenOp,
+            "runtime_api" => EventKind::RuntimeApi,
+            "kernel" => EventKind::Kernel,
+            "nvtx" => EventKind::Nvtx,
+            other => anyhow::bail!("unknown event kind '{other}'"),
+        })
+    }
+}
+
+/// Timeline an event lives on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Track {
+    /// The single-threaded host dispatch path.
+    Host,
+    /// A device stream (stream id).
+    Device(u32),
+}
+
+impl Track {
+    fn to_json(self) -> Json {
+        match self {
+            Track::Host => Json::Num(-1.0),
+            Track::Device(s) => Json::Num(s as f64),
+        }
+    }
+
+    fn from_json(v: &Json) -> anyhow::Result<Track> {
+        let n = v
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("track must be a number"))?;
+        if n < 0.0 {
+            Ok(Track::Host)
+        } else {
+            Ok(Track::Device(n as u32))
+        }
+    }
+}
+
+/// Kernel metadata attached to `Kernel` events: everything the Phase-2
+/// dedup cache keys on (paper §III-B: "operator, shapes, dtypes, scalar
+/// arguments, target kernel name, and launch configuration"), plus the
+/// analytic work estimates used for utilization reporting.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelMeta {
+    /// Raw kernel symbol as a profiler would see it.
+    pub kernel_name: String,
+    /// Kernel family tag (see `kernels::family`).
+    pub family: String,
+    /// Originating ATen operator (e.g. `aten::mm`).
+    pub aten_op: String,
+    /// Canonical shapes/dtypes/scalars key.
+    pub shapes_key: String,
+    pub grid: [u32; 3],
+    pub block: [u32; 3],
+    /// `I_lib`: routed through a vendor library front-end (cuBLAS/cuDNN).
+    pub lib_mediated: bool,
+    /// Analytic FLOPs of the kernel (0 for pure data movement).
+    pub flops: f64,
+    /// Analytic bytes moved.
+    pub bytes: f64,
+}
+
+impl KernelMeta {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("kernel_name", self.kernel_name.as_str())
+            .with("family", self.family.as_str())
+            .with("aten_op", self.aten_op.as_str())
+            .with("shapes_key", self.shapes_key.as_str())
+            .with(
+                "grid",
+                Json::Arr(self.grid.iter().map(|&g| Json::from(g)).collect()),
+            )
+            .with(
+                "block",
+                Json::Arr(self.block.iter().map(|&b| Json::from(b)).collect()),
+            )
+            .with("lib", self.lib_mediated)
+            .with("flops", self.flops)
+            .with("bytes", self.bytes)
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<KernelMeta> {
+        let dim3 = |key: &str| -> anyhow::Result<[u32; 3]> {
+            let arr = v.arr_of(key)?;
+            anyhow::ensure!(arr.len() == 3, "{key} must have 3 entries");
+            Ok([
+                arr[0].as_u64().unwrap_or(1) as u32,
+                arr[1].as_u64().unwrap_or(1) as u32,
+                arr[2].as_u64().unwrap_or(1) as u32,
+            ])
+        };
+        Ok(KernelMeta {
+            kernel_name: v.str_of("kernel_name")?.to_string(),
+            family: v.str_of("family")?.to_string(),
+            aten_op: v.str_of("aten_op")?.to_string(),
+            shapes_key: v.str_of("shapes_key")?.to_string(),
+            grid: dim3("grid")?,
+            block: dim3("block")?,
+            lib_mediated: v.req("lib")?.as_bool().unwrap_or(false),
+            flops: v.f64_of("flops")?,
+            bytes: v.f64_of("bytes")?,
+        })
+    }
+
+    /// The Phase-2 deduplication key (paper: kernels sharing identical
+    /// ATen metadata, kernel name and launch config are replayed once).
+    pub fn dedup_key(&self) -> String {
+        format!(
+            "{}|{}|{}|{:?}|{:?}",
+            self.aten_op, self.shapes_key, self.kernel_name, self.grid, self.block
+        )
+    }
+}
+
+/// One trace event. Times are microseconds on a common clock.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub kind: EventKind,
+    pub name: String,
+    pub ts_us: f64,
+    pub dur_us: f64,
+    /// Links TorchOp -> AtenOp -> RuntimeApi -> Kernel chains.
+    pub correlation_id: u64,
+    pub track: Track,
+    pub meta: Option<KernelMeta>,
+}
+
+impl TraceEvent {
+    pub fn end_us(&self) -> f64 {
+        self.ts_us + self.dur_us
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj()
+            .with("kind", self.kind.as_str())
+            .with("name", self.name.as_str())
+            .with("ts", self.ts_us)
+            .with("dur", self.dur_us)
+            .with("corr", self.correlation_id)
+            .with("track", self.track.to_json());
+        if let Some(meta) = &self.meta {
+            o.set("meta", meta.to_json());
+        }
+        o
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<TraceEvent> {
+        Ok(TraceEvent {
+            kind: EventKind::parse(v.str_of("kind")?)?,
+            name: v.str_of("name")?.to_string(),
+            ts_us: v.f64_of("ts")?,
+            dur_us: v.f64_of("dur")?,
+            correlation_id: v.req("corr")?.as_u64().unwrap_or(0),
+            track: Track::from_json(v.req("track")?)?,
+            meta: match v.get("meta") {
+                Some(m) => Some(KernelMeta::from_json(m)?),
+                None => None,
+            },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_meta() -> KernelMeta {
+        KernelMeta {
+            kernel_name: "ampere_bf16_gemm_128x64".into(),
+            family: "gemm_cublas".into(),
+            aten_op: "aten::mm".into(),
+            shapes_key: "f32[128,64]x[64,32]".into(),
+            grid: [8, 4, 1],
+            block: [128, 1, 1],
+            lib_mediated: true,
+            flops: 2.0 * 128.0 * 64.0 * 32.0,
+            bytes: 4.0 * (128.0 * 64.0 + 64.0 * 32.0 + 128.0 * 32.0),
+        }
+    }
+
+    #[test]
+    fn kind_roundtrip() {
+        for k in [
+            EventKind::TorchOp,
+            EventKind::AtenOp,
+            EventKind::RuntimeApi,
+            EventKind::Kernel,
+            EventKind::Nvtx,
+        ] {
+            assert_eq!(EventKind::parse(k.as_str()).unwrap(), k);
+        }
+        assert!(EventKind::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn event_json_roundtrip() {
+        let ev = TraceEvent {
+            kind: EventKind::Kernel,
+            name: "gemm".into(),
+            ts_us: 12.5,
+            dur_us: 3.25,
+            correlation_id: 42,
+            track: Track::Device(0),
+            meta: Some(sample_meta()),
+        };
+        let back = TraceEvent::from_json(&ev.to_json()).unwrap();
+        assert_eq!(back, ev);
+    }
+
+    #[test]
+    fn host_event_roundtrip_without_meta() {
+        let ev = TraceEvent {
+            kind: EventKind::RuntimeApi,
+            name: "cudaLaunchKernel".into(),
+            ts_us: 0.0,
+            dur_us: 1.0,
+            correlation_id: 7,
+            track: Track::Host,
+            meta: None,
+        };
+        let back = TraceEvent::from_json(&ev.to_json()).unwrap();
+        assert_eq!(back, ev);
+    }
+
+    #[test]
+    fn dedup_key_distinguishes_config() {
+        let a = sample_meta();
+        let mut b = sample_meta();
+        b.grid = [16, 4, 1];
+        assert_ne!(a.dedup_key(), b.dedup_key());
+        let c = sample_meta();
+        assert_eq!(a.dedup_key(), c.dedup_key());
+    }
+
+    #[test]
+    fn end_us() {
+        let ev = TraceEvent {
+            kind: EventKind::Nvtx,
+            name: "replay".into(),
+            ts_us: 10.0,
+            dur_us: 2.5,
+            correlation_id: 0,
+            track: Track::Host,
+            meta: None,
+        };
+        assert_eq!(ev.end_us(), 12.5);
+    }
+}

@@ -1,0 +1,298 @@
+//! Trace container + IO — the interface between execution (simulated or
+//! real PJRT) and every TaxBreak analysis.
+
+pub mod chrome;
+pub mod event;
+
+pub use event::{EventKind, KernelMeta, Track, TraceEvent};
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// Run-level metadata carried with a trace.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct TraceMeta {
+    /// Platform preset name ("h100", "h200", "pjrt-cpu", ...).
+    pub platform: String,
+    /// Model name ("llama-3.2-1b", "olmoe-1b-7b", "dense_fused", ...).
+    pub model: String,
+    /// "prefill" | "decode" | "serve".
+    pub phase: String,
+    pub batch: usize,
+    pub seq: usize,
+    /// Generated tokens (m in the paper; 1 for prefill).
+    pub m_tokens: usize,
+    /// Wall-clock end-to-end latency of the traced region (us).
+    pub wall_us: f64,
+}
+
+impl TraceMeta {
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .with("platform", self.platform.as_str())
+            .with("model", self.model.as_str())
+            .with("phase", self.phase.as_str())
+            .with("batch", self.batch)
+            .with("seq", self.seq)
+            .with("m_tokens", self.m_tokens)
+            .with("wall_us", self.wall_us)
+    }
+
+    fn from_json(v: &Json) -> anyhow::Result<TraceMeta> {
+        Ok(TraceMeta {
+            platform: v.str_of("platform")?.to_string(),
+            model: v.str_of("model")?.to_string(),
+            phase: v.str_of("phase")?.to_string(),
+            batch: v.usize_of("batch")?,
+            seq: v.usize_of("seq")?,
+            m_tokens: v.usize_of("m_tokens")?,
+            wall_us: v.f64_of("wall_us")?,
+        })
+    }
+}
+
+/// The full event chain behind one kernel invocation, resolved through
+/// correlation IDs (paper Fig. 4's (1) nvtx, (2) api, (3) kernel view).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CorrelationChain<'a> {
+    pub torch_op: Option<&'a TraceEvent>,
+    pub aten_op: Option<&'a TraceEvent>,
+    pub runtime_api: Option<&'a TraceEvent>,
+    pub kernel: Option<&'a TraceEvent>,
+    pub nvtx: Option<&'a TraceEvent>,
+}
+
+/// A captured run: metadata + time-ordered events.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Trace {
+    pub meta: TraceMeta,
+    pub events: Vec<TraceEvent>,
+}
+
+impl Trace {
+    pub fn new(meta: TraceMeta) -> Trace {
+        Trace {
+            meta,
+            events: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, ev: TraceEvent) {
+        self.events.push(ev);
+    }
+
+    /// All device-kernel events.
+    pub fn kernels(&self) -> impl Iterator<Item = &TraceEvent> {
+        self.events.iter().filter(|e| e.kind == EventKind::Kernel)
+    }
+
+    pub fn kernel_count(&self) -> usize {
+        self.kernels().count()
+    }
+
+    /// Σ kernel execution time — `T_DeviceActive` (paper Eq. 3 input).
+    pub fn device_active_us(&self) -> f64 {
+        self.kernels().map(|e| e.dur_us).sum()
+    }
+
+    /// Wall-clock latency: recorded value, else the event span.
+    pub fn e2e_us(&self) -> f64 {
+        if self.meta.wall_us > 0.0 {
+            self.meta.wall_us
+        } else {
+            self.span_us()
+        }
+    }
+
+    /// Max end minus min start over all events.
+    pub fn span_us(&self) -> f64 {
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for e in &self.events {
+            lo = lo.min(e.ts_us);
+            hi = hi.max(e.end_us());
+        }
+        if lo.is_finite() {
+            hi - lo
+        } else {
+            0.0
+        }
+    }
+
+    /// Index events by correlation id into per-kernel chains.
+    pub fn correlation_chains(&self) -> HashMap<u64, CorrelationChain<'_>> {
+        let mut map: HashMap<u64, CorrelationChain<'_>> = HashMap::new();
+        for e in &self.events {
+            if e.correlation_id == 0 {
+                continue;
+            }
+            let chain = map.entry(e.correlation_id).or_default();
+            match e.kind {
+                EventKind::TorchOp => chain.torch_op = Some(e),
+                EventKind::AtenOp => chain.aten_op = Some(e),
+                EventKind::RuntimeApi => chain.runtime_api = Some(e),
+                EventKind::Kernel => chain.kernel = Some(e),
+                EventKind::Nvtx => chain.nvtx = Some(e),
+            }
+        }
+        map
+    }
+
+    /// Unique kernel names (cleaned) — the Table II diversity numerator.
+    pub fn unique_kernel_names(&self) -> usize {
+        let mut names: Vec<&str> = self
+            .kernels()
+            .filter_map(|e| e.meta.as_ref().map(|m| m.kernel_name.as_str()))
+            .collect();
+        names.sort();
+        names.dedup();
+        names.len()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("meta", self.meta.to_json())
+            .with(
+                "events",
+                Json::Arr(self.events.iter().map(|e| e.to_json()).collect()),
+            )
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<Trace> {
+        let meta = TraceMeta::from_json(v.req("meta")?)?;
+        let mut events = Vec::new();
+        for item in v.arr_of("events")? {
+            events.push(TraceEvent::from_json(item)?);
+        }
+        Ok(Trace { meta, events })
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().dump())
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Trace> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Trace::from_json(&Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kernel_event(corr: u64, ts: f64, dur: f64, name: &str) -> TraceEvent {
+        TraceEvent {
+            kind: EventKind::Kernel,
+            name: name.to_string(),
+            ts_us: ts,
+            dur_us: dur,
+            correlation_id: corr,
+            track: Track::Device(0),
+            meta: Some(KernelMeta {
+                kernel_name: name.to_string(),
+                family: "elem_generic".into(),
+                aten_op: "aten::mul".into(),
+                shapes_key: "f32[8]".into(),
+                grid: [1, 1, 1],
+                block: [128, 1, 1],
+                lib_mediated: false,
+                flops: 8.0,
+                bytes: 64.0,
+            }),
+        }
+    }
+
+    fn host_event(kind: EventKind, corr: u64, ts: f64, dur: f64, name: &str) -> TraceEvent {
+        TraceEvent {
+            kind,
+            name: name.to_string(),
+            ts_us: ts,
+            dur_us: dur,
+            correlation_id: corr,
+            track: Track::Host,
+            meta: None,
+        }
+    }
+
+    fn sample_trace() -> Trace {
+        let mut t = Trace::new(TraceMeta {
+            platform: "h200".into(),
+            model: "gpt2".into(),
+            phase: "prefill".into(),
+            batch: 1,
+            seq: 512,
+            m_tokens: 1,
+            wall_us: 100.0,
+        });
+        t.push(host_event(EventKind::TorchOp, 1, 0.0, 2.0, "torch.mul"));
+        t.push(host_event(EventKind::AtenOp, 1, 1.0, 1.0, "aten::mul"));
+        t.push(host_event(EventKind::RuntimeApi, 1, 1.5, 0.5, "cudaLaunchKernel"));
+        t.push(kernel_event(1, 6.0, 3.0, "vectorized_elementwise"));
+        t.push(host_event(EventKind::TorchOp, 2, 8.0, 2.0, "torch.mul"));
+        t.push(kernel_event(2, 12.0, 4.0, "vectorized_elementwise"));
+        t
+    }
+
+    #[test]
+    fn device_active_sums_kernels() {
+        assert_eq!(sample_trace().device_active_us(), 7.0);
+        assert_eq!(sample_trace().kernel_count(), 2);
+    }
+
+    #[test]
+    fn e2e_prefers_wall() {
+        let t = sample_trace();
+        assert_eq!(t.e2e_us(), 100.0);
+        let mut t2 = t.clone();
+        t2.meta.wall_us = 0.0;
+        assert_eq!(t2.e2e_us(), 16.0); // span 0..16
+    }
+
+    #[test]
+    fn chains_link_by_correlation() {
+        let t = sample_trace();
+        let chains = t.correlation_chains();
+        let c1 = &chains[&1];
+        assert!(c1.torch_op.is_some());
+        assert!(c1.aten_op.is_some());
+        assert!(c1.runtime_api.is_some());
+        assert!(c1.kernel.is_some());
+        let c2 = &chains[&2];
+        assert!(c2.aten_op.is_none());
+        assert!(c2.kernel.is_some());
+    }
+
+    #[test]
+    fn unique_names_dedup() {
+        assert_eq!(sample_trace().unique_kernel_names(), 1);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = sample_trace();
+        let back = Trace::from_json(&t.to_json()).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let t = sample_trace();
+        let dir = std::env::temp_dir().join("taxbreak_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.json");
+        t.save(&path).unwrap();
+        assert_eq!(Trace::load(&path).unwrap(), t);
+    }
+
+    #[test]
+    fn empty_trace_span_is_zero() {
+        let t = Trace::default();
+        assert_eq!(t.span_us(), 0.0);
+        assert_eq!(t.device_active_us(), 0.0);
+    }
+}

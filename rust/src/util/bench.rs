@@ -1,0 +1,101 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets use `harness = false` and drive this directly:
+//! warm-up, N timed iterations, mean/min/p50 report, and a global
+//! results collector for the tee'd bench_output.txt.
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// One benchmark's timing result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub summary_us: Summary,
+    /// Optional throughput denominator (items per iteration).
+    pub items: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let s = &self.summary_us;
+        let mut line = format!(
+            "{:<44} {:>10.1} us/iter (min {:>9.1}, p50 {:>9.1}, n={})",
+            self.name, s.mean, s.min, s.p50, self.iters
+        );
+        if let Some(items) = self.items {
+            let per_sec = items / (s.mean / 1e6);
+            line.push_str(&format!("  [{:.2} Mitems/s]", per_sec / 1e6));
+        }
+        line
+    }
+}
+
+/// Run `f` for `iters` timed iterations after `warmup` untimed ones.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        summary_us: Summary::of(&samples),
+        items: None,
+    }
+}
+
+/// `bench` with a throughput denominator (e.g. kernels per iteration).
+pub fn bench_items<F: FnMut()>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    items: f64,
+    f: F,
+) -> BenchResult {
+    let mut r = bench(name, warmup, iters, f);
+    r.items = Some(items);
+    r
+}
+
+/// Keep the optimizer honest.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Print a suite header + every result.
+pub fn report(suite: &str, results: &[BenchResult]) {
+    println!("\n### bench suite: {suite}");
+    for r in results {
+        println!("{}", r.report());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_exact_iterations() {
+        let mut count = 0;
+        let r = bench("noop", 2, 10, || count += 1);
+        assert_eq!(count, 12);
+        assert_eq!(r.iters, 10);
+        assert!(r.summary_us.mean >= 0.0);
+    }
+
+    #[test]
+    fn throughput_reported() {
+        let r = bench_items("items", 0, 3, 1000.0, || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(r.report().contains("Mitems/s"));
+    }
+}

@@ -1,0 +1,201 @@
+//! Tiny argv parser (clap is unavailable offline).
+//!
+//! Grammar: `prog [subcommand] [--flag] [--key value | --key=value] [positional...]`.
+//! Typed getters with defaults; unknown-option detection is the caller's
+//! choice via [`Args::finish`].
+
+use std::collections::{BTreeMap, BTreeSet};
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    positionals: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: BTreeSet<String>,
+    /// Option/flag names the caller has asked about — for unknown-option
+    /// diagnostics in `finish`.
+    consumed: BTreeSet<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = args.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.flags.insert(name.to_string());
+                }
+            } else {
+                out.positionals.push(arg);
+            }
+        }
+        out
+    }
+
+    /// Parse the process argv (skipping the program name).
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn positional(&self, idx: usize) -> Option<&str> {
+        self.positionals.get(idx).map(|s| s.as_str())
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+
+    /// Remove and return the first positional (subcommand-style).
+    pub fn shift(&mut self) -> Option<String> {
+        if self.positionals.is_empty() {
+            None
+        } else {
+            Some(self.positionals.remove(0))
+        }
+    }
+
+    pub fn flag(&mut self, name: &str) -> bool {
+        self.consumed.insert(name.to_string());
+        self.flags.contains(name)
+    }
+
+    pub fn opt(&mut self, name: &str) -> Option<&str> {
+        self.consumed.insert(name.to_string());
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_string(&mut self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_usize(&mut self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an unsigned integer, got '{v}'")),
+        }
+    }
+
+    pub fn opt_u64(&mut self, name: &str, default: u64) -> anyhow::Result<u64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an unsigned integer, got '{v}'")),
+        }
+    }
+
+    pub fn opt_f64(&mut self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    /// Comma-separated list option (empty segments dropped).
+    pub fn opt_list(&mut self, name: &str) -> Vec<String> {
+        self.opt(name)
+            .map(|v| {
+                v.split(',')
+                    .map(|s| s.trim().to_string())
+                    .filter(|s| !s.is_empty())
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    /// Error on any option/flag that was provided but never queried.
+    pub fn finish(&self) -> anyhow::Result<()> {
+        for k in self.options.keys().chain(self.flags.iter()) {
+            if !self.consumed.contains(k) {
+                anyhow::bail!("unknown option --{k}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positionals_and_shift() {
+        let mut a = args("repro fig5 --out x.json");
+        assert_eq!(a.shift().as_deref(), Some("repro"));
+        assert_eq!(a.shift().as_deref(), Some("fig5"));
+        assert_eq!(a.shift(), None);
+    }
+
+    #[test]
+    fn options_space_and_equals() {
+        let mut a = args("--model llama-1b --bs=4");
+        assert_eq!(a.opt("model"), Some("llama-1b"));
+        assert_eq!(a.opt_usize("bs", 1).unwrap(), 4);
+    }
+
+    #[test]
+    fn flags_vs_options() {
+        let mut a = args("--verbose --seed 9 --json");
+        assert!(a.flag("verbose"));
+        assert!(a.flag("json"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.opt_u64("seed", 0).unwrap(), 9);
+    }
+
+    #[test]
+    fn flag_before_flag_not_eaten() {
+        // "--a --b": --a must be a flag, not an option consuming "--b".
+        let mut a = args("--a --b");
+        assert!(a.flag("a") && a.flag("b"));
+    }
+
+    #[test]
+    fn defaults() {
+        let mut a = args("");
+        assert_eq!(a.opt_usize("n", 7).unwrap(), 7);
+        assert_eq!(a.opt_f64("x", 1.5).unwrap(), 1.5);
+        assert_eq!(a.opt_string("s", "d"), "d");
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let mut a = args("--n abc");
+        assert!(a.opt_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn list_option() {
+        let mut a = args("--models gpt2,llama-1b, olmoe");
+        // (argv can't contain free spaces, but trimming still applies)
+        assert_eq!(a.opt_list("models"), vec!["gpt2", "llama-1b"]);
+        let mut b = args("--models gpt2,llama-1b,olmoe");
+        assert_eq!(b.opt_list("models"), vec!["gpt2", "llama-1b", "olmoe"]);
+    }
+
+    #[test]
+    fn finish_catches_unknown() {
+        let mut a = args("--known 1 --typo 2");
+        let _ = a.opt("known");
+        assert!(a.finish().is_err());
+        let _ = a.opt("typo");
+        assert!(a.finish().is_ok());
+    }
+}

@@ -1,0 +1,14 @@
+//! Support substrates.
+//!
+//! The offline build environment vendors only the `xla` crate and its
+//! transitive dependencies, so the usual ecosystem crates (serde_json,
+//! clap, rand, criterion, proptest) are unavailable.  Their roles are
+//! filled by the small, fully-tested modules here (DESIGN.md §6.9).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,183 @@
+//! Miniature property-testing harness (proptest is unavailable offline).
+//!
+//! Provides seeded case generation with automatic input logging on
+//! failure.  Used by the coordinator invariant tests (routing, batching,
+//! KV state) and the taxbreak decomposition invariants.
+//!
+//! ```
+//! use taxbreak::util::prop::forall;
+//! use taxbreak::prop_assert;
+//! forall("sum is commutative", 100, |g| {
+//!     let a = g.f64_in(-1e6, 1e6);
+//!     let b = g.f64_in(-1e6, 1e6);
+//!     prop_assert!(g, (a + b - (b + a)).abs() < 1e-9, "a={a} b={b}");
+//!     true
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Per-case generator: wraps an RNG and records a description of the
+/// drawn values so failures print their inputs.
+pub struct Gen {
+    rng: Rng,
+    pub case: usize,
+    log: Vec<String>,
+    failed: Option<String>,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        let v = lo + self.rng.below(hi - lo + 1);
+        self.log.push(format!("usize[{lo}..={hi}]={v}"));
+        v
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        let v = self.rng.next_u64();
+        self.log.push(format!("u64={v}"));
+        v
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        let v = self.rng.uniform(lo, hi);
+        self.log.push(format!("f64[{lo}..{hi}]={v}"));
+        v
+    }
+
+    pub fn bool(&mut self) -> bool {
+        let v = self.rng.next_u64() & 1 == 1;
+        self.log.push(format!("bool={v}"));
+        v
+    }
+
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        let i = self.rng.below(xs.len());
+        self.log.push(format!("choice#{i}"));
+        &xs[i]
+    }
+
+    /// A vector of f64 samples.
+    pub fn vec_f64(&mut self, len_lo: usize, len_hi: usize, lo: f64, hi: f64) -> Vec<f64> {
+        let n = self.usize_in(len_lo, len_hi);
+        (0..n).map(|_| self.rng.uniform(lo, hi)).collect()
+    }
+
+    /// Record a failure message (used by `prop_assert!`).
+    pub fn fail(&mut self, msg: String) {
+        if self.failed.is_none() {
+            self.failed = Some(msg);
+        }
+    }
+
+    pub fn raw_rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Fixed base seed: "taxbreak 2026".
+const SEED: u64 = 0x7A6B_5EED_2026;
+
+/// Run `cases` random cases of `property`. Panics (test failure) on the
+/// first returning `false` or calling [`Gen::fail`], printing the case
+/// seed and drawn values for reproduction.
+pub fn forall<F: FnMut(&mut Gen) -> bool>(name: &str, cases: usize, mut property: F) {
+    forall_seeded(name, SEED, cases, &mut property);
+}
+
+/// `forall` with an explicit base seed.
+pub fn forall_seeded<F: FnMut(&mut Gen) -> bool>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    property: &mut F,
+) {
+    let base = Rng::new(seed);
+    for case in 0..cases {
+        let mut g = Gen {
+            rng: base.fork(case as u64),
+            case,
+            log: Vec::new(),
+            failed: None,
+        };
+        let ok = property(&mut g);
+        if !ok || g.failed.is_some() {
+            panic!(
+                "property '{name}' failed at case {case} (seed={seed}):\n  drawn: {}\n  {}",
+                g.log.join(", "),
+                g.failed.unwrap_or_else(|| "returned false".to_string()),
+            );
+        }
+    }
+}
+
+/// Assert inside a property with context; records the message in the Gen
+/// so `forall` reports it with the drawn inputs.
+#[macro_export]
+macro_rules! prop_assert {
+    ($g:expr, $cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            $g.fail(format!($($fmt)*));
+            return false;
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall_seeded("count", 1, 50, &mut |g| {
+            count += 1;
+            g.usize_in(0, 10) <= 10
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails' failed")]
+    fn failing_property_panics_with_inputs() {
+        forall_seeded("fails", 2, 100, &mut |g| g.usize_in(0, 9) < 9);
+    }
+
+    #[test]
+    fn gen_is_deterministic_per_case() {
+        let mut first = Vec::new();
+        forall_seeded("collect", 3, 10, &mut |g| {
+            first.push(g.u64());
+            true
+        });
+        let mut second = Vec::new();
+        forall_seeded("collect", 3, 10, &mut |g| {
+            second.push(g.u64());
+            true
+        });
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn choice_and_vec() {
+        forall_seeded("choice", 4, 20, &mut |g| {
+            let xs = [1, 2, 3];
+            let c = *g.choice(&xs);
+            let v = g.vec_f64(0, 5, -1.0, 1.0);
+            xs.contains(&c) && v.len() <= 5 && v.iter().all(|x| (-1.0..1.0).contains(x))
+        });
+    }
+
+    #[test]
+    fn prop_assert_macro_reports() {
+        let result = std::panic::catch_unwind(|| {
+            forall_seeded("macro", 5, 10, &mut |g| {
+                let x = g.usize_in(0, 100);
+                prop_assert!(g, x < 1000, "x was {x}");
+                true
+            });
+        });
+        assert!(result.is_ok());
+    }
+}

@@ -1,0 +1,199 @@
+//! Deterministic pseudo-random numbers (SplitMix64).
+//!
+//! The simulator draws per-kernel host/launch latency jitter from
+//! family-dependent distributions; determinism matters both for test
+//! reproducibility and for TaxBreak's Phase-2 replay semantics (replaying
+//! the same kernel key must observe the same latency distribution).
+//! `fork` derives independent streams (per kernel, per run) so replay
+//! order can change without perturbing other streams.
+
+/// SplitMix64: tiny, fast, passes BigCrush for this use, and — unlike
+/// `rand` — available offline.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+    /// Cached second Box-Muller variate.
+    spare: Option<f64>,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Rng {
+        Rng {
+            state: seed ^ 0x9E3779B97F4A7C15,
+            spare: None,
+        }
+    }
+
+    /// Derive an independent stream keyed by `id` — deterministic,
+    /// order-insensitive.
+    pub fn fork(&self, id: u64) -> Rng {
+        // Mix the base seed with the stream id through one extra round.
+        let mut z = self.state ^ id.wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        Rng {
+            state: z ^ (z >> 31),
+            spare: None,
+        }
+    }
+
+    /// Derive a stream from a string key (kernel names, model ids).
+    pub fn fork_str(&self, key: &str) -> Rng {
+        self.fork(fnv1a(key.as_bytes()))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal via Box-Muller (cached pair).
+    pub fn std_normal(&mut self) -> f64 {
+        if let Some(z) = self.spare.take() {
+            return z;
+        }
+        // u1 in (0, 1] so ln is finite.
+        let u1 = 1.0 - self.next_f64();
+        let u2 = self.next_f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.spare = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    pub fn normal(&mut self, mu: f64, sigma: f64) -> f64 {
+        mu + sigma * self.std_normal()
+    }
+
+    /// Log-normal parameterized by the *target* median and a shape
+    /// parameter sigma (latency tails are right-skewed; the paper's
+    /// Table IV p95s sit well above p50).
+    pub fn lognormal_med(&mut self, median: f64, sigma: f64) -> f64 {
+        median * (sigma * self.std_normal()).exp()
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// FNV-1a — stable string hash for stream derivation and kernel keys.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        assert_ne!(Rng::new(1).next_u64(), Rng::new(2).next_u64());
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut r = Rng::new(7);
+        for _ in 0..1000 {
+            let x = r.uniform(2.0, 3.0);
+            assert!((2.0..3.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let xs: Vec<f64> = (0..20000).map(|_| r.normal(5.0, 2.0)).collect();
+        let m = crate::util::stats::mean(&xs);
+        let s = crate::util::stats::stddev(&xs);
+        assert!((m - 5.0).abs() < 0.1, "mean {m}");
+        assert!((s - 2.0).abs() < 0.1, "std {s}");
+    }
+
+    #[test]
+    fn lognormal_median() {
+        let mut r = Rng::new(13);
+        let xs: Vec<f64> = (0..20001).map(|_| r.lognormal_med(4.7, 0.1)).collect();
+        let med = crate::util::stats::median(&xs);
+        assert!((med - 4.7).abs() < 0.05, "median {med}");
+        assert!(xs.iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn fork_is_stable_and_independent() {
+        let base = Rng::new(99);
+        let mut f1a = base.fork(1);
+        let mut f1b = base.fork(1);
+        let mut f2 = base.fork(2);
+        assert_eq!(f1a.next_u64(), f1b.next_u64());
+        assert_ne!(f1a.next_u64(), f2.next_u64());
+    }
+
+    #[test]
+    fn fork_str_matches_same_key() {
+        let base = Rng::new(5);
+        assert_eq!(
+            base.fork_str("gemm_kernel").next_u64(),
+            base.fork_str("gemm_kernel").next_u64()
+        );
+        assert_ne!(
+            base.fork_str("a").next_u64(),
+            base.fork_str("b").next_u64()
+        );
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(3);
+        let mut xs: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut r = Rng::new(17);
+        for _ in 0..1000 {
+            assert!(r.below(7) < 7);
+        }
+    }
+}

@@ -1,0 +1,191 @@
+//! Property-based tests on coordinator invariants (routing, batching,
+//! KV state) and on the TaxBreak decomposition algebra, using the
+//! in-tree `util::prop` harness (proptest substitute).
+
+use std::collections::HashMap;
+
+use taxbreak::hardware::Platform;
+use taxbreak::models;
+use taxbreak::prop_assert;
+use taxbreak::serving::batcher::mock_backend::MockBackend;
+use taxbreak::serving::{PagedKvManager, Request, Scheduler, SchedulerConfig};
+use taxbreak::sim::{simulate, Workload};
+use taxbreak::taxbreak::{analyze, ReplayConfig, SimReplayBackend};
+use taxbreak::util::prop::{forall, Gen};
+
+fn random_requests(g: &mut Gen, n: usize, max_seq: usize) -> Vec<Request> {
+    (0..n as u64)
+        .map(|id| {
+            let prompt_len = g.usize_in(1, 48);
+            let prompt = (0..prompt_len)
+                .map(|_| g.raw_rng().below(251) as i32)
+                .collect();
+            let max_new = g.usize_in(1, (max_seq - prompt_len - 1).min(12).max(1));
+            Request {
+                id,
+                prompt,
+                max_new_tokens: max_new,
+                arrival_us: 0.0,
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn prop_scheduler_completes_every_request_exactly() {
+    forall("scheduler completes all requests", 40, |g| {
+        let n = g.usize_in(1, 20);
+        let max_batch = g.usize_in(1, 6);
+        let max_groups = g.usize_in(1, 3);
+        let kv_pages = g.usize_in(24, 96);
+        let cfg = SchedulerConfig {
+            max_batch,
+            max_groups,
+            kv_pages,
+            kv_page_tokens: 16,
+        };
+        let mut s = Scheduler::new(MockBackend::new(), cfg);
+        let reqs = random_requests(g, n, 128);
+        let budgets: HashMap<u64, usize> = reqs
+            .iter()
+            .map(|r| (r.id, r.max_new_tokens))
+            .collect();
+        for r in reqs {
+            s.submit(r);
+        }
+        if s.run_to_completion().is_err() {
+            // Permanently inadmissible configs (one request needs more
+            // pages than exist) are allowed to error, not hang.
+            return true;
+        }
+        prop_assert!(g, s.finished().len() == n, "finished {} != {n}", s.finished().len());
+        for f in s.finished() {
+            let want = budgets[&f.request.id];
+            prop_assert!(
+                g,
+                f.generated.len() == want,
+                "req {} generated {} != budget {want}",
+                f.request.id,
+                f.generated.len()
+            );
+        }
+        prop_assert!(g, s.kv.used_pages() == 0, "kv leak: {}", s.kv.used_pages());
+        s.kv.check_invariants().is_ok()
+    });
+}
+
+#[test]
+fn prop_kv_manager_never_double_allocates() {
+    forall("kv pages disjoint under random ops", 60, |g| {
+        let pages = g.usize_in(4, 64);
+        let mut kv = PagedKvManager::new(pages, 16);
+        let mut live: Vec<u64> = Vec::new();
+        let mut next_id = 0u64;
+        for _ in 0..40 {
+            match g.usize_in(0, 2) {
+                0 => {
+                    let tokens = g.usize_in(1, 64);
+                    if kv.register(next_id, tokens).is_ok() {
+                        live.push(next_id);
+                    }
+                    next_id += 1;
+                }
+                1 if !live.is_empty() => {
+                    let idx = g.usize_in(0, live.len() - 1);
+                    let _ = kv.extend(live[idx], g.usize_in(1, 16));
+                }
+                _ if !live.is_empty() => {
+                    let idx = g.usize_in(0, live.len() - 1);
+                    let id = live.swap_remove(idx);
+                    prop_assert!(g, kv.release(id).is_ok(), "release {id} failed");
+                }
+                _ => {}
+            }
+            prop_assert!(g, kv.check_invariants().is_ok(), "invariant broken");
+            prop_assert!(
+                g,
+                kv.occupancy() <= 1.0 + 1e-9,
+                "occupancy {} > 1",
+                kv.occupancy()
+            );
+        }
+        for id in live {
+            let _ = kv.release(id);
+        }
+        kv.used_pages() == 0
+    });
+}
+
+#[test]
+fn prop_decomposition_algebra() {
+    // Eq. 1-3 invariants on random workload points: components
+    // non-negative, sum exactly to T_Orchestration, HDBI in (0,1),
+    // per-family slices partition the totals.
+    let platforms = Platform::all();
+    let catalog = models::catalog();
+    forall("decomposition algebra", 12, |g| {
+        let model = &catalog[g.usize_in(0, catalog.len() - 1)];
+        let platform = &platforms[g.usize_in(0, platforms.len() - 1)];
+        let bs = *g.choice(&[1usize, 2, 4]);
+        let sl = *g.choice(&[64usize, 128, 256]);
+        let decode = g.bool();
+        let wl = if decode {
+            Workload::decode(bs, sl, g.usize_in(1, 3))
+        } else {
+            Workload::prefill(bs, sl)
+        };
+        let seed = g.u64();
+        let trace = simulate(model, platform, &wl, seed);
+        let mut backend = SimReplayBackend::new(platform.clone(), seed ^ 1);
+        let a = analyze(&trace, &mut backend, &ReplayConfig::fast());
+        let d = &a.decomposition;
+
+        prop_assert!(g, d.t_py_us >= 0.0 && d.t_base_us >= 0.0, "negative component");
+        prop_assert!(g, d.dct_us >= 0.0 && d.dkt_us >= 0.0, "negative component");
+        let sum = d.dft_us() + d.dct_us + d.dkt_us;
+        prop_assert!(
+            g,
+            (sum - d.orchestration_us()).abs() < 1e-6,
+            "ME/CE violated: {sum} vs {}",
+            d.orchestration_us()
+        );
+        let hdbi = d.hdbi();
+        prop_assert!(g, hdbi > 0.0 && hdbi < 1.0, "hdbi {hdbi}");
+        let fam_orch: f64 = d.per_family.values().map(|s| s.orchestration_us()).sum();
+        prop_assert!(
+            g,
+            (fam_orch - d.orchestration_us()).abs() < 1e-6,
+            "family slices don't partition"
+        );
+        let fam_n: usize = d.per_family.values().map(|s| s.invocations).sum();
+        prop_assert!(g, fam_n == d.n_kernels, "family counts don't partition");
+        // ΔCT must be zero exactly when the model is framework-native.
+        if model.gemm_lib == models::GemmLib::Nvjet {
+            prop_assert!(g, d.dct_us == 0.0, "nvjet model has dCT {}", d.dct_us);
+        } else {
+            prop_assert!(g, d.dct_us > 0.0, "cuBLAS model lost its dCT");
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_simulation_determinism_and_seed_sensitivity() {
+    let catalog = models::catalog();
+    forall("sim deterministic per seed", 10, |g| {
+        let model = &catalog[g.usize_in(0, catalog.len() - 1)];
+        let p = Platform::h100();
+        let wl = Workload::prefill(1, 128);
+        let seed = g.u64();
+        let a = simulate(model, &p, &wl, seed);
+        let b = simulate(model, &p, &wl, seed);
+        prop_assert!(g, a == b, "same seed must reproduce");
+        let c = simulate(model, &p, &wl, seed ^ 0xFFFF);
+        prop_assert!(
+            g,
+            (a.meta.wall_us - c.meta.wall_us).abs() > 1e-9,
+            "different seed should perturb timings"
+        );
+        true
+    });
+}

@@ -1,0 +1,183 @@
+//! Real-mode integration: AOT artifacts → PJRT engine → serving loop.
+//!
+//! These tests need `artifacts/` (run `make artifacts`); they skip
+//! gracefully when it is absent so `cargo test` works pre-build.
+
+use std::path::PathBuf;
+
+use taxbreak::runtime::{ArtifactIndex, Engine, PjrtReplayBackend};
+use taxbreak::serving::{run_server_demo, ModelBackend};
+use taxbreak::taxbreak::phase2::{ReplayBackend, ReplayConfig};
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("index.json").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !have_artifacts() {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+#[test]
+fn engine_loads_all_variants() {
+    require_artifacts!();
+    for variant in ["dense_fused", "dense_eager", "moe"] {
+        let e = Engine::load(&artifacts_dir(), variant).unwrap();
+        assert_eq!(e.variant(), variant);
+        assert!(e.config().vocab >= 256);
+        assert_eq!(e.config().max_seq, 128);
+        assert_eq!(e.decode_buckets(), vec![1, 4]);
+    }
+}
+
+#[test]
+fn prefill_decode_consistency_on_pjrt() {
+    // Teacher-forcing: decoding the prompt token-by-token must produce
+    // the same final logits as prefilling the whole prompt — the L2
+    // model invariant, verified end-to-end through HLO text + PJRT.
+    require_artifacts!();
+    let mut e = Engine::load(&artifacts_dir(), "dense_fused").unwrap();
+    let prompt: Vec<i32> = (1..=12).collect();
+
+    let full = e.prefill(&[prompt.clone()]).unwrap();
+    let logits_full = &full.logits[0];
+
+    let head = e.prefill(&[prompt[..11].to_vec()]).unwrap();
+    let step = e.decode(head.cache, 11, &[prompt[11]]).unwrap();
+    let logits_step = &step.logits[0];
+
+    let mut max_diff = 0f32;
+    for (a, b) in logits_full.iter().zip(logits_step.iter()) {
+        max_diff = max_diff.max((a - b).abs());
+    }
+    assert!(max_diff < 1e-3, "prefill/decode mismatch: {max_diff}");
+}
+
+#[test]
+fn fused_and_eager_variants_agree_numerically() {
+    // Fig. 9's correctness precondition: the Pallas fused kernel and
+    // the eager jnp path share weights and must agree.
+    require_artifacts!();
+    let mut fused = Engine::load(&artifacts_dir(), "dense_fused").unwrap();
+    let mut eager = Engine::load(&artifacts_dir(), "dense_eager").unwrap();
+    let prompt: Vec<i32> = vec![3, 1, 4, 1, 5, 9, 2, 6];
+    let a = fused.prefill(&[prompt.clone()]).unwrap();
+    let b = eager.prefill(&[prompt]).unwrap();
+    let mut max_diff = 0f32;
+    for (x, y) in a.logits[0].iter().zip(b.logits[0].iter()) {
+        max_diff = max_diff.max((x - y).abs());
+    }
+    assert!(max_diff < 1e-2, "fused vs eager logits diverge: {max_diff}");
+}
+
+#[test]
+fn greedy_generation_is_deterministic() {
+    require_artifacts!();
+    let mut e = Engine::load(&artifacts_dir(), "dense_fused").unwrap();
+    let gen = |e: &mut Engine| -> Vec<i32> {
+        let prompt: Vec<i32> = vec![7, 8, 9, 10];
+        let out = e.prefill(&[prompt.clone()]).unwrap();
+        let mut cache = out.cache;
+        let mut tok = Engine::argmax(&out.logits[0]);
+        let mut tokens = vec![tok];
+        for pos in prompt.len()..prompt.len() + 5 {
+            let d = e.decode(cache, pos, &[tok]).unwrap();
+            cache = d.cache;
+            tok = Engine::argmax(&d.logits[0]);
+            tokens.push(tok);
+        }
+        tokens
+    };
+    let a = gen(&mut e);
+    let b = gen(&mut e);
+    assert_eq!(a, b);
+    assert!(a.iter().all(|&t| (0..e.config().vocab as i32).contains(&t)));
+}
+
+#[test]
+fn batched_prefill_matches_single() {
+    require_artifacts!();
+    let mut e = Engine::load(&artifacts_dir(), "dense_fused").unwrap();
+    let p1: Vec<i32> = vec![11, 22, 33, 44, 55];
+    let p2: Vec<i32> = vec![9, 8, 7];
+    let batched = e.prefill(&[p1.clone(), p2.clone()]).unwrap();
+    let solo1 = e.prefill(&[p1]).unwrap();
+    let solo2 = e.prefill(&[p2]).unwrap();
+    for (a, b) in [(&batched.logits[0], &solo1.logits[0]),
+                   (&batched.logits[1], &solo2.logits[0])] {
+        let mut max_diff = 0f32;
+        for (x, y) in a.iter().zip(b.iter()) {
+            max_diff = max_diff.max((x - y).abs());
+        }
+        assert!(max_diff < 1e-3, "batched vs solo logits: {max_diff}");
+    }
+}
+
+#[test]
+fn null_kernel_floor_is_measurable() {
+    require_artifacts!();
+    let mut e = Engine::load(&artifacts_dir(), "dense_fused").unwrap();
+    let mut backend = PjrtReplayBackend::new(&mut e);
+    let floors = backend.null_kernel(&ReplayConfig {
+        warmup: 3,
+        runs: 15,
+    });
+    assert_eq!(floors.len(), 15);
+    // CPU PJRT floor: positive, stable within an order of magnitude.
+    let mean = floors.iter().sum::<f64>() / floors.len() as f64;
+    assert!(mean > 1.0 && mean < 10_000.0, "floor {mean} us");
+}
+
+#[test]
+fn serving_demo_end_to_end() {
+    require_artifacts!();
+    let s = run_server_demo(&artifacts_dir(), "dense_fused", 6, 4, 99).unwrap();
+    assert_eq!(s.requests, 6);
+    assert!(s.tokens_generated >= 6 * 4);
+    assert!(s.throughput_tps() > 0.0);
+    assert!(s.ttft_us.mean > 0.0);
+    assert!(s.wall_us > 0.0);
+    assert!(s.hdbi() > 0.0 && s.hdbi() <= 1.0);
+}
+
+#[test]
+fn recorder_trace_is_analyzable() {
+    require_artifacts!();
+    let mut e = Engine::load(&artifacts_dir(), "dense_fused").unwrap();
+    let prompt: Vec<i32> = vec![1, 2, 3, 4];
+    let out = e.prefill(&[prompt]).unwrap();
+    let _ = e.decode(out.cache, 4, &[5]).unwrap();
+    let trace = e.take_trace();
+    assert_eq!(trace.kernel_count(), 2); // one per executable invocation
+    taxbreak::taxbreak::phase1::validate_trace(&trace).unwrap();
+    let (host, dev, n) = taxbreak::serving::real_trace_split(&trace);
+    assert_eq!(n, 2);
+    assert!(host > 0.0 && dev > 0.0);
+}
+
+#[test]
+fn engine_implements_backend_contract() {
+    require_artifacts!();
+    let mut e = Engine::load(&artifacts_dir(), "moe").unwrap();
+    let (next, cache) = e.prefill_group(&[vec![1, 2, 3], vec![4, 5, 6]]).unwrap();
+    assert_eq!(next.len(), 2);
+    let (next2, _cache) = e.decode_group(cache, 3, &next).unwrap();
+    assert_eq!(next2.len(), 2);
+}
+
+#[test]
+fn artifact_index_enumerates_buckets() {
+    require_artifacts!();
+    let idx = ArtifactIndex::load(&artifacts_dir()).unwrap();
+    assert_eq!(idx.of_variant("dense_fused", "prefill").count(), 4);
+    assert_eq!(idx.of_variant("dense_fused", "decode").count(), 2);
+    assert_eq!(idx.of_variant("moe", "prefill").count(), 4);
+}
