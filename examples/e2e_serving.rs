@@ -7,8 +7,11 @@
 //! tok/s), measures the real null-executable launch floor, and runs
 //! the TaxBreak host/device split on the captured real trace.
 //!
+//! Requires the `real-pjrt` feature (declared via `required-features`
+//! in rust/Cargo.toml, so the default build skips this example):
+//!
 //! ```bash
-//! make artifacts && cargo run --release --example e2e_serving
+//! make artifacts && cargo run --release --features real-pjrt --example e2e_serving
 //! ```
 //!
 //! Results are recorded in EXPERIMENTS.md §Real-mode.

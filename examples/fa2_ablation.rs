@@ -7,14 +7,13 @@
 //! numerics, measured wall-clock.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example fa2_ablation
+//! make artifacts && cargo run --release --features real-pjrt --example fa2_ablation
 //! ```
-
-use std::path::Path;
+//!
+//! Without `--features real-pjrt` only the simulated half runs.
 
 use taxbreak::hardware::Platform;
 use taxbreak::models;
-use taxbreak::serving::run_server_demo;
 use taxbreak::sim::{simulate, Workload};
 use taxbreak::taxbreak::{analyze, ReplayConfig, SimReplayBackend};
 use taxbreak::util::table::{ms, ratio, Table};
@@ -48,6 +47,14 @@ fn main() -> anyhow::Result<()> {
     print!("{}", t.render());
 
     // --- real (PJRT, Pallas kernel vs eager jnp) -----------------------
+    real_half()
+}
+
+#[cfg(feature = "real-pjrt")]
+fn real_half() -> anyhow::Result<()> {
+    use std::path::Path;
+    use taxbreak::serving::run_server_demo;
+
     let dir = std::env::args()
         .nth(1)
         .unwrap_or_else(|| "artifacts".to_string());
@@ -77,6 +84,15 @@ fn main() -> anyhow::Result<()> {
         "\nNote: at toy scale (d=128, S<=64) fusion overhead can outweigh \
          the saved score-matrix traffic — the win grows with S^2, which \
          the simulated half shows at SL=2048 (Key Takeaway #4)."
+    );
+    Ok(())
+}
+
+#[cfg(not(feature = "real-pjrt"))]
+fn real_half() -> anyhow::Result<()> {
+    println!(
+        "\n(real-mode half skipped: rebuild with --features real-pjrt \
+         and run `make artifacts` to enable)"
     );
     Ok(())
 }

@@ -1,7 +1,11 @@
+#![deny(rustdoc::broken_intra_doc_links)]
 //! # TaxBreak
 //!
 //! Production reproduction of *"TaxBreak: Unmasking the Hidden Costs of
 //! LLM Inference Through Overhead Decomposition"* (CS.DC 2026).
+//!
+//! See `README.md` for a quickstart, `DESIGN.md` for the architecture,
+//! and `docs/trace_format.md` for the on-disk trace specification.
 //!
 //! TaxBreak decomposes host-visible LLM-inference orchestration overhead
 //! into three mutually exclusive, collectively exhaustive per-kernel
@@ -36,12 +40,26 @@
 //! | [`sim`] | host+device co-simulation → traces |
 //! | [`taxbreak`] | **the paper's contribution**: two-phase pipeline, Eq. 1-3, baselines, diagnostics |
 //! | [`serving`] | request router, continuous batcher, paged-KV manager, scheduler |
-//! | [`runtime`] | PJRT client, AOT artifact + weights loading, real-trace instrumentation |
+//! | [`runtime`] | backend abstraction (simulated / real PJRT), AOT artifact + weights loading, trace instrumentation |
 //! | [`config`] | typed run configuration |
 //! | [`repro`] | regeneration harnesses for every paper table & figure |
 //!
 //! Python/JAX/Pallas exist only on the `make artifacts` compile path;
 //! this crate is self-contained at run time.
+//!
+//! ## Cargo features
+//!
+//! * **`real-pjrt`** (off by default) — compiles the real-PJRT code
+//!   paths: `runtime::engine` (the PJRT execution engine over AOT
+//!   artifacts), `runtime::replay` (the real-mode Phase-2 backend), the
+//!   real-mode serving demo, and `ArtifactIndex`-to-literal loading.
+//!   The **default build has zero dependency on any xla/PJRT crate**;
+//!   every workload runs through the deterministic simulated backend
+//!   ([`runtime::SimEngine`]).  In the offline build environment the
+//!   feature's `xla` dependency resolves to the in-repo
+//!   `vendor/xla-stub` path crate, which build-checks the gated code
+//!   without the native `xla_extension` library; swap it for the real
+//!   xla-rs crate to actually execute real mode (DESIGN.md §8).
 
 pub mod config;
 pub mod device;

@@ -6,7 +6,9 @@
 //! * `analyze` — simulate one workload point and print the full
 //!   TaxBreak decomposition, diagnosis and baselines.
 //! * `trace` — simulate and dump a trace (json / chrome format).
-//! * `serve` — real-mode serving over PJRT artifacts (see
+//! * `serve` — serving demo over a runtime backend: the deterministic
+//!   simulated engine by default (`--backend sim`), or PJRT artifacts
+//!   with `--backend pjrt` when built with `--features real-pjrt` (see
 //!   `examples/e2e_serving.rs` for the scripted version).
 //! * `models` / `platforms` — list the catalog.
 
@@ -81,8 +83,11 @@ USAGE:
                     kernel-fusion] [--json]
   taxbreak trace   --model M --platform P [--phase ...] [--bs] [--sl] [--m]
                    --out FILE [--chrome FILE]
-  taxbreak serve   --artifacts DIR [--variant dense_fused] [--requests N]
-                   [--max-batch N] [--report FILE]
+  taxbreak serve   [--backend sim|pjrt] [--requests N] [--max-batch N]
+                   [--report FILE] [--seed N]
+                   sim:  [--model M] [--platform h100|h200]
+                   pjrt: --artifacts DIR [--variant dense_fused]
+                         (requires building with --features real-pjrt)
   taxbreak models | platforms | help
 
 Artifact ids: fig2 fig5 fig6 table2 table3 table4 fig7 fig8 fig9 fig10 fig11";
@@ -206,24 +211,62 @@ fn cmd_trace(mut args: Args) -> anyhow::Result<()> {
 }
 
 fn cmd_serve(mut args: Args) -> anyhow::Result<()> {
-    let artifacts = args.opt_string("artifacts", "artifacts");
-    let variant = args.opt_string("variant", "dense_fused");
+    let backend = args.opt_string("backend", "sim");
     let requests = args.opt_usize("requests", 16)?;
     let max_batch = args.opt_usize("max-batch", 4)?;
     let report_path = args.opt("report").map(|s| s.to_string());
     let seed = args.opt_u64("seed", 2026)?;
-    args.finish()?;
-    let summary = taxbreak::serving::run_server_demo(
-        std::path::Path::new(&artifacts),
-        &variant,
-        requests,
-        max_batch,
-        seed,
-    )?;
+    let summary = match backend.as_str() {
+        "sim" => {
+            let model = args.opt_string("model", "gpt2");
+            let platform = args.opt_string("platform", "h200");
+            args.finish()?;
+            taxbreak::serving::run_sim_server_demo(&model, &platform, requests, max_batch, seed)?
+        }
+        "pjrt" => {
+            let artifacts = args.opt_string("artifacts", "artifacts");
+            let variant = args.opt_string("variant", "dense_fused");
+            args.finish()?;
+            serve_pjrt(&artifacts, &variant, requests, max_batch, seed)?
+        }
+        other => anyhow::bail!("--backend must be sim|pjrt, got '{other}'"),
+    };
     print!("{}", summary.render());
     if let Some(p) = report_path {
         std::fs::write(&p, summary.to_json().pretty())?;
         println!("wrote {p}");
     }
     Ok(())
+}
+
+#[cfg(feature = "real-pjrt")]
+fn serve_pjrt(
+    artifacts: &str,
+    variant: &str,
+    requests: usize,
+    max_batch: usize,
+    seed: u64,
+) -> anyhow::Result<taxbreak::serving::ServeSummary> {
+    taxbreak::serving::run_server_demo(
+        std::path::Path::new(artifacts),
+        variant,
+        requests,
+        max_batch,
+        seed,
+    )
+}
+
+#[cfg(not(feature = "real-pjrt"))]
+fn serve_pjrt(
+    _artifacts: &str,
+    _variant: &str,
+    _requests: usize,
+    _max_batch: usize,
+    _seed: u64,
+) -> anyhow::Result<taxbreak::serving::ServeSummary> {
+    anyhow::bail!(
+        "the pjrt backend is feature-gated: rebuild with \
+         `cargo build --features real-pjrt` (and a real xla crate — see \
+         DESIGN.md §8); the default build serves with `--backend sim`"
+    )
 }

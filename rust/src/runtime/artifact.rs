@@ -158,7 +158,10 @@ impl ParamsFile {
     }
 
     /// Build PJRT literals for every tensor, in file order (which is
-    /// the manifest input order by construction).
+    /// the manifest input order by construction). Real-mode only: the
+    /// default build keeps artifact *parsing* available without any
+    /// xla dependency.
+    #[cfg(feature = "real-pjrt")]
     pub fn literals(&self) -> anyhow::Result<Vec<xla::Literal>> {
         self.entries
             .iter()
@@ -271,6 +274,7 @@ mod tests {
         }
     }
 
+    #[cfg(feature = "real-pjrt")]
     #[test]
     fn params_literals_build() {
         if !have_artifacts() {

@@ -1,0 +1,458 @@
+//! Runtime backend abstraction: one surface over every engine that can
+//! drive the serving layer end to end.
+//!
+//! The serving demo needs four capabilities beyond the scheduler-facing
+//! [`ModelBackend`] contract: a variant label, the vocabulary size (to
+//! synthesize request mixes), the null-executable launch-floor probe
+//! (Table III analog), and trace capture.  [`Backend`] bundles them.
+//!
+//! Two implementations exist:
+//!
+//! * [`SimEngine`] (this module, always compiled) — a deterministic,
+//!   pure-Rust stand-in for the PJRT engine.  Logits are a seeded
+//!   function of the token history (`util::rng`), so greedy generation
+//!   is reproducible and prefill/decode teacher-forcing consistency
+//!   holds exactly; per-invocation timing comes from the host-latency
+//!   distributions and the device cost model (`kernels::cost`), and the
+//!   emitted trace has the same event shape as the real recorder's.
+//! * `runtime::engine::Engine` (behind the `real-pjrt` feature) — the
+//!   real PJRT engine over AOT artifacts; see DESIGN.md §8 for the
+//!   split.
+
+use crate::hardware::Platform;
+use crate::kernels::cost;
+use crate::kernels::family::Family;
+use crate::models::ModelSpec;
+use crate::serving::ModelBackend;
+use crate::trace::{EventKind, KernelMeta, Trace, TraceEvent, TraceMeta, Track};
+use crate::util::rng::Rng;
+
+/// Greedy argmax over logits (first index wins ties) — the one shared
+/// greedy-decoding rule; both the simulated and the real engine
+/// delegate here so the backends cannot diverge.
+pub fn argmax(logits: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, &x) in logits.iter().enumerate() {
+        if x > logits[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// What the serving demo needs from an engine, on top of the
+/// scheduler-facing [`ModelBackend`] contract.
+pub trait Backend: ModelBackend {
+    /// Model-variant label for reports.
+    fn variant(&self) -> &str;
+
+    /// Vocabulary size (bounds synthetic request token ids).
+    fn vocab(&self) -> usize;
+
+    /// Null-executable launch-floor probe; returns
+    /// `(dispatch_us, launch_to_result_us)`.
+    fn null_run(&mut self) -> anyhow::Result<(f64, f64)>;
+
+    /// Swap the recorder out, returning the captured trace.
+    fn take_trace(&mut self) -> Trace;
+}
+
+/// Compiled-shape grid of the simulated engine (mirrors the AOT toy
+/// artifact grid produced by `python/compile/aot.py`).
+#[derive(Debug, Clone)]
+pub struct SimEngineConfig {
+    pub vocab: usize,
+    pub max_seq: usize,
+    /// Decode bucket batch sizes, ascending.
+    pub buckets: Vec<usize>,
+}
+
+impl Default for SimEngineConfig {
+    fn default() -> Self {
+        SimEngineConfig {
+            vocab: 251,
+            max_seq: 128,
+            buckets: vec![1, 4],
+        }
+    }
+}
+
+/// Group cache of the simulated engine: the per-slot token histories
+/// (the functional analog of the real engine's KV-cache literal).
+pub struct SimCache {
+    tokens: Vec<Vec<i32>>,
+    bucket: usize,
+}
+
+/// Deterministic, pure-Rust engine with the real engine's surface.
+///
+/// One `prefill`/`decode` call maps to one executable invocation, as in
+/// real mode: the trace records a TorchOp (whole host span), an AtenOp
+/// (preparation), a RuntimeApi (the execute call) and a Kernel (device
+/// computation) per invocation, on a virtual microsecond clock.
+pub struct SimEngine {
+    model: ModelSpec,
+    platform: Platform,
+    cfg: SimEngineConfig,
+    variant: String,
+    seed: u64,
+    timing_rng: Rng,
+    clock_us: f64,
+    trace: Trace,
+    corr: u64,
+}
+
+impl SimEngine {
+    pub fn new(
+        model: ModelSpec,
+        platform: Platform,
+        cfg: SimEngineConfig,
+        seed: u64,
+    ) -> SimEngine {
+        let trace = Trace::new(TraceMeta {
+            platform: platform.name.clone(),
+            model: model.name.clone(),
+            phase: "serve".to_string(),
+            batch: 0,
+            seq: 0,
+            m_tokens: 0,
+            wall_us: 0.0,
+        });
+        SimEngine {
+            variant: format!("sim:{}", model.name),
+            timing_rng: Rng::new(seed).fork_str("sim-engine-timing"),
+            seed,
+            model,
+            platform,
+            cfg,
+            clock_us: 0.0,
+            trace,
+            corr: 0,
+        }
+    }
+
+    /// Engine with the default toy shape grid.
+    pub fn with_defaults(model: ModelSpec, platform: Platform, seed: u64) -> SimEngine {
+        SimEngine::new(model, platform, SimEngineConfig::default(), seed)
+    }
+
+    /// Smallest compiled bucket that fits `n` sequences.
+    fn bucket_for(&self, n: usize) -> anyhow::Result<usize> {
+        self.cfg
+            .buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "group of {n} exceeds the largest compiled bucket {:?}",
+                    self.cfg.buckets
+                )
+            })
+    }
+
+    /// Deterministic logits over a token history: a pure function of
+    /// `(seed, history)`, so identical histories always produce
+    /// identical logits regardless of call order — this is what makes
+    /// greedy generation reproducible and prefill/decode teacher
+    /// forcing exactly consistent.
+    fn logits(&self, history: &[i32]) -> Vec<f32> {
+        let mut h: u64 = 0xcbf29ce484222325 ^ self.seed;
+        for &t in history {
+            for b in (t as u32).to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+        }
+        let mut rng = Rng::new(h);
+        (0..self.cfg.vocab).map(|_| rng.next_f64() as f32).collect()
+    }
+
+    /// Record one executable invocation (recorder-shaped events) and
+    /// advance the virtual clock.
+    fn record(
+        &mut self,
+        name: &str,
+        prep_us: f64,
+        exec_us: f64,
+        device_us: f64,
+        flops: f64,
+        bytes: f64,
+    ) {
+        self.corr += 1;
+        let t0 = self.clock_us;
+        let meta = KernelMeta {
+            kernel_name: format!("sim::{name}"),
+            family: "sim_exec".to_string(),
+            aten_op: format!("exec::{name}"),
+            shapes_key: name.to_string(),
+            grid: [1, 1, 1],
+            block: [1, 1, 1],
+            lib_mediated: false,
+            flops,
+            bytes,
+        };
+        self.trace.push(TraceEvent {
+            kind: EventKind::TorchOp,
+            name: format!("serve.{name}"),
+            ts_us: t0,
+            dur_us: prep_us + exec_us,
+            correlation_id: self.corr,
+            track: Track::Host,
+            meta: None,
+        });
+        self.trace.push(TraceEvent {
+            kind: EventKind::AtenOp,
+            name: format!("prep::{name}"),
+            ts_us: t0,
+            dur_us: prep_us,
+            correlation_id: self.corr,
+            track: Track::Host,
+            meta: None,
+        });
+        self.trace.push(TraceEvent {
+            kind: EventKind::RuntimeApi,
+            name: "sim::execute".to_string(),
+            ts_us: t0 + prep_us,
+            dur_us: exec_us,
+            correlation_id: self.corr,
+            track: Track::Host,
+            meta: None,
+        });
+        self.trace.push(TraceEvent {
+            kind: EventKind::Kernel,
+            name: format!("sim::{name}"),
+            ts_us: t0 + prep_us + exec_us,
+            dur_us: device_us,
+            correlation_id: self.corr,
+            track: Track::Device(0),
+            meta: Some(meta),
+        });
+        self.clock_us = t0 + prep_us + exec_us + device_us;
+    }
+
+    /// Device time of one pass over `tokens_processed` tokens, from the
+    /// analytic cost model (weight-streaming roofline of the active
+    /// parameter set).
+    fn device_us(&self, tokens_processed: usize) -> f64 {
+        let active = self.model.params_active();
+        let flops = 2.0 * active * tokens_processed as f64;
+        let bytes = 2.0 * active;
+        cost::device_duration_us(Family::GemmCublas, flops, bytes, &self.platform.gpu)
+    }
+}
+
+impl ModelBackend for SimEngine {
+    type Cache = SimCache;
+
+    fn max_seq(&self) -> usize {
+        self.cfg.max_seq
+    }
+
+    fn decode_buckets(&self) -> Vec<usize> {
+        self.cfg.buckets.clone()
+    }
+
+    fn prefill_group(&mut self, prompts: &[Vec<i32>]) -> anyhow::Result<(Vec<i32>, SimCache)> {
+        anyhow::ensure!(!prompts.is_empty(), "empty prefill group");
+        let padded = prompts.iter().map(|p| p.len()).max().unwrap();
+        anyhow::ensure!(
+            padded <= self.cfg.max_seq,
+            "prompt length {padded} exceeds max_seq {}",
+            self.cfg.max_seq
+        );
+        let bucket = self.bucket_for(prompts.len())?;
+
+        let mut tokens: Vec<Vec<i32>> = Vec::with_capacity(bucket);
+        for i in 0..bucket {
+            let mut h = prompts.get(i).cloned().unwrap_or_default();
+            h.resize(padded, 0);
+            tokens.push(h);
+        }
+        let next: Vec<i32> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, _)| argmax(&self.logits(&tokens[i])))
+            .collect();
+
+        let st = self.platform.cpu.st_speed;
+        let prep = self.timing_rng.lognormal_med(40.0, 0.20) / st;
+        let exec = self.timing_rng.lognormal_med(8.0, 0.15) / st;
+        let dev = self.device_us(bucket * padded);
+        let active = self.model.params_active();
+        self.record(
+            &format!("prefill_b{bucket}_s{padded}"),
+            prep,
+            exec,
+            dev,
+            2.0 * active * (bucket * padded) as f64,
+            2.0 * active,
+        );
+        Ok((next, SimCache { tokens, bucket }))
+    }
+
+    fn decode_group(
+        &mut self,
+        mut cache: SimCache,
+        pos: usize,
+        tokens: &[i32],
+    ) -> anyhow::Result<(Vec<i32>, SimCache)> {
+        let mut toks = tokens.to_vec();
+        toks.resize(cache.bucket, 0);
+        anyhow::ensure!(
+            pos == cache.tokens[0].len(),
+            "cache position continuity: pos {pos} != stored {}",
+            cache.tokens[0].len()
+        );
+        anyhow::ensure!(pos < self.cfg.max_seq, "decode past max_seq {}", self.cfg.max_seq);
+        let mut next = Vec::with_capacity(cache.bucket);
+        for (slot, &t) in toks.iter().enumerate() {
+            cache.tokens[slot].push(t);
+            next.push(argmax(&self.logits(&cache.tokens[slot])));
+        }
+
+        let st = self.platform.cpu.st_speed;
+        let prep = self.timing_rng.lognormal_med(25.0, 0.20) / st;
+        let exec = self.timing_rng.lognormal_med(8.0, 0.15) / st;
+        let dev = self.device_us(cache.bucket);
+        let active = self.model.params_active();
+        self.record(
+            &format!("decode_b{}", cache.bucket),
+            prep,
+            exec,
+            dev,
+            2.0 * active * cache.bucket as f64,
+            2.0 * active,
+        );
+        Ok((next, cache))
+    }
+
+    fn now_us(&self) -> f64 {
+        self.clock_us
+    }
+}
+
+impl Backend for SimEngine {
+    fn variant(&self) -> &str {
+        &self.variant
+    }
+
+    fn vocab(&self) -> usize {
+        self.cfg.vocab
+    }
+
+    fn null_run(&mut self) -> anyhow::Result<(f64, f64)> {
+        let st = self.platform.cpu.st_speed;
+        let dispatch = self.timing_rng.lognormal_med(5.0, 0.15) / st;
+        let gpu = &self.platform.gpu;
+        let launch = self
+            .timing_rng
+            .lognormal_med(gpu.t_sys_floor_us, gpu.floor_sigma);
+        self.record("null_kernel", dispatch, launch, 1.0, 0.0, 32.0);
+        Ok((dispatch, launch))
+    }
+
+    fn take_trace(&mut self) -> Trace {
+        self.trace.meta.wall_us = self.clock_us;
+        let fresh = Trace::new(self.trace.meta.clone());
+        std::mem::replace(&mut self.trace, fresh)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+
+    fn engine(seed: u64) -> SimEngine {
+        SimEngine::with_defaults(models::gpt2(), Platform::h200(), seed)
+    }
+
+    #[test]
+    fn greedy_generation_is_deterministic() {
+        let run = |seed| {
+            let mut e = engine(seed);
+            let (mut next, mut cache) = e.prefill_group(&[vec![1, 2, 3, 4]]).unwrap();
+            let mut out = vec![next[0]];
+            for pos in 4..9 {
+                let step = e.decode_group(cache, pos, &next).unwrap();
+                next = step.0;
+                cache = step.1;
+                out.push(next[0]);
+            }
+            out
+        };
+        assert_eq!(run(7), run(7));
+        assert_ne!(run(7), run(8));
+        assert!(run(7).iter().all(|&t| (0..251).contains(&t)));
+    }
+
+    #[test]
+    fn prefill_decode_teacher_forcing_consistency() {
+        // Decoding the last prompt token must produce the same next
+        // token as prefilling the whole prompt — the invariant the real
+        // engine verifies end-to-end through HLO + PJRT.
+        let prompt: Vec<i32> = (1..=12).collect();
+        let mut e = engine(3);
+        let (full_next, _) = e.prefill_group(&[prompt.clone()]).unwrap();
+
+        let mut e2 = engine(3);
+        let (_, cache) = e2.prefill_group(&[prompt[..11].to_vec()]).unwrap();
+        let (step_next, _) = e2.decode_group(cache, 11, &[prompt[11]]).unwrap();
+        assert_eq!(full_next[0], step_next[0]);
+    }
+
+    #[test]
+    fn trace_has_recorder_shape() {
+        let mut e = engine(5);
+        let (next, cache) = e.prefill_group(&[vec![1, 2, 3]]).unwrap();
+        let _ = e.decode_group(cache, 3, &next).unwrap();
+        let trace = e.take_trace();
+        assert_eq!(trace.events.len(), 8); // 4 events per invocation
+        assert_eq!(trace.kernel_count(), 2);
+        crate::taxbreak::phase1::validate_trace(&trace).unwrap();
+        assert!(trace.meta.wall_us > 0.0);
+        // Virtual clock is monotone over host events.
+        let mut last = 0.0;
+        for ev in trace.events.iter().filter(|e| e.track == Track::Host) {
+            assert!(ev.ts_us >= last - 1e-9);
+            last = last.max(ev.ts_us);
+        }
+    }
+
+    #[test]
+    fn null_run_floor_matches_platform() {
+        let mut e = engine(11);
+        let mut floors = Vec::new();
+        for _ in 0..200 {
+            let (dispatch, launch) = e.null_run().unwrap();
+            assert!(dispatch > 0.0);
+            floors.push(launch);
+        }
+        let mean = crate::util::stats::mean(&floors);
+        let want = Platform::h200().gpu.t_sys_floor_us;
+        assert!((mean - want).abs() < 0.3, "floor {mean} vs {want}");
+    }
+
+    #[test]
+    fn bucket_rounding_and_padding() {
+        let mut e = engine(2);
+        // 3 prompts round up to the 4-bucket; ragged prompts pad.
+        let (next, cache) = e
+            .prefill_group(&[vec![1, 2, 3, 4, 5], vec![6], vec![7, 8]])
+            .unwrap();
+        assert_eq!(next.len(), 3);
+        assert_eq!(cache.bucket, 4);
+        assert!(cache.tokens.iter().all(|h| h.len() == 5));
+        // Decode accepts a short token vector and pads to the bucket.
+        let (next2, _) = e.decode_group(cache, 5, &next).unwrap();
+        assert_eq!(next2.len(), 4);
+    }
+
+    #[test]
+    fn oversized_group_errors() {
+        let mut e = engine(2);
+        let prompts: Vec<Vec<i32>> = (0..5).map(|i| vec![i]).collect();
+        assert!(e.prefill_group(&prompts).is_err());
+    }
+}

@@ -306,15 +306,10 @@ impl Engine {
         std::mem::replace(&mut self.recorder, fresh).into_trace()
     }
 
-    /// Greedy argmax over logits.
+    /// Greedy argmax over logits (delegates to the backend-shared rule
+    /// so real and simulated greedy decoding cannot diverge).
     pub fn argmax(logits: &[f32]) -> i32 {
-        let mut best = 0usize;
-        for (i, &x) in logits.iter().enumerate() {
-            if x > logits[best] {
-                best = i;
-            }
-        }
-        best as i32
+        crate::runtime::backend::argmax(logits)
     }
 }
 

@@ -1,11 +1,20 @@
-//! Real-mode runtime: load AOT artifacts (HLO text + weights) and run
-//! them on the PJRT CPU client from the rust hot path.
+//! Runtime layer: the engines that execute serving workloads, plus AOT
+//! artifact loading and real-trace instrumentation.
 //!
-//! Python/JAX runs only at `make artifacts`; this module is the entire
-//! request-path compute story.  Interchange is HLO *text* — jax ≥ 0.5
-//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects in
-//! proto form; the text parser reassigns ids (see
-//! /opt/xla-example/README.md and python/compile/aot.py).
+//! The layer is split by the `real-pjrt` cargo feature (DESIGN.md §8):
+//!
+//! * **Always compiled** — [`backend`] (the [`Backend`] trait and the
+//!   deterministic, pure-Rust [`SimEngine`]), [`artifact`] (manifest and
+//!   weights parsing; plain files + minijson) and [`recorder`] (the
+//!   wall-clock trace recorder).  The default build has **zero**
+//!   dependency on any `xla`/PJRT crate.
+//! * **`real-pjrt` only** — `engine` (the PJRT execution engine) and
+//!   `replay` (the real-mode Phase-2 backend).  These load AOT
+//!   artifacts (HLO text + weights) and run them on the PJRT CPU
+//!   client.  Python/JAX runs only at `make artifacts`; interchange is
+//!   HLO *text* — jax ≥ 0.5 emits 64-bit instruction ids that
+//!   xla_extension 0.5.1 rejects in proto form; the text parser
+//!   reassigns ids (see `python/compile/aot.py`).
 //!
 //! The real-mode analog of the paper's stack:
 //! * host buffer prep + executable selection  ↔ framework translation,
@@ -14,14 +23,22 @@
 //!
 //! In real mode the unit of dispatch is one PJRT *executable* rather
 //! than one CUDA kernel — TaxBreak consumes the same trace format
-//! either way (trace-format-as-interface, DESIGN.md §9).
+//! either way (trace-format-as-interface, DESIGN.md §9).  The simulated
+//! engine emits the identical event shape, so everything downstream of
+//! the trace is backend-agnostic.
 
 pub mod artifact;
+pub mod backend;
+#[cfg(feature = "real-pjrt")]
 pub mod engine;
 pub mod recorder;
+#[cfg(feature = "real-pjrt")]
 pub mod replay;
 
 pub use artifact::{ArtifactIndex, Manifest, ParamsFile, TensorSpec};
+pub use backend::{Backend, SimEngine, SimEngineConfig};
+#[cfg(feature = "real-pjrt")]
 pub use engine::Engine;
 pub use recorder::TraceRecorder;
+#[cfg(feature = "real-pjrt")]
 pub use replay::PjrtReplayBackend;

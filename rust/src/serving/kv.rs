@@ -13,15 +13,26 @@ use std::collections::HashMap;
 pub type PageId = u32;
 
 /// Errors from the allocator.
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum KvError {
-    #[error("out of KV pages: need {need}, free {free}")]
     OutOfPages { need: usize, free: usize },
-    #[error("unknown request {0}")]
     UnknownRequest(u64),
-    #[error("request {0} already registered")]
     AlreadyRegistered(u64),
 }
+
+impl std::fmt::Display for KvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KvError::OutOfPages { need, free } => {
+                write!(f, "out of KV pages: need {need}, free {free}")
+            }
+            KvError::UnknownRequest(id) => write!(f, "unknown request {id}"),
+            KvError::AlreadyRegistered(id) => write!(f, "request {id} already registered"),
+        }
+    }
+}
+
+impl std::error::Error for KvError {}
 
 /// Block-granular KV allocator.
 #[derive(Debug, Clone)]
@@ -185,6 +196,19 @@ mod tests {
         assert_eq!(
             kv.register(2, 32).unwrap_err(),
             KvError::OutOfPages { need: 2, free: 1 }
+        );
+    }
+
+    #[test]
+    fn error_messages_render() {
+        assert_eq!(
+            KvError::OutOfPages { need: 3, free: 1 }.to_string(),
+            "out of KV pages: need 3, free 1"
+        );
+        assert_eq!(KvError::UnknownRequest(9).to_string(), "unknown request 9");
+        assert_eq!(
+            KvError::AlreadyRegistered(2).to_string(),
+            "request 2 already registered"
         );
     }
 

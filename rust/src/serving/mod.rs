@@ -1,10 +1,13 @@
 //! Serving layer: request model, paged-KV manager, continuous batcher,
-//! and the real-mode serving demo that drives the PJRT engine.
+//! and the serving demo that drives a runtime [`Backend`].
 //!
 //! This is the vLLM/Orca-style substrate the paper's workloads sit on
 //! (§II-A): admission control against a paged KV pool, iteration-level
 //! scheduling, bucketed continuous batching — with the rust coordinator
-//! owning the event loop and the AOT-compiled model doing the math.
+//! owning the event loop and a pluggable engine doing the math.  The
+//! demo runs against the always-available simulated engine
+//! (`runtime::SimEngine`) by default; with the `real-pjrt` feature it
+//! can also drive the PJRT engine over AOT artifacts.
 
 pub mod batcher;
 pub mod kv;
@@ -14,19 +17,22 @@ pub use batcher::{ModelBackend, Scheduler, SchedulerConfig};
 pub use kv::PagedKvManager;
 pub use request::{synthetic_requests, Request, RequestState};
 
-use std::path::Path;
-
-use crate::runtime::Engine;
+use crate::runtime::backend::Backend;
 use crate::trace::{EventKind, Trace};
 use crate::util::json::Json;
 use crate::util::stats::Summary;
 
+#[cfg(feature = "real-pjrt")]
+use crate::runtime::Engine;
+
 /// Real-mode cache handle: the PJRT cache literal + its bucket batch.
+#[cfg(feature = "real-pjrt")]
 pub struct EngineCache {
     literal: xla::Literal,
     bucket: usize,
 }
 
+#[cfg(feature = "real-pjrt")]
 impl ModelBackend for Engine {
     type Cache = EngineCache;
 
@@ -83,7 +89,26 @@ impl ModelBackend for Engine {
     }
 }
 
-/// Outcome of the real-mode serving demo.
+#[cfg(feature = "real-pjrt")]
+impl Backend for Engine {
+    fn variant(&self) -> &str {
+        Engine::variant(self)
+    }
+
+    fn vocab(&self) -> usize {
+        self.config().vocab
+    }
+
+    fn null_run(&mut self) -> anyhow::Result<(f64, f64)> {
+        Engine::null_run(self)
+    }
+
+    fn take_trace(&mut self) -> Trace {
+        Engine::take_trace(self)
+    }
+}
+
+/// Outcome of the serving demo.
 #[derive(Debug, Clone)]
 pub struct ServeSummary {
     pub variant: String,
@@ -93,11 +118,11 @@ pub struct ServeSummary {
     pub tokens_generated: usize,
     pub ttft_us: Summary,
     pub tpot_us: Summary,
-    /// Σ host prep + execute-call time from the real trace.
+    /// Σ host prep + execute-call time from the captured trace.
     pub orchestration_us: f64,
-    /// Σ device computation time from the real trace.
+    /// Σ device computation time from the captured trace.
     pub device_us: f64,
-    /// Real null-executable launch floor.
+    /// Null-executable launch floor.
     pub null_floor_us: Summary,
     pub executions: usize,
 }
@@ -122,7 +147,7 @@ impl ServeSummary {
 
     pub fn render(&self) -> String {
         format!(
-            "== real-mode serving ({}) ==\n\
+            "== serving ({}) ==\n\
              requests          {}\n\
              iterations        {}\n\
              tokens generated  {}\n\
@@ -132,7 +157,7 @@ impl ServeSummary {
              TPOT mean/p95     {:.2} / {:.2} ms\n\
              orchestration     {:.2} ms ({} executions)\n\
              device active     {:.2} ms\n\
-             HDBI (real)       {:.2}\n\
+             HDBI              {:.2}\n\
              null floor        {:.1} us (p50 {:.1}, p95 {:.1})\n",
             self.variant,
             self.requests,
@@ -174,13 +199,13 @@ impl ServeSummary {
     }
 }
 
-/// Host/device split of a real trace.
+/// Host/device split of an engine trace.
 ///
-/// On the CPU PJRT backend the computation runs synchronously inside
-/// the `execute` call, so device-active time is the execute window
-/// (`RuntimeApi`) plus result materialization (`Kernel`), while the
-/// host-orchestration analog is the preparation span (`AtenOp`:
-/// batch/literal assembly + executable selection).
+/// Engines run each executable invocation synchronously, so
+/// device-active time is the execute window (`RuntimeApi`) plus result
+/// materialization (`Kernel`), while the host-orchestration analog is
+/// the preparation span (`AtenOp`: batch/literal assembly + executable
+/// selection).
 pub fn real_trace_split(trace: &Trace) -> (f64, f64, usize) {
     let mut host = 0.0;
     let mut dev = 0.0;
@@ -199,19 +224,18 @@ pub fn real_trace_split(trace: &Trace) -> (f64, f64, usize) {
     (host, dev, n)
 }
 
-/// Run the full real-mode demo: load artifacts, serve a synthetic
-/// request mix through the continuous batcher over PJRT, measure the
-/// real null-kernel floor, and summarize.
-pub fn run_server_demo(
-    artifacts_dir: &Path,
-    variant: &str,
+/// Run the serving demo over any runtime [`Backend`]: serve a synthetic
+/// request mix through the continuous batcher, measure the null-kernel
+/// floor, and summarize the captured trace.
+pub fn serve_with<B: Backend>(
+    backend: B,
     n_requests: usize,
     max_batch: usize,
     seed: u64,
 ) -> anyhow::Result<ServeSummary> {
-    let engine = Engine::load(artifacts_dir, variant)?;
-    let vocab = engine.config().vocab;
-    let max_seq = engine.config().max_seq;
+    let vocab = backend.vocab();
+    let max_seq = backend.max_seq();
+    let variant = backend.variant().to_string();
 
     let cfg = SchedulerConfig {
         max_batch,
@@ -219,14 +243,14 @@ pub fn run_server_demo(
         kv_pages: 64,
         kv_page_tokens: 16,
     };
-    let mut sched = Scheduler::new(engine, cfg);
+    let mut sched = Scheduler::new(backend, cfg);
     for r in synthetic_requests(n_requests, vocab, max_seq, seed) {
         sched.submit(r);
     }
     sched.run_to_completion()?;
     let iterations = sched.iterations;
 
-    // Real launch-floor probe (Table III analog on PJRT).
+    // Launch-floor probe (Table III analog).
     let mut floor_runs = Vec::with_capacity(30);
     {
         let engine = &mut sched.backend;
@@ -247,7 +271,7 @@ pub fn run_server_demo(
     let tokens: usize = finished.iter().map(|f| f.generated.len()).sum();
 
     Ok(ServeSummary {
-        variant: variant.to_string(),
+        variant,
         requests: finished.len(),
         iterations,
         wall_us: trace.meta.wall_us,
@@ -259,4 +283,32 @@ pub fn run_server_demo(
         null_floor_us: Summary::of(&floor_runs),
         executions: execs,
     })
+}
+
+/// Serving demo on the simulated engine (default build, no PJRT).
+pub fn run_sim_server_demo(
+    model_name: &str,
+    platform_name: &str,
+    n_requests: usize,
+    max_batch: usize,
+    seed: u64,
+) -> anyhow::Result<ServeSummary> {
+    let model = crate::models::by_name(model_name)?;
+    let platform = crate::hardware::Platform::by_name(platform_name)?;
+    let engine = crate::runtime::SimEngine::with_defaults(model, platform, seed);
+    serve_with(engine, n_requests, max_batch, seed)
+}
+
+/// Run the full real-mode demo: load artifacts, then [`serve_with`]
+/// over the PJRT engine.
+#[cfg(feature = "real-pjrt")]
+pub fn run_server_demo(
+    artifacts_dir: &std::path::Path,
+    variant: &str,
+    n_requests: usize,
+    max_batch: usize,
+    seed: u64,
+) -> anyhow::Result<ServeSummary> {
+    let engine = Engine::load(artifacts_dir, variant)?;
+    serve_with(engine, n_requests, max_batch, seed)
 }

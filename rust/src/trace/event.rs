@@ -25,6 +25,31 @@ pub enum EventKind {
 }
 
 impl EventKind {
+    /// Every kind, in the order documented in `docs/trace_format.md`
+    /// (the spec's coverage test iterates this).
+    ///
+    /// The wildcard-free `guard` match makes a new variant a compile
+    /// error *here* (not just in `as_str`): extend this array AND the
+    /// §4.1 table in `docs/trace_format.md` together.
+    pub const ALL: [EventKind; 5] = {
+        const fn guard(k: EventKind) -> EventKind {
+            match k {
+                EventKind::TorchOp
+                | EventKind::AtenOp
+                | EventKind::RuntimeApi
+                | EventKind::Kernel
+                | EventKind::Nvtx => k,
+            }
+        }
+        [
+            guard(EventKind::TorchOp),
+            guard(EventKind::AtenOp),
+            guard(EventKind::RuntimeApi),
+            guard(EventKind::Kernel),
+            guard(EventKind::Nvtx),
+        ]
+    };
+
     pub fn as_str(&self) -> &'static str {
         match self {
             EventKind::TorchOp => "torch_op",

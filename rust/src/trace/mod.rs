@@ -1,5 +1,10 @@
 //! Trace container + IO — the interface between execution (simulated or
 //! real PJRT) and every TaxBreak analysis.
+//!
+//! The on-disk JSON format is specified in `docs/trace_format.md`; the
+//! conformance suite `rust/tests/trace_format.rs` enforces the spec
+//! (field names, event-kind tags, canonical encoding, byte-stability
+//! of save → load → save).
 
 pub mod chrome;
 pub mod event;

@@ -1,9 +1,10 @@
 //! Support substrates.
 //!
-//! The offline build environment vendors only the `xla` crate and its
-//! transitive dependencies, so the usual ecosystem crates (serde_json,
-//! clap, rand, criterion, proptest) are unavailable.  Their roles are
-//! filled by the small, fully-tested modules here (DESIGN.md §6.9).
+//! The offline build environment has no crates.io access (only the
+//! in-repo `vendor/` path crates), so the usual ecosystem crates
+//! (serde_json, clap, rand, criterion, proptest) are unavailable.
+//! Their roles are filled by the small, fully-tested modules here
+//! (DESIGN.md §6.9).
 
 pub mod bench;
 pub mod cli;

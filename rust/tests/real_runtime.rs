@@ -1,7 +1,10 @@
 //! Real-mode integration: AOT artifacts → PJRT engine → serving loop.
 //!
-//! These tests need `artifacts/` (run `make artifacts`); they skip
-//! gracefully when it is absent so `cargo test` works pre-build.
+//! The whole file is gated on the `real-pjrt` feature (the default
+//! build has no PJRT engine); additionally the tests need `artifacts/`
+//! (run `make artifacts`) and skip gracefully when it is absent so
+//! `cargo test --features real-pjrt` works pre-build.
+#![cfg(feature = "real-pjrt")]
 
 use std::path::PathBuf;
 

@@ -1,0 +1,69 @@
+//! Integration: the serving stack (scheduler + paged KV + batcher) over
+//! the default simulated runtime backend — the offline analog of the
+//! real-mode `real_runtime.rs` suite, exercising the same `Backend`
+//! surface without PJRT.
+
+use taxbreak::hardware::Platform;
+use taxbreak::models;
+use taxbreak::runtime::{Backend, SimEngine, SimEngineConfig};
+use taxbreak::serving::{run_sim_server_demo, serve_with};
+
+#[test]
+fn sim_serving_demo_end_to_end() {
+    let s = run_sim_server_demo("gpt2", "h200", 6, 4, 99).unwrap();
+    assert_eq!(s.requests, 6);
+    assert!(s.tokens_generated >= 6 * 4);
+    assert!(s.throughput_tps() > 0.0);
+    assert!(s.ttft_us.mean > 0.0);
+    assert!(s.wall_us > 0.0);
+    assert!(s.hdbi() > 0.0 && s.hdbi() <= 1.0);
+    assert!(s.executions > 0);
+    assert_eq!(s.null_floor_us.n, 30);
+    assert!(s.variant.starts_with("sim:"));
+}
+
+#[test]
+fn sim_serving_is_deterministic() {
+    let run = || {
+        let s = run_sim_server_demo("llama-3.2-1b", "h100", 8, 4, 7).unwrap();
+        (s.requests, s.iterations, s.tokens_generated, s.wall_us)
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn sim_serving_rejects_unknown_names() {
+    assert!(run_sim_server_demo("gpt9", "h200", 2, 2, 1).is_err());
+    assert!(run_sim_server_demo("gpt2", "b200", 2, 2, 1).is_err());
+}
+
+#[test]
+fn serve_with_honors_custom_shape_grid() {
+    let cfg = SimEngineConfig {
+        vocab: 509,
+        max_seq: 96,
+        buckets: vec![2, 8],
+    };
+    let engine = SimEngine::new(models::olmoe(), Platform::h100(), cfg, 11);
+    let s = serve_with(engine, 10, 8, 3).unwrap();
+    assert_eq!(s.requests, 10);
+    assert!(s.tokens_generated > 0);
+    // The null floor tracks the platform's GPU floor (H100 ~4.7 us).
+    assert!((s.null_floor_us.mean - 4.72).abs() < 0.5, "{}", s.null_floor_us.mean);
+}
+
+#[test]
+fn sim_backend_trace_survives_the_taxbreak_pipeline_shape_checks() {
+    // The sim engine's trace is recorder-shaped: validate_trace accepts
+    // it and the host/device split is well-formed.
+    let mut e = SimEngine::with_defaults(models::gpt2(), Platform::h200(), 5);
+    let prompts = vec![vec![1, 2, 3, 4], vec![5, 6]];
+    let (next, cache) = taxbreak::serving::ModelBackend::prefill_group(&mut e, &prompts).unwrap();
+    let _ = taxbreak::serving::ModelBackend::decode_group(&mut e, cache, 4, &next).unwrap();
+    let trace = e.take_trace();
+    taxbreak::taxbreak::phase1::validate_trace(&trace).unwrap();
+    let (host, dev, n) = taxbreak::serving::real_trace_split(&trace);
+    assert_eq!(n, 2);
+    assert!(host > 0.0 && dev > 0.0);
+    assert!(trace.meta.wall_us >= host + dev - 1e-6);
+}

@@ -1,0 +1,212 @@
+//! Conformance tests for the on-disk trace format against its spec,
+//! `docs/trace_format.md`.
+//!
+//! Two guarantees:
+//! 1. save → load → save is **byte-stable** (the format is canonical:
+//!    insertion-ordered keys, shortest-roundtrip numbers);
+//! 2. the emitted field names and event-kind tags are exactly the ones
+//!    the spec documents — adding/renaming a field or an `EventKind`
+//!    variant without updating `docs/trace_format.md` fails here
+//!    (spec drift = test failure).
+
+use std::path::PathBuf;
+
+use taxbreak::trace::chrome::to_chrome_json;
+use taxbreak::trace::{EventKind, KernelMeta, Trace, TraceEvent, TraceMeta, Track};
+use taxbreak::util::json::Json;
+
+/// Field names documented in docs/trace_format.md §3 (TraceMeta).
+const META_FIELDS: [&str; 7] = [
+    "platform", "model", "phase", "batch", "seq", "m_tokens", "wall_us",
+];
+/// Field names documented in docs/trace_format.md §4 (TraceEvent).
+const EVENT_FIELDS: [&str; 7] = ["kind", "name", "ts", "dur", "corr", "track", "meta"];
+/// Field names documented in docs/trace_format.md §5 (KernelMeta).
+const KERNEL_META_FIELDS: [&str; 9] = [
+    "kernel_name", "family", "aten_op", "shapes_key", "grid", "block", "lib", "flops", "bytes",
+];
+/// Field names documented in docs/trace_format.md §7 (chrome export).
+const CHROME_FIELDS: [&str; 8] = ["name", "cat", "ph", "ts", "dur", "pid", "tid", "args"];
+
+fn spec_text() -> String {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("docs")
+        .join("trace_format.md");
+    std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading spec {}: {e}", path.display()))
+}
+
+fn keys(v: &Json) -> Vec<&str> {
+    match v {
+        Json::Obj(entries) => entries.iter().map(|(k, _)| k.as_str()).collect(),
+        other => panic!("expected an object, got {other:?}"),
+    }
+}
+
+/// A trace exercising every event kind, both tracks, kernels with and
+/// without metadata, and fractional/integral timestamps.
+fn sample_trace() -> Trace {
+    let mut t = Trace::new(TraceMeta {
+        platform: "h100".into(),
+        model: "llama-3.2-1b".into(),
+        phase: "decode".into(),
+        batch: 4,
+        seq: 2048,
+        m_tokens: 10,
+        wall_us: 1234.5,
+    });
+    let host = |kind, corr, ts: f64, dur: f64, name: &str| TraceEvent {
+        kind,
+        name: name.to_string(),
+        ts_us: ts,
+        dur_us: dur,
+        correlation_id: corr,
+        track: Track::Host,
+        meta: None,
+    };
+    t.push(host(EventKind::TorchOp, 1, 0.0, 2.5, "torch.mm"));
+    t.push(host(EventKind::AtenOp, 1, 1.0, 1.5, "aten::mm"));
+    t.push(host(EventKind::RuntimeApi, 1, 2.0, 0.5, "cudaLaunchKernel"));
+    t.push(TraceEvent {
+        kind: EventKind::Kernel,
+        name: "ampere_bf16_s16816gemm_q_64x2048x2048_tn".into(),
+        ts_us: 7.25,
+        dur_us: 3.0,
+        correlation_id: 1,
+        track: Track::Device(0),
+        meta: Some(KernelMeta {
+            kernel_name: "ampere_bf16_s16816gemm_q_64x2048x2048_tn".into(),
+            family: "gemm_cublas".into(),
+            aten_op: "aten::mm".into(),
+            shapes_key: "bf16[1,64,2048]x[2048,2048]".into(),
+            grid: [1, 16, 1],
+            block: [256, 1, 1],
+            lib_mediated: true,
+            flops: 2.0 * 64.0 * 2048.0 * 2048.0,
+            bytes: 17_039_360.0,
+        }),
+    });
+    t.push(host(EventKind::Nvtx, 2, 20.0, 8.0, "replay:scope"));
+    // A metadata-less kernel on a second stream.
+    t.push(TraceEvent {
+        kind: EventKind::Kernel,
+        name: "memset_kernel".into(),
+        ts_us: 30.0,
+        dur_us: 1.0,
+        correlation_id: 2,
+        track: Track::Device(3),
+        meta: None,
+    });
+    t
+}
+
+#[test]
+fn save_load_save_is_byte_stable() {
+    let dir = std::env::temp_dir().join("taxbreak_trace_format_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p1 = dir.join("first.json");
+    let p2 = dir.join("second.json");
+
+    let t = sample_trace();
+    t.save(&p1).unwrap();
+    let loaded = Trace::load(&p1).unwrap();
+    assert_eq!(loaded, t, "load must reconstruct the trace exactly");
+    loaded.save(&p2).unwrap();
+
+    let b1 = std::fs::read(&p1).unwrap();
+    let b2 = std::fs::read(&p2).unwrap();
+    assert_eq!(b1, b2, "save -> load -> save must be byte-identical");
+}
+
+#[test]
+fn emitted_fields_match_documented_names_exactly() {
+    let j = sample_trace().to_json();
+    assert_eq!(keys(&j), vec!["meta", "events"]);
+    assert_eq!(keys(j.req("meta").unwrap()), META_FIELDS.to_vec());
+
+    let events = j.arr_of("events").unwrap();
+    for ev in events {
+        let ks = keys(ev);
+        // `meta` is optional and always last when present.
+        let expected: Vec<&str> = if ks.contains(&"meta") {
+            EVENT_FIELDS.to_vec()
+        } else {
+            EVENT_FIELDS[..6].to_vec()
+        };
+        assert_eq!(ks, expected, "event field names/order drifted");
+        if let Some(meta) = ev.get("meta") {
+            assert_eq!(keys(meta), KERNEL_META_FIELDS.to_vec());
+        }
+    }
+}
+
+#[test]
+fn spec_documents_every_field_and_event_kind() {
+    let spec = spec_text();
+    for field in META_FIELDS
+        .iter()
+        .chain(EVENT_FIELDS.iter())
+        .chain(KERNEL_META_FIELDS.iter())
+        .chain(CHROME_FIELDS.iter())
+    {
+        assert!(
+            spec.contains(&format!("`{field}`")),
+            "docs/trace_format.md does not document field `{field}`"
+        );
+    }
+    for kind in EventKind::ALL {
+        assert!(
+            spec.contains(&format!("`{}`", kind.as_str())),
+            "docs/trace_format.md does not document event kind `{}`",
+            kind.as_str()
+        );
+    }
+}
+
+#[test]
+fn track_encoding_matches_spec() {
+    // Spec §4: host == -1, device stream s == s (>= 0).
+    let j = sample_trace().to_json();
+    let events = j.arr_of("events").unwrap();
+    assert_eq!(events[0].f64_of("track").unwrap(), -1.0);
+    assert_eq!(events[3].f64_of("track").unwrap(), 0.0);
+    assert_eq!(events[5].f64_of("track").unwrap(), 3.0);
+}
+
+#[test]
+fn numbers_follow_canonical_form() {
+    // Spec §6: integral values print without a fractional part;
+    // non-integral values use shortest-roundtrip formatting.
+    let text = sample_trace().to_json().dump();
+    assert!(text.contains("\"ts\":7.25"));
+    assert!(text.contains("\"dur\":3,"), "integral duration must print as 3");
+    assert!(text.contains("\"batch\":4"));
+    assert!(text.contains("\"wall_us\":1234.5"));
+}
+
+#[test]
+fn chrome_export_fields_match_spec() {
+    let t = sample_trace();
+    let chrome = to_chrome_json(&t);
+    let arr = chrome.as_arr().unwrap();
+    assert_eq!(arr.len(), t.events.len());
+    for ev in arr {
+        assert_eq!(keys(ev), CHROME_FIELDS.to_vec());
+        assert_eq!(ev.str_of("ph").unwrap(), "X");
+    }
+    // Host tid 0; device stream s -> tid 100 + s.
+    assert_eq!(arr[0].f64_of("tid").unwrap(), 0.0);
+    assert_eq!(arr[3].f64_of("tid").unwrap(), 100.0);
+    assert_eq!(arr[5].f64_of("tid").unwrap(), 103.0);
+}
+
+#[test]
+fn event_kind_tags_roundtrip_the_documented_set() {
+    let documented = ["torch_op", "aten_op", "runtime_api", "kernel", "nvtx"];
+    assert_eq!(EventKind::ALL.len(), documented.len());
+    for (kind, tag) in EventKind::ALL.iter().zip(documented) {
+        assert_eq!(kind.as_str(), tag);
+        assert_eq!(EventKind::parse(tag).unwrap(), *kind);
+    }
+}

@@ -1,0 +1,135 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment for this repository has no crates.io access, so
+//! the workspace vendors this minimal, API-compatible subset of `anyhow`
+//! as a path dependency.  It covers exactly the surface the `taxbreak`
+//! crate uses:
+//!
+//! * [`Error`] — an opaque, message-carrying error type that converts
+//!   from any `std::error::Error + Send + Sync + 'static` via `?`;
+//! * [`Result`] — `std::result::Result` with `Error` as the default
+//!   error type;
+//! * [`anyhow!`] — construct an [`Error`] from a format string;
+//! * [`bail!`] — early-return an `Err(anyhow!(...))`;
+//! * [`ensure!`] — `bail!` unless a condition holds.
+//!
+//! Deliberately not implemented (unused by this workspace): `Context`,
+//! downcasting, source chains, and backtrace capture.  Swapping this
+//! path dependency for the real `anyhow = "1"` is a one-line change in
+//! `rust/Cargo.toml` and requires no source edits.
+
+use std::fmt;
+
+/// An opaque error carrying a rendered message.
+///
+/// Like the real `anyhow::Error`, this type intentionally does **not**
+/// implement `std::error::Error`: that keeps the blanket
+/// `impl<E: std::error::Error> From<E> for Error` coherent with the
+/// reflexive `From<Error> for Error` used by `?`.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct an error from a printable message.
+    pub fn msg(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `std::result::Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with an `Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(::std::concat!(
+                "condition failed: ",
+                ::std::stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn anyhow_formats() {
+        let e = anyhow!("bad value {} at {}", 7, "site");
+        assert_eq!(e.to_string(), "bad value 7 at site");
+        assert_eq!(format!("{e:?}"), "bad value 7 at site");
+        assert_eq!(format!("{e:#}"), "bad value 7 at site");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> crate::Result<u32> {
+            Ok(s.parse::<u32>()?)
+        }
+        assert_eq!(parse("12").unwrap(), 12);
+        assert!(parse("x").unwrap_err().to_string().contains("invalid"));
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: i32) -> crate::Result<i32> {
+            ensure!(x >= 0, "negative: {x}");
+            if x > 100 {
+                bail!("too big: {x}");
+            }
+            ensure!(x != 13);
+            Ok(x)
+        }
+        assert_eq!(f(7).unwrap(), 7);
+        assert_eq!(f(-1).unwrap_err().to_string(), "negative: -1");
+        assert_eq!(f(101).unwrap_err().to_string(), "too big: 101");
+        assert_eq!(
+            f(13).unwrap_err().to_string(),
+            "condition failed: x != 13"
+        );
+    }
+}

@@ -1,0 +1,209 @@
+//! Build-time stub of the `xla` crate (the PJRT bindings of
+//! [xla-rs](https://github.com/LaurentMazare/xla-rs)).
+//!
+//! The `taxbreak` crate's `real-pjrt` feature gates every code path that
+//! drives a real PJRT runtime.  The offline build environment cannot
+//! fetch (or link) the real `xla` crate and its `xla_extension` native
+//! library, so this stub provides the exact API surface those gated
+//! paths use — enough for `cargo check --features real-pjrt` to verify
+//! the gated code compiles.
+//!
+//! Every runtime entry point fails with a descriptive [`XlaError`]
+//! (`Engine::load` fails at `PjRtClient::cpu()`, before any compute is
+//! attempted), so enabling the feature against this stub is build-valid
+//! but not runnable.  To actually run real-PJRT mode, replace the
+//! `vendor/xla-stub` path dependency in `rust/Cargo.toml` with the real
+//! crate:
+//!
+//! ```toml
+//! [dependencies]
+//! xla = { version = "0.1", optional = true }
+//! ```
+//!
+//! No source changes are required — the types and signatures here match
+//! the subset of xla-rs the gated code calls.
+
+use std::borrow::Borrow;
+use std::path::Path;
+
+/// Error type mirroring `xla::Error` for the used surface.
+#[derive(Debug, Clone)]
+pub struct XlaError(pub String);
+
+impl std::fmt::Display for XlaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+/// Result alias matching the real crate's fallible APIs.
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+fn unavailable(what: &str) -> XlaError {
+    XlaError(format!(
+        "{what}: built against the vendor/xla-stub placeholder — replace the \
+         `xla` path dependency in rust/Cargo.toml with the real xla-rs crate \
+         to run real-PJRT mode"
+    ))
+}
+
+/// Element dtypes accepted by [`Literal::create_from_shape_and_untyped_data`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+/// A host-side tensor value (stub: shape bookkeeping only).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    elements: usize,
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T: Copy>(data: &[T]) -> Literal {
+        Literal {
+            elements: data.len(),
+        }
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n < 0 || n as usize != self.elements {
+            return Err(XlaError(format!(
+                "reshape: {} elements into {dims:?}",
+                self.elements
+            )));
+        }
+        Ok(Literal { elements: self.elements })
+    }
+
+    /// Build a literal from raw bytes plus an explicit shape/dtype.
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let elements: usize = dims.iter().product();
+        let width = match ty {
+            ElementType::F32 | ElementType::S32 => 4,
+        };
+        if elements * width != data.len() {
+            return Err(XlaError(format!(
+                "shape {dims:?} needs {} bytes, got {}",
+                elements * width,
+                data.len()
+            )));
+        }
+        Ok(Literal { elements })
+    }
+
+    /// Copy the literal out as a host vector.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+
+    /// Destructure a 2-tuple literal.
+    pub fn to_tuple2(&self) -> Result<(Literal, Literal)> {
+        Err(unavailable("Literal::to_tuple2"))
+    }
+
+    /// Total element count.
+    pub fn element_count(&self) -> usize {
+        self.elements
+    }
+}
+
+/// A parsed HLO module (stub).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {}
+
+impl HloModuleProto {
+    /// Parse HLO text from a file.
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        Err(unavailable(&format!(
+            "HloModuleProto::from_text_file({})",
+            path.as_ref().display()
+        )))
+    }
+}
+
+/// An XLA computation built from an HLO module (stub).
+#[derive(Debug, Clone)]
+pub struct XlaComputation {}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {}
+    }
+}
+
+/// A PJRT client (stub: construction always fails).
+#[derive(Debug)]
+pub struct PjRtClient {}
+
+impl PjRtClient {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    /// Compile a computation into a loaded executable.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// A compiled, device-loaded executable (stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {}
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given argument literals; returns per-device,
+    /// per-output buffers (`result[0][0]` is the first output on the
+    /// first device, as in xla-rs).
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// A device buffer handle (stub).
+#[derive(Debug)]
+pub struct PjRtBuffer {}
+
+impl PjRtBuffer {
+    /// Materialize the buffer as a host literal, synchronously.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_shape_bookkeeping_works() {
+        let l = Literal::vec1(&[0f32; 8]);
+        assert_eq!(l.element_count(), 8);
+        assert!(l.reshape(&[2, 4]).is_ok());
+        assert!(l.reshape(&[3, 3]).is_err());
+        let ok = Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[2, 2],
+            &[0u8; 16],
+        )
+        .unwrap();
+        assert_eq!(ok.element_count(), 4);
+    }
+
+    #[test]
+    fn runtime_entry_points_report_stub() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("xla-stub"));
+    }
+}
