@@ -39,7 +39,7 @@
 //! | [`device`] | GPU stream FIFO + timeline |
 //! | [`sim`] | host+device co-simulation → traces |
 //! | [`taxbreak`] | **the paper's contribution**: two-phase pipeline, Eq. 1-3, baselines, diagnostics |
-//! | [`serving`] | request router, continuous batcher, paged-KV manager, scheduler |
+//! | [`serving`] | request router, continuous batcher, reservation-backed paged-KV manager, scheduler, load generator |
 //! | [`runtime`] | backend abstraction (simulated / real PJRT), AOT artifact + weights loading, trace instrumentation |
 //! | [`config`] | typed run configuration |
 //! | [`repro`] | regeneration harnesses for every paper table & figure |

@@ -10,6 +10,10 @@
 //!   simulated engine by default (`--backend sim`), or PJRT artifacts
 //!   with `--backend pjrt` when built with `--features real-pjrt` (see
 //!   `examples/e2e_serving.rs` for the scripted version).
+//! * `loadgen` — arrival-driven load test of the serving scheduler:
+//!   Poisson arrivals, configurable length distributions, a
+//!   dense-vs-MoE model mix, and a throughput/TTFT/TPOT/KV-occupancy
+//!   report with per-phase HDBI.
 //! * `models` / `platforms` — list the catalog.
 
 use taxbreak::hardware::Platform;
@@ -35,6 +39,7 @@ fn run() -> anyhow::Result<()> {
         "analyze" => cmd_analyze(args),
         "trace" => cmd_trace(args),
         "serve" => cmd_serve(args),
+        "loadgen" => cmd_loadgen(args),
         "models" => {
             for m in models::catalog() {
                 println!(
@@ -88,6 +93,10 @@ USAGE:
                    sim:  [--model M] [--platform h100|h200]
                    pjrt: --artifacts DIR [--variant dense_fused]
                          (requires building with --features real-pjrt)
+  taxbreak loadgen [--models M1,M2] [--platform h100|h200] [--requests N]
+                   [--rate REQ_PER_S] [--prompt-dist uniform:LO:HI|lognormal:MED:SIGMA]
+                   [--out-dist ...] [--max-batch N] [--max-groups N]
+                   [--kv-pages N] [--kv-page-tokens N] [--seed N] [--report FILE]
   taxbreak models | platforms | help
 
 Artifact ids: fig2 fig5 fig6 table2 table3 table4 fig7 fig8 fig9 fig10 fig11";
@@ -234,6 +243,51 @@ fn cmd_serve(mut args: Args) -> anyhow::Result<()> {
     print!("{}", summary.render());
     if let Some(p) = report_path {
         std::fs::write(&p, summary.to_json().pretty())?;
+        println!("wrote {p}");
+    }
+    Ok(())
+}
+
+fn cmd_loadgen(mut args: Args) -> anyhow::Result<()> {
+    use taxbreak::serving::{run_sim_loadgen, LenDist, LoadgenConfig};
+    let models = {
+        let list = args.opt_list("models");
+        if list.is_empty() {
+            // Default mix: the paper's dense-vs-MoE serving contrast.
+            vec!["gpt2".to_string(), "olmoe-1b-7b".to_string()]
+        } else {
+            list
+        }
+    };
+    let platform = args.opt_string("platform", "h200");
+    let base = LoadgenConfig::default();
+    let prompt_dist = args.opt("prompt-dist").map(|s| s.to_string());
+    let out_dist = args.opt("out-dist").map(|s| s.to_string());
+    let cfg = LoadgenConfig {
+        requests: args.opt_usize("requests", base.requests)?,
+        rate_per_s: args.opt_f64("rate", base.rate_per_s)?,
+        prompt_len: match prompt_dist {
+            Some(d) => LenDist::parse(&d)?,
+            None => base.prompt_len,
+        },
+        output_len: match out_dist {
+            Some(d) => LenDist::parse(&d)?,
+            None => base.output_len,
+        },
+        seed: args.opt_u64("seed", base.seed)?,
+        sched: taxbreak::serving::SchedulerConfig {
+            max_batch: args.opt_usize("max-batch", base.sched.max_batch)?,
+            max_groups: args.opt_usize("max-groups", base.sched.max_groups)?,
+            kv_pages: args.opt_usize("kv-pages", base.sched.kv_pages)?,
+            kv_page_tokens: args.opt_usize("kv-page-tokens", base.sched.kv_page_tokens)?,
+        },
+    };
+    let report_path = args.opt("report").map(|s| s.to_string());
+    args.finish()?;
+    let report = run_sim_loadgen(&models, &platform, &cfg)?;
+    print!("{}", report.render());
+    if let Some(p) = report_path {
+        std::fs::write(&p, report.to_json().pretty())?;
         println!("wrote {p}");
     }
     Ok(())

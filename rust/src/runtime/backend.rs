@@ -253,6 +253,19 @@ impl ModelBackend for SimEngine {
         self.cfg.buckets.clone()
     }
 
+    fn pad_id(&self) -> i32 {
+        // The top vocab id is reserved for padding (it stays a valid
+        // embedding index for the real engine); workload generators
+        // draw prompt tokens strictly below it.
+        self.cfg.vocab.saturating_sub(1) as i32
+    }
+
+    fn wait_until_us(&mut self, t_us: f64) {
+        // Virtual clock: jump over idle gaps so arrival-gated load
+        // generation doesn't busy-spin.
+        self.clock_us = self.clock_us.max(t_us);
+    }
+
     fn prefill_group(&mut self, prompts: &[Vec<i32>]) -> anyhow::Result<(Vec<i32>, SimCache)> {
         anyhow::ensure!(!prompts.is_empty(), "empty prefill group");
         let padded = prompts.iter().map(|p| p.len()).max().unwrap();
@@ -263,10 +276,13 @@ impl ModelBackend for SimEngine {
         );
         let bucket = self.bucket_for(prompts.len())?;
 
+        // Ragged prompts and phantom bucket slots pad with the
+        // reserved pad id, never a real vocab token.
+        let pad = self.pad_id();
         let mut tokens: Vec<Vec<i32>> = Vec::with_capacity(bucket);
         for i in 0..bucket {
             let mut h = prompts.get(i).cloned().unwrap_or_default();
-            h.resize(padded, 0);
+            h.resize(padded, pad);
             tokens.push(h);
         }
         let next: Vec<i32> = prompts
@@ -297,8 +313,10 @@ impl ModelBackend for SimEngine {
         pos: usize,
         tokens: &[i32],
     ) -> anyhow::Result<(Vec<i32>, SimCache)> {
+        // Phantom bucket slots carry the reserved pad id.
+        let pad = self.pad_id();
         let mut toks = tokens.to_vec();
-        toks.resize(cache.bucket, 0);
+        toks.resize(cache.bucket, pad);
         anyhow::ensure!(
             pos == cache.tokens[0].len(),
             "cache position continuity: pos {pos} != stored {}",

@@ -7,10 +7,26 @@
 //! iteration boundaries rather than waiting for a full drain.  The
 //! paged-KV manager gates admission.
 //!
+//! **Admission is reservation-backed** (DESIGN.md §2): a group is
+//! admitted only if the pool can hold every member's *worst-case*
+//! context (`padded_len + max_new_tokens`), and those pages are
+//! reserved at admission via [`PagedKvManager::reserve`].  Decode-time
+//! `extend`s draw from the reservation, so an admitted request can
+//! never fail with `OutOfPages` mid-decode — the check-vs-allocate
+//! deadlock of check-only admission.  When the full candidate set does
+//! not fit, admission shrinks the group instead of head-of-line
+//! blocking, and a member's pages (stored + unused reservation) are
+//! released the moment it finishes, not when its group retires.
+//! Should the pool still run dry (possible only for hand-rolled
+//! configurations that bypass reservations), [`Scheduler::step`]
+//! treats it as backpressure and preempts the youngest group rather
+//! than crashing.
+//!
 //! Static-shape consequences (documented substitution, DESIGN.md §2):
-//! prompts inside a group are right-padded to the group maximum and the
-//! pad tokens are treated as real prompt content; a group retires when
-//! all real members hit their decode budgets.
+//! prompts inside a group are right-padded to the group maximum with
+//! the backend's dedicated [`ModelBackend::pad_id`] (never a real
+//! vocab token), and a group retires when all real members hit their
+//! decode budgets.
 
 use std::collections::VecDeque;
 
@@ -24,6 +40,11 @@ pub trait ModelBackend {
     fn max_seq(&self) -> usize;
     /// Decode batch buckets available (sorted ascending).
     fn decode_buckets(&self) -> Vec<usize>;
+    /// Token id used for right-padding prompts and for unused bucket
+    /// slots.  Must never collide with genuine prompt content (real
+    /// backends reserve an id; the mock uses a sentinel outside the
+    /// vocab).
+    fn pad_id(&self) -> i32;
     /// Prefill a group of equal-padded prompts; returns the argmax next
     /// token per prompt and the group cache (bucket-batch-shaped).
     fn prefill_group(
@@ -39,6 +60,45 @@ pub trait ModelBackend {
     ) -> anyhow::Result<(Vec<i32>, Self::Cache)>;
     /// Monotonic clock, us (trace-aligned in real mode).
     fn now_us(&self) -> f64;
+    /// Advance the clock to at least `t_us`.  Virtual-clock engines
+    /// (the simulator) jump forward so arrival-gated load generation
+    /// can model idle gaps; wall-clock engines cannot time-travel and
+    /// ignore this (the default).
+    fn wait_until_us(&mut self, _t_us: f64) {}
+}
+
+/// Detects a permanently stalled scheduler.  Feed it the
+/// [`Scheduler::progress_marker`] once per iteration; after 1000
+/// consecutive iterations without progress it errors with the caller's
+/// diagnostics.  The one stall policy shared by
+/// [`Scheduler::run_to_completion`] and `serving::loadgen::drive`.
+#[derive(Debug, Default)]
+pub struct StallGuard {
+    last: Option<usize>,
+    stalled: usize,
+}
+
+impl StallGuard {
+    const LIMIT: usize = 1000;
+
+    pub fn observe(
+        &mut self,
+        marker: usize,
+        diagnostics: impl Fn() -> String,
+    ) -> anyhow::Result<()> {
+        if self.last == Some(marker) {
+            self.stalled += 1;
+            anyhow::ensure!(
+                self.stalled < Self::LIMIT,
+                "scheduler stalled: {}",
+                diagnostics()
+            );
+        } else {
+            self.stalled = 0;
+            self.last = Some(marker);
+        }
+        Ok(())
+    }
 }
 
 /// Scheduler configuration.
@@ -86,6 +146,9 @@ pub struct Scheduler<B: ModelBackend> {
     finished: Vec<RequestState>,
     /// Iterations executed (for stats).
     pub iterations: usize,
+    /// Groups preempted under KV backpressure (for stats; always 0
+    /// under reservation-backed admission).
+    pub preemptions: usize,
 }
 
 impl<B: ModelBackend> Scheduler<B> {
@@ -99,10 +162,28 @@ impl<B: ModelBackend> Scheduler<B> {
             groups: Vec::new(),
             finished: Vec::new(),
             iterations: 0,
+            preemptions: 0,
         }
     }
 
+    /// Queue a request.  Unservable requests — a prompt the context
+    /// window cannot hold, or a worst-case KV demand larger than the
+    /// entire pool — are rejected at the door
+    /// ([`RequestState::rejected`]): admission candidates are a prefix
+    /// of this queue, so one such request would otherwise head-of-line
+    /// block every request behind it forever.
     pub fn submit(&mut self, request: Request) {
+        let max_seq = self.backend.max_seq();
+        let worst = self
+            .kv
+            .pages_for((request.prompt.len() + request.max_new_tokens).min(max_seq));
+        if request.prompt.len() > max_seq || worst > self.cfg.kv_pages {
+            let mut st = RequestState::new(request);
+            st.rejected = true;
+            st.finish_us = Some(self.backend.now_us());
+            self.finished.push(st);
+            return;
+        }
         self.waiting.push_back(request);
     }
 
@@ -128,14 +209,17 @@ impl<B: ModelBackend> Scheduler<B> {
         self.finished
     }
 
-    /// Round a group size up to the smallest compiled bucket.
-    fn bucket_for(&self, n: usize) -> usize {
+    /// Round a group size up to the smallest compiled bucket.  Errors
+    /// when the group exceeds the largest bucket (or none exist): the
+    /// backend would reject such a group, so a silent clamp could only
+    /// fail downstream.
+    fn bucket_for(&self, n: usize) -> anyhow::Result<usize> {
         let buckets = self.backend.decode_buckets();
-        buckets
-            .iter()
-            .copied()
-            .find(|&b| b >= n)
-            .unwrap_or_else(|| *buckets.last().expect("no decode buckets"))
+        buckets.iter().copied().find(|&b| b >= n).ok_or_else(|| {
+            anyhow::anyhow!(
+                "group of {n} does not fit any compiled decode bucket {buckets:?}"
+            )
+        })
     }
 
     /// One scheduler iteration: admit (prefill) then advance every
@@ -152,24 +236,29 @@ impl<B: ModelBackend> Scheduler<B> {
     pub fn run_to_completion(&mut self) -> anyhow::Result<()> {
         // Each iteration makes progress (a prefill or a decode token);
         // bound by total work + admission stalls.
-        let mut stall = 0usize;
+        let mut guard = StallGuard::default();
         while !self.is_idle() {
-            let before = self.total_progress();
             self.step()?;
-            if self.total_progress() == before {
-                stall += 1;
-                anyhow::ensure!(
-                    stall < 1000,
-                    "scheduler stalled: {} waiting, {} groups, {} kv pages free",
+            guard.observe(self.progress_marker(), || {
+                format!(
+                    "{} waiting, {} groups, {} kv pages free ({} reserved)",
                     self.waiting.len(),
                     self.groups.len(),
-                    self.kv.free_pages()
-                );
-            } else {
-                stall = 0;
-            }
+                    self.kv.free_pages(),
+                    self.kv.reserved_pages()
+                )
+            })?;
         }
         Ok(())
+    }
+
+    /// Progress marker: unchanged across a [`step`](Self::step) means
+    /// the iteration did no work (no prefill, no decode token, nothing
+    /// finished).  External drivers use it to detect permanent
+    /// admission stalls the same way
+    /// [`run_to_completion`](Self::run_to_completion) does internally.
+    pub fn progress_marker(&self) -> usize {
+        self.total_progress()
     }
 
     fn total_progress(&self) -> usize {
@@ -181,7 +270,14 @@ impl<B: ModelBackend> Scheduler<B> {
                 .sum::<usize>()
     }
 
+    /// Admission: reserve-then-register with partial admission.  The
+    /// candidate group shrinks until its worst-case KV demand fits the
+    /// free pool; only when not even one request fits does admission
+    /// wait for pages to free up.
     fn admit(&mut self) -> anyhow::Result<()> {
+        if self.waiting.is_empty() {
+            return Ok(());
+        }
         // Group size is capped by both the configured max batch and the
         // largest compiled decode bucket (static AOT shapes).
         let bucket_cap = self
@@ -189,23 +285,48 @@ impl<B: ModelBackend> Scheduler<B> {
             .decode_buckets()
             .last()
             .copied()
-            .unwrap_or(1);
+            .ok_or_else(|| anyhow::anyhow!("cannot admit: backend has no decode buckets"))?;
+        // Decode hard-stops at max_seq, so no member ever stores more
+        // than max_seq tokens — demand past it would be phantom pages.
+        // (Oversized prompts were already rejected at submit.)
+        let max_seq = self.backend.max_seq();
         while !self.waiting.is_empty() && self.groups.len() < self.cfg.max_groups {
-            let take = self
+            let mut take = self
                 .waiting
                 .len()
                 .min(self.cfg.max_batch)
                 .min(bucket_cap);
-            // Worst-case KV demand of the candidate group.
-            let candidates: Vec<&Request> = self.waiting.iter().take(take).collect();
-            let padded_len = candidates.iter().map(|r| r.prompt.len()).max().unwrap();
-            let worst: usize = candidates
-                .iter()
-                .map(|r| self.kv.pages_for(padded_len + r.max_new_tokens))
-                .sum();
-            if worst > self.kv.free_pages() {
-                break; // wait for a group to retire
-            }
+            // Shrink the candidate set until its worst-case KV demand
+            // (padded prompt + full decode budget per member) fits.
+            let admit = loop {
+                if take == 0 {
+                    break None;
+                }
+                let padded_len = self
+                    .waiting
+                    .iter()
+                    .take(take)
+                    .map(|r| r.prompt.len())
+                    .max()
+                    .unwrap();
+                debug_assert!(
+                    padded_len <= max_seq,
+                    "oversized prompts are rejected before candidate selection"
+                );
+                let worst: usize = self
+                    .waiting
+                    .iter()
+                    .take(take)
+                    .map(|r| self.kv.pages_for((padded_len + r.max_new_tokens).min(max_seq)))
+                    .sum();
+                if worst <= self.kv.free_pages() {
+                    break Some((take, padded_len));
+                }
+                take -= 1;
+            };
+            let Some((take, padded_len)) = admit else {
+                break; // backpressure: wait for pages to free up
+            };
             let members: Vec<Request> =
                 (0..take).map(|_| self.waiting.pop_front().unwrap()).collect();
             self.start_group(members, padded_len)?;
@@ -214,31 +335,41 @@ impl<B: ModelBackend> Scheduler<B> {
     }
 
     fn start_group(&mut self, members: Vec<Request>, padded_len: usize) -> anyhow::Result<()> {
-        let bucket = self.bucket_for(members.len());
-        // Right-pad prompts to the shared length; pad tokens are real
-        // prompt content under static shapes.
+        let bucket = self.bucket_for(members.len())?;
+        let pad = self.backend.pad_id();
+        // Right-pad prompts to the shared length with the dedicated pad
+        // id (static shapes); pad can never collide with real content.
         let prompts: Vec<Vec<i32>> = members
             .iter()
             .map(|r| {
                 let mut p = r.prompt.clone();
-                p.resize(padded_len, 0);
+                p.resize(padded_len, pad);
                 p
             })
             .collect();
+        let max_seq = self.backend.max_seq();
         for r in &members {
-            self.kv.register(r.id, padded_len)?;
+            // Hold the worst case, clamped to the context window (a
+            // member never stores past max_seq); the prompt commit
+            // below draws from the reservation, as does every
+            // decode-time extend.  The final generated token is never
+            // written back, so this deliberately over-holds by at most
+            // one token's page — conservative and simple beats exact.
+            self.kv.reserve(r.id, (padded_len + r.max_new_tokens).min(max_seq))?;
+            self.kv.extend(r.id, padded_len)?;
         }
         let (next, cache) = self.backend.prefill_group(&prompts)?;
         let now = self.backend.now_us();
 
         let mut states: Vec<RequestState> = members.into_iter().map(RequestState::new).collect();
-        let mut last_tokens = vec![0i32; bucket];
+        let mut last_tokens = vec![pad; bucket];
         for (i, s) in states.iter_mut().enumerate() {
             s.generated.push(next[i]);
             s.first_token_us = Some(now);
             last_tokens[i] = next[i];
             if s.done() {
                 s.finish_us = Some(now);
+                self.kv.release(s.request.id)?;
             }
         }
         self.groups.push(Group {
@@ -254,12 +385,33 @@ impl<B: ModelBackend> Scheduler<B> {
 
     fn advance(&mut self) -> anyhow::Result<()> {
         let max_seq = self.backend.max_seq();
-        for gi in 0..self.groups.len() {
-            let (pos, tokens, cache) = {
-                let g = &mut self.groups[gi];
+        let mut gi = 0;
+        while gi < self.groups.len() {
+            {
+                let g = &self.groups[gi];
                 if g.members.iter().all(|m| m.done()) || g.pos >= max_seq {
+                    gi += 1;
                     continue;
                 }
+            }
+            // Account this step's KV demand *before* touching the
+            // backend, so an out-of-pages condition is backpressure,
+            // not a half-applied step.  Under reservation-backed
+            // admission the demand on the free pool is always zero.
+            let step_need: usize = {
+                let g = &self.groups[gi];
+                g.members
+                    .iter()
+                    .filter(|m| !m.done())
+                    .map(|m| self.kv.extend_need(m.request.id, 1))
+                    .sum()
+            };
+            if step_need > self.kv.free_pages() {
+                self.preempt_youngest();
+                continue; // re-evaluate gi against the shrunk group list
+            }
+            let (pos, tokens, cache) = {
+                let g = &mut self.groups[gi];
                 (g.pos, g.last_tokens.clone(), g.cache.take().expect("cache present"))
             };
             let (next, cache) = self.backend.decode_group(cache, pos, &tokens)?;
@@ -276,10 +428,34 @@ impl<B: ModelBackend> Scheduler<B> {
                 g.last_tokens[i] = next[i];
                 if m.done() {
                     m.finish_us = Some(now);
+                    // Early release: a finished member's pages (stored
+                    // + unused reservation) free immediately, not at
+                    // group retire.
+                    self.kv.release(m.request.id)?;
                 }
             }
+            gi += 1;
         }
         Ok(())
+    }
+
+    /// KV backpressure: drop the youngest group, requeueing its
+    /// unfinished members at the head of the wait queue (their partial
+    /// progress is discarded; admission re-reserves for them).  Members
+    /// that already finished keep their results.
+    fn preempt_youngest(&mut self) {
+        let Some(g) = self.groups.pop() else {
+            return;
+        };
+        self.preemptions += 1;
+        for m in g.members.into_iter().rev() {
+            let _ = self.kv.release(m.request.id);
+            if m.done() {
+                self.finished.push(m);
+            } else {
+                self.waiting.push_front(m.request);
+            }
+        }
     }
 
     fn retire(&mut self) {
@@ -293,6 +469,8 @@ impl<B: ModelBackend> Scheduler<B> {
                     if m.finish_us.is_none() {
                         m.finish_us = Some(now); // context-exhausted cutoff
                     }
+                    // Members that finished mid-flight released their
+                    // pages already; this reclaims only cutoff members.
                     let _ = self.kv.release(m.request.id);
                     self.finished.push(m);
                 }
@@ -317,6 +495,9 @@ pub mod mock_backend {
         pub clock_us: f64,
         pub prefills: usize,
         pub decodes: usize,
+        /// Prompts seen by the last `prefill_group` call (pad-id
+        /// observability for tests).
+        pub last_prompts: Vec<Vec<i32>>,
     }
 
     impl MockBackend {
@@ -327,7 +508,14 @@ pub mod mock_backend {
                 clock_us: 0.0,
                 prefills: 0,
                 decodes: 0,
+                last_prompts: Vec::new(),
             }
+        }
+    }
+
+    impl Default for MockBackend {
+        fn default() -> Self {
+            MockBackend::new()
         }
     }
 
@@ -348,6 +536,12 @@ pub mod mock_backend {
             self.buckets.clone()
         }
 
+        fn pad_id(&self) -> i32 {
+            // A sentinel no real token can equal (mock tokens are
+            // non-negative), so padded positions are distinguishable.
+            -1
+        }
+
         fn prefill_group(
             &mut self,
             prompts: &[Vec<i32>],
@@ -360,6 +554,7 @@ pub mod mock_backend {
                 prompts.len(),
                 self.buckets.last().unwrap()
             );
+            self.last_prompts = prompts.to_vec();
             let bucket = self
                 .buckets
                 .iter()
@@ -368,7 +563,7 @@ pub mod mock_backend {
                 .unwrap();
             let next = prompts
                 .iter()
-                .map(|p| (p.iter().map(|&t| t as i64).sum::<i64>() % 251) as i32)
+                .map(|p| (p.iter().map(|&t| t as i64).sum::<i64>().rem_euclid(251)) as i32)
                 .collect();
             Ok((
                 next,
@@ -389,7 +584,10 @@ pub mod mock_backend {
             anyhow::ensure!(pos == cache.written_to, "cache position continuity");
             self.decodes += 1;
             self.clock_us += 100.0;
-            let next = tokens.iter().map(|&t| (t + pos as i32) % 251).collect();
+            let next = tokens
+                .iter()
+                .map(|&t| (t + pos as i32).rem_euclid(251))
+                .collect();
             Ok((
                 next,
                 MockCache {
@@ -402,6 +600,10 @@ pub mod mock_backend {
         fn now_us(&self) -> f64 {
             self.clock_us
         }
+
+        fn wait_until_us(&mut self, t_us: f64) {
+            self.clock_us = self.clock_us.max(t_us);
+        }
     }
 }
 
@@ -413,6 +615,15 @@ mod tests {
 
     fn scheduler(cfg: SchedulerConfig) -> Scheduler<MockBackend> {
         Scheduler::new(MockBackend::new(), cfg)
+    }
+
+    fn request(id: u64, prompt_len: usize, max_new: usize) -> Request {
+        Request {
+            id,
+            prompt: vec![7; prompt_len],
+            max_new_tokens: max_new,
+            arrival_us: 0.0,
+        }
     }
 
     #[test]
@@ -428,6 +639,7 @@ mod tests {
             assert!(f.first_token_us.is_some() && f.finish_us.is_some());
         }
         assert_eq!(s.kv.used_pages(), 0, "all KV reclaimed");
+        assert_eq!(s.preemptions, 0, "reservations make backpressure preemption unreachable");
     }
 
     #[test]
@@ -513,5 +725,208 @@ mod tests {
         for f in s.finished() {
             assert!(f.first_token_us.unwrap() <= f.finish_us.unwrap());
         }
+    }
+
+    #[test]
+    fn admission_reserves_worst_case() {
+        // One member, prompt 16, budget 32: the reservation must hold
+        // pages_for(16 + 32) = 3 pages from the moment of admission.
+        let cfg = SchedulerConfig {
+            max_batch: 1,
+            max_groups: 2,
+            kv_pages: 8,
+            kv_page_tokens: 16,
+        };
+        let mut s = scheduler(cfg);
+        s.submit(request(0, 16, 32));
+        s.step().unwrap();
+        assert_eq!(s.kv.used_pages(), 3, "worst case held at admission");
+        // The prompt commit (1 page) and the first decode extend (page
+        // 2 at token 17) both drew from the reservation; 1 page left.
+        assert_eq!(s.kv.reserved_pages(), 1);
+    }
+
+    #[test]
+    fn partial_admission_shrinks_instead_of_blocking() {
+        // Four candidates of 2 worst-case pages each against a 5-page
+        // pool: check-only admission would block the whole group; the
+        // scheduler must admit the 2 that fit.
+        let cfg = SchedulerConfig {
+            max_batch: 4,
+            max_groups: 2,
+            kv_pages: 5,
+            kv_page_tokens: 16,
+        };
+        let mut s = scheduler(cfg);
+        for id in 0..4 {
+            s.submit(request(id, 16, 16)); // pages_for(32) = 2 each
+        }
+        s.step().unwrap();
+        assert_eq!(s.groups.len(), 1);
+        assert_eq!(s.groups[0].members.len(), 2, "2 of 4 fit (4 of 5 pages)");
+        assert_eq!(s.waiting.len(), 2);
+        s.run_to_completion().unwrap();
+        assert_eq!(s.finished().len(), 4);
+        assert_eq!(s.kv.used_pages(), 0);
+    }
+
+    #[test]
+    fn member_pages_release_at_finish_not_group_retire() {
+        // Two members, budgets 3 and 40: the short member's pages must
+        // free as soon as it finishes, while the group is still alive.
+        let cfg = SchedulerConfig {
+            max_batch: 2,
+            max_groups: 1,
+            kv_pages: 16,
+            kv_page_tokens: 16,
+        };
+        let mut s = scheduler(cfg);
+        s.submit(request(0, 16, 3));
+        s.submit(request(1, 16, 40));
+        s.step().unwrap(); // prefill (token 1) + one decode (token 2)
+        assert_eq!(s.kv.active_requests(), 2);
+        s.step().unwrap(); // decode: member 0 hits its budget of 3
+        assert_eq!(s.groups.len(), 1, "group still running");
+        assert_eq!(s.kv.active_requests(), 1, "finished member released early");
+        s.run_to_completion().unwrap();
+        assert_eq!(s.finished().len(), 2);
+        assert_eq!(s.kv.used_pages(), 0);
+    }
+
+    #[test]
+    fn prompts_pad_with_dedicated_pad_id() {
+        let mut s = scheduler(SchedulerConfig::default());
+        s.submit(request(0, 3, 4));
+        s.submit(request(1, 5, 4));
+        s.step().unwrap();
+        let pad = s.backend.pad_id();
+        let prompts = &s.backend.last_prompts;
+        assert_eq!(prompts.len(), 2);
+        assert!(prompts.iter().all(|p| p.len() == 5));
+        assert_eq!(&prompts[0][3..], &[pad, pad], "short prompt pads with pad id");
+        assert!(prompts[0][..3].iter().all(|&t| t != pad), "real content is never the pad");
+        assert!(prompts[1].iter().all(|&t| t != pad), "full prompt has no pads");
+    }
+
+    #[test]
+    fn empty_bucket_grid_errors_instead_of_panicking() {
+        let mut backend = MockBackend::new();
+        backend.buckets = Vec::new();
+        let mut s = Scheduler::new(backend, SchedulerConfig::default());
+        s.submit(request(0, 4, 4));
+        let err = s.step().unwrap_err();
+        assert!(err.to_string().contains("no decode buckets"), "{err}");
+    }
+
+    #[test]
+    fn oversized_group_is_an_error_not_a_clamp() {
+        let s = scheduler(SchedulerConfig::default());
+        // Largest mock bucket is 4; 9 must error, not clamp to 4.
+        let err = s.bucket_for(9).unwrap_err();
+        assert!(err.to_string().contains("does not fit"), "{err}");
+        assert_eq!(s.bucket_for(3).unwrap(), 4);
+        assert_eq!(s.bucket_for(1).unwrap(), 1);
+    }
+
+    #[test]
+    fn oversized_prompt_rejected_without_stranding_the_queue() {
+        // A 200-token prompt can never fit the 128-token window; it is
+        // rejected per-request (no KV touched, no error poisoning the
+        // run) and everyone behind it is still served.
+        let mut s = scheduler(SchedulerConfig::default());
+        s.submit(request(0, 200, 4));
+        s.submit(request(1, 8, 4));
+        s.run_to_completion().unwrap();
+        assert_eq!(s.finished().len(), 2);
+        let bad = s.finished().iter().find(|f| f.request.id == 0).unwrap();
+        assert!(bad.rejected && bad.generated.is_empty() && bad.finish_us.is_some());
+        let good = s.finished().iter().find(|f| f.request.id == 1).unwrap();
+        assert!(!good.rejected);
+        assert_eq!(good.generated.len(), 4);
+        assert_eq!(s.kv.used_pages(), 0);
+    }
+
+    #[test]
+    fn pool_infeasible_request_rejected_at_submit() {
+        // Worst case pages_for(min(40+40, 128)) = 5 exceeds the whole
+        // 4-page pool: rejected at the door, and the feasible request
+        // behind it is served normally (no head-of-line block).
+        let cfg = SchedulerConfig {
+            max_batch: 4,
+            max_groups: 2,
+            kv_pages: 4,
+            kv_page_tokens: 16,
+        };
+        let mut s = scheduler(cfg);
+        s.submit(request(0, 40, 40));
+        s.submit(request(1, 16, 8));
+        s.run_to_completion().unwrap();
+        assert_eq!(s.finished().len(), 2);
+        assert!(s.finished().iter().find(|f| f.request.id == 0).unwrap().rejected);
+        let ok = s.finished().iter().find(|f| f.request.id == 1).unwrap();
+        assert!(!ok.rejected);
+        assert_eq!(ok.generated.len(), 8);
+        assert_eq!(s.kv.used_pages(), 0);
+    }
+
+    #[test]
+    fn reservation_clamps_to_context_window() {
+        // Unclamped worst case would be pages_for(8 + 200) = 13 pages
+        // and could never fit; decode halts at max_seq = 128, so the
+        // honest demand is pages_for(128) = 8.
+        let cfg = SchedulerConfig {
+            max_batch: 1,
+            max_groups: 1,
+            kv_pages: 8,
+            kv_page_tokens: 16,
+        };
+        let mut s = scheduler(cfg);
+        s.submit(request(0, 8, 200));
+        s.step().unwrap();
+        assert_eq!(s.active_group_shapes().len(), 1, "clamped demand fits the pool");
+        assert_eq!(s.kv.used_pages(), 8, "reserved exactly pages_for(max_seq)");
+        s.run_to_completion().unwrap();
+        let f = &s.finished()[0];
+        assert!(f.generated.len() < 200, "context-exhausted cutoff");
+        assert!(f.finish_us.is_some());
+        assert_eq!(s.kv.used_pages(), 0);
+    }
+
+    #[test]
+    fn backpressure_preempts_youngest_without_crashing() {
+        // Bypass reservations (register exact prompt pages only, the
+        // seed behavior) to force decode-time page exhaustion, and
+        // check advance() degrades to preemption instead of erroring.
+        let cfg = SchedulerConfig {
+            max_batch: 1,
+            max_groups: 2,
+            kv_pages: 4,
+            kv_page_tokens: 16,
+        };
+        let mut s = scheduler(cfg);
+        // Hand-roll the seed's check-only admission for both requests
+        // (they enter as live groups directly, not via submit).
+        for g in 0..2u64 {
+            s.kv.register(g, 16).unwrap();
+            let prompts = vec![vec![7i32; 16]];
+            let (next, cache) = s.backend.prefill_group(&prompts).unwrap();
+            let mut st = RequestState::new(request(g, 16, 32));
+            st.generated.push(next[0]);
+            st.first_token_us = Some(s.backend.now_us());
+            s.groups.push(Group {
+                members: vec![st],
+                padded_len: 16,
+                cache: Some(cache),
+                pos: 16,
+                bucket: 1,
+                last_tokens: vec![next[0]],
+            });
+        }
+        // 4 pages, 2 allocated; both groups need a 3rd page at token
+        // 17 and a 4th at 33 — the pool runs dry mid-decode.
+        s.run_to_completion().unwrap();
+        assert_eq!(s.finished().len(), 2, "both complete after preemption requeue");
+        assert!(s.preemptions >= 1, "backpressure must have preempted");
+        assert_eq!(s.kv.used_pages(), 0);
     }
 }

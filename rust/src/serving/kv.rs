@@ -1,11 +1,26 @@
 //! Paged KV-cache manager (vLLM-style substrate).
 //!
-//! Tracks block-granular KV allocation per request: admission control
-//! reserves pages up to the request's maximum context; pages free on
-//! retirement.  With the tiny AOT models the physical cache tensor is
-//! dense (static shapes), so this manager is the *bookkeeping* layer —
-//! the allocator invariants (no double-use, exact reclamation, capacity
-//! ceiling) are exactly vLLM's and are property-tested.
+//! Tracks block-granular KV allocation per request.  Two allocation
+//! modes coexist:
+//!
+//! * **Reservation-backed** ([`PagedKvManager::reserve`]) — admission
+//!   control holds the request's *worst-case* page demand up front;
+//!   subsequent [`PagedKvManager::extend`] calls draw from the
+//!   reservation, so a request admitted under a reservation can never
+//!   hit [`KvError::OutOfPages`] mid-decode.  Unused reserved pages
+//!   return to the pool via [`PagedKvManager::release_excess`] or a
+//!   full [`PagedKvManager::release`].  This is the scheduler's mode
+//!   (DESIGN.md §2): check-then-allocate admission is exactly the
+//!   deadlock paged-KV systems exist to prevent.
+//! * **Exact** ([`PagedKvManager::register`]) — pages are allocated for
+//!   the current length only and `extend` competes with everyone else
+//!   for the free pool.  Kept for callers that manage pressure
+//!   themselves (and for the property tests that stress the allocator).
+//!
+//! With the tiny AOT models the physical cache tensor is dense (static
+//! shapes), so this manager is the *bookkeeping* layer — the allocator
+//! invariants (no double-use, exact reclamation, capacity ceiling) are
+//! exactly vLLM's and are property-tested.
 
 use std::collections::HashMap;
 
@@ -34,15 +49,24 @@ impl std::fmt::Display for KvError {
 
 impl std::error::Error for KvError {}
 
+/// Per-request page state.
+#[derive(Debug, Clone, Default)]
+struct Entry {
+    /// Pages backing tokens already stored.
+    pages: Vec<PageId>,
+    /// Pages held for future growth (worst-case reservation).
+    reserved: Vec<PageId>,
+    /// Tokens currently stored.
+    stored: usize,
+}
+
 /// Block-granular KV allocator.
 #[derive(Debug, Clone)]
 pub struct PagedKvManager {
     page_tokens: usize,
     free: Vec<PageId>,
     total_pages: usize,
-    tables: HashMap<u64, Vec<PageId>>,
-    /// Tokens currently stored per request (for utilization stats).
-    lengths: HashMap<u64, usize>,
+    entries: HashMap<u64, Entry>,
 }
 
 impl PagedKvManager {
@@ -52,8 +76,7 @@ impl PagedKvManager {
             page_tokens,
             free: (0..total_pages as PageId).rev().collect(),
             total_pages,
-            tables: HashMap::new(),
-            lengths: HashMap::new(),
+            entries: HashMap::new(),
         }
     }
 
@@ -69,14 +92,22 @@ impl PagedKvManager {
         self.total_pages - self.free.len()
     }
 
+    /// Pages currently held in reservations (allocated but not yet
+    /// backing stored tokens), across all requests.
+    pub fn reserved_pages(&self) -> usize {
+        self.entries.values().map(|e| e.reserved.len()).sum()
+    }
+
     /// Can a request needing `tokens` of context be admitted now?
     pub fn can_admit(&self, tokens: usize) -> bool {
         self.pages_for(tokens) <= self.free.len()
     }
 
-    /// Register a request and reserve pages for `initial_tokens`.
+    /// Register a request and allocate pages for `initial_tokens`
+    /// exactly (no reservation; later `extend`s draw from the free
+    /// pool).
     pub fn register(&mut self, req: u64, initial_tokens: usize) -> Result<(), KvError> {
-        if self.tables.contains_key(&req) {
+        if self.entries.contains_key(&req) {
             return Err(KvError::AlreadyRegistered(req));
         }
         let need = self.pages_for(initial_tokens);
@@ -87,75 +118,145 @@ impl PagedKvManager {
             });
         }
         let pages = self.free.split_off(self.free.len() - need);
-        self.tables.insert(req, pages);
-        self.lengths.insert(req, initial_tokens);
+        self.entries.insert(
+            req,
+            Entry {
+                pages,
+                reserved: Vec::new(),
+                stored: initial_tokens,
+            },
+        );
         Ok(())
     }
 
-    /// Grow a request's context by `new_tokens` (decode appends),
-    /// allocating pages as needed.
+    /// Register a request holding its **worst-case** page demand
+    /// (`max_tokens` of context) in reserve, with zero tokens stored.
+    /// Subsequent [`extend`](Self::extend) calls up to `max_tokens`
+    /// are guaranteed to succeed without touching the free pool.
+    pub fn reserve(&mut self, req: u64, max_tokens: usize) -> Result<(), KvError> {
+        if self.entries.contains_key(&req) {
+            return Err(KvError::AlreadyRegistered(req));
+        }
+        let need = self.pages_for(max_tokens);
+        if need > self.free.len() {
+            return Err(KvError::OutOfPages {
+                need,
+                free: self.free.len(),
+            });
+        }
+        let reserved = self.free.split_off(self.free.len() - need);
+        self.entries.insert(
+            req,
+            Entry {
+                pages: Vec::new(),
+                reserved,
+                stored: 0,
+            },
+        );
+        Ok(())
+    }
+
+    /// Pages an `extend(req, new_tokens)` would have to draw from the
+    /// **free pool** — i.e. beyond the request's reservation.  Zero for
+    /// unknown requests (the extend itself will report the error) and
+    /// for reservation-covered growth.  Schedulers use this to turn
+    /// would-be `OutOfPages` failures into backpressure *before*
+    /// mutating any state.
+    pub fn extend_need(&self, req: u64, new_tokens: usize) -> usize {
+        let Some(e) = self.entries.get(&req) else {
+            return 0;
+        };
+        let need_total = self.pages_for(e.stored + new_tokens);
+        need_total
+            .saturating_sub(e.pages.len())
+            .saturating_sub(e.reserved.len())
+    }
+
+    /// Grow a request's context by `new_tokens` (decode appends).
+    /// Pages come from the request's reservation first, then from the
+    /// free pool.
     pub fn extend(&mut self, req: u64, new_tokens: usize) -> Result<(), KvError> {
-        let len = *self
-            .lengths
-            .get(&req)
-            .ok_or(KvError::UnknownRequest(req))?;
-        let target = len + new_tokens;
-        let have = self.tables[&req].len();
+        let free_len = self.free.len();
+        let e = self.entries.get_mut(&req).ok_or(KvError::UnknownRequest(req))?;
+        let target = e.stored + new_tokens;
         let need_total = self.pages_for(target);
-        if need_total > have {
-            let extra = need_total - have;
-            if extra > self.free.len() {
+        if need_total > e.pages.len() {
+            let grow = need_total - e.pages.len();
+            let from_reserved = grow.min(e.reserved.len());
+            let from_free = grow - from_reserved;
+            if from_free > free_len {
                 return Err(KvError::OutOfPages {
-                    need: extra,
-                    free: self.free.len(),
+                    need: from_free,
+                    free: free_len,
                 });
             }
-            let mut pages = self.free.split_off(self.free.len() - extra);
-            self.tables.get_mut(&req).unwrap().append(&mut pages);
+            let start = e.reserved.len() - from_reserved;
+            e.pages.extend(e.reserved.drain(start..));
+            if from_free > 0 {
+                let mut pages = self.free.split_off(free_len - from_free);
+                e.pages.append(&mut pages);
+            }
         }
-        self.lengths.insert(req, target);
+        e.stored = target;
         Ok(())
     }
 
-    /// Release all pages of a finished request.
-    pub fn release(&mut self, req: u64) -> Result<usize, KvError> {
-        let pages = self.tables.remove(&req).ok_or(KvError::UnknownRequest(req))?;
-        self.lengths.remove(&req);
-        let n = pages.len();
-        self.free.extend(pages);
+    /// Return a request's unused reserved pages to the free pool,
+    /// keeping the pages that back stored tokens.  Returns the number
+    /// of pages reclaimed.
+    pub fn release_excess(&mut self, req: u64) -> Result<usize, KvError> {
+        let e = self.entries.get_mut(&req).ok_or(KvError::UnknownRequest(req))?;
+        let n = e.reserved.len();
+        self.free.append(&mut e.reserved);
         Ok(n)
     }
 
-    /// Fraction of reserved page capacity actually holding tokens —
-    /// internal fragmentation (vLLM's motivation).
+    /// Release all pages of a finished request (stored + reserved).
+    pub fn release(&mut self, req: u64) -> Result<usize, KvError> {
+        let mut e = self.entries.remove(&req).ok_or(KvError::UnknownRequest(req))?;
+        let n = e.pages.len() + e.reserved.len();
+        self.free.append(&mut e.pages);
+        self.free.append(&mut e.reserved);
+        Ok(n)
+    }
+
+    /// Fraction of held page capacity (stored-backing + reserved)
+    /// actually holding tokens — internal fragmentation plus
+    /// reservation headroom (vLLM's motivation).
     pub fn occupancy(&self) -> f64 {
-        let reserved_tokens: usize = self
-            .tables
+        let held_tokens: usize = self
+            .entries
             .values()
-            .map(|p| p.len() * self.page_tokens)
+            .map(|e| (e.pages.len() + e.reserved.len()) * self.page_tokens)
             .sum();
-        if reserved_tokens == 0 {
+        if held_tokens == 0 {
             return 1.0;
         }
-        let used_tokens: usize = self.lengths.values().sum();
-        used_tokens as f64 / reserved_tokens as f64
+        let used_tokens: usize = self.entries.values().map(|e| e.stored).sum();
+        used_tokens as f64 / held_tokens as f64
     }
 
     pub fn active_requests(&self) -> usize {
-        self.tables.len()
+        self.entries.len()
     }
 
-    /// Invariant check: page sets are disjoint and account for every
-    /// non-free page (used by property tests).
+    /// Invariant check: page sets (stored-backing, reserved, free) are
+    /// disjoint and account for every page (used by property tests).
     pub fn check_invariants(&self) -> anyhow::Result<()> {
         let mut seen = std::collections::HashSet::new();
         for p in &self.free {
             anyhow::ensure!(seen.insert(*p), "page {p} duplicated in free list");
         }
-        for (req, pages) in &self.tables {
-            for p in pages {
+        for (req, e) in &self.entries {
+            for p in e.pages.iter().chain(e.reserved.iter()) {
                 anyhow::ensure!(seen.insert(*p), "page {p} double-allocated (req {req})");
             }
+            anyhow::ensure!(
+                e.pages.len() == self.pages_for(e.stored),
+                "req {req}: {} pages back {} stored tokens",
+                e.pages.len(),
+                e.stored
+            );
         }
         anyhow::ensure!(
             seen.len() == self.total_pages,
@@ -217,6 +318,7 @@ mod tests {
         let mut kv = PagedKvManager::new(4, 16);
         kv.register(7, 1).unwrap();
         assert_eq!(kv.register(7, 1).unwrap_err(), KvError::AlreadyRegistered(7));
+        assert_eq!(kv.reserve(7, 1).unwrap_err(), KvError::AlreadyRegistered(7));
     }
 
     #[test]
@@ -224,6 +326,7 @@ mod tests {
         let mut kv = PagedKvManager::new(4, 16);
         assert_eq!(kv.extend(9, 1).unwrap_err(), KvError::UnknownRequest(9));
         assert_eq!(kv.release(9).unwrap_err(), KvError::UnknownRequest(9));
+        assert_eq!(kv.release_excess(9).unwrap_err(), KvError::UnknownRequest(9));
     }
 
     #[test]
@@ -238,8 +341,82 @@ mod tests {
     fn failed_register_leaves_state_clean() {
         let mut kv = PagedKvManager::new(2, 16);
         assert!(kv.register(1, 100).is_err());
+        assert!(kv.reserve(1, 100).is_err());
         assert_eq!(kv.active_requests(), 0);
         assert_eq!(kv.free_pages(), 2);
         kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn reserve_holds_worst_case_and_extend_draws_from_it() {
+        let mut kv = PagedKvManager::new(8, 16);
+        kv.reserve(1, 48).unwrap(); // worst case: 3 pages held
+        assert_eq!(kv.used_pages(), 3);
+        assert_eq!(kv.reserved_pages(), 3);
+        assert_eq!(kv.free_pages(), 5);
+        kv.check_invariants().unwrap();
+
+        // Committing the prompt moves pages out of the reservation
+        // without touching the free pool.
+        kv.extend(1, 20).unwrap(); // 2 pages backing, 1 still reserved
+        assert_eq!(kv.used_pages(), 3);
+        assert_eq!(kv.reserved_pages(), 1);
+        assert_eq!(kv.free_pages(), 5);
+        assert_eq!(kv.extend_need(1, 12), 0); // covered by the reservation
+
+        // A competitor can take every free page; the reserved request
+        // still extends to its maximum without OutOfPages.
+        kv.register(2, 80).unwrap(); // 5 pages: pool exhausted
+        assert_eq!(kv.free_pages(), 0);
+        kv.extend(1, 28).unwrap(); // 48 tokens total: exactly the reservation
+        assert_eq!(kv.reserved_pages(), 0);
+        kv.check_invariants().unwrap();
+        assert_eq!(kv.release(1).unwrap(), 3);
+        assert_eq!(kv.release(2).unwrap(), 5);
+        assert_eq!(kv.used_pages(), 0);
+    }
+
+    #[test]
+    fn extend_beyond_reservation_falls_back_to_free_pool() {
+        let mut kv = PagedKvManager::new(4, 16);
+        kv.reserve(1, 16).unwrap(); // 1 page reserved
+        assert_eq!(kv.extend_need(1, 40), 2); // needs 3 pages, holds 1
+        kv.extend(1, 40).unwrap(); // 3 pages: 1 reserved + 2 free
+        assert_eq!(kv.used_pages(), 3);
+        assert_eq!(kv.reserved_pages(), 0);
+        kv.check_invariants().unwrap();
+        // Past the pool (40 + 64 tokens -> 7 pages, 4 more than held):
+        // fails cleanly, state intact.
+        assert_eq!(
+            kv.extend(1, 64).unwrap_err(),
+            KvError::OutOfPages { need: 4, free: 1 }
+        );
+        kv.check_invariants().unwrap();
+        assert_eq!(kv.release(1).unwrap(), 3);
+    }
+
+    #[test]
+    fn release_excess_returns_only_unused_reservation() {
+        let mut kv = PagedKvManager::new(8, 16);
+        kv.reserve(1, 64).unwrap(); // 4 pages held
+        kv.extend(1, 17).unwrap(); // 2 backing, 2 reserved
+        assert_eq!(kv.release_excess(1).unwrap(), 2);
+        assert_eq!(kv.used_pages(), 2);
+        assert_eq!(kv.reserved_pages(), 0);
+        assert_eq!(kv.free_pages(), 6);
+        kv.check_invariants().unwrap();
+        // The request is still live and can grow — from the free pool.
+        kv.extend(1, 32).unwrap();
+        assert_eq!(kv.release(1).unwrap(), 4);
+        assert_eq!(kv.used_pages(), 0);
+    }
+
+    #[test]
+    fn occupancy_counts_reservation_headroom() {
+        let mut kv = PagedKvManager::new(10, 16);
+        kv.reserve(1, 64).unwrap(); // 4 pages held, 0 tokens stored
+        assert!(kv.occupancy() < 1e-9);
+        kv.extend(1, 32).unwrap(); // 32 of 64 token capacity
+        assert!((kv.occupancy() - 0.5).abs() < 1e-9, "{}", kv.occupancy());
     }
 }

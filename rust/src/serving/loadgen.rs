@@ -1,0 +1,588 @@
+//! Arrival-driven load generator over the serving scheduler
+//! (`taxbreak loadgen`).
+//!
+//! Drives the reservation-backed scheduler with a Poisson arrival
+//! process and configurable prompt/output-length distributions, for a
+//! mix of models (dense vs MoE — the paper's §V-A contrast), and
+//! reports throughput, TTFT/TPOT, KV occupancy and per-phase HDBI.
+//! Statistics reuse [`Summary`] for latency distributions and
+//! [`Welford`] for the streaming KV-occupancy track; rendering reuses
+//! `util::table` like `taxbreak::report`.
+//!
+//! The generator is closed over the backend's *virtual* clock: idle
+//! gaps between arrivals advance the clock via
+//! [`ModelBackend::wait_until_us`], so offered load (not just service
+//! time) shapes TTFT — the host-bound serving story the paper's
+//! framework-tax analysis targets.
+
+use std::collections::VecDeque;
+
+use crate::runtime::backend::Backend;
+use crate::serving::batcher::{ModelBackend, StallGuard};
+use crate::serving::{event_split, hdbi_of, prompt_token_bound, Request, Scheduler, SchedulerConfig};
+use crate::trace::{EventKind, Trace};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::stats::{Summary, Welford};
+use crate::util::table::{ms, ratio, Table};
+
+/// A length distribution for prompts or decode budgets.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LenDist {
+    /// Uniform over `lo..=hi`.
+    Uniform { lo: usize, hi: usize },
+    /// Log-normal with the given median and shape (right-skewed, like
+    /// production prompt mixes); samples round to ≥ 1.
+    LogNormal { median: f64, sigma: f64 },
+}
+
+impl LenDist {
+    /// Parse `uniform:LO:HI` or `lognormal:MEDIAN:SIGMA`.
+    pub fn parse(s: &str) -> anyhow::Result<LenDist> {
+        let parts: Vec<&str> = s.split(':').collect();
+        match parts.as_slice() {
+            ["uniform", lo, hi] => {
+                let lo: usize = lo
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad uniform lo '{lo}'"))?;
+                let hi: usize = hi
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad uniform hi '{hi}'"))?;
+                anyhow::ensure!(lo >= 1 && lo <= hi, "uniform needs 1 <= lo <= hi, got {lo}:{hi}");
+                Ok(LenDist::Uniform { lo, hi })
+            }
+            ["lognormal", med, sigma] => {
+                let median: f64 = med
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad lognormal median '{med}'"))?;
+                let sigma: f64 = sigma
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad lognormal sigma '{sigma}'"))?;
+                anyhow::ensure!(median >= 1.0 && sigma >= 0.0, "lognormal needs median >= 1, sigma >= 0");
+                Ok(LenDist::LogNormal { median, sigma })
+            }
+            _ => anyhow::bail!(
+                "length distribution must be uniform:LO:HI or lognormal:MEDIAN:SIGMA, got '{s}'"
+            ),
+        }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        match *self {
+            LenDist::Uniform { lo, hi } => lo + rng.below(hi - lo + 1),
+            LenDist::LogNormal { median, sigma } => {
+                rng.lognormal_med(median, sigma).round().max(1.0) as usize
+            }
+        }
+    }
+
+    pub fn describe(&self) -> String {
+        match *self {
+            LenDist::Uniform { lo, hi } => format!("uniform:{lo}:{hi}"),
+            LenDist::LogNormal { median, sigma } => format!("lognormal:{median}:{sigma}"),
+        }
+    }
+}
+
+/// Load-generation parameters.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Requests per model.
+    pub requests: usize,
+    /// Mean Poisson arrival rate, requests per second of virtual time;
+    /// 0 sends everything at t = 0 (closed loop).
+    pub rate_per_s: f64,
+    pub prompt_len: LenDist,
+    pub output_len: LenDist,
+    pub seed: u64,
+    pub sched: SchedulerConfig,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            requests: 100,
+            rate_per_s: 1000.0,
+            prompt_len: LenDist::Uniform { lo: 8, hi: 48 },
+            output_len: LenDist::Uniform { lo: 4, hi: 12 },
+            seed: 2026,
+            sched: SchedulerConfig::default(),
+        }
+    }
+}
+
+/// Generate the arrival-stamped request mix.  Prompt tokens draw from
+/// `[0, prompt_vocab)` — callers pass the backend vocab *minus the
+/// reserved pad id*.  Lengths clamp to the backend's `max_seq` budget.
+pub fn generate_workload(
+    cfg: &LoadgenConfig,
+    prompt_vocab: usize,
+    max_seq: usize,
+) -> Vec<Request> {
+    let mut rng = Rng::new(cfg.seed).fork_str("loadgen");
+    let mut t_us = 0.0f64;
+    (0..cfg.requests as u64)
+        .map(|id| {
+            if cfg.rate_per_s > 0.0 {
+                // Exponential inter-arrival times (Poisson process).
+                let u = rng.next_f64();
+                t_us += -(1.0 - u).ln() / cfg.rate_per_s * 1e6;
+            }
+            let prompt_cap = max_seq.saturating_sub(2).max(1);
+            let prompt_len = cfg.prompt_len.sample(&mut rng).clamp(1, prompt_cap);
+            let budget = max_seq.saturating_sub(prompt_len + 1);
+            let max_new = cfg.output_len.sample(&mut rng).clamp(1, budget.max(1));
+            let prompt: Vec<i32> = (0..prompt_len)
+                .map(|_| rng.below(prompt_vocab) as i32)
+                .collect();
+            Request {
+                id,
+                prompt,
+                max_new_tokens: max_new,
+                arrival_us: t_us,
+            }
+        })
+        .collect()
+}
+
+/// Host/device split of one serving phase (prefill or decode).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhaseSplit {
+    pub phase: &'static str,
+    /// Σ host preparation time (`AtenOp` spans), us.
+    pub host_us: f64,
+    /// Σ execute-call + device computation time, us.
+    pub device_us: f64,
+    pub kernels: usize,
+}
+
+impl PhaseSplit {
+    pub fn hdbi(&self) -> f64 {
+        hdbi_of(self.host_us, self.device_us)
+    }
+}
+
+/// Split a serving trace into per-phase host/device totals, classifying
+/// each invocation (correlation-id group) by its `TorchOp` name.
+pub fn per_phase_split(trace: &Trace) -> Vec<PhaseSplit> {
+    let mut phases = [
+        PhaseSplit { phase: "prefill", host_us: 0.0, device_us: 0.0, kernels: 0 },
+        PhaseSplit { phase: "decode", host_us: 0.0, device_us: 0.0, kernels: 0 },
+    ];
+    let mut phase_of = std::collections::HashMap::new();
+    for e in &trace.events {
+        if e.kind == EventKind::TorchOp {
+            if let Some(i) = phases.iter().position(|p| e.name.contains(p.phase)) {
+                phase_of.insert(e.correlation_id, i);
+            }
+        }
+    }
+    for e in &trace.events {
+        let Some(&i) = phase_of.get(&e.correlation_id) else {
+            continue;
+        };
+        let (host, dev, kernels) = event_split(e);
+        phases[i].host_us += host;
+        phases[i].device_us += dev;
+        phases[i].kernels += kernels;
+    }
+    phases.to_vec()
+}
+
+/// Outcome of one model's load run.
+#[derive(Debug, Clone)]
+pub struct ModelRun {
+    pub model: String,
+    pub variant: String,
+    pub moe: bool,
+    /// Requests served to completion (excludes rejected ones).
+    pub completed: usize,
+    /// Requests the scheduler refused as unservable
+    /// (`RequestState::rejected`, e.g. prompt longer than the context
+    /// window).
+    pub rejected: usize,
+    pub iterations: usize,
+    pub preemptions: usize,
+    /// Requests injected before their scheduled arrival because the
+    /// backend clock could not jump forward (wall-clock backends).
+    /// Non-zero means the configured arrival rate was not honored and
+    /// the run degraded toward closed-loop.
+    pub late_arrivals: usize,
+    pub wall_us: f64,
+    pub tokens_generated: usize,
+    pub ttft_us: Summary,
+    pub tpot_us: Summary,
+    /// Streaming KV pool utilization (used pages / total), sampled once
+    /// per scheduler iteration.
+    pub kv_occupancy_mean: f64,
+    pub kv_occupancy_max: f64,
+    pub phases: Vec<PhaseSplit>,
+}
+
+impl ModelRun {
+    pub fn orchestration_us(&self) -> f64 {
+        self.phases.iter().map(|p| p.host_us).sum()
+    }
+
+    pub fn device_us(&self) -> f64 {
+        self.phases.iter().map(|p| p.device_us).sum()
+    }
+
+    pub fn hdbi(&self) -> f64 {
+        hdbi_of(self.orchestration_us(), self.device_us())
+    }
+
+    pub fn throughput_tps(&self) -> f64 {
+        if self.wall_us <= 0.0 {
+            0.0
+        } else {
+            self.tokens_generated as f64 / (self.wall_us / 1e6)
+        }
+    }
+
+    fn phase(&self, name: &str) -> Option<&PhaseSplit> {
+        self.phases.iter().find(|p| p.phase == name)
+    }
+}
+
+/// Full loadgen report: one run per model plus the workload echo.
+#[derive(Debug, Clone)]
+pub struct LoadgenReport {
+    pub platform: String,
+    pub requests: usize,
+    pub rate_per_s: f64,
+    pub prompt_len: LenDist,
+    pub output_len: LenDist,
+    pub seed: u64,
+    pub runs: Vec<ModelRun>,
+}
+
+impl LoadgenReport {
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "== loadgen ({} requests/model, {}, prompt {}, output {}, seed {}, {}) ==\n",
+            self.requests,
+            if self.rate_per_s > 0.0 {
+                format!("{:.0} req/s", self.rate_per_s)
+            } else {
+                "closed-loop".to_string()
+            },
+            self.prompt_len.describe(),
+            self.output_len.describe(),
+            self.seed,
+            self.platform,
+        );
+        let mut t = Table::new(
+            "per-model serving KPIs",
+            &[
+                "model", "kind", "done", "tok/s", "TTFT p50(ms)", "TTFT p95(ms)",
+                "TPOT p50(ms)", "HDBI", "HDBI pf", "HDBI dec", "KV occ", "preempt",
+            ],
+        );
+        for r in &self.runs {
+            t.row(vec![
+                r.model.clone(),
+                if r.moe { "moe" } else { "dense" }.to_string(),
+                r.completed.to_string(),
+                format!("{:.1}", r.throughput_tps()),
+                ms(r.ttft_us.p50 / 1000.0),
+                ms(r.ttft_us.p95 / 1000.0),
+                ms(r.tpot_us.p50 / 1000.0),
+                ratio(r.hdbi()),
+                r.phase("prefill").map(|p| ratio(p.hdbi())).unwrap_or_default(),
+                r.phase("decode").map(|p| ratio(p.hdbi())).unwrap_or_default(),
+                format!("{:.0}%/{:.0}%", 100.0 * r.kv_occupancy_mean, 100.0 * r.kv_occupancy_max),
+                r.preemptions.to_string(),
+            ]);
+        }
+        out.push_str(&t.render());
+        for r in &self.runs {
+            out.push_str(&format!(
+                "-- {} ({}) --\n\
+                 iterations        {}\n\
+                 tokens generated  {}\n\
+                 wall              {:.1} ms\n\
+                 TTFT mean/p95     {:.2} / {:.2} ms\n\
+                 TPOT mean/p95     {:.2} / {:.2} ms\n\
+                 orchestration     {:.2} ms | device {:.2} ms | HDBI {:.2}\n",
+                r.variant,
+                if r.moe { "moe" } else { "dense" },
+                r.iterations,
+                r.tokens_generated,
+                r.wall_us / 1000.0,
+                r.ttft_us.mean / 1000.0,
+                r.ttft_us.p95 / 1000.0,
+                r.tpot_us.mean / 1000.0,
+                r.tpot_us.p95 / 1000.0,
+                r.orchestration_us() / 1000.0,
+                r.device_us() / 1000.0,
+                r.hdbi(),
+            ));
+            if r.rejected > 0 {
+                out.push_str(&format!(
+                    "  WARNING: {} requests rejected as unservable (prompt \
+                     exceeds the context window)\n",
+                    r.rejected
+                ));
+            }
+            if r.late_arrivals > 0 {
+                out.push_str(&format!(
+                    "  WARNING: {} arrivals injected early (wall-clock backend \
+                     cannot honor the configured rate)\n",
+                    r.late_arrivals
+                ));
+            }
+            for p in &r.phases {
+                out.push_str(&format!(
+                    "  {:<8} host {:>10.2} ms  device {:>10.2} ms  kernels {:>6}  HDBI {:.2}\n",
+                    p.phase,
+                    p.host_us / 1000.0,
+                    p.device_us / 1000.0,
+                    p.kernels,
+                    p.hdbi(),
+                ));
+            }
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut runs: Vec<Json> = Vec::new();
+        for r in &self.runs {
+            let mut phases: Vec<Json> = Vec::new();
+            for p in &r.phases {
+                phases.push(
+                    Json::obj()
+                        .with("phase", p.phase)
+                        .with("host_us", p.host_us)
+                        .with("device_us", p.device_us)
+                        .with("kernels", p.kernels)
+                        .with("hdbi", p.hdbi()),
+                );
+            }
+            runs.push(
+                Json::obj()
+                    .with("model", r.model.as_str())
+                    .with("variant", r.variant.as_str())
+                    .with("moe", r.moe)
+                    .with("completed", r.completed)
+                    .with("rejected", r.rejected)
+                    .with("iterations", r.iterations)
+                    .with("preemptions", r.preemptions)
+                    .with("late_arrivals", r.late_arrivals)
+                    .with("wall_us", r.wall_us)
+                    .with("tokens_generated", r.tokens_generated)
+                    .with("throughput_tps", r.throughput_tps())
+                    .with("ttft_mean_us", r.ttft_us.mean)
+                    .with("ttft_p50_us", r.ttft_us.p50)
+                    .with("ttft_p95_us", r.ttft_us.p95)
+                    .with("tpot_mean_us", r.tpot_us.mean)
+                    .with("tpot_p50_us", r.tpot_us.p50)
+                    .with("tpot_p95_us", r.tpot_us.p95)
+                    .with("kv_occupancy_mean", r.kv_occupancy_mean)
+                    .with("kv_occupancy_max", r.kv_occupancy_max)
+                    .with("hdbi", r.hdbi())
+                    .with("phases", phases),
+            );
+        }
+        Json::obj()
+            .with("platform", self.platform.as_str())
+            .with("requests", self.requests)
+            .with("rate_per_s", self.rate_per_s)
+            .with("prompt_len", self.prompt_len.describe())
+            .with("output_len", self.output_len.describe())
+            .with("seed", self.seed)
+            .with("runs", runs)
+    }
+}
+
+/// Drive one backend through an arrival-stamped workload; the requests
+/// must be sorted by `arrival_us` (as [`generate_workload`] emits).
+pub fn drive<B: Backend>(
+    backend: B,
+    sched: SchedulerConfig,
+    requests: Vec<Request>,
+) -> anyhow::Result<ModelRun> {
+    let variant = backend.variant().to_string();
+    let total_pages = sched.kv_pages.max(1) as f64;
+    let mut queue: VecDeque<Request> = requests.into();
+    let mut s = Scheduler::new(backend, sched);
+    let mut occ = Welford::default();
+    let mut occ_max = 0.0f64;
+    let mut guard = StallGuard::default();
+    let mut late_arrivals = 0usize;
+
+    while !(queue.is_empty() && s.is_idle()) {
+        let now = s.backend.now_us();
+        while queue.front().is_some_and(|r| r.arrival_us <= now) {
+            s.submit(queue.pop_front().unwrap());
+        }
+        if s.is_idle() {
+            if let Some(front) = queue.front() {
+                s.backend.wait_until_us(front.arrival_us);
+                if s.backend.now_us() < front.arrival_us {
+                    // Wall-clock backend: it cannot jump forward, so
+                    // treat the request as arriving now instead of
+                    // busy-spinning — and count the distortion so the
+                    // report can flag that the offered rate degraded.
+                    late_arrivals += 1;
+                    let mut r = queue.pop_front().unwrap();
+                    r.arrival_us = s.backend.now_us();
+                    s.submit(r);
+                }
+            }
+            continue;
+        }
+        s.step()?;
+        // Same stall policy as `run_to_completion`: a request whose
+        // worst case can never fit the pool must error, not spin.
+        guard.observe(s.progress_marker(), || {
+            format!(
+                "loadgen: {} in flight, {} queued, {} kv pages free",
+                s.pending(),
+                queue.len(),
+                s.kv.free_pages()
+            )
+        })?;
+        let used = s.kv.used_pages() as f64 / total_pages;
+        occ.push(used);
+        occ_max = occ_max.max(used);
+    }
+
+    let iterations = s.iterations;
+    let preemptions = s.preemptions;
+    // Scalar summaries come off the borrowed slice — no need to clone
+    // every prompt/token buffer.
+    let finished = s.finished();
+    let ttfts: Vec<f64> = finished.iter().filter_map(|f| f.ttft_us()).collect();
+    let tpots: Vec<f64> = finished.iter().filter_map(|f| f.tpot_us()).collect();
+    let tokens: usize = finished.iter().map(|f| f.generated.len()).sum();
+    let rejected = finished.iter().filter(|f| f.rejected).count();
+    let completed = finished.len() - rejected;
+    let trace = s.backend.take_trace();
+    let phases = per_phase_split(&trace);
+
+    Ok(ModelRun {
+        model: String::new(), // caller fills in the catalog name
+        variant,
+        moe: false,
+        completed,
+        rejected,
+        iterations,
+        preemptions,
+        late_arrivals,
+        wall_us: trace.meta.wall_us,
+        tokens_generated: tokens,
+        ttft_us: Summary::of(&ttfts),
+        tpot_us: Summary::of(&tpots),
+        kv_occupancy_mean: occ.mean(),
+        kv_occupancy_max: occ_max,
+        phases,
+    })
+}
+
+/// Run the load generator over the simulated engine for each named
+/// model (e.g. a dense/MoE mix) on one platform.
+pub fn run_sim_loadgen(
+    model_names: &[String],
+    platform_name: &str,
+    cfg: &LoadgenConfig,
+) -> anyhow::Result<LoadgenReport> {
+    anyhow::ensure!(!model_names.is_empty(), "loadgen needs at least one model");
+    anyhow::ensure!(cfg.requests > 0, "loadgen needs at least one request");
+    anyhow::ensure!(
+        cfg.rate_per_s >= 0.0 && cfg.rate_per_s.is_finite(),
+        "--rate must be a finite, non-negative number (0 = closed loop)"
+    );
+    anyhow::ensure!(cfg.sched.kv_page_tokens >= 1, "--kv-page-tokens must be >= 1");
+    anyhow::ensure!(cfg.sched.kv_pages >= 1, "--kv-pages must be >= 1");
+    anyhow::ensure!(cfg.sched.max_batch >= 1, "--max-batch must be >= 1");
+    anyhow::ensure!(cfg.sched.max_groups >= 1, "--max-groups must be >= 1");
+    let platform = crate::hardware::Platform::by_name(platform_name)?;
+    let mut runs = Vec::new();
+    for name in model_names {
+        let model = crate::models::by_name(name)?;
+        let moe = model.is_moe();
+        let engine =
+            crate::runtime::SimEngine::with_defaults(model, platform.clone(), cfg.seed);
+        // Identical arrival trace and lengths for every model; prompt
+        // tokens draw below the pad-aware bound.
+        let vocab = Backend::vocab(&engine);
+        let max_seq = ModelBackend::max_seq(&engine);
+        let workload = generate_workload(cfg, prompt_token_bound(&engine, vocab)?, max_seq);
+        let mut run = drive(engine, cfg.sched, workload)?;
+        run.model = name.clone();
+        run.moe = moe;
+        runs.push(run);
+    }
+    Ok(LoadgenReport {
+        platform: platform_name.to_string(),
+        requests: cfg.requests,
+        rate_per_s: cfg.rate_per_s,
+        prompt_len: cfg.prompt_len,
+        output_len: cfg.output_len,
+        seed: cfg.seed,
+        runs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn len_dist_parses_and_describes() {
+        assert_eq!(
+            LenDist::parse("uniform:8:48").unwrap(),
+            LenDist::Uniform { lo: 8, hi: 48 }
+        );
+        assert_eq!(
+            LenDist::parse("lognormal:24:0.5").unwrap(),
+            LenDist::LogNormal { median: 24.0, sigma: 0.5 }
+        );
+        assert_eq!(LenDist::parse("uniform:8:48").unwrap().describe(), "uniform:8:48");
+        assert!(LenDist::parse("uniform:9:2").is_err());
+        assert!(LenDist::parse("uniform:0:4").is_err());
+        assert!(LenDist::parse("gauss:1:2").is_err());
+        assert!(LenDist::parse("uniform:x:4").is_err());
+    }
+
+    #[test]
+    fn len_dist_samples_in_range() {
+        let mut rng = Rng::new(5);
+        let d = LenDist::Uniform { lo: 3, hi: 9 };
+        for _ in 0..200 {
+            assert!((3..=9).contains(&d.sample(&mut rng)));
+        }
+        let ln = LenDist::LogNormal { median: 20.0, sigma: 0.3 };
+        for _ in 0..200 {
+            assert!(ln.sample(&mut rng) >= 1);
+        }
+    }
+
+    #[test]
+    fn workload_arrivals_are_monotone_and_poisson_spaced() {
+        let cfg = LoadgenConfig { requests: 50, rate_per_s: 1000.0, ..Default::default() };
+        let w = generate_workload(&cfg, 250, 128);
+        assert_eq!(w.len(), 50);
+        for pair in w.windows(2) {
+            assert!(pair[1].arrival_us >= pair[0].arrival_us);
+        }
+        assert!(w.last().unwrap().arrival_us > 0.0);
+        for r in &w {
+            assert!(r.prompt.len() + r.max_new_tokens < 128);
+            assert!(r.prompt.iter().all(|&t| (0..250).contains(&t)));
+        }
+        // Closed loop: everything lands at t = 0.
+        let closed = LoadgenConfig { requests: 5, rate_per_s: 0.0, ..Default::default() };
+        assert!(generate_workload(&closed, 250, 128).iter().all(|r| r.arrival_us == 0.0));
+    }
+
+    #[test]
+    fn workload_is_deterministic_per_seed() {
+        let cfg = LoadgenConfig::default();
+        assert_eq!(generate_workload(&cfg, 250, 128), generate_workload(&cfg, 250, 128));
+        let other = LoadgenConfig { seed: 1, ..LoadgenConfig::default() };
+        assert_ne!(generate_workload(&cfg, 250, 128), generate_workload(&other, 250, 128));
+    }
+}

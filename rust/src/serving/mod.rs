@@ -1,5 +1,6 @@
 //! Serving layer: request model, paged-KV manager, continuous batcher,
-//! and the serving demo that drives a runtime [`Backend`].
+//! the serving demo that drives a runtime [`Backend`], and the
+//! arrival-driven load generator ([`loadgen`], `taxbreak loadgen`).
 //!
 //! This is the vLLM/Orca-style substrate the paper's workloads sit on
 //! (§II-A): admission control against a paged KV pool, iteration-level
@@ -11,16 +12,62 @@
 
 pub mod batcher;
 pub mod kv;
+pub mod loadgen;
 pub mod request;
 
 pub use batcher::{ModelBackend, Scheduler, SchedulerConfig};
 pub use kv::PagedKvManager;
+pub use loadgen::{run_sim_loadgen, LenDist, LoadgenConfig, LoadgenReport};
 pub use request::{synthetic_requests, Request, RequestState};
 
 use crate::runtime::backend::Backend;
-use crate::trace::{EventKind, Trace};
+use crate::trace::{EventKind, Trace, TraceEvent};
 use crate::util::json::Json;
 use crate::util::stats::Summary;
+
+/// Eq. 3 (HDBI) on one host/device time pair; 0.5 when nothing was
+/// observed.  The single implementation behind [`ServeSummary`],
+/// [`loadgen::PhaseSplit`] and [`loadgen::ModelRun`].
+pub fn hdbi_of(host_us: f64, device_us: f64) -> f64 {
+    let total = host_us + device_us;
+    if total == 0.0 {
+        0.5
+    } else {
+        device_us / total
+    }
+}
+
+/// Host/device attribution of one trace event under the serving split
+/// (see [`real_trace_split`] for the rationale): returns
+/// `(host_us, device_us, kernel_count)`.
+pub fn event_split(e: &TraceEvent) -> (f64, f64, usize) {
+    match e.kind {
+        EventKind::AtenOp => (e.dur_us, 0.0, 0),
+        EventKind::RuntimeApi => (0.0, e.dur_us, 0),
+        EventKind::Kernel => (0.0, e.dur_us, 1),
+        _ => (0.0, 0.0, 0),
+    }
+}
+
+/// Upper bound (exclusive) for prompt-content token draws: the
+/// backend's vocabulary with its pad id carved out.  Pad ids outside
+/// `[0, vocab)` (the mock's `-1` sentinel) need no carve-out; in-vocab
+/// pad ids must sit at the top of the range (the engines' convention)
+/// so the exclusion stays expressible as a bound — anything else is an
+/// error, since a range draw could then emit the pad as content.
+pub fn prompt_token_bound<M: ModelBackend>(backend: &M, vocab: usize) -> anyhow::Result<usize> {
+    let pad = backend.pad_id();
+    if pad < 0 || pad as usize >= vocab {
+        Ok(vocab.max(1))
+    } else {
+        anyhow::ensure!(
+            pad as usize == vocab - 1,
+            "in-vocab pad id {pad} must be the top vocab id {} so prompt draws can exclude it",
+            vocab - 1
+        );
+        Ok((vocab - 1).max(1))
+    }
+}
 
 #[cfg(feature = "real-pjrt")]
 use crate::runtime::Engine;
@@ -44,6 +91,12 @@ impl ModelBackend for Engine {
         Engine::decode_buckets(self)
     }
 
+    fn pad_id(&self) -> i32 {
+        // Top vocab id reserved for padding: a valid embedding index
+        // that workload generation never emits as prompt content.
+        (self.config().vocab - 1) as i32
+    }
+
     fn prefill_group(
         &mut self,
         prompts: &[Vec<i32>],
@@ -65,9 +118,11 @@ impl ModelBackend for Engine {
         pos: usize,
         tokens: &[i32],
     ) -> anyhow::Result<(Vec<i32>, EngineCache)> {
-        // Pad/trim the token vector to the cache's compiled bucket.
+        // Pad/trim the token vector to the cache's compiled bucket
+        // (unused slots carry the reserved pad id).
+        let pad = self.pad_id();
         let mut toks = tokens.to_vec();
-        toks.resize(cache.bucket, 0);
+        toks.resize(cache.bucket, pad);
         let out = self.decode(cache.literal, pos, &toks)?;
         let next = out
             .logits
@@ -129,12 +184,7 @@ pub struct ServeSummary {
 
 impl ServeSummary {
     pub fn hdbi(&self) -> f64 {
-        let total = self.orchestration_us + self.device_us;
-        if total == 0.0 {
-            0.5
-        } else {
-            self.device_us / total
-        }
+        hdbi_of(self.orchestration_us, self.device_us)
     }
 
     pub fn throughput_tps(&self) -> f64 {
@@ -211,15 +261,10 @@ pub fn real_trace_split(trace: &Trace) -> (f64, f64, usize) {
     let mut dev = 0.0;
     let mut n = 0usize;
     for e in &trace.events {
-        match e.kind {
-            EventKind::AtenOp => host += e.dur_us,
-            EventKind::RuntimeApi => dev += e.dur_us,
-            EventKind::Kernel => {
-                dev += e.dur_us;
-                n += 1;
-            }
-            _ => {}
-        }
+        let (h, d, k) = event_split(e);
+        host += h;
+        dev += d;
+        n += k;
     }
     (host, dev, n)
 }
@@ -233,7 +278,9 @@ pub fn serve_with<B: Backend>(
     max_batch: usize,
     seed: u64,
 ) -> anyhow::Result<ServeSummary> {
-    let vocab = backend.vocab();
+    // Prompts draw below the pad-aware bound so padding can never
+    // collide with content.
+    let vocab = prompt_token_bound(&backend, backend.vocab())?;
     let max_seq = backend.max_seq();
     let variant = backend.variant().to_string();
 
@@ -311,4 +358,34 @@ pub fn run_server_demo(
 ) -> anyhow::Result<ServeSummary> {
     let engine = Engine::load(artifacts_dir, variant)?;
     serve_with(engine, n_requests, max_batch, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::batcher::mock_backend::MockBackend;
+
+    #[test]
+    fn hdbi_of_shapes() {
+        assert_eq!(hdbi_of(0.0, 0.0), 0.5);
+        assert_eq!(hdbi_of(1.0, 3.0), 0.75);
+        assert!(hdbi_of(1e9, 1.0) > 0.0);
+    }
+
+    #[test]
+    fn prompt_token_bound_respects_pad_conventions() {
+        // Mock pad (-1) sits outside the vocab: nothing carved out.
+        let mock = MockBackend::new();
+        assert_eq!(prompt_token_bound(&mock, 251).unwrap(), 251);
+        // SimEngine reserves the top vocab id.
+        let engine = crate::runtime::SimEngine::with_defaults(
+            crate::models::gpt2(),
+            crate::hardware::Platform::h200(),
+            1,
+        );
+        let vocab = Backend::vocab(&engine);
+        assert_eq!(prompt_token_bound(&engine, vocab).unwrap(), vocab - 1);
+        // An in-vocab pad anywhere else is an error, not a panic.
+        assert!(prompt_token_bound(&engine, vocab + 10).is_err());
+    }
 }

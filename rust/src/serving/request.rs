@@ -21,6 +21,9 @@ pub struct RequestState {
     pub first_token_us: Option<f64>,
     /// Set when the request completes, us.
     pub finish_us: Option<f64>,
+    /// The request was unservable (e.g. its prompt exceeds the
+    /// backend's context window) and finished without running.
+    pub rejected: bool,
 }
 
 impl RequestState {
@@ -30,6 +33,7 @@ impl RequestState {
             generated: Vec::new(),
             first_token_us: None,
             finish_us: None,
+            rejected: false,
         }
     }
 

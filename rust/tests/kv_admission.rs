@@ -1,0 +1,191 @@
+//! Regression + property coverage for reservation-backed KV admission
+//! (DESIGN.md §2).
+//!
+//! The seed scheduler *checked* worst-case KV demand at admission
+//! (`padded_len + max_new_tokens`) but *allocated* only the prompt
+//! pages, so a group admitted later could steal pages an earlier group
+//! needed for decode, and the resulting `OutOfPages` was a fatal
+//! mid-run error.  `deadlock_regression_*` reproduces exactly that
+//! workload: it fails against the seed admission logic and passes with
+//! reservations.
+
+use taxbreak::prop_assert;
+use taxbreak::serving::batcher::mock_backend::MockBackend;
+use taxbreak::serving::{PagedKvManager, Request, Scheduler, SchedulerConfig};
+use taxbreak::util::prop::forall;
+
+fn request(id: u64, prompt_len: usize, max_new: usize) -> Request {
+    Request {
+        id,
+        prompt: vec![3; prompt_len],
+        max_new_tokens: max_new,
+        arrival_us: 0.0,
+    }
+}
+
+/// Two single-member groups against a 4-page pool, each needing 3
+/// pages worst-case (prompt 16 + budget 32 at 16 tokens/page).
+///
+/// Seed behavior: group 0 admitted (worst 3 <= free 4) but only 1
+/// prompt page allocated; group 1's check then also passes (3 <= 3),
+/// and both groups run out of pages mid-decode at token 33 —
+/// `run_to_completion` died with `out of KV pages`.  With reservations
+/// group 1 waits, and both complete.
+#[test]
+fn deadlock_regression_two_groups_tight_kv() {
+    let cfg = SchedulerConfig {
+        max_batch: 1,
+        max_groups: 2,
+        kv_pages: 4,
+        kv_page_tokens: 16,
+    };
+    let mut s = Scheduler::new(MockBackend::new(), cfg);
+    s.submit(request(0, 16, 32));
+    s.submit(request(1, 16, 32));
+    s.step().unwrap();
+    assert_eq!(s.pending(), 2, "both requests still in flight");
+    assert!(s.finished().is_empty());
+    // Reservation-backed admission must serialize the two groups: the
+    // second request's worst case (3 pages) cannot fit next to the
+    // first's reservation.
+    assert_eq!(s.active_group_shapes().len(), 1, "second group must wait");
+    s.run_to_completion().unwrap();
+    assert_eq!(s.finished().len(), 2);
+    for f in s.finished() {
+        assert_eq!(f.generated.len(), 32, "full decode budget delivered");
+    }
+    assert_eq!(s.kv.used_pages(), 0, "all pages reclaimed");
+    assert_eq!(s.preemptions, 0, "reservations prevent backpressure entirely");
+}
+
+/// The same failure mode at the allocator level: check-only admission
+/// (register prompt pages, extend later) deadlocks a pool that
+/// reservations would have serialized.
+#[test]
+fn check_only_admission_exhausts_pool_reservations_do_not() {
+    // Seed-style: both requests register prompt pages only.
+    let mut kv = PagedKvManager::new(4, 16);
+    kv.register(0, 16).unwrap();
+    kv.register(1, 16).unwrap();
+    kv.extend(0, 16).unwrap(); // token 32: page 2 of 2 free pages
+    kv.extend(1, 16).unwrap();
+    // Token 33 needs a 3rd page each — pool is dry: the seed scheduler
+    // turned this into a fatal mid-run error.
+    assert!(kv.extend(0, 1).is_err());
+
+    // Reservation-backed: the second reserve is refused up front, the
+    // first request decodes to its full budget untouched.
+    let mut kv = PagedKvManager::new(4, 16);
+    kv.reserve(0, 48).unwrap();
+    assert!(kv.reserve(1, 48).is_err(), "admission control sees the true demand");
+    kv.extend(0, 16).unwrap();
+    kv.extend(0, 32).unwrap(); // full budget, covered by the reservation
+    assert_eq!(kv.release(0).unwrap(), 3);
+    kv.reserve(1, 48).unwrap();
+    kv.check_invariants().unwrap();
+}
+
+/// Random reserve/extend/release_excess/release op sequences hold the
+/// allocator invariants — in particular release_excess followed by
+/// further extends (which then draw from the free pool) never
+/// double-allocates or leaks.
+#[test]
+fn prop_reservation_ops_hold_invariants() {
+    forall("reserve/extend/release_excess invariants", 40, |g| {
+        let pages = g.usize_in(4, 32);
+        let mut kv = PagedKvManager::new(pages, 16);
+        let mut live: Vec<u64> = Vec::new();
+        let mut next_id = 0u64;
+        for _ in 0..30 {
+            match g.usize_in(0, 3) {
+                0 => {
+                    let tokens = g.usize_in(1, 64);
+                    if kv.reserve(next_id, tokens).is_ok() {
+                        live.push(next_id);
+                    }
+                    next_id += 1;
+                }
+                1 if !live.is_empty() => {
+                    let idx = g.usize_in(0, live.len() - 1);
+                    let _ = kv.extend(live[idx], g.usize_in(1, 24));
+                }
+                2 if !live.is_empty() => {
+                    let idx = g.usize_in(0, live.len() - 1);
+                    prop_assert!(
+                        g,
+                        kv.release_excess(live[idx]).is_ok(),
+                        "release_excess failed"
+                    );
+                }
+                _ if !live.is_empty() => {
+                    let idx = g.usize_in(0, live.len() - 1);
+                    let id = live.swap_remove(idx);
+                    prop_assert!(g, kv.release(id).is_ok(), "release failed");
+                }
+                _ => {}
+            }
+            prop_assert!(g, kv.check_invariants().is_ok(), "invariants broken");
+        }
+        for id in live {
+            let _ = kv.release(id);
+        }
+        kv.used_pages() == 0
+    });
+}
+
+/// Randomized workloads: every configuration in this space is
+/// admissible (worst-case single request = 4 pages <= min pool), so
+/// runs must never error, KV invariants must hold throughout, and
+/// every request must get its exact decode budget.
+#[test]
+fn prop_randomized_workloads_complete_without_errors() {
+    forall("reservation admission serves every workload", 60, |g| {
+        let n = g.usize_in(1, 24);
+        let max_batch = g.usize_in(1, 4);
+        let max_groups = g.usize_in(1, 4);
+        let kv_pages = g.usize_in(4, 40);
+        let cfg = SchedulerConfig {
+            max_batch,
+            max_groups,
+            kv_pages,
+            kv_page_tokens: 16,
+        };
+        let mut s = Scheduler::new(MockBackend::new(), cfg);
+        let mut budgets = Vec::new();
+        for id in 0..n as u64 {
+            let prompt_len = g.usize_in(1, 48);
+            let max_new = g.usize_in(1, 12);
+            let prompt = (0..prompt_len)
+                .map(|_| g.raw_rng().below(250) as i32)
+                .collect();
+            budgets.push(max_new);
+            s.submit(Request {
+                id,
+                prompt,
+                max_new_tokens: max_new,
+                arrival_us: 0.0,
+            });
+        }
+        let run = s.run_to_completion();
+        prop_assert!(g, run.is_ok(), "run errored: {:?}", run.err());
+        prop_assert!(
+            g,
+            s.finished().len() == n,
+            "finished {} != {n}",
+            s.finished().len()
+        );
+        for f in s.finished() {
+            prop_assert!(
+                g,
+                f.generated.len() == budgets[f.request.id as usize],
+                "req {} generated {} != budget {}",
+                f.request.id,
+                f.generated.len(),
+                budgets[f.request.id as usize]
+            );
+        }
+        prop_assert!(g, s.kv.used_pages() == 0, "kv leak: {}", s.kv.used_pages());
+        prop_assert!(g, s.preemptions == 0, "unexpected preemption");
+        s.kv.check_invariants().is_ok()
+    });
+}

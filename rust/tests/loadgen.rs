@@ -1,0 +1,177 @@
+//! Integration: `serving::loadgen` — the arrival-driven load test of
+//! the reservation-backed scheduler over the simulated engine.
+//!
+//! The headline case is the acceptance workload: 100 requests through
+//! a mixed dense/MoE model set, completing without stalls, preemptions
+//! or `OutOfPages`, and reporting TTFT/TPOT/HDBI.
+
+use taxbreak::serving::loadgen::{per_phase_split, LenDist};
+use taxbreak::serving::{run_sim_loadgen, LoadgenConfig};
+
+fn models(names: &[&str]) -> Vec<String> {
+    names.iter().map(|s| s.to_string()).collect()
+}
+
+#[test]
+fn mixed_dense_moe_100_requests_complete_under_load() {
+    let cfg = LoadgenConfig {
+        requests: 100,
+        rate_per_s: 2000.0,
+        seed: 7,
+        ..LoadgenConfig::default()
+    };
+    let report = run_sim_loadgen(&models(&["gpt2", "olmoe-1b-7b"]), "h200", &cfg).unwrap();
+    assert_eq!(report.runs.len(), 2);
+    let dense = &report.runs[0];
+    let moe = &report.runs[1];
+    assert!(!dense.moe && moe.moe, "mix covers both model kinds");
+    for run in &report.runs {
+        assert_eq!(run.completed, 100, "{}: every request served", run.model);
+        assert_eq!(run.rejected, 0, "{}: nothing unservable in a clamped workload", run.model);
+        assert_eq!(run.preemptions, 0, "{}: no backpressure preemption", run.model);
+        assert_eq!(run.late_arrivals, 0, "{}: virtual clock honors every arrival", run.model);
+        assert_eq!(run.ttft_us.n, 100);
+        assert!(run.tokens_generated >= 100, "at least one token each");
+        assert!(run.throughput_tps() > 0.0);
+        assert!(run.hdbi() > 0.0 && run.hdbi() < 1.0);
+        assert!(run.kv_occupancy_mean > 0.0 && run.kv_occupancy_max <= 1.0);
+        // Both serving phases observed, with per-phase HDBI defined.
+        for phase in ["prefill", "decode"] {
+            let p = run.phases.iter().find(|p| p.phase == phase).unwrap();
+            assert!(p.kernels > 0, "{}: no {phase} kernels", run.model);
+            assert!(p.hdbi() > 0.0 && p.hdbi() < 1.0);
+        }
+    }
+    let rendered = report.render();
+    for needle in ["TTFT", "TPOT", "HDBI", "gpt2", "olmoe-1b-7b", "prefill", "decode"] {
+        assert!(rendered.contains(needle), "report missing {needle}:\n{rendered}");
+    }
+    let json = report.to_json().pretty();
+    assert!(json.contains("ttft_p95_us") && json.contains("\"runs\""));
+}
+
+#[test]
+fn loadgen_is_deterministic() {
+    let cfg = LoadgenConfig {
+        requests: 30,
+        rate_per_s: 1500.0,
+        seed: 11,
+        ..LoadgenConfig::default()
+    };
+    let run = || {
+        let r = run_sim_loadgen(&models(&["gpt2"]), "h100", &cfg).unwrap();
+        let m = &r.runs[0];
+        (
+            m.completed,
+            m.iterations,
+            m.tokens_generated,
+            m.wall_us,
+            m.ttft_us.mean,
+            m.tpot_us.mean,
+        )
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn closed_loop_and_open_loop_both_drain() {
+    for rate in [0.0, 500.0] {
+        let cfg = LoadgenConfig {
+            requests: 20,
+            rate_per_s: rate,
+            prompt_len: LenDist::LogNormal { median: 20.0, sigma: 0.4 },
+            seed: 3,
+            ..LoadgenConfig::default()
+        };
+        let report = run_sim_loadgen(&models(&["llama-3.2-1b"]), "h200", &cfg).unwrap();
+        assert_eq!(report.runs[0].completed, 20, "rate {rate}");
+    }
+}
+
+#[test]
+fn open_loop_arrivals_stretch_the_run() {
+    // A slow arrival process must dominate wall time (the scheduler
+    // waits for work), and TTFT stays bounded since the pool is idle.
+    let slow = LoadgenConfig {
+        requests: 10,
+        rate_per_s: 100.0, // 10 ms mean inter-arrival
+        seed: 5,
+        ..LoadgenConfig::default()
+    };
+    let fast = LoadgenConfig {
+        rate_per_s: 0.0,
+        ..slow.clone()
+    };
+    let s = run_sim_loadgen(&models(&["gpt2"]), "h200", &slow).unwrap();
+    let f = run_sim_loadgen(&models(&["gpt2"]), "h200", &fast).unwrap();
+    assert!(
+        s.runs[0].wall_us > f.runs[0].wall_us,
+        "open loop {} us must exceed closed loop {} us",
+        s.runs[0].wall_us,
+        f.runs[0].wall_us
+    );
+}
+
+#[test]
+fn loadgen_rejects_bad_input() {
+    use taxbreak::serving::SchedulerConfig;
+    assert!(run_sim_loadgen(&[], "h200", &LoadgenConfig::default()).is_err());
+    assert!(run_sim_loadgen(&models(&["gpt9"]), "h200", &LoadgenConfig::default()).is_err());
+    assert!(run_sim_loadgen(&models(&["gpt2"]), "b300", &LoadgenConfig::default()).is_err());
+    let zero = LoadgenConfig { requests: 0, ..LoadgenConfig::default() };
+    assert!(run_sim_loadgen(&models(&["gpt2"]), "h200", &zero).is_err());
+    // Degenerate scheduler knobs are rejected before they can panic
+    // (kv_page_tokens = 0 divides by zero) or hang (kv_pages = 0).
+    for sched in [
+        SchedulerConfig { kv_page_tokens: 0, ..SchedulerConfig::default() },
+        SchedulerConfig { kv_pages: 0, ..SchedulerConfig::default() },
+        SchedulerConfig { max_batch: 0, ..SchedulerConfig::default() },
+        SchedulerConfig { max_groups: 0, ..SchedulerConfig::default() },
+    ] {
+        let bad = LoadgenConfig { sched, ..LoadgenConfig::default() };
+        assert!(run_sim_loadgen(&models(&["gpt2"]), "h200", &bad).is_err());
+    }
+}
+
+#[test]
+fn infeasible_requests_are_rejected_instead_of_hanging() {
+    use taxbreak::serving::SchedulerConfig;
+    // Every request needs >= pages_for(40 + 4) = 3 pages against a
+    // 2-page pool: such requests can never be admitted, so they are
+    // rejected at submit, the run completes (no hang, no stall), and
+    // the report says so.
+    let cfg = LoadgenConfig {
+        requests: 2,
+        prompt_len: LenDist::Uniform { lo: 40, hi: 48 },
+        sched: SchedulerConfig { kv_pages: 2, ..SchedulerConfig::default() },
+        ..LoadgenConfig::default()
+    };
+    let report = run_sim_loadgen(&models(&["gpt2"]), "h200", &cfg).unwrap();
+    assert_eq!(report.runs[0].rejected, 2);
+    assert_eq!(report.runs[0].completed, 0);
+    assert!(report.render().contains("rejected as unservable"));
+}
+
+#[test]
+fn per_phase_split_partitions_the_serve_trace() {
+    use taxbreak::hardware::Platform;
+    use taxbreak::models;
+    use taxbreak::runtime::{Backend, SimEngine};
+    use taxbreak::serving::ModelBackend;
+
+    let mut e = SimEngine::with_defaults(models::gpt2(), Platform::h200(), 9);
+    let (next, cache) = e.prefill_group(&[vec![1, 2, 3, 4]]).unwrap();
+    let (next, cache) = e.decode_group(cache, 4, &next).unwrap();
+    let _ = e.decode_group(cache, 5, &next).unwrap();
+    let trace = e.take_trace();
+    let phases = per_phase_split(&trace);
+    let prefill = phases.iter().find(|p| p.phase == "prefill").unwrap();
+    let decode = phases.iter().find(|p| p.phase == "decode").unwrap();
+    assert_eq!(prefill.kernels, 1);
+    assert_eq!(decode.kernels, 2);
+    // The per-phase split must partition the whole-trace split.
+    let (host, dev, n) = taxbreak::serving::real_trace_split(&trace);
+    assert_eq!(prefill.kernels + decode.kernels, n);
+    assert!((prefill.host_us + decode.host_us - host).abs() < 1e-9);
+    assert!((prefill.device_us + decode.device_us - dev).abs() < 1e-9);
+}
