@@ -127,6 +127,67 @@ impl Platform {
     }
 }
 
+/// A named host-CPU profile for counterfactual replay (`taxbreak
+/// whatif --counterfactual host-cpu:<name>`): the paper's §VI pairing
+/// plus one documented extrapolation point.
+///
+/// Profiles carry the same single-thread-speed scale as
+/// [`CpuSpec::st_speed`]; the what-if engine rescales every CPU-bound
+/// Eq. 1 component by `profile.st_speed / baseline.st_speed`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostProfile {
+    /// Stable CLI name ("xeon-8480c").
+    pub name: &'static str,
+    /// Human CPU description.
+    pub cpu: &'static str,
+    /// Relative single-thread speed (H100 host = 1.0 reference).
+    pub st_speed: f64,
+    /// Where the number comes from.
+    pub note: &'static str,
+}
+
+impl HostProfile {
+    /// All named host profiles.
+    pub fn all() -> Vec<HostProfile> {
+        vec![
+            HostProfile {
+                name: "xeon-8480c",
+                cpu: "Intel Xeon 8480C (Sapphire Rapids, H100 host)",
+                st_speed: 1.0,
+                note: "paper §VI reference host",
+            },
+            HostProfile {
+                name: "xeon-6538y",
+                cpu: "Intel Xeon Gold 6538Y+ (Emerald Rapids, H200 host)",
+                st_speed: 1.30,
+                note: "calibrated to the paper's 10-29% orchestration band",
+            },
+            HostProfile {
+                name: "hypothetical-2x",
+                cpu: "hypothetical 2x-single-thread host",
+                st_speed: 2.0,
+                note: "extrapolation beyond the paper's measured pair",
+            },
+        ]
+    }
+
+    pub fn by_name(name: &str) -> anyhow::Result<HostProfile> {
+        HostProfile::all()
+            .into_iter()
+            .find(|p| p.name == name)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown host profile '{name}' (expected one of: {})",
+                    HostProfile::all()
+                        .iter()
+                        .map(|p| p.name)
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -161,6 +222,18 @@ mod tests {
             assert_eq!(Platform::by_name(&p.name).unwrap(), p);
         }
         assert!(Platform::by_name("b200").is_err());
+    }
+
+    #[test]
+    fn host_profiles_cover_the_paper_pairing() {
+        let h100 = HostProfile::by_name("xeon-8480c").unwrap();
+        let h200 = HostProfile::by_name("xeon-6538y").unwrap();
+        assert_eq!(h100.st_speed, Platform::h100().cpu.st_speed);
+        assert_eq!(h200.st_speed, Platform::h200().cpu.st_speed);
+        assert!(HostProfile::by_name("epyc-9999").is_err());
+        for p in HostProfile::all() {
+            assert_eq!(HostProfile::by_name(p.name).unwrap(), p);
+        }
     }
 
     #[test]

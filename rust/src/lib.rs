@@ -41,6 +41,7 @@
 //! | [`taxbreak`] | **the paper's contribution**: two-phase pipeline, Eq. 1-3, baselines, diagnostics |
 //! | [`serving`] | request router, continuous batcher, reservation-backed paged-KV manager, scheduler, load generator |
 //! | [`runtime`] | backend abstraction (simulated / real PJRT), AOT artifact + weights loading, trace instrumentation |
+//! | [`whatif`] | counterfactual replay: transform a recorded schedule, re-simulate, quantify each prescription |
 //! | [`config`] | typed run configuration |
 //! | [`repro`] | regeneration harnesses for every paper table & figure |
 //!
@@ -75,6 +76,7 @@ pub mod sim;
 pub mod taxbreak;
 pub mod trace;
 pub mod util;
+pub mod whatif;
 
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;

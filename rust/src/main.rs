@@ -13,7 +13,15 @@
 //! * `loadgen` — arrival-driven load test of the serving scheduler:
 //!   Poisson arrivals, configurable length distributions, a
 //!   dense-vs-MoE model mix, and a throughput/TTFT/TPOT/KV-occupancy
-//!   report with per-phase HDBI.
+//!   report with per-phase HDBI; `--capture`/`--chrome-out` save each
+//!   run's trace for replay and timeline inspection, `--bench-out`
+//!   emits the compact benchmark datapoint.
+//! * `whatif` — counterfactual replay: re-simulate a recorded trace (or
+//!   a fresh workload point, or a `--bundled` preset) under composable
+//!   transforms — host-CPU scaling, CUDA-graph amortization, library
+//!   dispatch elision, kernel fusion / MoE dispatch reduction, device
+//!   swap — and report predicted e2e/HDBI/component deltas next to the
+//!   baseline.
 //! * `models` / `platforms` — list the catalog.
 
 use taxbreak::hardware::Platform;
@@ -40,6 +48,7 @@ fn run() -> anyhow::Result<()> {
         "trace" => cmd_trace(args),
         "serve" => cmd_serve(args),
         "loadgen" => cmd_loadgen(args),
+        "whatif" => cmd_whatif(args),
         "models" => {
             for m in models::catalog() {
                 println!(
@@ -97,6 +106,14 @@ USAGE:
                    [--rate REQ_PER_S] [--prompt-dist uniform:LO:HI|lognormal:MED:SIGMA]
                    [--out-dist ...] [--max-batch N] [--max-groups N]
                    [--kv-pages N] [--kv-page-tokens N] [--seed N] [--report FILE]
+                   [--capture FILE] [--chrome-out FILE] [--bench-out FILE]
+  taxbreak whatif  --counterfactual SPEC[,SPEC...]
+                   [--trace FILE | --bundled moe-decode|dense-prefill |
+                    --model M --platform P --phase ... --bs --sl --m]
+                   [--json] [--report FILE] [--chrome FILE]
+                   SPEC: host-cpu:<profile|factor> | cuda-graphs[:LAUNCH_US]
+                         | lib-elision[:fam+fam] | fusion:elem
+                         | fusion:moe[:KEEP] | device:<h100|h200>
   taxbreak models | platforms | help
 
 Artifact ids: fig2 fig5 fig6 table2 table3 table4 fig7 fig8 fig9 fig10 fig11";
@@ -166,7 +183,15 @@ fn cmd_analyze(mut args: Args) -> anyhow::Result<()> {
 
     let trace = simulate(&model, &platform, &wl, seed);
     let mut backend = SimReplayBackend::new(platform.clone(), seed ^ 0x9E37);
-    let a = analyze(&trace, &mut backend, &cfg.replay_config());
+    let mut a = analyze(&trace, &mut backend, &cfg.replay_config());
+    // Quantify the prescription by counterfactual replay (whatif).
+    // Best-effort: graphed traces (mitigation cuda-graphs) have no
+    // per-kernel host chain to extract, so they keep the qualitative
+    // diagnosis only.
+    if let Ok(schedule) = taxbreak::whatif::Schedule::from_eager_trace(&trace, &a.phase2) {
+        taxbreak::whatif::quantify_diagnosis(&mut a, &schedule)?;
+    }
+    let a = a;
 
     if as_json {
         println!("{}", report::to_json(&a).pretty());
@@ -192,6 +217,109 @@ fn cmd_analyze(mut args: Args) -> anyhow::Result<()> {
         a.phase2.cache_hits
     );
     println!("diagnosis [{}]: {}", a.diagnosis.target.as_str(), a.diagnosis.rationale);
+    if let Some(q) = &a.diagnosis.quantified {
+        println!("quantified: {}", q.render());
+    }
+    Ok(())
+}
+
+/// Insert the model name before the path's extension
+/// ("out.json" + "gpt2" -> "out.gpt2.json") so multi-model runs write
+/// one artifact each.
+fn path_for_model(path: &str, model: &str) -> String {
+    let p = std::path::Path::new(path);
+    match (p.file_stem().and_then(|s| s.to_str()), p.extension().and_then(|e| e.to_str())) {
+        (Some(stem), Some(ext)) => p
+            .with_file_name(format!("{stem}.{model}.{ext}"))
+            .to_string_lossy()
+            .into_owned(),
+        _ => format!("{path}.{model}"),
+    }
+}
+
+fn cmd_whatif(mut args: Args) -> anyhow::Result<()> {
+    use taxbreak::taxbreak::ReplayConfig;
+    use taxbreak::whatif::{self, Schedule};
+
+    let specs = args.opt_list("counterfactual");
+    let trace_path = args.opt("trace").map(|s| s.to_string());
+    let bundled = args.opt("bundled").map(|s| s.to_string());
+    let as_json = args.flag("json");
+    let report_path = args.opt("report").map(|s| s.to_string());
+    let chrome_path = args.opt("chrome").map(|s| s.to_string());
+    anyhow::ensure!(
+        !specs.is_empty(),
+        "whatif needs --counterfactual SPEC[,SPEC...] — try \
+         `taxbreak whatif --bundled moe-decode --counterfactual host-cpu:xeon-6538y`"
+    );
+    let cfs = whatif::parse_specs(&specs)?;
+
+    // Source trace: a file, a bundled preset, or explicit workload flags.
+    anyhow::ensure!(
+        trace_path.is_none() || bundled.is_none(),
+        "--trace and --bundled are mutually exclusive"
+    );
+    let (trace, replay_cfg) = match (&trace_path, &bundled) {
+        (Some(path), _) => {
+            args.finish()?;
+            (taxbreak::trace::Trace::load(std::path::Path::new(path))?, ReplayConfig::fast())
+        }
+        (None, bundled) => {
+            let cfg = match bundled {
+                Some(name) => {
+                    let cfg = whatif::bundled::by_name(name)?;
+                    args.finish()?;
+                    cfg
+                }
+                None => {
+                    let cfg = parse_run_config(&mut args)?;
+                    args.finish()?;
+                    cfg
+                }
+            };
+            let trace = simulate(&cfg.model_spec()?, &cfg.platform_spec()?, &cfg.workload(), cfg.seed);
+            (trace, cfg.replay_config())
+        }
+    };
+
+    // Extract the replayable schedule; eager traces also get the full
+    // analysis so the diagnosis can carry its quantified counterfactual.
+    let (schedule, analysis) = if trace.meta.phase == "serve" {
+        (Schedule::from_serving_trace(&trace)?, None)
+    } else {
+        let platform = Platform::by_name(&trace.meta.platform)?;
+        let mut backend = SimReplayBackend::new(platform, 0x5EED);
+        let mut a = analyze(&trace, &mut backend, &replay_cfg);
+        let schedule = Schedule::from_eager_trace(&trace, &a.phase2)?;
+        whatif::quantify_diagnosis(&mut a, &schedule)?;
+        (schedule, Some(a))
+    };
+
+    let (result, final_schedule) = whatif::run_with_schedule(&schedule, &cfs)?;
+    if as_json {
+        println!("{}", whatif::report::to_json(&result).pretty());
+    } else {
+        print!("{}", whatif::report::whatif_table(&result).render());
+        if let Some(a) = &analysis {
+            println!(
+                "diagnosis [{}]: {}",
+                a.diagnosis.target.as_str(),
+                a.diagnosis.rationale
+            );
+            if let Some(q) = &a.diagnosis.quantified {
+                println!("quantified: {}", q.render());
+            }
+        }
+    }
+    if let Some(p) = report_path {
+        std::fs::write(&p, whatif::report::to_json(&result).pretty())?;
+        println!("wrote {p}");
+    }
+    if let Some(p) = chrome_path {
+        let (_, cf_trace) = whatif::schedule::resimulate_with_trace(&final_schedule, true);
+        chrome::save_chrome(&cf_trace.expect("recording requested"), std::path::Path::new(&p))?;
+        println!("wrote {p} (counterfactual timeline, chrome://tracing format)");
+    }
     Ok(())
 }
 
@@ -281,14 +409,39 @@ fn cmd_loadgen(mut args: Args) -> anyhow::Result<()> {
             kv_pages: args.opt_usize("kv-pages", base.sched.kv_pages)?,
             kv_page_tokens: args.opt_usize("kv-page-tokens", base.sched.kv_page_tokens)?,
         },
+        capture: false,
     };
     let report_path = args.opt("report").map(|s| s.to_string());
+    let capture_path = args.opt("capture").map(|s| s.to_string());
+    let chrome_path = args.opt("chrome-out").map(|s| s.to_string());
+    let bench_path = args.opt("bench-out").map(|s| s.to_string());
+    let cfg = LoadgenConfig {
+        capture: capture_path.is_some() || chrome_path.is_some(),
+        ..cfg
+    };
     args.finish()?;
     let report = run_sim_loadgen(&models, &platform, &cfg)?;
     print!("{}", report.render());
     if let Some(p) = report_path {
         std::fs::write(&p, report.to_json().pretty())?;
         println!("wrote {p}");
+    }
+    if let Some(p) = bench_path {
+        std::fs::write(&p, report.bench_json().pretty())?;
+        println!("wrote {p}");
+    }
+    for run in &report.runs {
+        let Some(trace) = &run.trace else { continue };
+        if let Some(prefix) = &capture_path {
+            let path = path_for_model(prefix, &run.model);
+            trace.save(std::path::Path::new(&path))?;
+            println!("wrote {path} (captured serving trace; replay with `taxbreak whatif --trace`)");
+        }
+        if let Some(prefix) = &chrome_path {
+            let path = path_for_model(prefix, &run.model);
+            taxbreak::trace::chrome::save_chrome(trace, std::path::Path::new(&path))?;
+            println!("wrote {path} (chrome://tracing format)");
+        }
     }
     Ok(())
 }

@@ -96,6 +96,10 @@ pub struct LoadgenConfig {
     pub output_len: LenDist,
     pub seed: u64,
     pub sched: SchedulerConfig,
+    /// Keep each run's captured trace on the [`ModelRun`] — the
+    /// serving-side what-if hook (`taxbreak loadgen --capture` /
+    /// `--chrome-out`, then `taxbreak whatif --trace`).
+    pub capture: bool,
 }
 
 impl Default for LoadgenConfig {
@@ -107,6 +111,7 @@ impl Default for LoadgenConfig {
             output_len: LenDist::Uniform { lo: 4, hi: 12 },
             seed: 2026,
             sched: SchedulerConfig::default(),
+            capture: false,
         }
     }
 }
@@ -217,6 +222,9 @@ pub struct ModelRun {
     pub kv_occupancy_mean: f64,
     pub kv_occupancy_max: f64,
     pub phases: Vec<PhaseSplit>,
+    /// The captured serving trace (only with [`LoadgenConfig::capture`])
+    /// — input for Chrome export and `taxbreak whatif` replay.
+    pub trace: Option<Trace>,
 }
 
 impl ModelRun {
@@ -394,6 +402,38 @@ impl LoadgenReport {
             .with("seed", self.seed)
             .with("runs", runs)
     }
+
+    /// Compact benchmark datapoint (`taxbreak loadgen --bench-out`,
+    /// CI's `BENCH_loadgen.json`): the serving KPIs the bench
+    /// trajectory tracks, aggregated across the model mix.
+    pub fn bench_json(&self) -> Json {
+        let tokens: usize = self.runs.iter().map(|r| r.tokens_generated).sum();
+        let wall_us: f64 = self.runs.iter().map(|r| r.wall_us).sum();
+        let host: f64 = self.runs.iter().map(|r| r.orchestration_us()).sum();
+        let dev: f64 = self.runs.iter().map(|r| r.device_us()).sum();
+        let tpot_p50s: Vec<f64> = self.runs.iter().map(|r| r.tpot_us.p50).collect();
+        let mut per_model: Vec<Json> = Vec::with_capacity(self.runs.len());
+        for r in &self.runs {
+            per_model.push(
+                Json::obj()
+                    .with("model", r.model.as_str())
+                    .with("throughput_tps", r.throughput_tps())
+                    .with("tpot_p50_us", r.tpot_us.p50)
+                    .with("hdbi", r.hdbi()),
+            );
+        }
+        Json::obj()
+            .with("bench", "loadgen")
+            .with("platform", self.platform.as_str())
+            .with("requests", self.requests)
+            .with(
+                "throughput_tps",
+                if wall_us <= 0.0 { 0.0 } else { tokens as f64 / (wall_us / 1e6) },
+            )
+            .with("tpot_p50_us", crate::util::stats::mean(&tpot_p50s))
+            .with("hdbi", hdbi_of(host, dev))
+            .with("per_model", per_model)
+    }
 }
 
 /// Drive one backend through an arrival-stamped workload; the requests
@@ -402,6 +442,7 @@ pub fn drive<B: Backend>(
     backend: B,
     sched: SchedulerConfig,
     requests: Vec<Request>,
+    capture: bool,
 ) -> anyhow::Result<ModelRun> {
     let variant = backend.variant().to_string();
     let total_pages = sched.kv_pages.max(1) as f64;
@@ -478,6 +519,7 @@ pub fn drive<B: Backend>(
         kv_occupancy_mean: occ.mean(),
         kv_occupancy_max: occ_max,
         phases,
+        trace: capture.then_some(trace),
     })
 }
 
@@ -510,7 +552,7 @@ pub fn run_sim_loadgen(
         let vocab = Backend::vocab(&engine);
         let max_seq = ModelBackend::max_seq(&engine);
         let workload = generate_workload(cfg, prompt_token_bound(&engine, vocab)?, max_seq);
-        let mut run = drive(engine, cfg.sched, workload)?;
+        let mut run = drive(engine, cfg.sched, workload, cfg.capture)?;
         run.model = name.clone();
         run.moe = moe;
         runs.push(run);
@@ -576,6 +618,34 @@ mod tests {
         // Closed loop: everything lands at t = 0.
         let closed = LoadgenConfig { requests: 5, rate_per_s: 0.0, ..Default::default() };
         assert!(generate_workload(&closed, 250, 128).iter().all(|r| r.arrival_us == 0.0));
+    }
+
+    #[test]
+    fn capture_keeps_the_trace_and_bench_json_aggregates() {
+        let cfg = LoadgenConfig {
+            requests: 4,
+            rate_per_s: 0.0,
+            capture: true,
+            ..Default::default()
+        };
+        let report =
+            run_sim_loadgen(&["gpt2".to_string()], "h200", &cfg).unwrap();
+        let run = &report.runs[0];
+        let trace = run.trace.as_ref().expect("capture keeps the trace");
+        assert!(trace.kernel_count() > 0);
+        assert_eq!(trace.meta.phase, "serve");
+        // Without capture the trace is dropped.
+        let nocap = LoadgenConfig { capture: false, ..cfg };
+        let r2 = run_sim_loadgen(&["gpt2".to_string()], "h200", &nocap).unwrap();
+        assert!(r2.runs[0].trace.is_none());
+
+        let bench = report.bench_json();
+        assert_eq!(bench.str_of("bench").unwrap(), "loadgen");
+        assert!(bench.f64_of("throughput_tps").unwrap() > 0.0);
+        assert!(bench.f64_of("tpot_p50_us").unwrap() > 0.0);
+        let h = bench.f64_of("hdbi").unwrap();
+        assert!(h > 0.0 && h < 1.0);
+        assert_eq!(bench.arr_of("per_model").unwrap().len(), 1);
     }
 
     #[test]

@@ -25,17 +25,11 @@ use crate::trace::{EventKind, Trace, TraceEvent};
 use crate::util::json::Json;
 use crate::util::stats::Summary;
 
-/// Eq. 3 (HDBI) on one host/device time pair; 0.5 when nothing was
-/// observed.  The single implementation behind [`ServeSummary`],
-/// [`loadgen::PhaseSplit`] and [`loadgen::ModelRun`].
-pub fn hdbi_of(host_us: f64, device_us: f64) -> f64 {
-    let total = host_us + device_us;
-    if total == 0.0 {
-        0.5
-    } else {
-        device_us / total
-    }
-}
+/// Eq. 3 (HDBI) on one host/device time pair — re-exported from the
+/// single crate-wide implementation in [`crate::taxbreak::decompose`]
+/// (which also documents the empty-run `0.5` convention).  Used by
+/// [`ServeSummary`], [`loadgen::PhaseSplit`] and [`loadgen::ModelRun`].
+pub use crate::taxbreak::decompose::hdbi_of;
 
 /// Host/device attribution of one trace event under the serving split
 /// (see [`real_trace_split`] for the rationale): returns

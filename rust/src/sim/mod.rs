@@ -98,9 +98,10 @@ impl Mitigation {
 const COMPILE_PY_FACTOR: f64 = 0.10;
 const COMPILE_BASE_FACTOR: f64 = 0.35;
 /// Host cost of launching a captured CUDA graph, us (reference CPU).
-const GRAPH_LAUNCH_US: f64 = 12.0;
+/// Shared with the what-if CUDA-graph counterfactual (`whatif`).
+pub const GRAPH_LAUNCH_US: f64 = 12.0;
 /// One-time graph capture/instantiation overhead per unique pass shape.
-const GRAPH_CAPTURE_US: f64 = 8000.0;
+pub const GRAPH_CAPTURE_US: f64 = 8000.0;
 
 /// A workload point: model × phase × (BS, SL, m).
 #[derive(Debug, Clone)]

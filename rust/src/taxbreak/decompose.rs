@@ -7,6 +7,22 @@ use crate::taxbreak::phase1::Phase1;
 use crate::taxbreak::phase2::Phase2Result;
 use crate::trace::Trace;
 
+/// Eq. 3 (HDBI) on one host/device time pair — the **single** HDBI
+/// implementation in the crate ([`Decomposition::hdbi`], the serving
+/// reports and the what-if engine all call it).
+///
+/// Empty-run convention: when nothing was observed on either side
+/// (`host + device == 0`), the run is neither host- nor device-bound,
+/// so the balance index is defined as the midpoint `0.5`.
+pub fn hdbi_of(host_us: f64, device_us: f64) -> f64 {
+    let total = host_us + device_us;
+    if total == 0.0 {
+        0.5
+    } else {
+        device_us / total
+    }
+}
+
 /// Per-family slice of the decomposition.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct FamilySlice {
@@ -59,13 +75,7 @@ impl Decomposition {
 
     /// Eq. 3: HDBI ∈ (0, 1). → 0 host-bound; → 1 device-bound.
     pub fn hdbi(&self) -> f64 {
-        let dev = self.device_active_us;
-        let orch = self.orchestration_us();
-        if dev + orch == 0.0 {
-            0.5
-        } else {
-            dev / (dev + orch)
-        }
+        hdbi_of(self.orchestration_us(), self.device_active_us)
     }
 
     /// GPU idle fraction (Fig. 6): (T_e2e − T_DeviceActive)/T_e2e.
@@ -216,5 +226,65 @@ mod tests {
         let d = decompose_model(&models::gpt2(), Platform::h200(), &Workload::prefill(1, 512));
         let c = d.per_kernel_host_us();
         assert!((c - 13.7).abs() < 1.5, "per-kernel host cost {c} (paper ≈13.7)");
+    }
+
+    #[test]
+    fn hdbi_of_is_the_single_convention() {
+        assert_eq!(hdbi_of(0.0, 0.0), 0.5, "empty run sits at the midpoint");
+        assert_eq!(hdbi_of(1.0, 3.0), 0.75);
+        assert_eq!(hdbi_of(3.0, 1.0), 0.25);
+        assert_eq!(hdbi_of(0.0, 5.0), 1.0);
+        assert_eq!(hdbi_of(5.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn zero_kernel_trace_decomposes_to_neutral_defaults() {
+        // A trace with no kernel events must not NaN or panic anywhere
+        // downstream: empty decomposition, midpoint HDBI, zero costs.
+        let trace = Trace::default();
+        let p1 = Phase1::from_trace(&trace);
+        assert!(p1.invocations.is_empty());
+        let mut backend = SimReplayBackend::new(Platform::h100(), 3);
+        let p2 = crate::taxbreak::phase2::run(&p1.db, &mut backend, &ReplayConfig::fast());
+        let d = decompose(&trace, &p1, &p2);
+        assert_eq!(d.n_kernels, 0);
+        assert_eq!(d.orchestration_us(), 0.0);
+        assert_eq!(d.hdbi(), 0.5);
+        assert_eq!(d.per_kernel_host_us(), 0.0);
+        assert_eq!(d.idle_fraction(), 0.0);
+        assert_eq!(d.gpu_utilization(), 1.0);
+    }
+
+    #[test]
+    fn hdbi_stays_inside_open_unit_interval_for_real_runs() {
+        for (model, wl) in [
+            (models::gpt2(), Workload::prefill(1, 64)),
+            (models::olmoe(), Workload::decode(1, 64, 2)),
+        ] {
+            let d = decompose_model(&model, Platform::h100(), &wl);
+            let h = d.hdbi();
+            assert!(h > 0.0 && h < 1.0, "{}: hdbi={h}", model.name);
+        }
+    }
+
+    #[test]
+    fn idle_fraction_clamps_inconsistent_inputs() {
+        // Device time exceeding wall-clock (possible with clock skew in
+        // real traces) clamps to zero idle, never negative.
+        let d = Decomposition {
+            n_kernels: 1,
+            device_active_us: 200.0,
+            e2e_us: 100.0,
+            ..Default::default()
+        };
+        assert_eq!(d.idle_fraction(), 0.0);
+        assert_eq!(d.gpu_utilization(), 1.0);
+        // Non-positive wall-clock is treated as "no idle observed".
+        let z = Decomposition {
+            e2e_us: 0.0,
+            device_active_us: 5.0,
+            ..Default::default()
+        };
+        assert_eq!(z.idle_fraction(), 0.0);
     }
 }

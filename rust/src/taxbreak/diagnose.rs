@@ -40,6 +40,38 @@ impl OptimizationTarget {
     }
 }
 
+/// The quantified backing of a prescription: the best counterfactual
+/// replay for the diagnosed target and its predicted deltas.  Filled in
+/// by the what-if engine (`crate::whatif::quantify_diagnosis`) — a bare
+/// [`diagnose`] call leaves it `None` because quantification needs the
+/// replayable schedule, not just the component sums.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantifiedAdvice {
+    /// Counterfactual spec that backs the number ("host-cpu:xeon-6538y").
+    pub counterfactual: String,
+    /// Predicted relative T_Orchestration reduction (positive = less
+    /// orchestration; a negative value would mean the counterfactual
+    /// grows it, e.g. a device swap raising the launch floor).
+    pub orch_reduction: f64,
+    /// Predicted relative end-to-end latency reduction. The quantifier
+    /// only attaches advice with a strictly positive value.
+    pub e2e_reduction: f64,
+}
+
+impl QuantifiedAdvice {
+    pub fn render(&self) -> String {
+        // Signed deltas (negative = time removed), so a reduction of
+        // 0.17 prints as "-17.0%" and a regression can never render as
+        // a garbled double negative.
+        format!(
+            "{}: {:+.1}% T_Orchestration, {:+.1}% e2e (counterfactual replay)",
+            self.counterfactual,
+            -100.0 * self.orch_reduction,
+            -100.0 * self.e2e_reduction
+        )
+    }
+}
+
 /// A diagnosis: boundedness + dominant component + prescription.
 #[derive(Debug, Clone)]
 pub struct Diagnosis {
@@ -49,6 +81,9 @@ pub struct Diagnosis {
     /// Share of T_Orchestration per component: (ΔFT, ΔCT, ΔKT).
     pub shares: (f64, f64, f64),
     pub rationale: String,
+    /// Best counterfactual for `target`, quantified by schedule replay
+    /// (`taxbreak whatif`); `None` until the what-if engine attaches it.
+    pub quantified: Option<QuantifiedAdvice>,
 }
 
 /// Diagnose a decomposition (paper §III "Diagnostic interpretation").
@@ -93,6 +128,7 @@ pub fn diagnose(d: &Decomposition) -> Diagnosis {
         target,
         shares,
         rationale,
+        quantified: None,
     }
 }
 

@@ -35,8 +35,8 @@ pub mod phase1;
 pub mod phase2;
 pub mod report;
 
-pub use decompose::{Decomposition, FamilySlice};
-pub use diagnose::{diagnose, Diagnosis, OptimizationTarget};
+pub use decompose::{hdbi_of, Decomposition, FamilySlice};
+pub use diagnose::{diagnose, Diagnosis, OptimizationTarget, QuantifiedAdvice};
 pub use phase1::Phase1;
 pub use phase2::{Phase2Result, ReplayBackend, ReplayConfig, SimReplayBackend};
 

@@ -123,14 +123,23 @@ pub fn to_json(a: &Analysis) -> Json {
                 .with("tklqt_us", a.baselines.tklqt_us)
                 .with("queue_share", a.baselines.queue_share),
         )
-        .with(
-            "diagnosis",
-            Json::obj()
+        .with("diagnosis", {
+            let mut dj = Json::obj()
                 .with("hdbi", a.diagnosis.hdbi)
                 .with("host_bound", a.diagnosis.host_bound)
                 .with("target", a.diagnosis.target.as_str())
-                .with("rationale", a.diagnosis.rationale.as_str()),
-        )
+                .with("rationale", a.diagnosis.rationale.as_str());
+            if let Some(q) = &a.diagnosis.quantified {
+                dj.set(
+                    "quantified",
+                    Json::obj()
+                        .with("counterfactual", q.counterfactual.as_str())
+                        .with("orch_reduction", q.orch_reduction)
+                        .with("e2e_reduction", q.e2e_reduction),
+                );
+            }
+            dj
+        })
 }
 
 #[cfg(test)]

@@ -4,10 +4,26 @@
 use crate::trace::{Trace, Track};
 use crate::util::json::Json;
 
-/// Chrome trace "complete" events ("ph": "X"), one per trace event.
-/// Host events go to tid 0; device stream `s` to tid `100 + s`.
+/// Chrome trace "complete" events ("ph": "X"), one per trace event,
+/// preceded by a process-name metadata event ("ph": "M") labeling the
+/// run (`model phase @ platform`) so side-by-side comparisons — e.g. a
+/// captured loadgen run vs its `taxbreak whatif` counterfactual replay
+/// — stay tellable apart in the Perfetto UI. Host events go to tid 0;
+/// device stream `s` to tid `100 + s`.
 pub fn to_chrome_json(trace: &Trace) -> Json {
-    let mut events = Vec::with_capacity(trace.events.len());
+    let mut events = Vec::with_capacity(trace.events.len() + 1);
+    let label = format!(
+        "{} {} @ {}",
+        trace.meta.model, trace.meta.phase, trace.meta.platform
+    );
+    events.push(
+        Json::obj()
+            .with("name", "process_name")
+            .with("ph", "M")
+            .with("pid", 1u32)
+            .with("tid", 0u32)
+            .with("args", Json::obj().with("name", label.as_str())),
+    );
     for e in &trace.events {
         let tid = match e.track {
             Track::Host => 0u32,
@@ -69,10 +85,13 @@ mod tests {
         });
         let j = to_chrome_json(&t);
         let arr = j.as_arr().unwrap();
-        assert_eq!(arr.len(), 2);
-        assert_eq!(arr[0].f64_of("tid").unwrap(), 0.0);
-        assert_eq!(arr[1].f64_of("tid").unwrap(), 103.0);
-        assert_eq!(arr[1].str_of("cat").unwrap(), "kernel");
-        assert_eq!(arr[0].str_of("ph").unwrap(), "X");
+        assert_eq!(arr.len(), 3);
+        // Leading process-name metadata event labels the run.
+        assert_eq!(arr[0].str_of("ph").unwrap(), "M");
+        assert_eq!(arr[0].str_of("name").unwrap(), "process_name");
+        assert_eq!(arr[1].f64_of("tid").unwrap(), 0.0);
+        assert_eq!(arr[2].f64_of("tid").unwrap(), 103.0);
+        assert_eq!(arr[2].str_of("cat").unwrap(), "kernel");
+        assert_eq!(arr[1].str_of("ph").unwrap(), "X");
     }
 }

@@ -1,0 +1,155 @@
+//! Rendering of what-if reports: the side-by-side baseline vs
+//! counterfactual table and the JSON export.
+
+use crate::util::json::Json;
+use crate::util::table::{ms, ratio, Table};
+use crate::whatif::schedule::Outcome;
+use crate::whatif::WhatIf;
+
+fn delta_pct(cur: f64, base: f64) -> String {
+    if base <= 0.0 {
+        "-".to_string()
+    } else {
+        format!("{:+.1}%", 100.0 * (cur / base - 1.0))
+    }
+}
+
+fn outcome_row(label: &str, o: &Outcome, base: &Outcome, is_base: bool) -> Vec<String> {
+    let d = |cur: f64, b: f64| {
+        if is_base {
+            "-".to_string()
+        } else {
+            delta_pct(cur, b)
+        }
+    };
+    vec![
+        label.to_string(),
+        ms(o.e2e_us / 1000.0),
+        d(o.e2e_us, base.e2e_us),
+        ms(o.dft_us() / 1000.0),
+        ms(o.dct_us / 1000.0),
+        ms(o.dkt_us / 1000.0),
+        ms(o.orchestration_us() / 1000.0),
+        d(o.orchestration_us(), base.orchestration_us()),
+        ms(o.device_active_us / 1000.0),
+        ratio(o.hdbi()),
+    ]
+}
+
+/// Baseline + one row per composed counterfactual stage.
+pub fn whatif_table(w: &WhatIf) -> Table {
+    let title = format!(
+        "what-if: {} {} on {} ({} kernels)",
+        w.model, w.phase, w.platform, w.baseline.n_kernels
+    );
+    let mut t = Table::new(
+        &title,
+        &[
+            "scenario", "e2e(ms)", "de2e", "dFT(ms)", "dCT(ms)", "dKT(ms)",
+            "T_orch(ms)", "dorch", "T_dev(ms)", "HDBI",
+        ],
+    );
+    t.row(outcome_row("baseline", &w.baseline, &w.baseline, true));
+    for s in &w.scenarios {
+        t.row(outcome_row(
+            &format!("+{}", s.label),
+            &s.outcome,
+            &w.baseline,
+            false,
+        ));
+    }
+    t
+}
+
+fn outcome_json(o: &Outcome) -> Json {
+    Json::obj()
+        .with("e2e_us", o.e2e_us)
+        .with("device_active_us", o.device_active_us)
+        .with("n_kernels", o.n_kernels)
+        .with("dft_us", o.dft_us())
+        .with("dct_us", o.dct_us)
+        .with("dkt_us", o.dkt_us)
+        .with("orchestration_us", o.orchestration_us())
+        .with("hdbi", o.hdbi())
+}
+
+/// JSON export (`taxbreak whatif --report`).
+pub fn to_json(w: &WhatIf) -> Json {
+    let base = &w.baseline;
+    let mut scenarios: Vec<Json> = Vec::with_capacity(w.scenarios.len());
+    for s in &w.scenarios {
+        let o = &s.outcome;
+        scenarios.push(
+            outcome_json(o)
+                .with("counterfactual", s.label.as_str())
+                .with("e2e_reduction", o.reduction_vs(base, |x| x.e2e_us))
+                .with(
+                    "orch_reduction",
+                    o.reduction_vs(base, |x| x.orchestration_us()),
+                ),
+        );
+    }
+    Json::obj()
+        .with("platform", w.platform.as_str())
+        .with("model", w.model.as_str())
+        .with("phase", w.phase.as_str())
+        .with("baseline", outcome_json(base))
+        .with("scenarios", scenarios)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::whatif::Scenario;
+
+    fn sample() -> WhatIf {
+        let base = Outcome {
+            e2e_us: 10_000.0,
+            device_active_us: 3_000.0,
+            n_kernels: 100,
+            t_py_us: 1_000.0,
+            t_base_us: 2_000.0,
+            dct_us: 500.0,
+            dkt_us: 470.0,
+        };
+        let cf = Outcome {
+            e2e_us: 8_800.0,
+            t_py_us: 769.2,
+            t_base_us: 1_538.5,
+            dct_us: 384.6,
+            ..base
+        };
+        WhatIf {
+            platform: "h100".to_string(),
+            model: "gpt2".to_string(),
+            phase: "decode".to_string(),
+            baseline: base,
+            scenarios: vec![Scenario {
+                label: "host-cpu:xeon-6538y".to_string(),
+                outcome: cf,
+            }],
+        }
+    }
+
+    #[test]
+    fn table_renders_baseline_and_deltas() {
+        let t = whatif_table(&sample());
+        let out = t.render();
+        assert!(out.contains("baseline"));
+        assert!(out.contains("+host-cpu:xeon-6538y"));
+        assert!(out.contains("-12.0%"), "e2e delta rendered:\n{out}");
+        assert!(out.contains("HDBI"));
+    }
+
+    #[test]
+    fn json_roundtrips_and_carries_reductions() {
+        let j = to_json(&sample());
+        let back = Json::parse(&j.pretty()).unwrap();
+        let scenarios = back.arr_of("scenarios").unwrap();
+        assert_eq!(scenarios.len(), 1);
+        let e2e_red = scenarios[0].f64_of("e2e_reduction").unwrap();
+        assert!((e2e_red - 0.12).abs() < 1e-9);
+        assert!(scenarios[0].f64_of("orch_reduction").unwrap() > 0.0);
+        assert_eq!(back.req("baseline").unwrap().usize_of("n_kernels").unwrap(), 100);
+    }
+}

@@ -1,0 +1,509 @@
+//! Replayable schedule: the intermediate representation between a
+//! recorded trace and a counterfactual re-simulation.
+//!
+//! Extraction inverts the producer's timeline exactly (DESIGN.md §10):
+//!
+//! * **Eager traces** (`sim::simulate`, `taxbreak trace`) — each
+//!   correlation chain contributes one [`Step`] carrying the measured
+//!   per-invocation host path (`T_Py`, `T_dispatch`, api-call span),
+//!   the empty-queue launch gap split into floor + framework excess,
+//!   and the device duration.  Inter-chain gaps become `pre_host_us`;
+//!   a gap above [`SYNC_EPS_US`] marks a pass boundary, i.e. a device
+//!   synchronization precedes the gap (`synced`).  Mid-pass the eager
+//!   host never waits, so gaps there are exactly zero.
+//! * **Serving traces** (`phase == "serve"`, captured via
+//!   `taxbreak loadgen --capture`) — engines execute synchronously, so
+//!   every invocation is a synced step whose preparation span is the
+//!   host path and whose execute-call + device spans follow serially;
+//!   inter-chain gaps are arrival idle time.
+//!
+//! Re-simulating the unmodified schedule reproduces the recorded
+//! wall-clock (identity fidelity — enforced by `rust/tests/whatif.rs`);
+//! counterfactual transforms then edit steps and the same re-simulation
+//! yields the predicted timeline, so decode-phase host-bound stalls
+//! shorten wall-clock correctly instead of being subtracted as sums.
+
+use crate::device::Stream;
+use crate::hardware::Platform;
+use crate::taxbreak::decompose::hdbi_of;
+use crate::taxbreak::phase2::Phase2Result;
+use crate::trace::{EventKind, KernelMeta, Trace, TraceEvent, Track};
+
+/// Inter-chain host gap (us) above which the gap is a pass boundary
+/// (device sync + per-pass framework glue). Mid-pass eager dispatch
+/// chains back-to-back, so real gaps are either ~0 or ≫ this.
+pub const SYNC_EPS_US: f64 = 1e-6;
+
+/// How a schedule's host and device interleave.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScheduleMode {
+    /// Asynchronous eager dispatch: kernels queue on a FIFO stream and
+    /// only pass boundaries synchronize.
+    Eager,
+    /// One executable invocation at a time, host-blocking (the serving
+    /// engines' contract).
+    Synchronous,
+}
+
+/// One kernel invocation of the replayable schedule (all times us).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Step {
+    /// Kernel symbol (family-level transforms match on it).
+    pub name: String,
+    /// Kernel family tag.
+    pub family: String,
+    /// Phase-2 dedup key (device-swap lookups).
+    pub dedup_key: String,
+    pub lib_mediated: bool,
+    /// A device synchronization precedes `pre_host_us`.
+    pub synced: bool,
+    /// Unattributed host residual before this invocation: per-pass
+    /// framework glue, sync epilogue, or (serving) arrival idle.
+    pub pre_host_us: f64,
+    /// Measured T_Py (eager) — 0 in serving mode.
+    pub t_py_us: f64,
+    /// Measured dispatch cost net of ΔCT (eager); preparation span
+    /// (serving).
+    pub t_base_us: f64,
+    /// ΔCT share of the measured dispatch (library-mediated only).
+    pub t_ct_us: f64,
+    /// Launch-API call span (eager); execute-call span (serving).
+    pub api_us: f64,
+    /// Launch-floor share of the empty-queue launch gap.
+    pub floor_us: f64,
+    /// Framework launch excess (ΔKT_fw) share of the gap.
+    pub excess_us: f64,
+    /// Device execution time.
+    pub device_us: f64,
+    /// Analytic work estimates (device-swap rescaling).
+    pub flops: f64,
+    pub bytes: f64,
+    /// Collapsed into a captured CUDA graph by a transform.
+    pub graphed: bool,
+}
+
+impl Step {
+    /// Host dispatch-path occupancy of this step (excludes `pre_host_us`).
+    pub fn host_path_us(&self) -> f64 {
+        self.t_py_us + self.t_base_us + self.t_ct_us + self.api_us
+    }
+}
+
+/// A replayable schedule extracted from one trace.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub mode: ScheduleMode,
+    /// Copied from the source trace (reports echo it).
+    pub platform: String,
+    pub model: String,
+    pub phase: String,
+    pub steps: Vec<Step>,
+    /// Trailing synced host time after the last invocation (final sync
+    /// + epilogue).
+    pub tail_host_us: f64,
+    /// Single-thread speed of the recorded host (1.0 when the platform
+    /// is not in the catalog) — host-CPU profiles rescale against it.
+    pub baseline_st_speed: f64,
+    /// Phase-2 null-kernel floor (gap splitting, graph-launch floors).
+    pub floor_hint_us: f64,
+}
+
+impl Schedule {
+    /// Extract from an eager trace + its Phase-2 replay results.
+    pub fn from_eager_trace(trace: &Trace, p2: &Phase2Result) -> anyhow::Result<Schedule> {
+        crate::taxbreak::phase1::validate_trace(trace)?;
+        let chains = trace.correlation_chains();
+        let mut ids: Vec<u64> = chains
+            .iter()
+            .filter(|(_, c)| c.kernel.is_some_and(|k| k.meta.is_some()))
+            .map(|(&id, _)| id)
+            .collect();
+        ids.sort();
+
+        let floor_hint = p2.floor.mean.max(0.0);
+        let mut steps = Vec::with_capacity(ids.len());
+        let mut prev_api_end = 0.0f64;
+        let mut prev_kernel_end = 0.0f64;
+        for id in ids {
+            let c = &chains[&id];
+            let (torch, aten, api, kernel) =
+                match (c.torch_op, c.aten_op, c.runtime_api, c.kernel) {
+                    (Some(t), Some(a), Some(r), Some(k)) => (t, a, r, k),
+                    // validate_trace guarantees api+kernel; chains that
+                    // still lack a host op (partial traces) are skipped.
+                    _ => continue,
+                };
+            let meta = kernel.meta.as_ref().expect("filtered for meta");
+
+            let gap = torch.ts_us - prev_api_end;
+            let synced = gap > SYNC_EPS_US;
+            // A synced gap contains the wait for the device to drain;
+            // only the remainder is host think time.
+            let pre_host = if synced {
+                (torch.ts_us - prev_api_end.max(prev_kernel_end)).max(0.0)
+            } else {
+                gap.max(0.0)
+            };
+
+            let t_py = (aten.ts_us - torch.ts_us).max(0.0);
+            let t_dispatch = (api.ts_us - aten.ts_us).max(0.0);
+            let key = meta.dedup_key();
+            let t_ct = if meta.lib_mediated {
+                p2.replay_of(&key)
+                    .map(|k| k.dct_us)
+                    .unwrap_or(0.0)
+                    .min(t_dispatch)
+            } else {
+                0.0
+            };
+
+            // Empty-queue launch gap. When the kernel queued behind the
+            // previous one its true gap is censored (start == previous
+            // end); fall back to the Phase-2 isolation measurement.
+            let gap_obs = (kernel.ts_us - api.ts_us).max(0.0);
+            let queued = prev_kernel_end > api.ts_us
+                && (kernel.ts_us - prev_kernel_end).abs() < 1e-9;
+            let (floor, excess) = if queued {
+                let iso = p2
+                    .replay_of(&key)
+                    .map(|k| (k.t_launch.mean - floor_hint).max(0.0))
+                    .unwrap_or(0.0);
+                (floor_hint.min(gap_obs), iso)
+            } else {
+                let f = gap_obs.min(floor_hint);
+                (f, gap_obs - f)
+            };
+
+            steps.push(Step {
+                name: meta.kernel_name.clone(),
+                family: meta.family.clone(),
+                dedup_key: key,
+                lib_mediated: meta.lib_mediated,
+                synced,
+                pre_host_us: pre_host,
+                t_py_us: t_py,
+                t_base_us: (t_dispatch - t_ct).max(0.0),
+                t_ct_us: t_ct,
+                api_us: api.dur_us,
+                floor_us: floor,
+                excess_us: excess,
+                device_us: kernel.dur_us,
+                flops: meta.flops,
+                bytes: meta.bytes,
+                graphed: false,
+            });
+            prev_api_end = api.end_us();
+            prev_kernel_end = prev_kernel_end.max(kernel.end_us());
+        }
+
+        let tail = (trace.e2e_us() - prev_api_end.max(prev_kernel_end)).max(0.0);
+        Ok(Schedule {
+            mode: ScheduleMode::Eager,
+            platform: trace.meta.platform.clone(),
+            model: trace.meta.model.clone(),
+            phase: trace.meta.phase.clone(),
+            steps,
+            tail_host_us: tail,
+            baseline_st_speed: baseline_st(&trace.meta.platform),
+            floor_hint_us: floor_hint,
+        })
+    }
+
+    /// Extract from a captured serving run (`phase == "serve"`): every
+    /// invocation is host-blocking, inter-chain gaps are arrival idle.
+    pub fn from_serving_trace(trace: &Trace) -> anyhow::Result<Schedule> {
+        crate::taxbreak::phase1::validate_trace(trace)?;
+        let chains = trace.correlation_chains();
+        let mut ids: Vec<u64> = chains
+            .iter()
+            .filter(|(_, c)| c.kernel.is_some_and(|k| k.meta.is_some()))
+            .map(|(&id, _)| id)
+            .collect();
+        ids.sort();
+
+        let mut steps = Vec::with_capacity(ids.len());
+        let mut prev_end = 0.0f64;
+        for id in ids {
+            let c = &chains[&id];
+            let (torch, kernel) = match (c.torch_op, c.kernel) {
+                (Some(t), Some(k)) => (t, k),
+                _ => continue,
+            };
+            let meta = kernel.meta.as_ref().expect("filtered for meta");
+            let prep = c.aten_op.map(|a| a.dur_us).unwrap_or(0.0);
+            let exec = c.runtime_api.map(|r| r.dur_us).unwrap_or(0.0);
+            steps.push(Step {
+                name: meta.kernel_name.clone(),
+                family: meta.family.clone(),
+                dedup_key: meta.dedup_key(),
+                lib_mediated: meta.lib_mediated,
+                synced: true,
+                pre_host_us: (torch.ts_us - prev_end).max(0.0),
+                t_py_us: 0.0,
+                t_base_us: prep,
+                t_ct_us: 0.0,
+                api_us: exec,
+                floor_us: 0.0,
+                excess_us: 0.0,
+                device_us: kernel.dur_us,
+                flops: meta.flops,
+                bytes: meta.bytes,
+                graphed: false,
+            });
+            prev_end = kernel.end_us();
+        }
+        let tail = (trace.e2e_us() - prev_end).max(0.0);
+        Ok(Schedule {
+            mode: ScheduleMode::Synchronous,
+            platform: trace.meta.platform.clone(),
+            model: trace.meta.model.clone(),
+            phase: trace.meta.phase.clone(),
+            steps,
+            tail_host_us: tail,
+            baseline_st_speed: baseline_st(&trace.meta.platform),
+            floor_hint_us: 0.0,
+        })
+    }
+
+}
+
+fn baseline_st(platform: &str) -> f64 {
+    Platform::by_name(platform)
+        .map(|p| p.cpu.st_speed)
+        .unwrap_or(1.0)
+}
+
+/// Aggregate prediction of one re-simulated schedule, in the Eq. 1-3
+/// vocabulary so baseline and counterfactual rows compare directly.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Outcome {
+    /// Re-derived wall-clock.
+    pub e2e_us: f64,
+    pub device_active_us: f64,
+    pub n_kernels: usize,
+    /// Σ T_Py.
+    pub t_py_us: f64,
+    /// Σ dispatch net of ΔCT.
+    pub t_base_us: f64,
+    /// Σ I_lib·ΔCT.
+    pub dct_us: f64,
+    /// Σ launch-floor charges (collapses under CUDA-graph amortization).
+    pub dkt_us: f64,
+}
+
+impl Outcome {
+    /// ΔFT.
+    pub fn dft_us(&self) -> f64 {
+        self.t_py_us + self.t_base_us
+    }
+
+    /// Eq. 2 over the (counterfactual) run.
+    pub fn orchestration_us(&self) -> f64 {
+        self.dft_us() + self.dct_us + self.dkt_us
+    }
+
+    /// Eq. 3 via the shared [`hdbi_of`] convention.
+    pub fn hdbi(&self) -> f64 {
+        hdbi_of(self.orchestration_us(), self.device_active_us)
+    }
+
+    /// Relative reduction of `f(self)` vs `f(baseline)` (0 when the
+    /// baseline quantity vanishes).
+    pub fn reduction_vs(&self, baseline: &Outcome, f: impl Fn(&Outcome) -> f64) -> f64 {
+        let b = f(baseline);
+        if b <= 0.0 {
+            0.0
+        } else {
+            1.0 - f(self) / b
+        }
+    }
+}
+
+/// Re-simulate a schedule; optionally record a synthetic trace (host
+/// span + kernel span per step) for Chrome-timeline export.
+pub fn resimulate_with_trace(s: &Schedule, record: bool) -> (Outcome, Option<Trace>) {
+    let mut out = Outcome::default();
+    let mut events: Vec<TraceEvent> = Vec::new();
+    let mut t = 0.0f64;
+    let mut stream = Stream::new();
+    let mut corr = 0u64;
+
+    for step in &s.steps {
+        if step.synced {
+            t = t.max(stream.sync_point());
+        }
+        t += step.pre_host_us;
+        let torch_ts = t;
+        let api_ts = torch_ts + step.t_py_us + step.t_base_us + step.t_ct_us;
+        let api_end = api_ts + step.api_us;
+        let timing = match s.mode {
+            ScheduleMode::Eager => {
+                t = api_end;
+                stream.submit(api_ts, step.floor_us + step.excess_us, step.device_us)
+            }
+            ScheduleMode::Synchronous => {
+                // Host blocks through the device computation.
+                let timing = stream.submit(
+                    api_end.max(stream.sync_point()),
+                    step.floor_us + step.excess_us,
+                    step.device_us,
+                );
+                t = timing.end_us;
+                timing
+            }
+        };
+        out.n_kernels += 1;
+        out.device_active_us += step.device_us;
+        out.t_py_us += step.t_py_us;
+        out.t_base_us += step.t_base_us;
+        out.dct_us += step.t_ct_us;
+        out.dkt_us += step.floor_us;
+        if record {
+            corr += 1;
+            events.push(TraceEvent {
+                kind: EventKind::TorchOp,
+                name: format!("whatif.{}", step.name),
+                ts_us: torch_ts,
+                dur_us: api_end - torch_ts,
+                correlation_id: corr,
+                track: Track::Host,
+                meta: None,
+            });
+            events.push(TraceEvent {
+                kind: EventKind::Kernel,
+                name: step.name.clone(),
+                ts_us: timing.start_us,
+                dur_us: step.device_us,
+                correlation_id: corr,
+                track: Track::Device(0),
+                meta: Some(KernelMeta {
+                    kernel_name: step.name.clone(),
+                    family: step.family.clone(),
+                    aten_op: String::new(),
+                    shapes_key: String::new(),
+                    grid: [1, 1, 1],
+                    block: [1, 1, 1],
+                    lib_mediated: step.lib_mediated,
+                    flops: step.flops,
+                    bytes: step.bytes,
+                }),
+            });
+        }
+    }
+    t = t.max(stream.sync_point()) + s.tail_host_us;
+    out.e2e_us = t.max(stream.sync_point());
+
+    let trace = record.then(|| {
+        let mut tr = Trace::new(crate::trace::TraceMeta {
+            platform: s.platform.clone(),
+            model: s.model.clone(),
+            phase: s.phase.clone(),
+            batch: 0,
+            seq: 0,
+            m_tokens: 0,
+            wall_us: out.e2e_us,
+        });
+        tr.events = events;
+        tr
+    });
+    (out, trace)
+}
+
+/// Re-simulate without event recording (the hot path).
+pub fn resimulate(s: &Schedule) -> Outcome {
+    resimulate_with_trace(s, false).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::Platform;
+    use crate::models;
+    use crate::sim::{simulate, Workload};
+    use crate::taxbreak::phase2::{run, ReplayConfig, SimReplayBackend};
+    use crate::taxbreak::Phase1;
+
+    fn schedule_for(model: &models::ModelSpec, wl: &Workload) -> (crate::trace::Trace, Schedule) {
+        let platform = Platform::h100();
+        let trace = simulate(model, &platform, wl, 11);
+        let p1 = Phase1::from_trace(&trace);
+        let mut backend = SimReplayBackend::new(platform, 13);
+        let p2 = run(&p1.db, &mut backend, &ReplayConfig::fast());
+        let s = Schedule::from_eager_trace(&trace, &p2).unwrap();
+        (trace, s)
+    }
+
+    #[test]
+    fn identity_resim_reproduces_the_recorded_wall() {
+        for (model, wl) in [
+            (models::gpt2(), Workload::prefill(1, 128)),
+            (models::gpt2(), Workload::decode(1, 64, 3)),
+            (models::llama_1b(), Workload::prefill(4, 256)),
+        ] {
+            let (trace, s) = schedule_for(&model, &wl);
+            let out = resimulate(&s);
+            let rel = (out.e2e_us - trace.meta.wall_us).abs() / trace.meta.wall_us;
+            assert!(
+                rel < 1e-3,
+                "{} identity replay drifted: {} vs {} ({rel})",
+                model.name,
+                out.e2e_us,
+                trace.meta.wall_us
+            );
+            assert_eq!(out.n_kernels, trace.kernel_count());
+            assert!(
+                (out.device_active_us - trace.device_active_us()).abs()
+                    < 1e-6 * trace.device_active_us()
+            );
+        }
+    }
+
+    #[test]
+    fn pass_boundaries_are_detected() {
+        let (_, s) = schedule_for(&models::gpt2(), &Workload::decode(1, 64, 4));
+        // 1 prefill + 3 decode steps => 4 synced pass starts.
+        let synced = s.steps.iter().filter(|st| st.synced).count();
+        assert_eq!(synced, 4, "one synced step per pass");
+        // Mid-pass steps carry no host residual.
+        for st in s.steps.iter().filter(|st| !st.synced) {
+            assert!(st.pre_host_us.abs() < SYNC_EPS_US);
+        }
+    }
+
+    #[test]
+    fn extraction_splits_the_gap_into_floor_and_excess() {
+        let (_, s) = schedule_for(&models::gpt2(), &Workload::prefill(1, 128));
+        for st in &s.steps {
+            assert!(st.floor_us >= 0.0 && st.floor_us <= s.floor_hint_us + 1e-9);
+            assert!(st.excess_us >= 0.0);
+            assert!(st.device_us > 0.0);
+        }
+        assert!(s.steps.iter().any(|st| st.excess_us > 0.0));
+    }
+
+    #[test]
+    fn serving_trace_extracts_synchronously() {
+        use crate::runtime::backend::Backend;
+        use crate::serving::ModelBackend;
+        let mut e = crate::runtime::SimEngine::with_defaults(
+            models::gpt2(),
+            Platform::h200(),
+            5,
+        );
+        let (next, cache) = e.prefill_group(&[vec![1, 2, 3]]).unwrap();
+        let _ = e.decode_group(cache, 3, &next).unwrap();
+        let trace = e.take_trace();
+        let s = Schedule::from_serving_trace(&trace).unwrap();
+        assert_eq!(s.mode, ScheduleMode::Synchronous);
+        assert_eq!(s.steps.len(), 2);
+        let out = resimulate(&s);
+        let rel = (out.e2e_us - trace.meta.wall_us).abs() / trace.meta.wall_us;
+        assert!(rel < 1e-9, "synchronous identity replay must be exact: {rel}");
+    }
+
+    #[test]
+    fn empty_trace_is_rejected() {
+        let trace = crate::trace::Trace::default();
+        assert!(Schedule::from_serving_trace(&trace).is_err());
+    }
+}

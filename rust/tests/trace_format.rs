@@ -190,15 +190,29 @@ fn chrome_export_fields_match_spec() {
     let t = sample_trace();
     let chrome = to_chrome_json(&t);
     let arr = chrome.as_arr().unwrap();
-    assert_eq!(arr.len(), t.events.len());
-    for ev in arr {
+    // §7: one leading process-name metadata event, then one complete
+    // event per trace event, in order.
+    assert_eq!(arr.len(), 1 + t.events.len());
+    let meta = &arr[0];
+    assert_eq!(
+        keys(meta),
+        vec!["name", "ph", "pid", "tid", "args"],
+        "metadata event field order"
+    );
+    assert_eq!(meta.str_of("name").unwrap(), "process_name");
+    assert_eq!(meta.str_of("ph").unwrap(), "M");
+    assert_eq!(
+        meta.req("args").unwrap().str_of("name").unwrap(),
+        format!("{} {} @ {}", t.meta.model, t.meta.phase, t.meta.platform)
+    );
+    for ev in &arr[1..] {
         assert_eq!(keys(ev), CHROME_FIELDS.to_vec());
         assert_eq!(ev.str_of("ph").unwrap(), "X");
     }
     // Host tid 0; device stream s -> tid 100 + s.
-    assert_eq!(arr[0].f64_of("tid").unwrap(), 0.0);
-    assert_eq!(arr[3].f64_of("tid").unwrap(), 100.0);
-    assert_eq!(arr[5].f64_of("tid").unwrap(), 103.0);
+    assert_eq!(arr[1].f64_of("tid").unwrap(), 0.0);
+    assert_eq!(arr[4].f64_of("tid").unwrap(), 100.0);
+    assert_eq!(arr[6].f64_of("tid").unwrap(), 103.0);
 }
 
 #[test]
