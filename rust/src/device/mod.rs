@@ -1,4 +1,6 @@
-//! Device-side stream timeline: a FIFO CUDA stream.
+//! Device-side stream timeline: a FIFO CUDA stream — the per-stream
+//! primitive composed into multi-stream/multi-device timelines by
+//! [`crate::timeline::Engine`].
 //!
 //! Kernels start at `max(api_start + launch_gap, previous kernel end)`;
 //! the second term is the queue delay that makes TKLQT blow up once the
@@ -35,6 +37,25 @@ impl Stream {
     /// empty-queue launch gap and device duration.
     pub fn submit(&mut self, api_start_us: f64, launch_gap_us: f64, dur_us: f64) -> KernelTiming {
         let ready = api_start_us + launch_gap_us;
+        self.submit_ready(api_start_us, ready, dur_us)
+    }
+
+    /// [`Stream::submit`] with an extra readiness floor `dep_us`: the
+    /// kernel additionally waits for a cross-stream event (all-reduce
+    /// join, producer on another stream). `dep_us = 0.0` is exactly
+    /// `submit` (timestamps are non-negative).
+    pub fn submit_dep(
+        &mut self,
+        api_start_us: f64,
+        launch_gap_us: f64,
+        dep_us: f64,
+        dur_us: f64,
+    ) -> KernelTiming {
+        let ready = (api_start_us + launch_gap_us).max(dep_us);
+        self.submit_ready(api_start_us, ready, dur_us)
+    }
+
+    fn submit_ready(&mut self, api_start_us: f64, ready: f64, dur_us: f64) -> KernelTiming {
         let start = ready.max(self.cursor_us);
         let end = start + dur_us;
         self.cursor_us = end;
@@ -102,6 +123,22 @@ mod tests {
         assert_eq!(s.active_us(), 7.0);
         assert_eq!(s.launched(), 2);
         assert_eq!(s.sync_point(), 8.0);
+    }
+
+    #[test]
+    fn submit_dep_waits_for_the_event() {
+        let mut s = Stream::new();
+        // Dependency beyond the launch gap dominates readiness.
+        let t = s.submit_dep(0.0, 4.7, 20.0, 2.0);
+        assert_eq!(t.start_us, 20.0);
+        assert_eq!(t.queue_delay_us, 0.0);
+        assert!((t.launch_plus_queue_us - 20.0).abs() < 1e-12);
+        // A zero dependency reproduces submit exactly.
+        let mut a = Stream::new();
+        let mut b = Stream::new();
+        let x = a.submit(3.0, 1.5, 2.0);
+        let y = b.submit_dep(3.0, 1.5, 0.0, 2.0);
+        assert_eq!(x, y);
     }
 
     #[test]

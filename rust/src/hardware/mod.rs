@@ -127,6 +127,29 @@ impl Platform {
     }
 }
 
+/// NVLink-generation inter-GPU bandwidth, GB/s per direction (Hopper
+/// NVLink4: 900 GB/s aggregate) — the bandwidth term of the
+/// tensor-parallel all-reduce model (`sim::parallel`,
+/// `whatif` `tensor-parallel:<N>`).
+pub const NVLINK_GBPS: f64 = 900.0;
+
+/// Per-hop latency of a ring all-reduce step, us (NCCL small-message
+/// launch + SM hand-off; latency-dominated for decode activations).
+pub const ALLREDUCE_HOP_US: f64 = 3.0;
+
+/// Single-thread speed of the host CPU recorded for `platform`, on the
+/// same scale as [`CpuSpec::st_speed`] / [`HostProfile::st_speed`]
+/// (H100 host = 1.0). Platforms outside the catalog fall back to the
+/// reference `1.0` — the **single** baseline-speed lookup used by the
+/// what-if engine (schedule extraction, host-CPU rescaling); it
+/// returns exactly the `HostProfile` catalog's factors because the
+/// `Platform` presets share them (pinned by a test below).
+pub fn baseline_st_speed(platform: &str) -> f64 {
+    Platform::by_name(platform)
+        .map(|p| p.cpu.st_speed)
+        .unwrap_or(1.0)
+}
+
 /// A named host-CPU profile for counterfactual replay (`taxbreak
 /// whatif --counterfactual host-cpu:<name>`): the paper's §VI pairing
 /// plus one documented extrapolation point.
@@ -234,6 +257,23 @@ mod tests {
         for p in HostProfile::all() {
             assert_eq!(HostProfile::by_name(p.name).unwrap(), p);
         }
+    }
+
+    #[test]
+    fn baseline_st_speed_matches_the_profile_catalog() {
+        // The lookup must agree with the HostProfile factors for the
+        // paper's pairing (this is the dedup contract: one source of
+        // single-thread truth).
+        assert_eq!(
+            baseline_st_speed("h100"),
+            HostProfile::by_name("xeon-8480c").unwrap().st_speed
+        );
+        assert_eq!(
+            baseline_st_speed("h200"),
+            HostProfile::by_name("xeon-6538y").unwrap().st_speed
+        );
+        // Unknown platforms (pjrt-cpu, test stubs) use the reference.
+        assert_eq!(baseline_st_speed("pjrt-cpu"), 1.0);
     }
 
     #[test]

@@ -182,6 +182,7 @@ mod tests {
             dur_us: 1.0,
             correlation_id: 1,
             track: Track::Host,
+            device: None,
             meta: None,
         });
         t.push(TraceEvent {
@@ -191,6 +192,7 @@ mod tests {
             dur_us: 2.0,
             correlation_id: 1,
             track: Track::Device(0),
+            device: None,
             meta: Some(meta("k", "f32[4]")),
         });
         let db = KernelDb::from_trace(&t);

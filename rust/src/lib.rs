@@ -36,8 +36,9 @@
 //! | [`kernels`] | kernel-family taxonomy, kernel database, device cost model |
 //! | [`lowering`] | model × phase × (BS, SL) → eager kernel launch sequence |
 //! | [`host`] | single-threaded host dispatch path (Python/ATen/library/launch) |
-//! | [`device`] | GPU stream FIFO + timeline |
-//! | [`sim`] | host+device co-simulation → traces |
+//! | [`device`] | GPU stream FIFO (the per-stream primitive) |
+//! | [`timeline`] | discrete-event engine: host threads × streams × devices, one clock for sim/whatif/serving |
+//! | [`sim`] | host+device co-simulation → traces (single-stream and tensor/expert-parallel scenarios) |
 //! | [`taxbreak`] | **the paper's contribution**: two-phase pipeline, Eq. 1-3, baselines, diagnostics |
 //! | [`serving`] | request router, continuous batcher, reservation-backed paged-KV manager, scheduler, load generator |
 //! | [`runtime`] | backend abstraction (simulated / real PJRT), AOT artifact + weights loading, trace instrumentation |
@@ -74,6 +75,7 @@ pub mod runtime;
 pub mod serving;
 pub mod sim;
 pub mod taxbreak;
+pub mod timeline;
 pub mod trace;
 pub mod util;
 pub mod whatif;

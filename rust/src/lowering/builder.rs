@@ -15,12 +15,41 @@ const BLOCK_THREADS: u32 = 256;
 /// BF16 element size.
 const EB: f64 = 2.0;
 
+/// Structural annotation on a lowered kernel sequence: records where a
+/// dependency-relevant boundary sits *without* perturbing the sequence
+/// itself (same kernels, same RNG draws). The parallel-execution
+/// scenarios (`sim::parallel`) consume marks to place per-layer
+/// all-reduce sync points (tensor parallelism) and to shard expert
+/// chains across streams (expert parallelism); plain `lower_pass`
+/// callers never see them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MarkKind {
+    /// Boundary after one transformer layer (kernels `< index` include
+    /// the whole layer) — tensor-parallel all-reduce point.
+    LayerEnd,
+    /// The kernel at `index` starts one expert's chain (routed or
+    /// shared) — expert-parallel shard boundary.
+    ExpertChain,
+    /// The kernel at `index` is the MoE combine (scatter-add joining
+    /// every expert stream).
+    Combine,
+}
+
+/// One mark: `kind` anchored before the kernel at `index` (or, for
+/// [`MarkKind::LayerEnd`], after the kernel at `index - 1`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Mark {
+    pub index: usize,
+    pub kind: MarkKind,
+}
+
 pub struct SeqBuilder<'m> {
     pub model: &'m ModelSpec,
     pub batch: usize,
     pub seq_q: usize,
     pub ctx: usize,
     out: Vec<KernelMeta>,
+    marks: Vec<Mark>,
     /// Symbol/shape-key cache: kernel names repeat heavily (layers ×
     /// experts × steps), and `format!` per invocation dominated the
     /// lowering profile (§Perf L3.2). Keyed by FNV of the inputs.
@@ -35,8 +64,17 @@ impl<'m> SeqBuilder<'m> {
             seq_q,
             ctx,
             out: Vec::with_capacity(1024),
+            marks: Vec::new(),
             name_cache: std::collections::HashMap::with_capacity(256),
         }
+    }
+
+    /// Record a structural mark at the current sequence position.
+    pub fn mark(&mut self, kind: MarkKind) {
+        self.marks.push(Mark {
+            index: self.out.len(),
+            kind,
+        });
     }
 
     /// Memoized string build: returns a clone of the cached rendering.
@@ -53,6 +91,11 @@ impl<'m> SeqBuilder<'m> {
 
     pub fn finish(self) -> Vec<KernelMeta> {
         self.out
+    }
+
+    /// Finish, keeping the structural marks alongside the sequence.
+    pub fn finish_marked(self) -> (Vec<KernelMeta>, Vec<Mark>) {
+        (self.out, self.marks)
     }
 
     fn grid_for(&self, elements: usize) -> [u32; 3] {
@@ -354,6 +397,31 @@ mod tests {
         let mut b = SeqBuilder::new(&l, 1, 16, 16);
         lower_glue(&mut b, 0, 9);
         assert_eq!(b.len(), 9);
+    }
+
+    #[test]
+    fn marks_record_positions_without_touching_the_sequence() {
+        let m = models::gpt2();
+        let mut a = SeqBuilder::new(&m, 1, 8, 8);
+        a.elem("aten::mul", "x", 100);
+        a.mark(MarkKind::LayerEnd);
+        a.elem("aten::mul", "y", 100);
+        a.mark(MarkKind::Combine);
+        let (seq, marks) = a.finish_marked();
+        assert_eq!(seq.len(), 2);
+        assert_eq!(
+            marks,
+            vec![
+                Mark { index: 1, kind: MarkKind::LayerEnd },
+                Mark { index: 2, kind: MarkKind::Combine },
+            ]
+        );
+
+        // The marked and unmarked builds emit identical kernels.
+        let mut b = SeqBuilder::new(&m, 1, 8, 8);
+        b.elem("aten::mul", "x", 100);
+        b.elem("aten::mul", "y", 100);
+        assert_eq!(b.finish(), seq);
     }
 
     #[test]

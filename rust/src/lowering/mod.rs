@@ -27,7 +27,7 @@ use crate::models::ModelSpec;
 use crate::trace::KernelMeta;
 use crate::util::rng::Rng;
 
-pub use builder::SeqBuilder;
+pub use builder::{Mark, MarkKind, SeqBuilder};
 
 /// Inference phase of one lowered pass.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -74,6 +74,23 @@ pub fn lower_pass(
     opts: &LowerOpts,
     rng: &mut Rng,
 ) -> Vec<KernelMeta> {
+    lower_pass_marked(model, kind, batch, seq_q, ctx, opts, rng).0
+}
+
+/// [`lower_pass`] keeping the structural [`Mark`]s: layer boundaries
+/// (tensor-parallel all-reduce points) and, for MoE models, expert
+/// chain starts + the combine (expert-parallel shard boundaries).
+/// Marks annotate positions only — the kernel sequence and every RNG
+/// draw are identical to `lower_pass`.
+pub fn lower_pass_marked(
+    model: &ModelSpec,
+    kind: PassKind,
+    batch: usize,
+    seq_q: usize,
+    ctx: usize,
+    opts: &LowerOpts,
+    rng: &mut Rng,
+) -> (Vec<KernelMeta>, Vec<Mark>) {
     let mut b = SeqBuilder::new(model, batch, seq_q, ctx);
 
     // Embedding lookup.
@@ -89,6 +106,7 @@ pub fn lower_pass(
         // Eager-mode glue: contiguity copies, mask/position index ops,
         // dtype casts (calibration constant; models::catalog).
         builder::lower_glue(&mut b, layer, model.glue_kernels_per_layer);
+        b.mark(MarkKind::LayerEnd);
     }
 
     // Final norm + LM head + (decode) sampling ops.
@@ -107,7 +125,7 @@ pub fn lower_pass(
         b.reduce("aten::argmax", "argmax_dim", batch * model.vocab);
         b.gather("aten::index_select", "token_select", batch, 1);
     }
-    b.finish()
+    b.finish_marked()
 }
 
 /// Total kernels of an m-token decode run (pass-per-step; the sequence
@@ -249,6 +267,40 @@ mod tests {
             lower_pass(&m, PassKind::Prefill, 1, 256, 256, &LowerOpts::default(), &mut rng)
         };
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn marked_lowering_is_the_same_sequence_with_boundaries() {
+        let m = models::olmoe();
+        let spec = m.moe.unwrap();
+        let opts = LowerOpts::default();
+        let plain = {
+            let mut rng = Rng::new(21);
+            lower_pass(&m, PassKind::DecodeStep, 1, 1, 128, &opts, &mut rng)
+        };
+        let (marked, marks) = {
+            let mut rng = Rng::new(21);
+            lower_pass_marked(&m, PassKind::DecodeStep, 1, 1, 128, &opts, &mut rng)
+        };
+        assert_eq!(plain, marked, "marks must not perturb the sequence");
+        let layers = marks.iter().filter(|x| x.kind == MarkKind::LayerEnd).count();
+        assert_eq!(layers, m.layers);
+        let experts = marks
+            .iter()
+            .filter(|x| x.kind == MarkKind::ExpertChain)
+            .count();
+        assert_eq!(
+            experts,
+            m.layers * (spec.n_experts + spec.shared_experts),
+            "every expert iteration is a shard boundary"
+        );
+        let combines = marks.iter().filter(|x| x.kind == MarkKind::Combine).count();
+        assert_eq!(combines, m.layers);
+        // Marks are sorted and in-range.
+        for w in marks.windows(2) {
+            assert!(w[0].index <= w[1].index);
+        }
+        assert!(marks.iter().all(|x| x.index <= marked.len()));
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //! unique names stay low relative to launches (low diversity ratio)
 //! while per-expert token counts create autotune-style GEMM variants.
 
-use crate::lowering::{PassKind, SeqBuilder};
+use crate::lowering::{MarkKind, PassKind, SeqBuilder};
 use crate::models::MoeSpec;
 use crate::util::rng::Rng;
 
@@ -46,16 +46,19 @@ pub fn lower_moe_ffn(b: &mut SeqBuilder, layer: usize, kind: PassKind, rng: &mut
         PassKind::DecodeStep => spec.expert_kernels_decode,
     };
     for (e, &count) in counts.iter().enumerate() {
+        b.mark(MarkKind::ExpertChain);
         lower_expert_chain(b, &spec, e, count.max(1), k_per);
     }
     // Shared experts process every token each pass (Qwen1.5-MoE) —
     // they are plain dense FFNs, so they always run the canonical
     // chain even when routed experts use the grouped fast path.
     for s in 0..spec.shared_experts {
+        b.mark(MarkKind::ExpertChain);
         lower_expert_chain(b, &spec, spec.n_experts + s, tokens.max(1), k_per.max(8));
     }
 
     // --- Combine: weighted scatter-add + residual ---------------------
+    b.mark(MarkKind::Combine);
     b.scatter("aten::index_add_", "expert_combine", tokens, m.d_model);
     b.elem("aten::add", "residual_ffn", tokens * m.d_model);
     let _ = layer;

@@ -94,8 +94,10 @@ USAGE:
   taxbreak analyze [--config run.json] --model M --platform h100|h200
                    [--phase prefill|decode] [--bs N] [--sl N] [--m N]
                    [--fused] [--mitigation none|torch-compile|cuda-graphs|
-                    kernel-fusion] [--json]
+                    kernel-fusion] [--tensor-parallel N | --expert-parallel N]
+                   [--json]
   taxbreak trace   --model M --platform P [--phase ...] [--bs] [--sl] [--m]
+                   [--tensor-parallel N | --expert-parallel N]
                    --out FILE [--chrome FILE]
   taxbreak serve   [--backend sim|pjrt] [--requests N] [--max-batch N]
                    [--report FILE] [--seed N]
@@ -105,7 +107,8 @@ USAGE:
   taxbreak loadgen [--models M1,M2] [--platform h100|h200] [--requests N]
                    [--rate REQ_PER_S] [--prompt-dist uniform:LO:HI|lognormal:MED:SIGMA]
                    [--out-dist ...] [--max-batch N] [--max-groups N]
-                   [--kv-pages N] [--kv-page-tokens N] [--seed N] [--report FILE]
+                   [--kv-pages N] [--kv-page-tokens N] [--seed N]
+                   [--devices N] [--streams N] [--report FILE]
                    [--capture FILE] [--chrome-out FILE] [--bench-out FILE]
   taxbreak whatif  --counterfactual SPEC[,SPEC...]
                    [--trace FILE | --bundled moe-decode|dense-prefill |
@@ -114,6 +117,7 @@ USAGE:
                    SPEC: host-cpu:<profile|factor> | cuda-graphs[:LAUNCH_US]
                          | lib-elision[:fam+fam] | fusion:elem
                          | fusion:moe[:KEEP] | device:<h100|h200>
+                         | tensor-parallel:<N>
   taxbreak models | platforms | help
 
 Artifact ids: fig2 fig5 fig6 table2 table3 table4 fig7 fig8 fig9 fig10 fig11";
@@ -172,24 +176,78 @@ fn cmd_repro(mut args: Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Which execution scenario the `--tensor-parallel`/`--expert-parallel`
+/// flags select. Parsed *before* `Args::finish` so flag typos error
+/// out before any (potentially long) simulation runs.
+enum Scenario {
+    Single,
+    TensorParallel(usize),
+    ExpertParallel(usize),
+}
+
+impl Scenario {
+    fn parse(args: &mut Args) -> anyhow::Result<Scenario> {
+        let tp = args.opt_usize("tensor-parallel", 1)?;
+        let ep = args.opt_usize("expert-parallel", 1)?;
+        anyhow::ensure!(tp >= 1, "--tensor-parallel must be >= 1 (1 = off)");
+        anyhow::ensure!(ep >= 1, "--expert-parallel must be >= 1 (1 = off)");
+        anyhow::ensure!(
+            tp == 1 || ep == 1,
+            "--tensor-parallel and --expert-parallel are mutually exclusive"
+        );
+        Ok(if tp > 1 {
+            Scenario::TensorParallel(tp)
+        } else if ep > 1 {
+            Scenario::ExpertParallel(ep)
+        } else {
+            Scenario::Single
+        })
+    }
+
+    /// Simulate under this scenario. Returns the single-timeline flag
+    /// too (the schedule-level quantifier only applies there).
+    fn simulate(
+        &self,
+        model: &taxbreak::models::ModelSpec,
+        platform: &Platform,
+        wl: &taxbreak::sim::Workload,
+        seed: u64,
+    ) -> anyhow::Result<(taxbreak::trace::Trace, bool)> {
+        Ok(match *self {
+            Scenario::TensorParallel(n) => {
+                (taxbreak::sim::simulate_tensor_parallel(model, platform, wl, n, seed)?, false)
+            }
+            Scenario::ExpertParallel(n) => {
+                (taxbreak::sim::simulate_expert_parallel(model, platform, wl, n, seed)?, false)
+            }
+            Scenario::Single => (simulate(model, platform, wl, seed), true),
+        })
+    }
+}
+
 fn cmd_analyze(mut args: Args) -> anyhow::Result<()> {
     let cfg = parse_run_config(&mut args)?;
     let as_json = args.flag("json");
+    let scenario = Scenario::parse(&mut args)?;
     args.finish()?;
     let model = cfg.model_spec()?;
     let platform = cfg.platform_spec()?;
     let wl = cfg.workload();
     let seed = cfg.seed;
+    let (trace, single_timeline) = scenario.simulate(&model, &platform, &wl, seed)?;
 
-    let trace = simulate(&model, &platform, &wl, seed);
     let mut backend = SimReplayBackend::new(platform.clone(), seed ^ 0x9E37);
     let mut a = analyze(&trace, &mut backend, &cfg.replay_config());
     // Quantify the prescription by counterfactual replay (whatif).
-    // Best-effort: graphed traces (mitigation cuda-graphs) have no
-    // per-kernel host chain to extract, so they keep the qualitative
-    // diagnosis only.
-    if let Ok(schedule) = taxbreak::whatif::Schedule::from_eager_trace(&trace, &a.phase2) {
-        taxbreak::whatif::quantify_diagnosis(&mut a, &schedule)?;
+    // Best-effort, single-timeline runs only: graphed traces
+    // (mitigation cuda-graphs) have no per-kernel host chain to
+    // extract, and multi-stream schedules are not extractable — both
+    // keep the qualitative diagnosis.
+    if single_timeline {
+        if let Ok(schedule) = taxbreak::whatif::Schedule::from_eager_trace(&trace, &a.phase2)
+        {
+            taxbreak::whatif::quantify_diagnosis(&mut a, &schedule)?;
+        }
     }
     let a = a;
 
@@ -202,6 +260,12 @@ fn cmd_analyze(mut args: Args) -> anyhow::Result<()> {
         model.display, wl.phase.as_str(), wl.batch, wl.seq, platform.name, wl.m_tokens
     );
     print!("{}", report::decomposition_table(&title, &a.decomposition).render());
+    if a.decomposition.per_device.len() > 1 {
+        print!(
+            "{}",
+            report::per_device_table("per-device decomposition", &a.decomposition).render()
+        );
+    }
     print!("{}", report::family_launch_table("per-family launch latency (us)", &a).render());
     println!(
         "baselines: framework-tax {:.2} ms | TKLQT {:.2} ms (queue share {:.0}%)",
@@ -327,12 +391,11 @@ fn cmd_trace(mut args: Args) -> anyhow::Result<()> {
     let cfg = parse_run_config(&mut args)?;
     let out = args.opt_string("out", "trace.json");
     let chrome_out = args.opt("chrome").map(|s| s.to_string());
+    let scenario = Scenario::parse(&mut args)?;
     args.finish()?;
-    let model = cfg.model_spec()?;
-    let platform = cfg.platform_spec()?;
-    let wl = cfg.workload();
+    let (trace, _) =
+        scenario.simulate(&cfg.model_spec()?, &cfg.platform_spec()?, &cfg.workload(), cfg.seed)?;
 
-    let trace = simulate(&model, &platform, &wl, cfg.seed);
     trace.save(std::path::Path::new(&out))?;
     println!(
         "wrote {} ({} kernels, {:.2} ms wall)",
@@ -409,6 +472,8 @@ fn cmd_loadgen(mut args: Args) -> anyhow::Result<()> {
             kv_pages: args.opt_usize("kv-pages", base.sched.kv_pages)?,
             kv_page_tokens: args.opt_usize("kv-page-tokens", base.sched.kv_page_tokens)?,
         },
+        devices: args.opt_usize("devices", base.devices)?,
+        streams: args.opt_usize("streams", base.streams)?,
         capture: false,
     };
     let report_path = args.opt("report").map(|s| s.to_string());

@@ -24,6 +24,7 @@ use crate::kernels::cost;
 use crate::kernels::family::Family;
 use crate::models::ModelSpec;
 use crate::serving::ModelBackend;
+use crate::timeline::{self, StreamRef, Topology};
 use crate::trace::{EventKind, KernelMeta, Trace, TraceEvent, TraceMeta, Track};
 use crate::util::rng::Rng;
 
@@ -58,13 +59,26 @@ pub trait Backend: ModelBackend {
 }
 
 /// Compiled-shape grid of the simulated engine (mirrors the AOT toy
-/// artifact grid produced by `python/compile/aot.py`).
+/// artifact grid produced by `python/compile/aot.py`), plus its
+/// timeline topology.
 #[derive(Debug, Clone)]
 pub struct SimEngineConfig {
     pub vocab: usize,
     pub max_seq: usize,
     /// Decode bucket batch sizes, ascending.
     pub buckets: Vec<usize>,
+    /// CUDA streams the engine rotates executable invocations over.
+    /// The serving contract is host-blocking (logits are consumed each
+    /// step), so streams re-label device lanes in the trace and the
+    /// Chrome timeline without changing wall-clock — honest modeling:
+    /// a synchronous engine cannot exploit stream overlap, which is
+    /// itself a TaxBreak finding.
+    pub streams: usize,
+    /// Device id stamped on emitted events — replica serving
+    /// (`taxbreak loadgen --devices N`) runs one engine per device.
+    /// Device 0 omits the stamp, keeping single-replica traces
+    /// byte-identical to spec v1.
+    pub device_id: u32,
 }
 
 impl Default for SimEngineConfig {
@@ -73,6 +87,8 @@ impl Default for SimEngineConfig {
             vocab: 251,
             max_seq: 128,
             buckets: vec![1, 4],
+            streams: 1,
+            device_id: 0,
         }
     }
 }
@@ -97,7 +113,11 @@ pub struct SimEngine {
     variant: String,
     seed: u64,
     timing_rng: Rng,
-    clock_us: f64,
+    /// The shared discrete-event timeline: one host thread (the
+    /// engine's virtual clock) + the configured stream set.
+    tl: timeline::Engine,
+    /// Stream the next invocation lands on (round-robin).
+    next_stream: u32,
     trace: Trace,
     corr: u64,
 }
@@ -109,6 +129,7 @@ impl SimEngine {
         cfg: SimEngineConfig,
         seed: u64,
     ) -> SimEngine {
+        assert!(cfg.streams >= 1, "SimEngine needs at least one stream");
         let trace = Trace::new(TraceMeta {
             platform: platform.name.clone(),
             model: model.name.clone(),
@@ -118,6 +139,11 @@ impl SimEngine {
             m_tokens: 0,
             wall_us: 0.0,
         });
+        let tl = timeline::Engine::new(Topology {
+            devices: 1,
+            streams_per_device: cfg.streams,
+            host_threads: 1,
+        });
         SimEngine {
             variant: format!("sim:{}", model.name),
             timing_rng: Rng::new(seed).fork_str("sim-engine-timing"),
@@ -125,7 +151,8 @@ impl SimEngine {
             model,
             platform,
             cfg,
-            clock_us: 0.0,
+            tl,
+            next_stream: 0,
             trace,
             corr: 0,
         }
@@ -134,6 +161,34 @@ impl SimEngine {
     /// Engine with the default toy shape grid.
     pub fn with_defaults(model: ModelSpec, platform: Platform, seed: u64) -> SimEngine {
         SimEngine::new(model, platform, SimEngineConfig::default(), seed)
+    }
+
+    /// Engine with an explicit timeline topology (`taxbreak loadgen
+    /// --streams/--devices`): `streams` per engine, stamped as replica
+    /// `device_id`.
+    pub fn with_topology(
+        model: ModelSpec,
+        platform: Platform,
+        seed: u64,
+        streams: usize,
+        device_id: u32,
+    ) -> SimEngine {
+        SimEngine::new(
+            model,
+            platform,
+            SimEngineConfig {
+                streams,
+                device_id,
+                ..SimEngineConfig::default()
+            },
+            seed,
+        )
+    }
+
+    /// Device stamp for emitted events (`None` on the default device so
+    /// single-replica traces stay spec-v1 byte-identical).
+    fn stamp(&self) -> Option<u32> {
+        (self.cfg.device_id != 0).then_some(self.cfg.device_id)
     }
 
     /// Smallest compiled bucket that fits `n` sequences.
@@ -168,8 +223,11 @@ impl SimEngine {
         (0..self.cfg.vocab).map(|_| rng.next_f64() as f32).collect()
     }
 
-    /// Record one executable invocation (recorder-shaped events) and
-    /// advance the virtual clock.
+    /// Record one executable invocation (recorder-shaped events) on the
+    /// timeline: the host thread prepares and issues the execute call,
+    /// the device computation lands on the next round-robin stream, and
+    /// the host blocks through it (engines return materialized logits —
+    /// the synchronous serving contract).
     fn record(
         &mut self,
         name: &str,
@@ -180,7 +238,17 @@ impl SimEngine {
         bytes: f64,
     ) {
         self.corr += 1;
-        let t0 = self.clock_us;
+        let stream = self.next_stream;
+        self.next_stream = (self.next_stream + 1) % self.cfg.streams as u32;
+        let (t0, _) = self.tl.host_advance(0, prep_us);
+        let (_, exec_end) = self.tl.host_advance(0, exec_us);
+        let timing = self.tl.submit(
+            StreamRef { device: 0, stream },
+            exec_end,
+            0.0,
+            device_us,
+        );
+        self.tl.host_wait_until(0, timing.end_us);
         let meta = KernelMeta {
             kernel_name: format!("sim::{name}"),
             family: "sim_exec".to_string(),
@@ -192,6 +260,7 @@ impl SimEngine {
             flops,
             bytes,
         };
+        let device = self.stamp();
         self.trace.push(TraceEvent {
             kind: EventKind::TorchOp,
             name: format!("serve.{name}"),
@@ -199,6 +268,7 @@ impl SimEngine {
             dur_us: prep_us + exec_us,
             correlation_id: self.corr,
             track: Track::Host,
+            device,
             meta: None,
         });
         self.trace.push(TraceEvent {
@@ -208,6 +278,7 @@ impl SimEngine {
             dur_us: prep_us,
             correlation_id: self.corr,
             track: Track::Host,
+            device,
             meta: None,
         });
         self.trace.push(TraceEvent {
@@ -217,18 +288,19 @@ impl SimEngine {
             dur_us: exec_us,
             correlation_id: self.corr,
             track: Track::Host,
+            device,
             meta: None,
         });
         self.trace.push(TraceEvent {
             kind: EventKind::Kernel,
             name: format!("sim::{name}"),
-            ts_us: t0 + prep_us + exec_us,
+            ts_us: timing.start_us,
             dur_us: device_us,
             correlation_id: self.corr,
-            track: Track::Device(0),
+            track: Track::Device(stream),
+            device,
             meta: Some(meta),
         });
-        self.clock_us = t0 + prep_us + exec_us + device_us;
     }
 
     /// Device time of one pass over `tokens_processed` tokens, from the
@@ -262,8 +334,8 @@ impl ModelBackend for SimEngine {
 
     fn wait_until_us(&mut self, t_us: f64) {
         // Virtual clock: jump over idle gaps so arrival-gated load
-        // generation doesn't busy-spin.
-        self.clock_us = self.clock_us.max(t_us);
+        // generation doesn't busy-spin (a timeline idle jump).
+        self.tl.host_wait_until(0, t_us);
     }
 
     fn prefill_group(&mut self, prompts: &[Vec<i32>]) -> anyhow::Result<(Vec<i32>, SimCache)> {
@@ -346,7 +418,7 @@ impl ModelBackend for SimEngine {
     }
 
     fn now_us(&self) -> f64 {
-        self.clock_us
+        self.tl.host_now(0)
     }
 }
 
@@ -371,7 +443,7 @@ impl Backend for SimEngine {
     }
 
     fn take_trace(&mut self) -> Trace {
-        self.trace.meta.wall_us = self.clock_us;
+        self.trace.meta.wall_us = self.tl.host_now(0);
         let fresh = Trace::new(self.trace.meta.clone());
         std::mem::replace(&mut self.trace, fresh)
     }
@@ -472,5 +544,41 @@ mod tests {
         let mut e = engine(2);
         let prompts: Vec<Vec<i32>> = (0..5).map(|i| vec![i]).collect();
         assert!(e.prefill_group(&prompts).is_err());
+    }
+
+    #[test]
+    fn multi_stream_topology_rotates_streams_without_changing_the_clock() {
+        // The serving contract is synchronous, so streams must not
+        // change wall-clock — only the lanes kernels land on.
+        let run = |streams: usize, device_id: u32| {
+            let mut e = SimEngine::with_topology(
+                models::gpt2(),
+                Platform::h200(),
+                5,
+                streams,
+                device_id,
+            );
+            let (next, cache) = e.prefill_group(&[vec![1, 2, 3]]).unwrap();
+            let (next, cache) = e.decode_group(cache, 3, &next).unwrap();
+            let _ = e.decode_group(cache, 4, &next).unwrap();
+            e.take_trace()
+        };
+        let single = run(1, 0);
+        let multi = run(3, 2);
+        assert_eq!(single.meta.wall_us, multi.meta.wall_us);
+        assert_eq!(single.kernel_count(), multi.kernel_count());
+        // Kernels rotate 0,1,2 across the three invocations.
+        let streams: Vec<u32> = multi
+            .kernels()
+            .map(|k| match k.track {
+                Track::Device(s) => s,
+                Track::Host => unreachable!(),
+            })
+            .collect();
+        assert_eq!(streams, vec![0, 1, 2]);
+        // Replica stamping: device 2 on every event; the default engine
+        // emits no stamp at all (spec-v1 byte identity).
+        assert!(multi.events.iter().all(|e| e.device == Some(2)));
+        assert!(single.events.iter().all(|e| e.device.is_none()));
     }
 }

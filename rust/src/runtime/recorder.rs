@@ -100,6 +100,7 @@ impl TraceRecorder {
             dur_us: t.exec_return_us - t.prep_start_us,
             correlation_id: t.corr,
             track: Track::Host,
+            device: None,
             meta: None,
         });
         self.trace.push(TraceEvent {
@@ -109,6 +110,7 @@ impl TraceRecorder {
             dur_us: t.exec_start_us - t.prep_start_us,
             correlation_id: t.corr,
             track: Track::Host,
+            device: None,
             meta: None,
         });
         self.trace.push(TraceEvent {
@@ -118,6 +120,7 @@ impl TraceRecorder {
             dur_us: t.exec_return_us - t.exec_start_us,
             correlation_id: t.corr,
             track: Track::Host,
+            device: None,
             meta: None,
         });
         self.trace.push(TraceEvent {
@@ -127,6 +130,7 @@ impl TraceRecorder {
             dur_us: sync_end - t.exec_return_us,
             correlation_id: t.corr,
             track: Track::Device(0),
+            device: None,
             meta: Some(meta),
         });
     }

@@ -96,6 +96,15 @@ pub struct LoadgenConfig {
     pub output_len: LenDist,
     pub seed: u64,
     pub sched: SchedulerConfig,
+    /// Serving replicas (`--devices N`): requests round-robin across N
+    /// independent engine+scheduler replicas, each owning `kv_pages/N`
+    /// of the pool; the report carries per-device KV occupancy and
+    /// HDBI. 1 = the classic single-engine run.
+    pub devices: usize,
+    /// CUDA streams per engine (`--streams N`): invocations rotate over
+    /// N device lanes in the trace/Chrome timeline (a synchronous
+    /// engine cannot overlap them — documented in `SimEngineConfig`).
+    pub streams: usize,
     /// Keep each run's captured trace on the [`ModelRun`] — the
     /// serving-side what-if hook (`taxbreak loadgen --capture` /
     /// `--chrome-out`, then `taxbreak whatif --trace`).
@@ -111,6 +120,8 @@ impl Default for LoadgenConfig {
             output_len: LenDist::Uniform { lo: 4, hi: 12 },
             seed: 2026,
             sched: SchedulerConfig::default(),
+            devices: 1,
+            streams: 1,
             capture: false,
         }
     }
@@ -194,6 +205,21 @@ pub fn per_phase_split(trace: &Trace) -> Vec<PhaseSplit> {
     phases.to_vec()
 }
 
+/// Per-device (replica) serving statistics — one row per `--devices`
+/// replica, partitioning the model run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceLoad {
+    pub device: u32,
+    pub completed: usize,
+    pub tokens_generated: usize,
+    pub wall_us: f64,
+    /// This replica's KV pool utilization (its `kv_pages/N` share).
+    pub kv_occupancy_mean: f64,
+    pub kv_occupancy_max: f64,
+    /// Host/device balance of this replica's trace.
+    pub hdbi: f64,
+}
+
 /// Outcome of one model's load run.
 #[derive(Debug, Clone)]
 pub struct ModelRun {
@@ -222,8 +248,13 @@ pub struct ModelRun {
     pub kv_occupancy_mean: f64,
     pub kv_occupancy_max: f64,
     pub phases: Vec<PhaseSplit>,
+    /// Per-device partition of this run (one entry per replica; a
+    /// single entry for the classic `--devices 1` run).
+    pub per_device: Vec<DeviceLoad>,
     /// The captured serving trace (only with [`LoadgenConfig::capture`])
-    /// — input for Chrome export and `taxbreak whatif` replay.
+    /// — input for Chrome export and `taxbreak whatif` replay. Replica
+    /// runs merge into one trace with `device`-stamped events and
+    /// disjoint correlation-id ranges.
     pub trace: Option<Trace>,
 }
 
@@ -262,13 +293,17 @@ pub struct LoadgenReport {
     pub prompt_len: LenDist,
     pub output_len: LenDist,
     pub seed: u64,
+    /// Serving replicas the requests were sharded over.
+    pub devices: usize,
+    /// Streams per engine.
+    pub streams: usize,
     pub runs: Vec<ModelRun>,
 }
 
 impl LoadgenReport {
     pub fn render(&self) -> String {
         let mut out = format!(
-            "== loadgen ({} requests/model, {}, prompt {}, output {}, seed {}, {}) ==\n",
+            "== loadgen ({} requests/model, {}, prompt {}, output {}, seed {}, {} x{} dev x{} streams) ==\n",
             self.requests,
             if self.rate_per_s > 0.0 {
                 format!("{:.0} req/s", self.rate_per_s)
@@ -279,6 +314,8 @@ impl LoadgenReport {
             self.output_len.describe(),
             self.seed,
             self.platform,
+            self.devices,
+            self.streams,
         );
         let mut t = Table::new(
             "per-model serving KPIs",
@@ -350,6 +387,27 @@ impl LoadgenReport {
                     p.hdbi(),
                 ));
             }
+            if r.per_device.len() > 1 {
+                let mut t = Table::new(
+                    &format!("{} per-device", r.model),
+                    &["device", "done", "tokens", "wall(ms)", "KV occ", "HDBI"],
+                );
+                for d in &r.per_device {
+                    t.row(vec![
+                        format!("dev {}", d.device),
+                        d.completed.to_string(),
+                        d.tokens_generated.to_string(),
+                        ms(d.wall_us / 1000.0),
+                        format!(
+                            "{:.0}%/{:.0}%",
+                            100.0 * d.kv_occupancy_mean,
+                            100.0 * d.kv_occupancy_max
+                        ),
+                        ratio(d.hdbi),
+                    ]);
+                }
+                out.push_str(&t.render());
+            }
         }
         out
     }
@@ -366,6 +424,19 @@ impl LoadgenReport {
                         .with("device_us", p.device_us)
                         .with("kernels", p.kernels)
                         .with("hdbi", p.hdbi()),
+                );
+            }
+            let mut per_device: Vec<Json> = Vec::new();
+            for d in &r.per_device {
+                per_device.push(
+                    Json::obj()
+                        .with("device", d.device)
+                        .with("completed", d.completed)
+                        .with("tokens_generated", d.tokens_generated)
+                        .with("wall_us", d.wall_us)
+                        .with("kv_occupancy_mean", d.kv_occupancy_mean)
+                        .with("kv_occupancy_max", d.kv_occupancy_max)
+                        .with("hdbi", d.hdbi),
                 );
             }
             runs.push(
@@ -390,7 +461,8 @@ impl LoadgenReport {
                     .with("kv_occupancy_mean", r.kv_occupancy_mean)
                     .with("kv_occupancy_max", r.kv_occupancy_max)
                     .with("hdbi", r.hdbi())
-                    .with("phases", phases),
+                    .with("phases", phases)
+                    .with("per_device", per_device),
             );
         }
         Json::obj()
@@ -400,6 +472,8 @@ impl LoadgenReport {
             .with("prompt_len", self.prompt_len.describe())
             .with("output_len", self.output_len.describe())
             .with("seed", self.seed)
+            .with("devices", self.devices)
+            .with("streams", self.streams)
             .with("runs", runs)
     }
 
@@ -414,18 +488,30 @@ impl LoadgenReport {
         let tpot_p50s: Vec<f64> = self.runs.iter().map(|r| r.tpot_us.p50).collect();
         let mut per_model: Vec<Json> = Vec::with_capacity(self.runs.len());
         for r in &self.runs {
+            let mut per_device: Vec<Json> = Vec::with_capacity(r.per_device.len());
+            for d in &r.per_device {
+                per_device.push(
+                    Json::obj()
+                        .with("device", d.device)
+                        .with("hdbi", d.hdbi)
+                        .with("kv_occupancy_mean", d.kv_occupancy_mean),
+                );
+            }
             per_model.push(
                 Json::obj()
                     .with("model", r.model.as_str())
                     .with("throughput_tps", r.throughput_tps())
                     .with("tpot_p50_us", r.tpot_us.p50)
-                    .with("hdbi", r.hdbi()),
+                    .with("hdbi", r.hdbi())
+                    .with("per_device", per_device),
             );
         }
         Json::obj()
             .with("bench", "loadgen")
             .with("platform", self.platform.as_str())
             .with("requests", self.requests)
+            .with("devices", self.devices)
+            .with("streams", self.streams)
             .with(
                 "throughput_tps",
                 if wall_us <= 0.0 { 0.0 } else { tokens as f64 / (wall_us / 1e6) },
@@ -436,6 +522,14 @@ impl LoadgenReport {
     }
 }
 
+/// [`drive`]'s full outcome: the run plus the raw latency samples
+/// (replica merging re-summarizes over the union).
+struct DriveOutcome {
+    run: ModelRun,
+    ttfts: Vec<f64>,
+    tpots: Vec<f64>,
+}
+
 /// Drive one backend through an arrival-stamped workload; the requests
 /// must be sorted by `arrival_us` (as [`generate_workload`] emits).
 pub fn drive<B: Backend>(
@@ -444,6 +538,15 @@ pub fn drive<B: Backend>(
     requests: Vec<Request>,
     capture: bool,
 ) -> anyhow::Result<ModelRun> {
+    drive_collect(backend, sched, requests, capture).map(|o| o.run)
+}
+
+fn drive_collect<B: Backend>(
+    backend: B,
+    sched: SchedulerConfig,
+    requests: Vec<Request>,
+    capture: bool,
+) -> anyhow::Result<DriveOutcome> {
     let variant = backend.variant().to_string();
     let total_pages = sched.kv_pages.max(1) as f64;
     let mut queue: VecDeque<Request> = requests.into();
@@ -502,8 +605,9 @@ pub fn drive<B: Backend>(
     let completed = finished.len() - rejected;
     let trace = s.backend.take_trace();
     let phases = per_phase_split(&trace);
+    let (host, dev, _) = crate::serving::real_trace_split(&trace);
 
-    Ok(ModelRun {
+    let run = ModelRun {
         model: String::new(), // caller fills in the catalog name
         variant,
         moe: false,
@@ -519,12 +623,103 @@ pub fn drive<B: Backend>(
         kv_occupancy_mean: occ.mean(),
         kv_occupancy_max: occ_max,
         phases,
+        per_device: vec![DeviceLoad {
+            device: 0, // replica drivers overwrite with the replica id
+            completed,
+            tokens_generated: tokens,
+            wall_us: trace.meta.wall_us,
+            kv_occupancy_mean: occ.mean(),
+            kv_occupancy_max: occ_max,
+            hdbi: hdbi_of(host, dev),
+        }],
         trace: capture.then_some(trace),
-    })
+    };
+    Ok(DriveOutcome { run, ttfts, tpots })
+}
+
+/// Merge the per-replica outcomes of one model into a single
+/// [`ModelRun`]: counters sum, wall is the slowest replica (they run
+/// concurrently in virtual time), latency summaries re-derive over the
+/// union of samples, and captured traces concatenate with disjoint
+/// correlation-id ranges (`device` stamps keep the lanes apart).
+fn merge_replicas(mut outcomes: Vec<DriveOutcome>, capture: bool) -> ModelRun {
+    debug_assert!(!outcomes.is_empty());
+    if outcomes.len() == 1 {
+        return outcomes.pop().expect("non-empty").run;
+    }
+    let mut ttfts = Vec::new();
+    let mut tpots = Vec::new();
+    let mut per_device = Vec::with_capacity(outcomes.len());
+    let mut merged_trace: Option<Trace> = None;
+    let mut base = outcomes[0].run.clone();
+    base.trace = None;
+    base.completed = 0;
+    base.rejected = 0;
+    base.iterations = 0;
+    base.preemptions = 0;
+    base.late_arrivals = 0;
+    base.wall_us = 0.0;
+    base.tokens_generated = 0;
+    base.kv_occupancy_mean = 0.0;
+    base.kv_occupancy_max = 0.0;
+    for p in &mut base.phases {
+        p.host_us = 0.0;
+        p.device_us = 0.0;
+        p.kernels = 0;
+    }
+    let n = outcomes.len();
+    for (r, mut o) in outcomes.into_iter().enumerate() {
+        base.completed += o.run.completed;
+        base.rejected += o.run.rejected;
+        base.iterations += o.run.iterations;
+        base.preemptions += o.run.preemptions;
+        base.late_arrivals += o.run.late_arrivals;
+        base.wall_us = base.wall_us.max(o.run.wall_us);
+        base.tokens_generated += o.run.tokens_generated;
+        base.kv_occupancy_mean += o.run.kv_occupancy_mean / n as f64;
+        base.kv_occupancy_max = base.kv_occupancy_max.max(o.run.kv_occupancy_max);
+        ttfts.append(&mut o.ttfts);
+        tpots.append(&mut o.tpots);
+        for p in &o.run.phases {
+            if let Some(m) = base.phases.iter_mut().find(|m| m.phase == p.phase) {
+                m.host_us += p.host_us;
+                m.device_us += p.device_us;
+                m.kernels += p.kernels;
+            }
+        }
+        let mut dev = o.run.per_device.remove(0);
+        dev.device = r as u32;
+        per_device.push(dev);
+        if capture {
+            if let Some(sub) = o.run.trace.take() {
+                let target = merged_trace.get_or_insert_with(|| {
+                    let mut t = Trace::new(sub.meta.clone());
+                    t.meta.wall_us = 0.0;
+                    t
+                });
+                target.meta.wall_us = target.meta.wall_us.max(sub.meta.wall_us);
+                // Disjoint correlation ranges per replica.
+                let offset = r as u64 * 1_000_000_000;
+                for mut e in sub.events {
+                    e.correlation_id += offset;
+                    target.push(e);
+                }
+            }
+        }
+    }
+    base.ttft_us = Summary::of(&ttfts);
+    base.tpot_us = Summary::of(&tpots);
+    base.per_device = per_device;
+    base.trace = merged_trace;
+    base
 }
 
 /// Run the load generator over the simulated engine for each named
-/// model (e.g. a dense/MoE mix) on one platform.
+/// model (e.g. a dense/MoE mix) on one platform. With
+/// `cfg.devices > 1`, requests round-robin across that many
+/// engine+scheduler replicas (each holding `kv_pages/devices` of the
+/// pool) and the per-model run reports the merged KPIs plus the
+/// per-device partition.
 pub fn run_sim_loadgen(
     model_names: &[String],
     platform_name: &str,
@@ -540,19 +735,51 @@ pub fn run_sim_loadgen(
     anyhow::ensure!(cfg.sched.kv_pages >= 1, "--kv-pages must be >= 1");
     anyhow::ensure!(cfg.sched.max_batch >= 1, "--max-batch must be >= 1");
     anyhow::ensure!(cfg.sched.max_groups >= 1, "--max-groups must be >= 1");
+    anyhow::ensure!((1..=64).contains(&cfg.devices), "--devices must be in 1..=64");
+    anyhow::ensure!((1..=32).contains(&cfg.streams), "--streams must be in 1..=32");
+    anyhow::ensure!(
+        cfg.sched.kv_pages >= cfg.devices,
+        "--kv-pages must cover at least one page per device"
+    );
     let platform = crate::hardware::Platform::by_name(platform_name)?;
+    let replica_sched = SchedulerConfig {
+        kv_pages: (cfg.sched.kv_pages / cfg.devices).max(1),
+        ..cfg.sched
+    };
     let mut runs = Vec::new();
     for name in model_names {
         let model = crate::models::by_name(name)?;
         let moe = model.is_moe();
-        let engine =
-            crate::runtime::SimEngine::with_defaults(model, platform.clone(), cfg.seed);
         // Identical arrival trace and lengths for every model; prompt
         // tokens draw below the pad-aware bound.
-        let vocab = Backend::vocab(&engine);
-        let max_seq = ModelBackend::max_seq(&engine);
-        let workload = generate_workload(cfg, prompt_token_bound(&engine, vocab)?, max_seq);
-        let mut run = drive(engine, cfg.sched, workload, cfg.capture)?;
+        let probe = crate::runtime::SimEngine::with_defaults(
+            model.clone(),
+            platform.clone(),
+            cfg.seed,
+        );
+        let vocab = Backend::vocab(&probe);
+        let max_seq = ModelBackend::max_seq(&probe);
+        let workload = generate_workload(cfg, prompt_token_bound(&probe, vocab)?, max_seq);
+        drop(probe);
+
+        let mut outcomes = Vec::with_capacity(cfg.devices);
+        for r in 0..cfg.devices {
+            let sub: Vec<Request> = workload
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| i % cfg.devices == r)
+                .map(|(_, req)| req.clone())
+                .collect();
+            let engine = crate::runtime::SimEngine::with_topology(
+                model.clone(),
+                platform.clone(),
+                cfg.seed.wrapping_add((r as u64).wrapping_mul(0x9E3779B97F4A7C15)),
+                cfg.streams,
+                r as u32,
+            );
+            outcomes.push(drive_collect(engine, replica_sched, sub, cfg.capture)?);
+        }
+        let mut run = merge_replicas(outcomes, cfg.capture);
         run.model = name.clone();
         run.moe = moe;
         runs.push(run);
@@ -564,6 +791,8 @@ pub fn run_sim_loadgen(
         prompt_len: cfg.prompt_len,
         output_len: cfg.output_len,
         seed: cfg.seed,
+        devices: cfg.devices,
+        streams: cfg.streams,
         runs,
     })
 }
@@ -646,6 +875,71 @@ mod tests {
         let h = bench.f64_of("hdbi").unwrap();
         assert!(h > 0.0 && h < 1.0);
         assert_eq!(bench.arr_of("per_model").unwrap().len(), 1);
+    }
+
+    #[test]
+    fn multi_device_run_partitions_requests_and_reports_per_device() {
+        let cfg = LoadgenConfig {
+            requests: 12,
+            rate_per_s: 0.0,
+            devices: 3,
+            streams: 2,
+            sched: crate::serving::SchedulerConfig {
+                kv_pages: 96,
+                ..Default::default()
+            },
+            capture: true,
+            ..Default::default()
+        };
+        let report = run_sim_loadgen(&["gpt2".to_string()], "h200", &cfg).unwrap();
+        let run = &report.runs[0];
+        assert_eq!(run.completed, 12, "every replica drains its shard");
+        assert_eq!(run.per_device.len(), 3);
+        let ids: Vec<u32> = run.per_device.iter().map(|d| d.device).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+        let done: usize = run.per_device.iter().map(|d| d.completed).sum();
+        assert_eq!(done, 12, "per-device slices partition the run");
+        assert_eq!(run.per_device.iter().map(|d| d.completed).max(), Some(4));
+        for d in &run.per_device {
+            assert!(d.hdbi > 0.0 && d.hdbi < 1.0);
+            assert!(d.kv_occupancy_mean > 0.0 && d.kv_occupancy_max <= 1.0);
+        }
+        assert_eq!(run.ttft_us.n, 12, "latency summaries merge the union");
+        // Merged capture trace: replica-stamped events, disjoint corr
+        // ranges, wall = slowest replica.
+        let trace = run.trace.as_ref().expect("capture keeps the merged trace");
+        let devs: std::collections::BTreeSet<u32> =
+            trace.events.iter().map(|e| e.device_id()).collect();
+        assert_eq!(devs.into_iter().collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert!((trace.meta.wall_us - run.wall_us).abs() < 1e-9);
+        let max_wall = run
+            .per_device
+            .iter()
+            .map(|d| d.wall_us)
+            .fold(0.0f64, f64::max);
+        assert!((run.wall_us - max_wall).abs() < 1e-9);
+        // Rendering carries the per-device table and the topology echo.
+        let rendered = report.render();
+        assert!(rendered.contains("per-device"), "{rendered}");
+        assert!(rendered.contains("x3 dev x2 streams"), "{rendered}");
+        let bench = report.bench_json();
+        assert_eq!(bench.usize_of("devices").unwrap(), 3);
+        let pm = bench.arr_of("per_model").unwrap();
+        assert_eq!(pm[0].arr_of("per_device").unwrap().len(), 3);
+    }
+
+    #[test]
+    fn device_zero_rejects_bad_topologies() {
+        let bad_dev = LoadgenConfig { devices: 0, ..Default::default() };
+        assert!(run_sim_loadgen(&["gpt2".to_string()], "h200", &bad_dev).is_err());
+        let bad_streams = LoadgenConfig { streams: 0, ..Default::default() };
+        assert!(run_sim_loadgen(&["gpt2".to_string()], "h200", &bad_streams).is_err());
+        let starved = LoadgenConfig {
+            devices: 5,
+            sched: crate::serving::SchedulerConfig { kv_pages: 4, ..Default::default() },
+            ..Default::default()
+        };
+        assert!(run_sim_loadgen(&["gpt2".to_string()], "h200", &starved).is_err());
     }
 
     #[test]

@@ -1,5 +1,12 @@
-//! Host + device co-simulation: runs a workload through the eager
-//! dispatch path and a FIFO stream, emitting an nsys-like [`Trace`].
+//! Host + device co-simulation: lowers a workload into the eager
+//! dispatch path and feeds it through the shared discrete-event
+//! timeline engine ([`crate::timeline::Engine`]), emitting an nsys-like
+//! [`Trace`]. `sim` owns *what* is dispatched (lowering, host/device
+//! cost sampling, trace emission); the engine owns *when* (host
+//! cursors, stream FIFOs, sync points). The default workload runs on
+//! the single topology (1 host thread, 1 stream) and reproduces the
+//! pre-engine timeline bit-for-bit (`rust/tests/timeline.rs`); the
+//! multi-stream/multi-device scenarios live in [`parallel`].
 //!
 //! Timeline semantics (eager mode, paper §II-C):
 //! * the host thread dispatches kernels serially — per kernel it spends
@@ -16,13 +23,17 @@
 //!   makes observed idle fractions (Fig. 6) larger than orchestration
 //!   alone explains.
 
-use crate::device::Stream;
+pub mod parallel;
+
+pub use parallel::{simulate_expert_parallel, simulate_tensor_parallel};
+
 use crate::hardware::Platform;
 use crate::host::HostModel;
 use crate::kernels::cost;
 use crate::kernels::family::Family;
 use crate::lowering::{self, LowerOpts, PassKind};
 use crate::models::ModelSpec;
+use crate::timeline::{self, StreamRef};
 use crate::trace::{EventKind, Trace, TraceEvent, TraceMeta, Track};
 use crate::util::rng::Rng;
 
@@ -175,6 +186,36 @@ impl SimSummary {
     }
 }
 
+/// The m-token pass list of a workload — `(kind, seq_q, ctx)` per
+/// pass: one prefill (which produces output token 1) + m−1 decode
+/// steps ("prefill (m=1)" in Fig. 5; §V-C's kernel arithmetic
+/// 8,437 = 850 prefill + 9 × ~843 decode steps). The one pass-window
+/// definition shared by the single-stream simulator and the
+/// [`parallel`] scenarios.
+pub fn passes_of(workload: &Workload) -> Vec<(PassKind, usize, usize)> {
+    let m = match workload.phase {
+        Phase::Prefill => 1,
+        Phase::Decode => workload.m_tokens.max(1),
+    };
+    let mut passes: Vec<(PassKind, usize, usize)> =
+        vec![(PassKind::Prefill, workload.seq, workload.seq)];
+    passes.extend((0..m - 1).map(|i| (PassKind::DecodeStep, 1, workload.seq + i + 1)));
+    passes
+}
+
+/// Unmitigated per-pass framework glue at the reference CPU, us:
+/// module-tree traversal, tokenization/bookkeeping, and the python MoE
+/// expert-loop control flow. The one calibration expression shared by
+/// the single-stream simulator (which scales it under compiled
+/// mitigations) and the [`parallel`] scenarios.
+pub fn pass_glue_us(model: &ModelSpec) -> f64 {
+    let mut glue = PASS_CONST_US + PER_LAYER_US * model.layers as f64;
+    if let Some(moe) = &model.moe {
+        glue += EXPERT_LOOP_US * (model.layers * (moe.n_experts + moe.shared_experts)) as f64;
+    }
+    glue
+}
+
 /// Simulate one profiled iteration of `workload` on `platform`.
 ///
 /// Deterministic in `(model, platform, workload, seed)`.
@@ -232,44 +273,29 @@ fn simulate_inner(
             || matches!(mit, Mitigation::KernelFusion | Mitigation::TorchCompile),
     };
     let st = platform.cpu.st_speed;
-    let mut t = 0.0f64; // host cursor
-    let mut stream = Stream::new();
+    // The single topology: 1 host dispatch thread, 1 FIFO stream.
+    let mut tl = timeline::Engine::single();
     let mut corr: u64 = 0;
     let mut host_busy_us = 0.0f64;
     let mut tklqt_us = 0.0f64;
 
-    // The paper's m-token window is prefill (which produces output
-    // token 1) + m-1 decode steps: "prefill (m=1)" in Fig. 5, and §V-C's
-    // kernel arithmetic (8,437 = 850 prefill + 9 x ~843 decode steps).
-    let m = match workload.phase {
-        Phase::Prefill => 1,
-        Phase::Decode => workload.m_tokens.max(1),
-    };
-    let mut passes: Vec<(PassKind, usize, usize)> =
-        vec![(PassKind::Prefill, workload.seq, workload.seq)];
-    passes.extend((0..m - 1).map(|i| (PassKind::DecodeStep, 1, workload.seq + i + 1)));
-
     let mut graph_captured = false;
-    for (pass_idx, (kind, seq_q, ctx)) in passes.into_iter().enumerate() {
+    for (pass_idx, (kind, seq_q, ctx)) in passes_of(workload).into_iter().enumerate() {
         // Non-kernel framework glue for this pass. Compiled execution
         // skips the python module-tree traversal and the MoE python
         // expert loop (the graph runner owns control flow).
-        let mut glue = PASS_CONST_US + PER_LAYER_US * model.layers as f64;
-        if let Some(moe) = &model.moe {
-            glue += EXPERT_LOOP_US
-                * (model.layers * (moe.n_experts + moe.shared_experts)) as f64;
-        }
+        let mut glue = pass_glue_us(model);
         if mit == Mitigation::TorchCompile || mit == Mitigation::CudaGraphs {
             glue *= 0.25;
         }
-        t += glue / st;
+        tl.host_advance(0, glue / st);
 
         // CUDA graphs: decode steps after the capture pass replay the
         // whole pass as one graph launch (static shapes; the prefill /
         // first decode step pays the capture cost).
         let graphed = mit == Mitigation::CudaGraphs && kind == PassKind::DecodeStep;
         if graphed && !graph_captured {
-            t += GRAPH_CAPTURE_US / st;
+            tl.host_advance(0, GRAPH_CAPTURE_US / st);
             graph_captured = true;
         }
 
@@ -287,8 +313,7 @@ fn simulate_inner(
         }
         if graphed {
             // One host-side graph launch; kernels run back-to-back.
-            let graph_ts = t;
-            t += GRAPH_LAUNCH_US / st;
+            let (graph_ts, _) = tl.host_advance(0, GRAPH_LAUNCH_US / st);
             let floor = host.sample_floor(&mut host_rng);
             for meta in seq {
                 corr += 1;
@@ -301,7 +326,7 @@ fn simulate_inner(
                     &platform.gpu,
                     &mut dev_rng,
                 );
-                let timing = stream.submit(graph_ts, floor, dur);
+                let timing = tl.submit(StreamRef::PRIMARY, graph_ts, floor, dur);
                 tklqt_us += timing.launch_plus_queue_us;
                 if record {
                     trace.push(TraceEvent {
@@ -311,13 +336,15 @@ fn simulate_inner(
                         dur_us: dur,
                         correlation_id: corr,
                         track: Track::Device(0),
+                        device: None,
                         meta: Some(meta),
                     });
                 }
             }
             host_busy_us += GRAPH_LAUNCH_US / st;
             let _ = pass_idx;
-            t = t.max(stream.sync_point()) + SYNC_US / st;
+            tl.host_wait_until(0, tl.sync_point());
+            tl.host_advance(0, SYNC_US / st);
             continue;
         }
         for meta in seq {
@@ -336,14 +363,15 @@ fn simulate_inner(
                 &mut dev_rng,
             );
 
-            let torch_ts = t;
-            let aten_ts = torch_ts + hs.t_py;
-            let api_ts = aten_ts + hs.t_base + hs.t_ct;
-            let api_end = api_ts + hs.api_dur;
-            let timing = stream.submit(api_ts, hs.launch_gap, dur);
+            // Segment-wise host advances reproduce the pre-engine
+            // cursor chain `((t + py) + base) + ct) + api` exactly.
+            let (torch_ts, aten_ts) = tl.host_advance(0, hs.t_py);
+            tl.host_advance(0, hs.t_base);
+            let (_, api_ts) = tl.host_advance(0, hs.t_ct);
+            let (_, api_end) = tl.host_advance(0, hs.api_dur);
+            let timing = tl.submit(StreamRef::PRIMARY, api_ts, hs.launch_gap, dur);
             host_busy_us += api_end - torch_ts;
             tklqt_us += timing.launch_plus_queue_us;
-            t = api_end;
 
             if !record {
                 continue;
@@ -355,6 +383,7 @@ fn simulate_inner(
                 dur_us: api_end - torch_ts,
                 correlation_id: corr,
                 track: Track::Host,
+                device: None,
                 meta: None,
             });
             trace.push(TraceEvent {
@@ -364,6 +393,7 @@ fn simulate_inner(
                 dur_us: api_end - aten_ts,
                 correlation_id: corr,
                 track: Track::Host,
+                device: None,
                 meta: None,
             });
             trace.push(TraceEvent {
@@ -373,6 +403,7 @@ fn simulate_inner(
                 dur_us: hs.api_dur,
                 correlation_id: corr,
                 track: Track::Host,
+                device: None,
                 meta: None,
             });
             trace.push(TraceEvent {
@@ -382,19 +413,22 @@ fn simulate_inner(
                 dur_us: dur,
                 correlation_id: corr,
                 track: Track::Device(0),
+                device: None,
                 meta: Some(meta),
             });
         }
 
         // End-of-pass device sync (logits needed host-side).
-        t = t.max(stream.sync_point()) + SYNC_US / st;
+        tl.host_wait_until(0, tl.sync_point());
+        tl.host_advance(0, SYNC_US / st);
     }
 
-    trace.meta.wall_us = t.max(stream.sync_point());
+    tl.host_wait_until(0, tl.sync_point());
+    trace.meta.wall_us = tl.host_now(0);
     let summary = SimSummary {
         wall_us: trace.meta.wall_us,
-        device_active_us: stream.active_us(),
-        kernels: stream.launched(),
+        device_active_us: tl.active_us(),
+        kernels: tl.launched(),
         host_busy_us,
         tklqt_us,
     };

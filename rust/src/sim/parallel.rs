@@ -1,0 +1,612 @@
+//! Multi-stream / multi-device execution scenarios on the shared
+//! timeline engine — the regimes a single-FIFO model cannot express
+//! (Fernandez et al.'s framework-tax shift under overlap; Wang et
+//! al.'s dispatch-overlap characterization):
+//!
+//! * **Tensor-parallel dense** ([`simulate_tensor_parallel`]): N
+//!   devices run the same pass SPMD — one host dispatch thread per
+//!   rank, weight-carrying kernels (GEMM / fused attention) sharded
+//!   N-ways, everything else replicated — with a ring **all-reduce
+//!   sync point after every layer** that joins all N streams. Each
+//!   rank pays the *full* launch path for its shard, so aggregate
+//!   orchestration cost multiplies by N while aggregate device work
+//!   stays constant: exactly the "does a second GPU help a host-bound
+//!   workload?" question the `tensor-parallel:<N>` counterfactual
+//!   asks.
+//! * **Expert-parallel MoE** ([`simulate_expert_parallel`]): expert
+//!   chains round-robin across N streams of one device (router →
+//!   experts fan-out, combine joins every stream), while the *single*
+//!   host thread still dispatches every launch serially — device-side
+//!   overlap cannot buy back host-bound dispatch, which is the MoE
+//!   finding the paper's single-stream decomposition only hints at.
+//!
+//! Both producers stamp multi-stream structure into the trace
+//! (`TraceEvent::device`, `Track::Device(stream)`), so the per-device
+//! decomposition (`taxbreak::decompose`) and the Chrome exporter see
+//! real lanes.
+
+use crate::hardware::{ALLREDUCE_HOP_US, NVLINK_GBPS, Platform};
+use crate::host::HostModel;
+use crate::kernels::cost;
+use crate::kernels::family::Family;
+use crate::lowering::{self, LowerOpts, MarkKind};
+use crate::models::ModelSpec;
+use crate::sim::{pass_glue_us, passes_of, Mitigation, Phase, SYNC_US, Workload};
+use crate::timeline::{Engine, StreamRef, Topology};
+use crate::trace::{EventKind, KernelMeta, Trace, TraceEvent, TraceMeta, Track};
+use crate::util::rng::Rng;
+
+/// Device time of one ring all-reduce over `act_bytes` of activations
+/// across `ways` ranks: `2·(N−1)` latency hops plus the
+/// `2·(N−1)/N · act_bytes` per-rank wire traffic at NVLink bandwidth.
+/// Latency-dominated for decode activations, bandwidth-dominated for
+/// long prefills. Shared with the `tensor-parallel:<N>` counterfactual.
+pub fn allreduce_device_us(ways: usize, act_bytes: f64) -> f64 {
+    let n = ways.max(1) as f64;
+    let hops = 2.0 * (n - 1.0);
+    let wire_bytes = 2.0 * (n - 1.0) / n * act_bytes;
+    hops * ALLREDUCE_HOP_US + wire_bytes / (NVLINK_GBPS * 1000.0)
+}
+
+/// Per-rank wire traffic of that all-reduce (stored as the comm
+/// kernel's `bytes`).
+pub fn allreduce_wire_bytes(ways: usize, act_bytes: f64) -> f64 {
+    let n = ways.max(1) as f64;
+    2.0 * (n - 1.0) / n * act_bytes
+}
+
+/// Emit one full TorchOp → AtenOp → RuntimeApi → Kernel chain.
+#[allow(clippy::too_many_arguments)]
+fn push_chain(
+    trace: &mut Trace,
+    corr: u64,
+    device: Option<u32>,
+    stream: u32,
+    torch_name: String,
+    aten_name: String,
+    torch_ts: f64,
+    aten_ts: f64,
+    api_ts: f64,
+    api_end: f64,
+    kernel_ts: f64,
+    kernel_dur: f64,
+    meta: KernelMeta,
+) {
+    trace.push(TraceEvent {
+        kind: EventKind::TorchOp,
+        name: torch_name,
+        ts_us: torch_ts,
+        dur_us: api_end - torch_ts,
+        correlation_id: corr,
+        track: Track::Host,
+        device,
+        meta: None,
+    });
+    trace.push(TraceEvent {
+        kind: EventKind::AtenOp,
+        name: aten_name,
+        ts_us: aten_ts,
+        dur_us: api_end - aten_ts,
+        correlation_id: corr,
+        track: Track::Host,
+        device,
+        meta: None,
+    });
+    trace.push(TraceEvent {
+        kind: EventKind::RuntimeApi,
+        name: "cudaLaunchKernel".to_string(),
+        ts_us: api_ts,
+        dur_us: api_end - api_ts,
+        correlation_id: corr,
+        track: Track::Host,
+        device,
+        meta: None,
+    });
+    trace.push(TraceEvent {
+        kind: EventKind::Kernel,
+        name: meta.kernel_name.clone(),
+        ts_us: kernel_ts,
+        dur_us: kernel_dur,
+        correlation_id: corr,
+        track: Track::Device(stream),
+        device,
+        meta: Some(meta),
+    });
+}
+
+/// Families whose work shards across tensor-parallel ranks (weight /
+/// head partitioning); norms, glue and index ops replicate, which is
+/// what keeps real TP efficiency below the ideal 1/N. The **single**
+/// shardability predicate — the `tensor-parallel:<N>` counterfactual
+/// uses it too, so the simulator and the replay can never disagree
+/// about what shards.
+pub fn tp_sharded(family: Family) -> bool {
+    matches!(
+        family,
+        Family::GemmCublas | Family::GemmNvjet | Family::FusedAttention
+    )
+}
+
+/// Simulate one profiled iteration of `workload` executed
+/// tensor-parallel over `ways` devices (SPMD: one host dispatch thread
+/// and one stream per rank; per-layer ring all-reduce joins).
+///
+/// Deterministic in `(model, platform, workload, ways, seed)`. The
+/// mitigated execution modes are out of scope for the parallel
+/// scenarios (graph capture per rank is future work).
+pub fn simulate_tensor_parallel(
+    model: &ModelSpec,
+    platform: &Platform,
+    workload: &Workload,
+    ways: usize,
+    seed: u64,
+) -> anyhow::Result<Trace> {
+    anyhow::ensure!(
+        (2..=64).contains(&ways),
+        "tensor parallelism needs 2..=64 ways, got {ways}"
+    );
+    anyhow::ensure!(
+        workload.mitigation == Mitigation::None,
+        "tensor-parallel simulation supports --mitigation none only"
+    );
+
+    let host = HostModel::new(platform.clone());
+    let base = Rng::new(seed)
+        .fork_str(&model.name)
+        .fork_str(&platform.name)
+        .fork_str("tensor-parallel");
+    let mut host_rng = base.fork(1);
+    let mut dev_rng = base.fork(2);
+    let mut lower_rng = base.fork(3);
+
+    let mut trace = Trace::new(TraceMeta {
+        platform: platform.name.clone(),
+        model: model.name.clone(),
+        phase: workload.phase.as_str().to_string(),
+        batch: workload.batch,
+        seq: workload.seq,
+        m_tokens: if workload.phase == Phase::Decode {
+            workload.m_tokens
+        } else {
+            1
+        },
+        wall_us: 0.0,
+    });
+
+    let opts = LowerOpts {
+        fused_attention: workload.fused_attention,
+    };
+    let st = platform.cpu.st_speed;
+    let mut tl = Engine::new(Topology {
+        devices: ways,
+        streams_per_device: 1,
+        host_threads: ways,
+    });
+    let streams: Vec<StreamRef> = (0..ways as u32)
+        .map(|device| StreamRef { device, stream: 0 })
+        .collect();
+    let mut corr = 0u64;
+    let glue = pass_glue_us(model);
+
+    for (kind, seq_q, ctx) in passes_of(workload) {
+        for r in 0..ways {
+            tl.host_advance(r, glue / st);
+        }
+        let (seq, marks) = lowering::lower_pass_marked(
+            model,
+            kind,
+            workload.batch,
+            seq_q,
+            ctx,
+            &opts,
+            &mut lower_rng,
+        );
+        let layer_ends: Vec<usize> = marks
+            .iter()
+            .filter(|m| m.kind == MarkKind::LayerEnd)
+            .map(|m| m.index)
+            .collect();
+        let mut next_layer = 0usize;
+        let act_bytes = (workload.batch * seq_q * model.d_model) as f64 * 2.0;
+
+        for (i, meta) in seq.into_iter().enumerate() {
+            let family = Family::from_tag(&meta.family).expect("lowering emits valid tags");
+            let (flops, bytes) = if tp_sharded(family) {
+                (meta.flops / ways as f64, meta.bytes / ways as f64)
+            } else {
+                (meta.flops, meta.bytes)
+            };
+            // SPMD: one host/device cost draw shared by every rank —
+            // the ranks run the identical binary over identical shapes.
+            let hs = host.sample(family, &mut host_rng);
+            let dur = cost::sample_duration_us(family, flops, bytes, &platform.gpu, &mut dev_rng);
+            let shard_meta = KernelMeta {
+                flops,
+                bytes,
+                ..meta
+            };
+            // Hoisted out of the rank loop: the SPMD ranks share the
+            // identical strings (format! per invocation dominated the
+            // lowering profile once before — §Perf L3.2).
+            let torch_name =
+                format!("torch.{}", shard_meta.aten_op.trim_start_matches("aten::"));
+            for (r, &sref) in streams.iter().enumerate() {
+                corr += 1;
+                let (torch_ts, aten_ts) = tl.host_advance(r, hs.t_py);
+                tl.host_advance(r, hs.t_base);
+                let (_, api_ts) = tl.host_advance(r, hs.t_ct);
+                let (_, api_end) = tl.host_advance(r, hs.api_dur);
+                let timing = tl.submit(sref, api_ts, hs.launch_gap, dur);
+                push_chain(
+                    &mut trace,
+                    corr,
+                    Some(r as u32),
+                    0,
+                    torch_name.clone(),
+                    shard_meta.aten_op.clone(),
+                    torch_ts,
+                    aten_ts,
+                    api_ts,
+                    api_end,
+                    timing.start_us,
+                    dur,
+                    shard_meta.clone(),
+                );
+            }
+
+            // Per-layer ring all-reduce: joins all ranks' streams.
+            while next_layer < layer_ends.len() && layer_ends[next_layer] == i + 1 {
+                next_layer += 1;
+                let hs_ar = host.sample(Family::Memcpy, &mut host_rng);
+                let dur_ar = allreduce_device_us(ways, act_bytes);
+                let dep = tl.join(&streams);
+                let ar_meta = KernelMeta {
+                    kernel_name: "nccl_all_reduce_ring".to_string(),
+                    family: Family::Memcpy.tag().to_string(),
+                    aten_op: "nccl::all_reduce".to_string(),
+                    shapes_key: format!(
+                        "bf16[{},{}]xtp{ways}",
+                        workload.batch * seq_q,
+                        model.d_model
+                    ),
+                    grid: [ways as u32, 1, 1],
+                    block: [256, 1, 1],
+                    lib_mediated: false,
+                    flops: 0.0,
+                    bytes: allreduce_wire_bytes(ways, act_bytes),
+                };
+                for (r, &sref) in streams.iter().enumerate() {
+                    corr += 1;
+                    let (torch_ts, aten_ts) = tl.host_advance(r, hs_ar.t_py);
+                    tl.host_advance(r, hs_ar.t_base);
+                    let (_, api_ts) = tl.host_advance(r, hs_ar.t_ct);
+                    let (_, api_end) = tl.host_advance(r, hs_ar.api_dur);
+                    let timing = tl.submit_after(sref, api_ts, hs_ar.launch_gap, dur_ar, dep);
+                    push_chain(
+                        &mut trace,
+                        corr,
+                        Some(r as u32),
+                        0,
+                        "torch.distributed.all_reduce".to_string(),
+                        "nccl::all_reduce".to_string(),
+                        torch_ts,
+                        aten_ts,
+                        api_ts,
+                        api_end,
+                        timing.start_us,
+                        dur_ar,
+                        ar_meta.clone(),
+                    );
+                }
+            }
+        }
+
+        // End-of-pass device sync on every rank (logits host-side).
+        for r in 0..ways {
+            tl.host_wait_until(r, tl.device_sync_point(r as u32));
+            tl.host_advance(r, SYNC_US / st);
+        }
+    }
+
+    let mut wall = 0.0f64;
+    for r in 0..ways {
+        tl.host_wait_until(r, tl.device_sync_point(r as u32));
+        wall = wall.max(tl.host_now(r));
+    }
+    trace.meta.wall_us = wall;
+    Ok(trace)
+}
+
+/// Simulate one profiled iteration of a MoE `workload` with expert
+/// chains sharded round-robin over `streams` CUDA streams of one
+/// device. The host dispatch thread stays single (eager PyTorch), so
+/// launches still serialize — only device execution overlaps:
+/// router → experts fan out (each chain waits for the router output on
+/// stream 0), the combine joins every stream.
+///
+/// Deterministic in `(model, platform, workload, streams, seed)`.
+pub fn simulate_expert_parallel(
+    model: &ModelSpec,
+    platform: &Platform,
+    workload: &Workload,
+    streams: usize,
+    seed: u64,
+) -> anyhow::Result<Trace> {
+    anyhow::ensure!(
+        (2..=32).contains(&streams),
+        "expert parallelism needs 2..=32 streams, got {streams}"
+    );
+    anyhow::ensure!(
+        model.is_moe(),
+        "expert parallelism applies to MoE models; '{}' is dense",
+        model.name
+    );
+    anyhow::ensure!(
+        workload.mitigation == Mitigation::None,
+        "expert-parallel simulation supports --mitigation none only"
+    );
+
+    let host = HostModel::new(platform.clone());
+    let base = Rng::new(seed)
+        .fork_str(&model.name)
+        .fork_str(&platform.name)
+        .fork_str("expert-parallel");
+    let mut host_rng = base.fork(1);
+    let mut dev_rng = base.fork(2);
+    let mut lower_rng = base.fork(3);
+
+    let mut trace = Trace::new(TraceMeta {
+        platform: platform.name.clone(),
+        model: model.name.clone(),
+        phase: workload.phase.as_str().to_string(),
+        batch: workload.batch,
+        seq: workload.seq,
+        m_tokens: if workload.phase == Phase::Decode {
+            workload.m_tokens
+        } else {
+            1
+        },
+        wall_us: 0.0,
+    });
+
+    let opts = LowerOpts {
+        fused_attention: workload.fused_attention,
+    };
+    let st = platform.cpu.st_speed;
+    let mut tl = Engine::new(Topology {
+        devices: 1,
+        streams_per_device: streams,
+        host_threads: 1,
+    });
+    let all_streams: Vec<StreamRef> = (0..streams as u32)
+        .map(|stream| StreamRef { device: 0, stream })
+        .collect();
+    let s0 = StreamRef::PRIMARY;
+    let mut corr = 0u64;
+    let glue = pass_glue_us(model);
+
+    for (kind, seq_q, ctx) in passes_of(workload) {
+        tl.host_advance(0, glue / st);
+        let (seq, marks) = lowering::lower_pass_marked(
+            model,
+            kind,
+            workload.batch,
+            seq_q,
+            ctx,
+            &opts,
+            &mut lower_rng,
+        );
+
+        let mut mark_ptr = 0usize;
+        let mut cur_stream = 0u32;
+        let mut expert_counter = 0usize;
+        let mut in_expert_section = false;
+        let mut section_dep = 0.0f64;
+        let mut chain_first = false;
+        let mut combine_next = false;
+
+        for (i, meta) in seq.into_iter().enumerate() {
+            while mark_ptr < marks.len() && marks[mark_ptr].index == i {
+                match marks[mark_ptr].kind {
+                    MarkKind::ExpertChain => {
+                        cur_stream = (expert_counter % streams) as u32;
+                        expert_counter += 1;
+                        chain_first = true;
+                        if !in_expert_section {
+                            in_expert_section = true;
+                            // The expert chains consume the router
+                            // output produced on stream 0.
+                            section_dep = tl.stream_sync_point(s0);
+                        }
+                    }
+                    MarkKind::Combine => {
+                        cur_stream = 0;
+                        in_expert_section = false;
+                        combine_next = true;
+                    }
+                    MarkKind::LayerEnd => {}
+                }
+                mark_ptr += 1;
+            }
+
+            let family = Family::from_tag(&meta.family).expect("lowering emits valid tags");
+            let hs = host.sample(family, &mut host_rng);
+            let dur = cost::sample_duration_us(
+                family,
+                meta.flops,
+                meta.bytes,
+                &platform.gpu,
+                &mut dev_rng,
+            );
+            let dep = if combine_next {
+                // The combine consumes every expert stream's output.
+                tl.join(&all_streams)
+            } else if chain_first {
+                section_dep
+            } else {
+                0.0
+            };
+            combine_next = false;
+            chain_first = false;
+
+            corr += 1;
+            let (torch_ts, aten_ts) = tl.host_advance(0, hs.t_py);
+            tl.host_advance(0, hs.t_base);
+            let (_, api_ts) = tl.host_advance(0, hs.t_ct);
+            let (_, api_end) = tl.host_advance(0, hs.api_dur);
+            let sref = StreamRef {
+                device: 0,
+                stream: cur_stream,
+            };
+            let timing = tl.submit_after(sref, api_ts, hs.launch_gap, dur, dep);
+            push_chain(
+                &mut trace,
+                corr,
+                None,
+                cur_stream,
+                format!("torch.{}", meta.aten_op.trim_start_matches("aten::")),
+                meta.aten_op.clone(),
+                torch_ts,
+                aten_ts,
+                api_ts,
+                api_end,
+                timing.start_us,
+                dur,
+                meta,
+            );
+        }
+
+        // End-of-pass device sync across every stream.
+        tl.host_wait_until(0, tl.sync_point());
+        tl.host_advance(0, SYNC_US / st);
+    }
+
+    tl.host_wait_until(0, tl.sync_point());
+    trace.meta.wall_us = tl.host_now(0);
+    Ok(trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+    use crate::sim::simulate;
+
+    #[test]
+    fn tensor_parallel_is_deterministic_and_stamps_devices() {
+        let m = models::llama_1b();
+        let p = Platform::h100();
+        let wl = Workload::prefill(1, 64);
+        let a = simulate_tensor_parallel(&m, &p, &wl, 2, 7).unwrap();
+        let b = simulate_tensor_parallel(&m, &p, &wl, 2, 7).unwrap();
+        assert_eq!(a, b);
+        let devices: std::collections::BTreeSet<u32> =
+            a.events.iter().map(|e| e.device_id()).collect();
+        assert_eq!(devices.into_iter().collect::<Vec<_>>(), vec![0, 1]);
+        crate::taxbreak::phase1::validate_trace(&a).unwrap();
+    }
+
+    #[test]
+    fn tensor_parallel_multiplies_launches_not_wall() {
+        // 2-way TP dispatches 2x the kernels (per-rank launch path is
+        // not shared) plus per-layer all-reduces.
+        let m = models::llama_1b();
+        let p = Platform::h100();
+        let wl = Workload::prefill(1, 64);
+        let single = simulate(&m, &p, &wl, 7);
+        let tp = simulate_tensor_parallel(&m, &p, &wl, 2, 7).unwrap();
+        assert_eq!(
+            tp.kernel_count(),
+            2 * (single.kernel_count() + m.layers),
+            "per-rank kernels + one all-reduce per layer per rank"
+        );
+        assert!(
+            tp.kernels().any(|k| k.name == "nccl_all_reduce_ring"),
+            "all-reduce sync points present"
+        );
+    }
+
+    #[test]
+    fn tensor_parallel_ranks_are_symmetric() {
+        let m = models::gpt2();
+        let p = Platform::h200();
+        let wl = Workload::decode(1, 64, 2);
+        let tr = simulate_tensor_parallel(&m, &p, &wl, 2, 3).unwrap();
+        // SPMD: both ranks see identical timelines — every event has a
+        // same-timestamp twin on the other rank.
+        let of_dev = |d: u32| -> Vec<(String, f64, f64)> {
+            tr.events
+                .iter()
+                .filter(|e| e.device_id() == d)
+                .map(|e| (e.name.clone(), e.ts_us, e.dur_us))
+                .collect()
+        };
+        assert_eq!(of_dev(0), of_dev(1));
+    }
+
+    #[test]
+    fn tensor_parallel_rejects_bad_input() {
+        let m = models::gpt2();
+        let p = Platform::h200();
+        let wl = Workload::prefill(1, 32);
+        assert!(simulate_tensor_parallel(&m, &p, &wl, 1, 0).is_err());
+        assert!(simulate_tensor_parallel(&m, &p, &wl, 65, 0).is_err());
+        let graphed = Workload::decode(1, 32, 3).with_mitigation(Mitigation::CudaGraphs);
+        assert!(simulate_tensor_parallel(&m, &p, &graphed, 2, 0).is_err());
+    }
+
+    #[test]
+    fn expert_parallel_spreads_expert_chains_across_streams() {
+        let m = models::olmoe();
+        let p = Platform::h100();
+        let wl = Workload::decode(1, 128, 2);
+        let ep = simulate_expert_parallel(&m, &p, &wl, 4, 9).unwrap();
+        let used: std::collections::BTreeSet<u32> = ep
+            .kernels()
+            .map(|k| match k.track {
+                Track::Device(s) => s,
+                Track::Host => unreachable!("kernels sit on device tracks"),
+            })
+            .collect();
+        assert_eq!(used.len(), 4, "expert chains cover all 4 streams: {used:?}");
+        crate::taxbreak::phase1::validate_trace(&ep).unwrap();
+
+        // Same kernel count as the single-stream run (sharding moves
+        // work, it does not add or remove launches).
+        let single = simulate(&m, &p, &wl, 9);
+        assert_eq!(ep.kernel_count(), single.kernel_count());
+    }
+
+    #[test]
+    fn expert_parallel_host_is_still_serial() {
+        // The single dispatch thread is the bottleneck: host events
+        // never overlap even though device streams do.
+        let m = models::olmoe();
+        let p = Platform::h100();
+        let ep = simulate_expert_parallel(&m, &p, &Workload::decode(1, 64, 2), 4, 5).unwrap();
+        let mut last_end = 0.0f64;
+        for e in ep.events.iter().filter(|e| e.kind == EventKind::TorchOp) {
+            assert!(e.ts_us >= last_end - 1e-9, "host dispatch must stay serial");
+            last_end = e.end_us();
+        }
+    }
+
+    #[test]
+    fn expert_parallel_rejects_dense_models() {
+        let p = Platform::h100();
+        let wl = Workload::decode(1, 64, 2);
+        assert!(simulate_expert_parallel(&models::gpt2(), &p, &wl, 4, 0).is_err());
+        assert!(simulate_expert_parallel(&models::olmoe(), &p, &wl, 1, 0).is_err());
+    }
+
+    #[test]
+    fn allreduce_model_scales_with_ways_and_bytes() {
+        let small = allreduce_device_us(2, 32.0 * 1024.0);
+        let big = allreduce_device_us(2, 512.0 * 1024.0 * 1024.0);
+        assert!(small < big);
+        // Decode-sized payloads are latency-dominated: ~2 hops.
+        assert!((small - 2.0 * ALLREDUCE_HOP_US).abs() < 1.0, "{small}");
+        assert!(allreduce_device_us(4, 1e6) > allreduce_device_us(2, 1e6));
+        assert_eq!(allreduce_wire_bytes(2, 1000.0), 1000.0);
+    }
+}

@@ -40,6 +40,36 @@ impl FamilySlice {
     }
 }
 
+/// Per-device slice of the decomposition: every Eq. 1 component of the
+/// invocations whose kernel ran on that device (the dispatching host
+/// thread's cost is attributed to the rank it serves — SPMD tensor
+/// parallelism runs one dispatch thread per device).
+///
+/// The slices **partition** the aggregate: summed over devices they
+/// reproduce [`Decomposition`]'s totals component-by-component (pinned
+/// by `rust/tests/timeline.rs`), so the aggregate HDBI is always the
+/// invocation-weighted combination of the per-device ones.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct DeviceSlice {
+    pub invocations: usize,
+    pub t_py_us: f64,
+    pub t_base_us: f64,
+    pub dct_us: f64,
+    pub dkt_us: f64,
+    pub device_active_us: f64,
+}
+
+impl DeviceSlice {
+    pub fn orchestration_us(&self) -> f64 {
+        self.t_py_us + self.t_base_us + self.dct_us + self.dkt_us
+    }
+
+    /// Eq. 3 on this device alone — the per-device [`hdbi_of`] variant.
+    pub fn hdbi(&self) -> f64 {
+        hdbi_of(self.orchestration_us(), self.device_active_us)
+    }
+}
+
 /// Eq. 1 components aggregated over a run (Eq. 2), plus device-active
 /// time and wall-clock (Eq. 3 inputs and Fig. 6's idle fraction).
 #[derive(Debug, Clone, Default)]
@@ -60,6 +90,9 @@ pub struct Decomposition {
     /// The Phase-2 floor used for ΔKT, us.
     pub floor_us: f64,
     pub per_family: BTreeMap<String, FamilySlice>,
+    /// Per-device partition of the run (single-device traces have one
+    /// entry under key 0).
+    pub per_device: BTreeMap<u32, DeviceSlice>,
 }
 
 impl Decomposition {
@@ -78,12 +111,18 @@ impl Decomposition {
         hdbi_of(self.orchestration_us(), self.device_active_us)
     }
 
-    /// GPU idle fraction (Fig. 6): (T_e2e − T_DeviceActive)/T_e2e.
+    /// GPU idle fraction (Fig. 6): (T_e2e − T_DeviceActive)/T_e2e,
+    /// generalized to multi-device runs — the available GPU time is
+    /// `e2e × n_devices` (every device spans the same wall-clock), so
+    /// N-device traces don't clamp to a bogus 0% idle when their
+    /// summed active time exceeds one wall. Single-device runs reduce
+    /// to the paper's definition exactly.
     pub fn idle_fraction(&self) -> f64 {
-        if self.e2e_us <= 0.0 {
+        let wall = self.e2e_us * self.per_device.len().max(1) as f64;
+        if wall <= 0.0 {
             0.0
         } else {
-            ((self.e2e_us - self.device_active_us) / self.e2e_us).clamp(0.0, 1.0)
+            ((wall - self.device_active_us) / wall).clamp(0.0, 1.0)
         }
     }
 
@@ -117,7 +156,6 @@ pub fn decompose(trace: &Trace, p1: &Phase1, p2: &Phase2Result) -> Decomposition
         ..Default::default()
     };
     for inv in &p1.invocations {
-        let slice = d.per_family.entry(inv.family.clone()).or_default();
         let dct = p2
             .replay_of(&inv.dedup_key)
             .map(|k| k.dct_us)
@@ -131,12 +169,21 @@ pub fn decompose(trace: &Trace, p1: &Phase1, p2: &Phase2Result) -> Decomposition
         d.dkt_us += p2.floor.mean;
         d.device_active_us += inv.device_us;
 
+        let slice = d.per_family.entry(inv.family.clone()).or_default();
         slice.invocations += 1;
         slice.t_py_us += inv.t_py_us;
         slice.t_base_us += p2.dispatch_base_us;
         slice.dct_us += lib_dct;
         slice.dkt_us += p2.floor.mean;
         slice.device_us += inv.device_us;
+
+        let dev = d.per_device.entry(inv.device).or_default();
+        dev.invocations += 1;
+        dev.t_py_us += inv.t_py_us;
+        dev.t_base_us += p2.dispatch_base_us;
+        dev.dct_us += lib_dct;
+        dev.dkt_us += p2.floor.mean;
+        dev.device_active_us += inv.device_us;
     }
     d
 }
@@ -166,6 +213,17 @@ mod tests {
         let d = decompose_model(&models::gpt2(), Platform::h200(), &Workload::prefill(1, 256));
         let total = d.t_py_us + d.t_base_us + d.dct_us + d.dkt_us;
         assert!((total - d.orchestration_us()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_device_run_has_one_device_slice_matching_the_aggregate() {
+        let d = decompose_model(&models::gpt2(), Platform::h200(), &Workload::prefill(1, 128));
+        assert_eq!(d.per_device.len(), 1);
+        let s = d.per_device.get(&0).unwrap();
+        assert_eq!(s.invocations, d.n_kernels);
+        assert!((s.orchestration_us() - d.orchestration_us()).abs() < 1e-9);
+        assert!((s.device_active_us - d.device_active_us).abs() < 1e-9);
+        assert!((s.hdbi() - d.hdbi()).abs() < 1e-12);
     }
 
     #[test]
@@ -265,6 +323,22 @@ mod tests {
             let h = d.hdbi();
             assert!(h > 0.0 && h < 1.0, "{}: hdbi={h}", model.name);
         }
+    }
+
+    #[test]
+    fn idle_fraction_scales_available_time_by_device_count() {
+        // 2 devices, each active 60us over a 100us wall: summed active
+        // 120us exceeds one wall but the run is 40% idle per device.
+        let mut d = Decomposition {
+            n_kernels: 2,
+            device_active_us: 120.0,
+            e2e_us: 100.0,
+            ..Default::default()
+        };
+        d.per_device.insert(0, DeviceSlice { device_active_us: 60.0, ..Default::default() });
+        d.per_device.insert(1, DeviceSlice { device_active_us: 60.0, ..Default::default() });
+        assert!((d.idle_fraction() - 0.4).abs() < 1e-12);
+        assert!((d.gpu_utilization() - 0.6).abs() < 1e-12);
     }
 
     #[test]

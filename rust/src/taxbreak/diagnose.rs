@@ -147,6 +147,7 @@ mod tests {
             e2e_us: py + base + ct + kt + dev,
             floor_us: 4.7,
             per_family: Default::default(),
+            per_device: Default::default(),
         }
     }
 

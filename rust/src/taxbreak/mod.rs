@@ -35,7 +35,7 @@ pub mod phase1;
 pub mod phase2;
 pub mod report;
 
-pub use decompose::{hdbi_of, Decomposition, FamilySlice};
+pub use decompose::{hdbi_of, Decomposition, DeviceSlice, FamilySlice};
 pub use diagnose::{diagnose, Diagnosis, OptimizationTarget, QuantifiedAdvice};
 pub use phase1::Phase1;
 pub use phase2::{Phase2Result, ReplayBackend, ReplayConfig, SimReplayBackend};

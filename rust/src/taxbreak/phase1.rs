@@ -26,6 +26,10 @@ pub struct Invocation {
     pub device_us: f64,
     /// Launch-path interval (api call → kernel start: launch + queue).
     pub launch_plus_queue_us: f64,
+    /// Device (rank) the kernel ran on — `0` for single-device traces,
+    /// the stamped `TraceEvent::device` for multi-device producers.
+    /// Drives the per-device decomposition slices.
+    pub device: u32,
 }
 
 /// Phase-1 output: per-invocation measurements + the kernel database.
@@ -74,6 +78,7 @@ impl Phase1 {
                 lib_mediated: meta.lib_mediated,
                 device_us: kernel.dur_us,
                 launch_plus_queue_us: launch_plus_queue,
+                device: kernel.device_id(),
             });
         }
         Phase1 { invocations, db }

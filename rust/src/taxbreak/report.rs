@@ -32,6 +32,43 @@ pub fn decomposition_table(title: &str, d: &Decomposition) -> Table {
     t
 }
 
+/// Per-device decomposition table (multi-device traces: one row per
+/// rank; the totals row is the aggregate the slices partition).
+pub fn per_device_table(title: &str, d: &Decomposition) -> Table {
+    let mut t = Table::new(
+        title,
+        &[
+            "device", "kernels", "T_Py(ms)", "T_base(ms)", "dCT(ms)", "dKT(ms)",
+            "T_orch(ms)", "T_dev(ms)", "HDBI",
+        ],
+    );
+    for (dev, s) in &d.per_device {
+        t.row(vec![
+            format!("dev {dev}"),
+            s.invocations.to_string(),
+            ms(s.t_py_us / 1000.0),
+            ms(s.t_base_us / 1000.0),
+            ms(s.dct_us / 1000.0),
+            ms(s.dkt_us / 1000.0),
+            ms(s.orchestration_us() / 1000.0),
+            ms(s.device_active_us / 1000.0),
+            ratio(s.hdbi()),
+        ]);
+    }
+    t.row(vec![
+        "total".to_string(),
+        d.n_kernels.to_string(),
+        ms(d.t_py_us / 1000.0),
+        ms(d.t_base_us / 1000.0),
+        ms(d.dct_us / 1000.0),
+        ms(d.dkt_us / 1000.0),
+        ms(d.orchestration_us() / 1000.0),
+        ms(d.device_active_us / 1000.0),
+        ratio(d.hdbi()),
+    ]);
+    t
+}
+
 /// Per-family launch-latency table (Table IV layout): p50/p95 of
 /// T_launch and ΔKT_fw = p50 − floor.
 pub fn family_launch_table(title: &str, a: &Analysis) -> Table {
@@ -105,7 +142,25 @@ pub fn to_json(a: &Analysis) -> Json {
                 .with("e2e_us", d.e2e_us)
                 .with("hdbi", d.hdbi())
                 .with("idle_fraction", d.idle_fraction())
-                .with("per_family", families),
+                .with("per_family", families)
+                .with("per_device", {
+                    let mut devices = Vec::with_capacity(d.per_device.len());
+                    for (dev, s) in &d.per_device {
+                        devices.push(
+                            Json::obj()
+                                .with("device", *dev)
+                                .with("invocations", s.invocations)
+                                .with("t_py_us", s.t_py_us)
+                                .with("t_base_us", s.t_base_us)
+                                .with("dct_us", s.dct_us)
+                                .with("dkt_us", s.dkt_us)
+                                .with("orchestration_us", s.orchestration_us())
+                                .with("device_active_us", s.device_active_us)
+                                .with("hdbi", s.hdbi()),
+                        );
+                    }
+                    Json::Arr(devices)
+                }),
         )
         .with(
             "phase2",
@@ -188,5 +243,22 @@ mod tests {
             a.decomposition.n_kernels
         );
         assert!(back.req("phase2").unwrap().f64_of("floor_mean_us").unwrap() > 4.0);
+        let devices = back
+            .req("decomposition")
+            .unwrap()
+            .arr_of("per_device")
+            .unwrap();
+        assert_eq!(devices.len(), 1, "single-device trace: one slice");
+        assert!(devices[0].f64_of("hdbi").unwrap() > 0.0);
+    }
+
+    #[test]
+    fn per_device_table_renders_slices_and_total() {
+        let a = analysis();
+        let t = per_device_table("per-device", &a.decomposition);
+        let rendered = t.render();
+        assert!(rendered.contains("dev 0"));
+        assert!(rendered.contains("total"));
+        assert_eq!(t.n_rows(), 2);
     }
 }

@@ -1,0 +1,321 @@
+//! Unified discrete-event timeline engine: the one host/device
+//! co-simulation clock shared by `sim::simulate`, the `whatif` replay
+//! loop and the serving engines' virtual clock (DESIGN.md §11).
+//!
+//! The engine owns explicit **resources**:
+//!
+//! * *host dispatch threads* — serial cursors, one per rank/process
+//!   (eager dispatch is single-threaded per process, paper §I, but
+//!   tensor-parallel SPMD runs one dispatch thread per device);
+//! * *CUDA streams* — FIFO queues ([`crate::device::Stream`] is the
+//!   per-stream primitive; the engine composes many of them);
+//! * *devices* — groups of streams with per-device active-time
+//!   accounting, the substrate for per-device decomposition and HDBI.
+//!
+//! **Determinism.** The engine has no internal event queue to race:
+//! every operation is applied in caller order and is a pure function of
+//! the cursors it touches, so a workload generator that issues
+//! operations in a fixed order always produces the identical timeline
+//! (and therefore byte-identical traces — enforced by
+//! `rust/tests/timeline.rs`).
+//!
+//! **Single-timeline equivalence.** With the default topology (1 host
+//! thread, 1 device, 1 stream) the engine reduces *exactly* to the
+//! pre-refactor `Stream` + host-cursor loops: `submit` delegates to
+//! [`Stream::submit`] unchanged and the host cursor operations
+//! (`advance`, `wait_until`) reproduce the original `t += dur` /
+//! `t = t.max(sync)` arithmetic operation-for-operation, so the
+//! single-stream configuration reproduces the recorded seed traces
+//! bit-for-bit.
+
+use crate::device::{KernelTiming, Stream};
+
+/// Location of one stream: `(device, stream-on-device)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct StreamRef {
+    pub device: u32,
+    pub stream: u32,
+}
+
+impl StreamRef {
+    /// Stream 0 on device 0 — the single-timeline default.
+    pub const PRIMARY: StreamRef = StreamRef { device: 0, stream: 0 };
+}
+
+/// Resource shape of one engine instance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Topology {
+    pub devices: usize,
+    pub streams_per_device: usize,
+    pub host_threads: usize,
+}
+
+impl Default for Topology {
+    fn default() -> Self {
+        Topology {
+            devices: 1,
+            streams_per_device: 1,
+            host_threads: 1,
+        }
+    }
+}
+
+/// The discrete-event timeline engine.
+#[derive(Debug, Clone)]
+pub struct Engine {
+    topo: Topology,
+    /// Host-thread cursors (time each dispatch thread is free again).
+    hosts: Vec<f64>,
+    /// Device-major stream states: index = device * streams_per_device
+    /// + stream.
+    streams: Vec<Stream>,
+}
+
+impl Engine {
+    pub fn new(topo: Topology) -> Engine {
+        assert!(topo.devices >= 1, "topology needs at least one device");
+        assert!(
+            topo.streams_per_device >= 1,
+            "topology needs at least one stream per device"
+        );
+        assert!(
+            topo.host_threads >= 1,
+            "topology needs at least one host thread"
+        );
+        Engine {
+            topo,
+            hosts: vec![0.0; topo.host_threads],
+            streams: vec![Stream::new(); topo.devices * topo.streams_per_device],
+        }
+    }
+
+    /// The single-timeline engine (1 host thread, 1 device, 1 stream).
+    pub fn single() -> Engine {
+        Engine::new(Topology::default())
+    }
+
+    pub fn topology(&self) -> Topology {
+        self.topo
+    }
+
+    fn idx(&self, s: StreamRef) -> usize {
+        let d = s.device as usize;
+        let st = s.stream as usize;
+        assert!(d < self.topo.devices, "device {d} outside topology");
+        assert!(
+            st < self.topo.streams_per_device,
+            "stream {st} outside topology"
+        );
+        d * self.topo.streams_per_device + st
+    }
+
+    // --- host threads ---------------------------------------------------
+
+    /// Current cursor of host thread `tid`.
+    pub fn host_now(&self, tid: usize) -> f64 {
+        self.hosts[tid]
+    }
+
+    /// Occupy host thread `tid` for `dur_us`; returns `(start, end)`.
+    pub fn host_advance(&mut self, tid: usize, dur_us: f64) -> (f64, f64) {
+        let start = self.hosts[tid];
+        let end = start + dur_us;
+        self.hosts[tid] = end;
+        (start, end)
+    }
+
+    /// Block host thread `tid` until at least `t_us` (device sync wait,
+    /// serving idle jump, arrival gating). Never moves time backwards.
+    pub fn host_wait_until(&mut self, tid: usize, t_us: f64) {
+        self.hosts[tid] = self.hosts[tid].max(t_us);
+    }
+
+    // --- streams --------------------------------------------------------
+
+    /// Submit a kernel to `s`, launched at `api_start_us` with the
+    /// sampled empty-queue launch gap. Exactly [`Stream::submit`] on the
+    /// addressed stream.
+    pub fn submit(
+        &mut self,
+        s: StreamRef,
+        api_start_us: f64,
+        launch_gap_us: f64,
+        dur_us: f64,
+    ) -> KernelTiming {
+        let i = self.idx(s);
+        self.streams[i].submit(api_start_us, launch_gap_us, dur_us)
+    }
+
+    /// Submit with an extra readiness dependency: the kernel cannot
+    /// start before `dep_us` (cross-stream event wait — all-reduce
+    /// joins, router→expert hand-offs). `dep_us = 0.0` is exactly
+    /// [`Engine::submit`].
+    pub fn submit_after(
+        &mut self,
+        s: StreamRef,
+        api_start_us: f64,
+        launch_gap_us: f64,
+        dur_us: f64,
+        dep_us: f64,
+    ) -> KernelTiming {
+        let i = self.idx(s);
+        self.streams[i].submit_dep(api_start_us, launch_gap_us, dep_us, dur_us)
+    }
+
+    /// When stream `s` drains (cudaStreamSynchronize).
+    pub fn stream_sync_point(&self, s: StreamRef) -> f64 {
+        self.streams[self.idx(s)].sync_point()
+    }
+
+    /// When every stream of `device` drains (cudaDeviceSynchronize).
+    pub fn device_sync_point(&self, device: u32) -> f64 {
+        let spd = self.topo.streams_per_device;
+        let base = device as usize * spd;
+        self.streams[base..base + spd]
+            .iter()
+            .map(Stream::sync_point)
+            .fold(0.0f64, f64::max)
+    }
+
+    /// When every stream on every device drains. With the single
+    /// topology this is exactly the one stream's `sync_point()`.
+    pub fn sync_point(&self) -> f64 {
+        self.streams
+            .iter()
+            .map(Stream::sync_point)
+            .fold(0.0f64, f64::max)
+    }
+
+    /// Latest cursor over an explicit stream set (all-reduce join).
+    pub fn join(&self, streams: &[StreamRef]) -> f64 {
+        streams
+            .iter()
+            .map(|&s| self.stream_sync_point(s))
+            .fold(0.0f64, f64::max)
+    }
+
+    // --- accounting -----------------------------------------------------
+
+    /// Σ kernel-active time on one device.
+    pub fn device_active_us(&self, device: u32) -> f64 {
+        let spd = self.topo.streams_per_device;
+        let base = device as usize * spd;
+        self.streams[base..base + spd]
+            .iter()
+            .map(Stream::active_us)
+            .sum()
+    }
+
+    /// Σ kernel-active time over every stream.
+    pub fn active_us(&self) -> f64 {
+        self.streams.iter().map(Stream::active_us).sum()
+    }
+
+    /// Kernels launched over every stream.
+    pub fn launched(&self) -> usize {
+        self.streams.iter().map(Stream::launched).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_topology_delegates_to_stream_exactly() {
+        // Hand-checkable numbers mirroring device::Stream's own tests.
+        let mut e = Engine::single();
+        let t = e.submit(StreamRef::PRIMARY, 10.0, 4.7, 2.0);
+        assert_eq!(t.start_us, 14.7);
+        assert_eq!(t.end_us, 16.7);
+        let mut s = Stream::new();
+        let r = s.submit(10.0, 4.7, 2.0);
+        assert_eq!((t.start_us, t.end_us), (r.start_us, r.end_us));
+        assert_eq!(e.sync_point(), s.sync_point());
+        assert_eq!(e.active_us(), s.active_us());
+        assert_eq!(e.launched(), s.launched());
+    }
+
+    #[test]
+    fn host_cursor_arithmetic() {
+        let mut e = Engine::single();
+        assert_eq!(e.host_now(0), 0.0);
+        let (a, b) = e.host_advance(0, 3.5);
+        assert_eq!((a, b), (0.0, 3.5));
+        e.host_wait_until(0, 2.0); // backwards is a no-op
+        assert_eq!(e.host_now(0), 3.5);
+        e.host_wait_until(0, 10.0);
+        assert_eq!(e.host_now(0), 10.0);
+    }
+
+    #[test]
+    fn streams_are_independent_fifos() {
+        let mut e = Engine::new(Topology {
+            devices: 1,
+            streams_per_device: 2,
+            host_threads: 1,
+        });
+        let s0 = StreamRef { device: 0, stream: 0 };
+        let s1 = StreamRef { device: 0, stream: 1 };
+        let a = e.submit(s0, 0.0, 1.0, 100.0); // stream 0 busy to 101
+        let b = e.submit(s1, 0.0, 1.0, 5.0); // stream 1 free: starts at 1
+        assert_eq!(a.start_us, 1.0);
+        assert_eq!(b.start_us, 1.0, "second stream does not queue behind the first");
+        assert_eq!(e.stream_sync_point(s0), 101.0);
+        assert_eq!(e.stream_sync_point(s1), 6.0);
+        assert_eq!(e.sync_point(), 101.0);
+    }
+
+    #[test]
+    fn submit_after_honors_cross_stream_dependency() {
+        let mut e = Engine::new(Topology {
+            devices: 1,
+            streams_per_device: 2,
+            host_threads: 1,
+        });
+        let s0 = StreamRef { device: 0, stream: 0 };
+        let s1 = StreamRef { device: 0, stream: 1 };
+        let a = e.submit(s0, 0.0, 1.0, 50.0); // ends 51
+        // Dependent kernel on stream 1 must wait for the stream-0 event.
+        let b = e.submit_after(s1, 0.0, 1.0, 2.0, a.end_us);
+        assert_eq!(b.start_us, 51.0);
+        // Zero dependency degrades to plain submit.
+        let mut e2 = Engine::single();
+        let p = e2.submit_after(StreamRef::PRIMARY, 3.0, 1.5, 2.0, 0.0);
+        let mut s = Stream::new();
+        let q = s.submit(3.0, 1.5, 2.0);
+        assert_eq!((p.start_us, p.end_us), (q.start_us, q.end_us));
+    }
+
+    #[test]
+    fn per_device_accounting_partitions_totals() {
+        let mut e = Engine::new(Topology {
+            devices: 2,
+            streams_per_device: 2,
+            host_threads: 2,
+        });
+        e.submit(StreamRef { device: 0, stream: 0 }, 0.0, 1.0, 10.0);
+        e.submit(StreamRef { device: 0, stream: 1 }, 0.0, 1.0, 20.0);
+        e.submit(StreamRef { device: 1, stream: 0 }, 0.0, 1.0, 40.0);
+        assert_eq!(e.device_active_us(0), 30.0);
+        assert_eq!(e.device_active_us(1), 40.0);
+        assert_eq!(e.active_us(), 70.0);
+        assert_eq!(e.launched(), 3);
+        assert_eq!(e.device_sync_point(0), 21.0);
+        assert_eq!(e.device_sync_point(1), 41.0);
+        assert_eq!(
+            e.join(&[
+                StreamRef { device: 0, stream: 1 },
+                StreamRef { device: 1, stream: 0 }
+            ]),
+            41.0
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "outside topology")]
+    fn out_of_topology_stream_panics() {
+        let mut e = Engine::single();
+        e.submit(StreamRef { device: 0, stream: 1 }, 0.0, 0.0, 1.0);
+    }
+}

@@ -4,14 +4,36 @@
 use crate::trace::{Trace, Track};
 use crate::util::json::Json;
 
+/// Chrome tid for one event: host threads and device streams get
+/// disjoint, per-device lanes. Device `d`'s host thread maps to
+/// `1000*d` (so the default device keeps the historical tid 0) and its
+/// stream `s` to `1000*d + 100 + s` (device 0 stream `s` keeps the
+/// historical `100 + s`).
+fn tid_of(track: Track, device: u32) -> u32 {
+    match track {
+        Track::Host => 1000 * device,
+        Track::Device(s) => 1000 * device + 100 + s,
+    }
+}
+
+/// Human label for one tid (the `thread_name` metadata payload).
+fn thread_label(track: Track, device: u32) -> String {
+    match track {
+        Track::Host => format!("host (dev {device})"),
+        Track::Device(s) => format!("dev {device} stream {s}"),
+    }
+}
+
 /// Chrome trace "complete" events ("ph": "X"), one per trace event,
-/// preceded by a process-name metadata event ("ph": "M") labeling the
+/// preceded by metadata events ("ph": "M"): a process-name labeling the
 /// run (`model phase @ platform`) so side-by-side comparisons — e.g. a
 /// captured loadgen run vs its `taxbreak whatif` counterfactual replay
-/// — stay tellable apart in the Perfetto UI. Host events go to tid 0;
-/// device stream `s` to tid `100 + s`.
+/// — stay tellable apart in the Perfetto UI, then one `thread_name`
+/// per distinct tid (first-appearance order) so multi-stream /
+/// multi-device timelines render as labeled lanes instead of every
+/// kernel collapsing onto an anonymous tid.
 pub fn to_chrome_json(trace: &Trace) -> Json {
-    let mut events = Vec::with_capacity(trace.events.len() + 1);
+    let mut events = Vec::with_capacity(trace.events.len() + 4);
     let label = format!(
         "{} {} @ {}",
         trace.meta.model, trace.meta.phase, trace.meta.platform
@@ -24,11 +46,29 @@ pub fn to_chrome_json(trace: &Trace) -> Json {
             .with("tid", 0u32)
             .with("args", Json::obj().with("name", label.as_str())),
     );
+    // One thread_name metadata event per distinct tid, in the order the
+    // tid first appears in the event stream.
+    let mut seen: Vec<u32> = Vec::new();
     for e in &trace.events {
-        let tid = match e.track {
-            Track::Host => 0u32,
-            Track::Device(s) => 100 + s,
-        };
+        let tid = tid_of(e.track, e.device_id());
+        if seen.contains(&tid) {
+            continue;
+        }
+        seen.push(tid);
+        events.push(
+            Json::obj()
+                .with("name", "thread_name")
+                .with("ph", "M")
+                .with("pid", 1u32)
+                .with("tid", tid)
+                .with(
+                    "args",
+                    Json::obj().with("name", thread_label(e.track, e.device_id()).as_str()),
+                ),
+        );
+    }
+    for e in &trace.events {
+        let tid = tid_of(e.track, e.device_id());
         let cat = e.kind.as_str();
         let mut args = Json::obj().with("correlation", e.correlation_id);
         if let Some(meta) = &e.meta {
@@ -63,7 +103,7 @@ mod tests {
     use crate::trace::{EventKind, TraceEvent, TraceMeta};
 
     #[test]
-    fn exports_tracks_and_cats() {
+    fn exports_tracks_cats_and_thread_names() {
         let mut t = Trace::new(TraceMeta::default());
         t.push(TraceEvent {
             kind: EventKind::RuntimeApi,
@@ -72,6 +112,7 @@ mod tests {
             dur_us: 1.0,
             correlation_id: 1,
             track: Track::Host,
+            device: None,
             meta: None,
         });
         t.push(TraceEvent {
@@ -81,17 +122,57 @@ mod tests {
             dur_us: 2.0,
             correlation_id: 1,
             track: Track::Device(3),
+            device: None,
             meta: None,
         });
         let j = to_chrome_json(&t);
         let arr = j.as_arr().unwrap();
-        assert_eq!(arr.len(), 3);
-        // Leading process-name metadata event labels the run.
+        // process_name + one thread_name per distinct tid + 2 events.
+        assert_eq!(arr.len(), 5);
         assert_eq!(arr[0].str_of("ph").unwrap(), "M");
         assert_eq!(arr[0].str_of("name").unwrap(), "process_name");
+        assert_eq!(arr[1].str_of("name").unwrap(), "thread_name");
         assert_eq!(arr[1].f64_of("tid").unwrap(), 0.0);
+        assert_eq!(
+            arr[1].req("args").unwrap().str_of("name").unwrap(),
+            "host (dev 0)"
+        );
+        assert_eq!(arr[2].str_of("name").unwrap(), "thread_name");
         assert_eq!(arr[2].f64_of("tid").unwrap(), 103.0);
-        assert_eq!(arr[2].str_of("cat").unwrap(), "kernel");
-        assert_eq!(arr[1].str_of("ph").unwrap(), "X");
+        assert_eq!(
+            arr[2].req("args").unwrap().str_of("name").unwrap(),
+            "dev 0 stream 3"
+        );
+        assert_eq!(arr[3].f64_of("tid").unwrap(), 0.0);
+        assert_eq!(arr[3].str_of("ph").unwrap(), "X");
+        assert_eq!(arr[4].f64_of("tid").unwrap(), 103.0);
+        assert_eq!(arr[4].str_of("cat").unwrap(), "kernel");
+    }
+
+    #[test]
+    fn devices_map_to_disjoint_tid_lanes() {
+        let mut t = Trace::new(TraceMeta::default());
+        for dev in [0u32, 1, 2] {
+            t.push(TraceEvent {
+                kind: EventKind::Kernel,
+                name: "k".into(),
+                ts_us: 0.0,
+                dur_us: 1.0,
+                correlation_id: 1 + dev as u64,
+                track: Track::Device(0),
+                device: (dev > 0).then_some(dev),
+                meta: None,
+            });
+        }
+        let j = to_chrome_json(&t);
+        let arr = j.as_arr().unwrap();
+        // 1 process_name + 3 thread_names + 3 events.
+        assert_eq!(arr.len(), 7);
+        let tids: Vec<f64> = arr[4..].iter().map(|e| e.f64_of("tid").unwrap()).collect();
+        assert_eq!(tids, vec![100.0, 1100.0, 2100.0]);
+        assert_eq!(
+            arr[2].req("args").unwrap().str_of("name").unwrap(),
+            "dev 1 stream 0"
+        );
     }
 }

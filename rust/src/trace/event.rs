@@ -188,12 +188,23 @@ pub struct TraceEvent {
     /// Links TorchOp -> AtenOp -> RuntimeApi -> Kernel chains.
     pub correlation_id: u64,
     pub track: Track,
+    /// Device (GPU / rank) the event belongs to. `None` means device 0
+    /// — single-device producers omit the field entirely (spec §4),
+    /// which keeps their on-disk traces byte-identical to spec v1.
+    /// Multi-device producers (tensor-parallel sim, replica serving)
+    /// stamp it; `track` stays the stream id *within* the device.
+    pub device: Option<u32>,
     pub meta: Option<KernelMeta>,
 }
 
 impl TraceEvent {
     pub fn end_us(&self) -> f64 {
         self.ts_us + self.dur_us
+    }
+
+    /// Device this event belongs to (the `None` default is device 0).
+    pub fn device_id(&self) -> u32 {
+        self.device.unwrap_or(0)
     }
 
     pub fn to_json(&self) -> Json {
@@ -204,6 +215,9 @@ impl TraceEvent {
             .with("dur", self.dur_us)
             .with("corr", self.correlation_id)
             .with("track", self.track.to_json());
+        if let Some(d) = self.device {
+            o.set("device", Json::from(d));
+        }
         if let Some(meta) = &self.meta {
             o.set("meta", meta.to_json());
         }
@@ -218,6 +232,7 @@ impl TraceEvent {
             dur_us: v.f64_of("dur")?,
             correlation_id: v.req("corr")?.as_u64().unwrap_or(0),
             track: Track::from_json(v.req("track")?)?,
+            device: v.get("device").and_then(|d| d.as_u64()).map(|d| d as u32),
             meta: match v.get("meta") {
                 Some(m) => Some(KernelMeta::from_json(m)?),
                 None => None,
@@ -267,6 +282,7 @@ mod tests {
             dur_us: 3.25,
             correlation_id: 42,
             track: Track::Device(0),
+            device: None,
             meta: Some(sample_meta()),
         };
         let back = TraceEvent::from_json(&ev.to_json()).unwrap();
@@ -282,10 +298,35 @@ mod tests {
             dur_us: 1.0,
             correlation_id: 7,
             track: Track::Host,
+            device: None,
             meta: None,
         };
         let back = TraceEvent::from_json(&ev.to_json()).unwrap();
         assert_eq!(back, ev);
+    }
+
+    #[test]
+    fn device_field_roundtrips_and_defaults_to_zero() {
+        let mut ev = TraceEvent {
+            kind: EventKind::Kernel,
+            name: "gemm".into(),
+            ts_us: 1.0,
+            dur_us: 2.0,
+            correlation_id: 3,
+            track: Track::Device(1),
+            device: Some(2),
+            meta: None,
+        };
+        assert_eq!(ev.device_id(), 2);
+        let back = TraceEvent::from_json(&ev.to_json()).unwrap();
+        assert_eq!(back, ev);
+        assert!(ev.to_json().dump().contains("\"device\":2"));
+        // The omitted field decodes as device 0 and is never emitted.
+        ev.device = None;
+        assert_eq!(ev.device_id(), 0);
+        let back = TraceEvent::from_json(&ev.to_json()).unwrap();
+        assert_eq!(back.device, None);
+        assert!(!ev.to_json().dump().contains("device"));
     }
 
     #[test]
@@ -307,6 +348,7 @@ mod tests {
             dur_us: 2.5,
             correlation_id: 0,
             track: Track::Host,
+            device: None,
             meta: None,
         };
         assert_eq!(ev.end_us(), 12.5);

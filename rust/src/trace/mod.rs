@@ -198,6 +198,7 @@ mod tests {
             dur_us: dur,
             correlation_id: corr,
             track: Track::Device(0),
+            device: None,
             meta: Some(KernelMeta {
                 kernel_name: name.to_string(),
                 family: "elem_generic".into(),
@@ -220,6 +221,7 @@ mod tests {
             dur_us: dur,
             correlation_id: corr,
             track: Track::Host,
+            device: None,
             meta: None,
         }
     }

@@ -16,7 +16,8 @@
 //!    trace (eager or captured-serving dialect);
 //! 2. [`transforms`] edits it — host-CPU scaling, CUDA-graph
 //!    amortization, library-dispatch elision, kernel fusion / MoE
-//!    dispatch reduction, device swap — in CLI composition order;
+//!    dispatch reduction, device swap, tensor-parallel sharding — in
+//!    CLI composition order;
 //! 3. [`schedule::resimulate`] re-derives the timeline (the serving
 //!    decode-phase host-bound stalls shorten wall-clock correctly —
 //!    nothing is "subtracted", the schedule is re-run);
@@ -121,7 +122,15 @@ pub fn candidate_specs(target: OptimizationTarget, s: &Schedule) -> Vec<String> 
         }
         OptimizationTarget::DeviceWork => {
             let other = if s.platform == "h100" { "h200" } else { "h100" };
-            vec![format!("device:{other}")]
+            let mut v = vec![format!("device:{other}")];
+            // Device-bound eager runs can also scale *out*: shard the
+            // device work tensor-parallel (the quantifier keeps
+            // whichever candidate predicts the larger e2e win).
+            // Serving schedules are opaque executables — not shardable.
+            if s.mode == ScheduleMode::Eager {
+                v.push("tensor-parallel:2".to_string());
+            }
+            v
         }
     }
 }
@@ -223,6 +232,9 @@ mod tests {
         let kf = candidate_specs(OptimizationTarget::KernelFusion, &s);
         assert!(kf.contains(&"fusion:moe".to_string()), "{kf:?}");
         let dw = candidate_specs(OptimizationTarget::DeviceWork, &s);
-        assert_eq!(dw, vec!["device:h200".to_string()]);
+        assert_eq!(
+            dw,
+            vec!["device:h200".to_string(), "tensor-parallel:2".to_string()]
+        );
     }
 }

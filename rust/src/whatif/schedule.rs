@@ -23,10 +23,9 @@
 //! yields the predicted timeline, so decode-phase host-bound stalls
 //! shorten wall-clock correctly instead of being subtracted as sums.
 
-use crate::device::Stream;
-use crate::hardware::Platform;
 use crate::taxbreak::decompose::hdbi_of;
 use crate::taxbreak::phase2::Phase2Result;
+use crate::timeline::{self, StreamRef};
 use crate::trace::{EventKind, KernelMeta, Trace, TraceEvent, Track};
 
 /// Inter-chain host gap (us) above which the gap is a pass boundary
@@ -110,8 +109,24 @@ pub struct Schedule {
 
 impl Schedule {
     /// Extract from an eager trace + its Phase-2 replay results.
+    ///
+    /// Single-timeline traces only: multi-device traces
+    /// (tensor-parallel SPMD) and multi-stream traces (expert-parallel)
+    /// interleave several concurrent timelines, which a serial-host /
+    /// single-FIFO replay would silently serialize into a bogus
+    /// baseline — they are rejected instead (replay them at the engine
+    /// level via `sim::parallel`).
     pub fn from_eager_trace(trace: &Trace, p2: &Phase2Result) -> anyhow::Result<Schedule> {
         crate::taxbreak::phase1::validate_trace(trace)?;
+        anyhow::ensure!(
+            trace.events.iter().all(|e| e.device.is_none()
+                && match e.track {
+                    Track::Device(s) => s == 0,
+                    Track::Host => true,
+                }),
+            "schedule extraction requires a single-device, single-stream eager \
+             trace; multi-stream timelines do not replay on a serial schedule"
+        );
         let chains = trace.correlation_chains();
         let mut ids: Vec<u64> = chains
             .iter()
@@ -204,15 +219,25 @@ impl Schedule {
             phase: trace.meta.phase.clone(),
             steps,
             tail_host_us: tail,
-            baseline_st_speed: baseline_st(&trace.meta.platform),
+            baseline_st_speed: crate::hardware::baseline_st_speed(&trace.meta.platform),
             floor_hint_us: floor_hint,
         })
     }
 
     /// Extract from a captured serving run (`phase == "serve"`): every
     /// invocation is host-blocking, inter-chain gaps are arrival idle.
+    ///
+    /// Single-device traces only (a merged `loadgen --devices N`
+    /// capture interleaves N independent replica clocks — replaying
+    /// them serially would break identity fidelity). Stream labels are
+    /// irrelevant here: a host-blocking engine never overlaps streams.
     pub fn from_serving_trace(trace: &Trace) -> anyhow::Result<Schedule> {
         crate::taxbreak::phase1::validate_trace(trace)?;
+        anyhow::ensure!(
+            trace.events.iter().all(|e| e.device.is_none()),
+            "schedule extraction requires a single-device serving trace; \
+             replay multi-replica runs per device (capture with --devices 1)"
+        );
         let chains = trace.correlation_chains();
         let mut ids: Vec<u64> = chains
             .iter()
@@ -260,17 +285,10 @@ impl Schedule {
             phase: trace.meta.phase.clone(),
             steps,
             tail_host_us: tail,
-            baseline_st_speed: baseline_st(&trace.meta.platform),
+            baseline_st_speed: crate::hardware::baseline_st_speed(&trace.meta.platform),
             floor_hint_us: 0.0,
         })
     }
-
-}
-
-fn baseline_st(platform: &str) -> f64 {
-    Platform::by_name(platform)
-        .map(|p| p.cpu.st_speed)
-        .unwrap_or(1.0)
 }
 
 /// Aggregate prediction of one re-simulated schedule, in the Eq. 1-3
@@ -321,34 +339,44 @@ impl Outcome {
 
 /// Re-simulate a schedule; optionally record a synthetic trace (host
 /// span + kernel span per step) for Chrome-timeline export.
+///
+/// The timeline is the shared discrete-event engine
+/// ([`timeline::Engine`]) on the single topology — the identical
+/// host-cursor/stream-FIFO semantics the simulator runs on, so
+/// identity replay stays exact by construction.
 pub fn resimulate_with_trace(s: &Schedule, record: bool) -> (Outcome, Option<Trace>) {
     let mut out = Outcome::default();
     let mut events: Vec<TraceEvent> = Vec::new();
-    let mut t = 0.0f64;
-    let mut stream = Stream::new();
+    let mut tl = timeline::Engine::single();
     let mut corr = 0u64;
 
     for step in &s.steps {
         if step.synced {
-            t = t.max(stream.sync_point());
+            tl.host_wait_until(0, tl.sync_point());
         }
-        t += step.pre_host_us;
-        let torch_ts = t;
-        let api_ts = torch_ts + step.t_py_us + step.t_base_us + step.t_ct_us;
-        let api_end = api_ts + step.api_us;
+        tl.host_advance(0, step.pre_host_us);
+        // Segment-wise advances preserve the pre-engine cursor chain
+        // `((t + py) + base) + ct` bit-for-bit (identity fidelity).
+        let (torch_ts, _) = tl.host_advance(0, step.t_py_us);
+        tl.host_advance(0, step.t_base_us);
+        let (_, api_ts) = tl.host_advance(0, step.t_ct_us);
+        let (_, api_end) = tl.host_advance(0, step.api_us);
         let timing = match s.mode {
-            ScheduleMode::Eager => {
-                t = api_end;
-                stream.submit(api_ts, step.floor_us + step.excess_us, step.device_us)
-            }
+            ScheduleMode::Eager => tl.submit(
+                StreamRef::PRIMARY,
+                api_ts,
+                step.floor_us + step.excess_us,
+                step.device_us,
+            ),
             ScheduleMode::Synchronous => {
                 // Host blocks through the device computation.
-                let timing = stream.submit(
-                    api_end.max(stream.sync_point()),
+                let timing = tl.submit(
+                    StreamRef::PRIMARY,
+                    api_end.max(tl.sync_point()),
                     step.floor_us + step.excess_us,
                     step.device_us,
                 );
-                t = timing.end_us;
+                tl.host_wait_until(0, timing.end_us);
                 timing
             }
         };
@@ -367,6 +395,7 @@ pub fn resimulate_with_trace(s: &Schedule, record: bool) -> (Outcome, Option<Tra
                 dur_us: api_end - torch_ts,
                 correlation_id: corr,
                 track: Track::Host,
+                device: None,
                 meta: None,
             });
             events.push(TraceEvent {
@@ -376,6 +405,7 @@ pub fn resimulate_with_trace(s: &Schedule, record: bool) -> (Outcome, Option<Tra
                 dur_us: step.device_us,
                 correlation_id: corr,
                 track: Track::Device(0),
+                device: None,
                 meta: Some(KernelMeta {
                     kernel_name: step.name.clone(),
                     family: step.family.clone(),
@@ -390,8 +420,9 @@ pub fn resimulate_with_trace(s: &Schedule, record: bool) -> (Outcome, Option<Tra
             });
         }
     }
-    t = t.max(stream.sync_point()) + s.tail_host_us;
-    out.e2e_us = t.max(stream.sync_point());
+    tl.host_wait_until(0, tl.sync_point());
+    tl.host_advance(0, s.tail_host_us);
+    out.e2e_us = tl.host_now(0).max(tl.sync_point());
 
     let trace = record.then(|| {
         let mut tr = Trace::new(crate::trace::TraceMeta {
@@ -505,5 +536,51 @@ mod tests {
     fn empty_trace_is_rejected() {
         let trace = crate::trace::Trace::default();
         assert!(Schedule::from_serving_trace(&trace).is_err());
+    }
+
+    #[test]
+    fn multi_stream_and_multi_device_traces_are_rejected() {
+        // Expert-parallel trace: kernels overlap across streams — a
+        // serial replay would mis-derive the baseline.
+        let ep = crate::sim::simulate_expert_parallel(
+            &models::olmoe(),
+            &Platform::h100(),
+            &Workload::decode(1, 64, 2),
+            4,
+            3,
+        )
+        .unwrap();
+        let p1 = crate::taxbreak::Phase1::from_trace(&ep);
+        let mut backend = SimReplayBackend::new(Platform::h100(), 5);
+        let p2 = run(&p1.db, &mut backend, &ReplayConfig::fast());
+        let err = Schedule::from_eager_trace(&ep, &p2).unwrap_err();
+        assert!(err.to_string().contains("single-device"), "{err}");
+
+        // Tensor-parallel trace: device-stamped SPMD ranks.
+        let tp = crate::sim::simulate_tensor_parallel(
+            &models::gpt2(),
+            &Platform::h100(),
+            &Workload::prefill(1, 32),
+            2,
+            3,
+        )
+        .unwrap();
+        assert!(Schedule::from_eager_trace(&tp, &p2).is_err());
+
+        // A device-stamped serving trace (merged replica capture).
+        let mut engine = crate::runtime::SimEngine::with_topology(
+            models::gpt2(),
+            Platform::h200(),
+            5,
+            1,
+            1, // replica id 1 => events stamped device 1
+        );
+        use crate::runtime::backend::Backend;
+        use crate::serving::ModelBackend;
+        let (next, cache) = engine.prefill_group(&[vec![1, 2]]).unwrap();
+        let _ = engine.decode_group(cache, 2, &next).unwrap();
+        let trace = engine.take_trace();
+        let err = Schedule::from_serving_trace(&trace).unwrap_err();
+        assert!(err.to_string().contains("single-device"), "{err}");
     }
 }

@@ -10,6 +10,7 @@
 //! | `lib-elision[:fam+fam]` | dropping I_lib·ΔCT for selected kernel families |
 //! | `fusion:elem` / `fusion:moe[:<keep>]` | kernel-count reduction (pointwise chains / MoE dispatch) |
 //! | `device:<platform>` | per-family device-time rescaling onto another GPU |
+//! | `tensor-parallel:<N>` | N-way sharding of weight-carrying device work + per-pass all-reduce; the per-rank launch path is untouched |
 //!
 //! **What `host-cpu` scales** (DESIGN.md §10): the components the
 //! two-phase measurement attributes to the host CPU — `T_Py`,
@@ -118,11 +119,24 @@ pub fn parse_spec(spec: &str) -> anyhow::Result<Box<dyn Counterfactual>> {
                 platform: Platform::by_name(name)?,
             })
         }
+        "tensor-parallel" => {
+            let arg = rest.ok_or_else(|| {
+                anyhow::anyhow!("tensor-parallel needs a way count, e.g. tensor-parallel:2")
+            })?;
+            let ways: usize = arg
+                .parse()
+                .map_err(|_| anyhow::anyhow!("tensor-parallel ways must be an integer, got '{arg}'"))?;
+            anyhow::ensure!(
+                (2..=64).contains(&ways),
+                "tensor-parallel ways must be in 2..=64, got {ways}"
+            );
+            Box::new(TensorParallel { ways })
+        }
         other => anyhow::bail!(
             "unknown counterfactual '{other}' \
              (host-cpu:<profile|factor> | cuda-graphs[:<launch_us>] | \
              lib-elision[:fam+fam] | fusion:elem | fusion:moe[:<keep>] | \
-             device:<platform>)"
+             device:<platform> | tensor-parallel:<N>)"
         ),
     })
 }
@@ -397,6 +411,121 @@ impl Counterfactual for DeviceSwap {
     }
 }
 
+/// (6) Tensor parallelism: replay the per-rank timeline of an N-way
+/// sharded execution (SPMD — every rank replays the same schedule).
+/// Weight-carrying device work (GEMM / fused attention) rescales via
+/// the analytic cost model over `flops/N, bytes/N` (small shards fall
+/// off the efficiency ramp, so the gain is sub-linear by construction);
+/// other families replicate. One ring **all-reduce step is appended to
+/// every pass** (`sim::parallel::allreduce_device_us` — the schedule
+/// carries pass boundaries, not layer boundaries, so this is the
+/// conservative per-pass approximation; activation size is estimated
+/// from the pass's largest GEMM output). The per-rank host launch path
+/// is deliberately untouched: each rank dispatches its full shard, so
+/// a host-bound schedule predicts ~no end-to-end gain — adding devices
+/// multiplies aggregate launch-path cost instead of hiding it.
+pub struct TensorParallel {
+    pub ways: usize,
+}
+
+impl TensorParallel {
+    /// Activation-size estimate for one pass: the largest GEMM-family
+    /// step's output matrix, taking `bytes ≈ A + B + C` with the three
+    /// operands of comparable order → `C ≈ bytes / 3`. Must be fed the
+    /// *unsharded* steps: the all-reduce moves the full partial-sum
+    /// output, not one rank's shard.
+    fn pass_act_bytes(steps: &[Step]) -> f64 {
+        steps
+            .iter()
+            .filter(|st| st.family.starts_with("gemm"))
+            .map(|st| st.bytes / 3.0)
+            .fold(0.0f64, f64::max)
+    }
+
+    /// The per-pass ring all-reduce step over `act` activation bytes.
+    fn ar_step(&self, act: f64, floor: f64) -> Step {
+        Step {
+            name: "nccl_all_reduce_ring".to_string(),
+            family: "memcpy".to_string(),
+            dedup_key: "nccl::all_reduce".to_string(),
+            lib_mediated: false,
+            synced: false,
+            pre_host_us: 0.0,
+            t_py_us: 0.0,
+            t_base_us: 0.0,
+            t_ct_us: 0.0,
+            api_us: crate::host::API_CALL_MED_US,
+            floor_us: floor,
+            excess_us: 0.0,
+            device_us: crate::sim::parallel::allreduce_device_us(self.ways, act),
+            flops: 0.0,
+            bytes: crate::sim::parallel::allreduce_wire_bytes(self.ways, act),
+            graphed: false,
+        }
+    }
+}
+
+impl Counterfactual for TensorParallel {
+    fn label(&self) -> String {
+        format!("tensor-parallel:{}", self.ways)
+    }
+
+    fn apply(&self, s: &mut Schedule) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            s.mode == ScheduleMode::Eager,
+            "tensor-parallel applies to eager schedules (serving invocations are \
+             opaque whole-model executables with no shardable kernel structure — \
+             shard serving at the engine level with `taxbreak loadgen --devices`)"
+        );
+        let base = Platform::by_name(&s.platform).map_err(|e| {
+            anyhow::anyhow!("tensor-parallel needs a recorded catalog platform: {e}")
+        })?;
+
+        // Pass boundaries + activation estimates from the *unsharded*
+        // steps, before the sharding loop rewrites flops/bytes:
+        // (last step index of the pass, activation bytes).
+        let mut pass_acts: Vec<(usize, f64)> = Vec::new();
+        let mut pass_start = 0usize;
+        for i in 0..s.steps.len() {
+            if i + 1 == s.steps.len() || s.steps[i + 1].synced {
+                pass_acts.push((i, Self::pass_act_bytes(&s.steps[pass_start..=i])));
+                pass_start = i + 1;
+            }
+        }
+
+        let w = self.ways as f64;
+        for st in &mut s.steps {
+            // Shardability comes from the one shared predicate
+            // (`sim::parallel::tp_sharded`); families outside the
+            // taxonomy replicate.
+            let family = match Family::from_tag(&st.family) {
+                Ok(f) if crate::sim::parallel::tp_sharded(f) => f,
+                _ => continue,
+            };
+            let old = cost::device_duration_us(family, st.flops, st.bytes, &base.gpu);
+            let new = cost::device_duration_us(family, st.flops / w, st.bytes / w, &base.gpu);
+            st.device_us *= new / old;
+            st.flops /= w;
+            st.bytes /= w;
+        }
+
+        // Append one all-reduce step at the end of each pass.
+        let floor = s.floor_hint_us;
+        let old_steps = std::mem::take(&mut s.steps);
+        let mut out: Vec<Step> = Vec::with_capacity(old_steps.len() + pass_acts.len());
+        let mut boundaries = pass_acts.into_iter().peekable();
+        for (i, step) in old_steps.into_iter().enumerate() {
+            out.push(step);
+            if boundaries.peek().is_some_and(|&(end, _)| end == i) {
+                let (_, act) = boundaries.next().expect("peeked");
+                out.push(self.ar_step(act, floor));
+            }
+        }
+        s.steps = out;
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -446,6 +575,9 @@ mod tests {
         assert!(parse_spec("lib-elision:warp_gemm").is_err());
         assert!(parse_spec("device:b200").is_err());
         assert!(parse_spec("cuda-graphs:x").is_err());
+        assert!(parse_spec("tensor-parallel").is_err());
+        assert!(parse_spec("tensor-parallel:1").is_err());
+        assert!(parse_spec("tensor-parallel:x").is_err());
     }
 
     #[test]
@@ -461,6 +593,7 @@ mod tests {
             "fusion:moe",
             "fusion:moe:0.25",
             "device:h200",
+            "tensor-parallel:2",
         ] {
             let cf = parse_spec(spec).unwrap();
             assert!(cf.label().starts_with(spec.split(':').next().unwrap()));
@@ -554,6 +687,53 @@ mod tests {
         assert_eq!(s.platform, "h200");
         let ratio = Platform::h200().gpu.t_sys_floor_us / Platform::h100().gpu.t_sys_floor_us;
         assert!((s.steps[0].floor_us - 4.7 * ratio).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tensor_parallel_shards_gemms_and_appends_allreduce() {
+        let mut s = sched(vec![
+            step("g1", "gemm_cublas", true),
+            step("r", "reduce", false),
+            step("g2", "gemm_cublas", true), // second pass
+        ]);
+        // A roofline-sized GEMM so sharding actually shows (tiny
+        // kernels sit on the efficiency ramp and barely shrink —
+        // which is itself the honest sub-linear-TP behavior).
+        s.steps[0].flops = 2.0e12;
+        s.steps[0].bytes = 6.0e9;
+        s.steps[0].device_us = 3000.0;
+        let host_before: f64 = s.steps.iter().map(|st| st.host_path_us()).sum();
+        parse_spec("tensor-parallel:2").unwrap().apply(&mut s).unwrap();
+        // One all-reduce appended per pass: 3 steps -> 5.
+        assert_eq!(s.steps.len(), 5);
+        assert_eq!(s.steps[2].name, "nccl_all_reduce_ring");
+        assert_eq!(s.steps[4].name, "nccl_all_reduce_ring");
+        assert!(!s.steps[2].synced && s.steps[2].pre_host_us == 0.0);
+        assert!(s.steps[2].device_us > 0.0, "all-reduce costs device time");
+        // Big GEMM halves (to within the efficiency ramp)...
+        assert!(
+            s.steps[0].device_us > 1450.0 && s.steps[0].device_us < 1560.0,
+            "sharded GEMM ~halves: {}",
+            s.steps[0].device_us
+        );
+        // ...replicated families are untouched.
+        assert_eq!(s.steps[1].device_us, 5.0, "reduce is replicated, not sharded");
+        assert!((s.steps[0].flops - 1.0e12).abs() < 1.0);
+        // The per-rank host launch path is untouched (nothing removed;
+        // only the all-reduce launches are added).
+        let host_after: f64 = s.steps.iter().map(|st| st.host_path_us()).sum();
+        assert!(host_after >= host_before);
+    }
+
+    #[test]
+    fn tensor_parallel_rejects_serving_schedules() {
+        // Serving steps are opaque executables (family sim_exec/
+        // pjrt_exec): nothing to shard, and every step is synced, so a
+        // per-pass all-reduce would fire per invocation. Hard error.
+        let mut s = sched(vec![step("g", "gemm_cublas", true)]);
+        s.mode = ScheduleMode::Synchronous;
+        let err = parse_spec("tensor-parallel:2").unwrap().apply(&mut s).unwrap_err();
+        assert!(err.to_string().contains("eager"), "{err}");
     }
 
     #[test]

@@ -23,6 +23,7 @@ fn validate_rejects_orphaned_kernels() {
         dur_us: 1.0,
         correlation_id: 1,
         track: Track::Host,
+        device: None,
         meta: None,
     });
     t.push(TraceEvent {
@@ -32,6 +33,7 @@ fn validate_rejects_orphaned_kernels() {
         dur_us: 1.0,
         correlation_id: 1,
         track: Track::Device(0),
+        device: None,
         meta: None,
     });
     let err = phase1::validate_trace(&t).unwrap_err().to_string();

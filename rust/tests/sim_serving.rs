@@ -43,6 +43,7 @@ fn serve_with_honors_custom_shape_grid() {
         vocab: 509,
         max_seq: 96,
         buckets: vec![2, 8],
+        ..SimEngineConfig::default()
     };
     let engine = SimEngine::new(models::olmoe(), Platform::h100(), cfg, 11);
     let s = serve_with(engine, 10, 8, 3).unwrap();

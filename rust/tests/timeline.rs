@@ -1,0 +1,369 @@
+//! Integration: the unified discrete-event timeline engine.
+//!
+//! Three contracts:
+//! 1. **Single-timeline equivalence** (the refactor's safety net): the
+//!    engine with 1 host thread + 1 stream must reproduce the
+//!    pre-refactor `Stream` + host-cursor semantics *bit-for-bit* — a
+//!    property test over random op sequences, plus a golden test that
+//!    re-implements the seed simulator loop verbatim and demands
+//!    byte-identical trace JSON from today's `sim::simulate`.
+//! 2. **Per-device decomposition**: the per-device slices partition the
+//!    aggregate component-by-component, and the per-device HDBI is
+//!    `hdbi_of` on each slice.
+//! 3. **The scale-out question** (acceptance): on the bundled
+//!    host-bound MoE decode point, `tensor-parallel:2` must predict a
+//!    *smaller* end-to-end gain than `host-cpu` — adding a device
+//!    multiplies launch-path cost instead of removing it.
+
+use taxbreak::device::Stream;
+use taxbreak::hardware::Platform;
+use taxbreak::host::HostModel;
+use taxbreak::kernels::cost;
+use taxbreak::kernels::family::Family;
+use taxbreak::lowering::{self, LowerOpts, PassKind};
+use taxbreak::models::{self, ModelSpec};
+use taxbreak::sim::{
+    self, simulate, EXPERT_LOOP_US, PASS_CONST_US, PER_LAYER_US, Phase, SYNC_US, Workload,
+};
+use taxbreak::taxbreak::{analyze, ReplayConfig, SimReplayBackend};
+use taxbreak::timeline::{Engine, StreamRef};
+use taxbreak::trace::{EventKind, Trace, TraceEvent, TraceMeta, Track};
+use taxbreak::util::prop::forall;
+use taxbreak::util::rng::Rng;
+use taxbreak::whatif::{self, parse_specs, Schedule};
+
+// --- 1a. engine vs raw Stream + cursor: property test ------------------
+
+#[test]
+fn single_topology_engine_is_bit_identical_to_stream_plus_cursor() {
+    forall("engine == stream+cursor", 200, |g| {
+        let mut engine = Engine::single();
+        let mut stream = Stream::new();
+        let mut cursor = 0.0f64;
+
+        let ops = g.usize_in(1, 40);
+        for _ in 0..ops {
+            match g.usize_in(0, 2) {
+                0 => {
+                    // Host occupies the dispatch thread.
+                    let dur = g.f64_in(0.0, 50.0);
+                    let (s, e) = engine.host_advance(0, dur);
+                    let rs = cursor;
+                    cursor += dur;
+                    if s != rs || e != cursor {
+                        g.fail(format!("advance drifted: {s} vs {rs}"));
+                        return false;
+                    }
+                }
+                1 => {
+                    // Device sync wait (`t = t.max(sync_point())`).
+                    engine.host_wait_until(0, engine.sync_point());
+                    cursor = cursor.max(stream.sync_point());
+                    if engine.host_now(0) != cursor {
+                        g.fail("wait_until drifted".to_string());
+                        return false;
+                    }
+                }
+                _ => {
+                    // Kernel submission off the current host cursor.
+                    let gap = g.f64_in(0.0, 10.0);
+                    let dur = g.f64_in(0.1, 80.0);
+                    let a = engine.submit(StreamRef::PRIMARY, engine.host_now(0), gap, dur);
+                    let b = stream.submit(cursor, gap, dur);
+                    if a != b {
+                        g.fail(format!("submit drifted: {a:?} vs {b:?}"));
+                        return false;
+                    }
+                }
+            }
+        }
+        engine.sync_point() == stream.sync_point()
+            && engine.active_us() == stream.active_us()
+            && engine.launched() == stream.launched()
+            && engine.host_now(0) == cursor
+    });
+}
+
+// --- 1b. golden: today's simulate == the pre-refactor loop -------------
+
+/// The seed (pre-timeline-engine) simulator loop, reproduced verbatim
+/// for the unmitigated eager path: serial host cursor + one FIFO
+/// `Stream`. This pins the golden trace semantics: `sim::simulate`
+/// refactors are only legal if they keep producing *these* bytes.
+fn reference_simulate(
+    model: &ModelSpec,
+    platform: &Platform,
+    workload: &Workload,
+    seed: u64,
+) -> Trace {
+    let host = HostModel::new(platform.clone());
+    let base = Rng::new(seed)
+        .fork_str(&model.name)
+        .fork_str(&platform.name);
+    let mut host_rng = base.fork(1);
+    let mut dev_rng = base.fork(2);
+    let mut lower_rng = base.fork(3);
+
+    let mut trace = Trace::new(TraceMeta {
+        platform: platform.name.clone(),
+        model: model.name.clone(),
+        phase: workload.phase.as_str().to_string(),
+        batch: workload.batch,
+        seq: workload.seq,
+        m_tokens: if workload.phase == Phase::Decode {
+            workload.m_tokens
+        } else {
+            1
+        },
+        wall_us: 0.0,
+    });
+
+    let opts = LowerOpts {
+        fused_attention: workload.fused_attention,
+    };
+    let st = platform.cpu.st_speed;
+    let mut t = 0.0f64; // host cursor
+    let mut stream = Stream::new();
+    let mut corr: u64 = 0;
+
+    let m = match workload.phase {
+        Phase::Prefill => 1,
+        Phase::Decode => workload.m_tokens.max(1),
+    };
+    let mut passes: Vec<(PassKind, usize, usize)> =
+        vec![(PassKind::Prefill, workload.seq, workload.seq)];
+    passes.extend((0..m - 1).map(|i| (PassKind::DecodeStep, 1, workload.seq + i + 1)));
+
+    for (kind, seq_q, ctx) in passes {
+        let mut glue = PASS_CONST_US + PER_LAYER_US * model.layers as f64;
+        if let Some(moe) = &model.moe {
+            glue += EXPERT_LOOP_US
+                * (model.layers * (moe.n_experts + moe.shared_experts)) as f64;
+        }
+        t += glue / st;
+
+        let seq = lowering::lower_pass(
+            model,
+            kind,
+            workload.batch,
+            seq_q,
+            ctx,
+            &opts,
+            &mut lower_rng,
+        );
+        for meta in seq {
+            corr += 1;
+            let family = Family::from_tag(&meta.family).expect("lowering emits valid tags");
+            let hs = host.sample(family, &mut host_rng);
+            let dur = cost::sample_duration_us(
+                family,
+                meta.flops,
+                meta.bytes,
+                &platform.gpu,
+                &mut dev_rng,
+            );
+
+            let torch_ts = t;
+            let aten_ts = torch_ts + hs.t_py;
+            let api_ts = aten_ts + hs.t_base + hs.t_ct;
+            let api_end = api_ts + hs.api_dur;
+            let timing = stream.submit(api_ts, hs.launch_gap, dur);
+            t = api_end;
+
+            trace.push(TraceEvent {
+                kind: EventKind::TorchOp,
+                name: format!("torch.{}", meta.aten_op.trim_start_matches("aten::")),
+                ts_us: torch_ts,
+                dur_us: api_end - torch_ts,
+                correlation_id: corr,
+                track: Track::Host,
+                device: None,
+                meta: None,
+            });
+            trace.push(TraceEvent {
+                kind: EventKind::AtenOp,
+                name: meta.aten_op.clone(),
+                ts_us: aten_ts,
+                dur_us: api_end - aten_ts,
+                correlation_id: corr,
+                track: Track::Host,
+                device: None,
+                meta: None,
+            });
+            trace.push(TraceEvent {
+                kind: EventKind::RuntimeApi,
+                name: "cudaLaunchKernel".to_string(),
+                ts_us: api_ts,
+                dur_us: hs.api_dur,
+                correlation_id: corr,
+                track: Track::Host,
+                device: None,
+                meta: None,
+            });
+            trace.push(TraceEvent {
+                kind: EventKind::Kernel,
+                name: meta.kernel_name.clone(),
+                ts_us: timing.start_us,
+                dur_us: dur,
+                correlation_id: corr,
+                track: Track::Device(0),
+                device: None,
+                meta: Some(meta),
+            });
+        }
+
+        t = t.max(stream.sync_point()) + SYNC_US / st;
+    }
+
+    trace.meta.wall_us = t.max(stream.sync_point());
+    trace
+}
+
+#[test]
+fn simulate_reproduces_the_pre_refactor_golden_traces_byte_for_byte() {
+    for (model, wl, seed) in [
+        (models::gpt2(), Workload::prefill(1, 128), 42u64),
+        (models::gpt2(), Workload::decode(1, 64, 3), 7),
+        (models::llama_1b(), Workload::prefill(4, 256), 11),
+        (models::olmoe(), Workload::decode(1, 64, 2), 2026),
+    ] {
+        for platform in [Platform::h100(), Platform::h200()] {
+            let engine_trace = simulate(&model, &platform, &wl, seed);
+            let golden = reference_simulate(&model, &platform, &wl, seed);
+            assert_eq!(
+                engine_trace, golden,
+                "{} on {}: the timeline engine must reproduce the \
+                 pre-refactor trace exactly",
+                model.name, platform.name
+            );
+            // Byte-identical on disk, not merely structurally equal.
+            assert_eq!(
+                engine_trace.to_json().dump(),
+                golden.to_json().dump(),
+                "{} on {}: golden trace bytes drifted",
+                model.name,
+                platform.name
+            );
+        }
+    }
+}
+
+// --- 2. per-device decomposition ---------------------------------------
+
+#[test]
+fn per_device_slices_partition_the_aggregate_decomposition() {
+    let model = models::llama_1b();
+    let platform = Platform::h100();
+    let wl = Workload::prefill(1, 128);
+    let trace = sim::simulate_tensor_parallel(&model, &platform, &wl, 2, 5).unwrap();
+    let mut backend = SimReplayBackend::new(platform, 9);
+    let a = analyze(&trace, &mut backend, &ReplayConfig::fast());
+    let d = &a.decomposition;
+
+    assert_eq!(d.per_device.len(), 2, "one slice per rank");
+    let sum = |f: fn(&taxbreak::taxbreak::DeviceSlice) -> f64| -> f64 {
+        d.per_device.values().map(f).sum()
+    };
+    assert!((sum(|s| s.t_py_us) - d.t_py_us).abs() < 1e-6);
+    assert!((sum(|s| s.t_base_us) - d.t_base_us).abs() < 1e-6);
+    assert!((sum(|s| s.dct_us) - d.dct_us).abs() < 1e-6);
+    assert!((sum(|s| s.dkt_us) - d.dkt_us).abs() < 1e-6);
+    assert!((sum(|s| s.device_active_us) - d.device_active_us).abs() < 1e-6);
+    let n: usize = d.per_device.values().map(|s| s.invocations).sum();
+    assert_eq!(n, d.n_kernels);
+    // Per-device HDBI is hdbi_of on the slice; SPMD ranks agree.
+    for s in d.per_device.values() {
+        let h = s.hdbi();
+        assert!(h > 0.0 && h < 1.0);
+        assert!(
+            (h - taxbreak::taxbreak::hdbi_of(s.orchestration_us(), s.device_active_us))
+                .abs()
+                < 1e-12
+        );
+    }
+    let hs: Vec<f64> = d.per_device.values().map(|s| s.hdbi()).collect();
+    assert!((hs[0] - hs[1]).abs() < 1e-9, "symmetric ranks, equal HDBI");
+    // Idle fraction is multi-device aware: available GPU time is
+    // e2e × 2, so a host-heavy TP run must not clamp to 0% idle.
+    let idle = d.idle_fraction();
+    assert!(idle > 0.0 && idle < 1.0, "idle={idle}");
+    assert!((idle + d.gpu_utilization() - 1.0).abs() < 1e-12);
+}
+
+// --- 3. the scale-out acceptance contrast ------------------------------
+
+fn bundled_moe_schedule() -> Schedule {
+    let cfg = whatif::bundled::moe_decode();
+    let model = cfg.model_spec().unwrap();
+    let platform = cfg.platform_spec().unwrap();
+    let trace = simulate(&model, &platform, &cfg.workload(), cfg.seed);
+    let mut backend = SimReplayBackend::new(platform, cfg.seed ^ 0x77);
+    let a = analyze(&trace, &mut backend, &cfg.replay_config());
+    Schedule::from_eager_trace(&trace, &a.phase2).unwrap()
+}
+
+#[test]
+fn tensor_parallel_gains_less_than_a_faster_host_on_host_bound_moe() {
+    let s = bundled_moe_schedule();
+
+    let host = whatif::run(&s, &parse_specs(&["host-cpu:xeon-6538y".to_string()]).unwrap())
+        .unwrap();
+    let host_red = host
+        .final_outcome()
+        .reduction_vs(&host.baseline, |o| o.e2e_us);
+
+    let tp = whatif::run(&s, &parse_specs(&["tensor-parallel:2".to_string()]).unwrap())
+        .unwrap();
+    let tp_red = tp.final_outcome().reduction_vs(&tp.baseline, |o| o.e2e_us);
+
+    // The paper cannot answer this; the engine can: on the host-bound
+    // MoE decode schedule a second GPU only helps the device-bound
+    // prompt pass (expected-value model: ~3% e2e), while the faster
+    // host CPU buys its 4-14% — the serial dispatch path still gates
+    // every decode step. Scale-out is NOT the prescription here.
+    assert!(
+        tp_red < host_red,
+        "tensor-parallel ({tp_red}) must gain less e2e than host-cpu ({host_red})"
+    );
+    assert!(
+        (0.005..0.07).contains(&tp_red),
+        "TP's gain is confined to the device-bound prompt pass, got {tp_red}"
+    );
+    // ...and it *multiplies* the launch path: every pass gained an
+    // all-reduce launch on top of the untouched per-kernel dispatches.
+    assert!(tp.final_outcome().n_kernels > tp.baseline.n_kernels);
+    assert!(
+        tp.final_outcome().orchestration_us() >= tp.baseline.orchestration_us(),
+        "per-rank orchestration never shrinks under TP"
+    );
+}
+
+// --- engine smoke through every consumer -------------------------------
+
+#[test]
+fn serving_whatif_and_sim_share_the_engine_clock_consistently() {
+    // Serving identity: SimEngine wall == whatif synchronous replay.
+    use taxbreak::runtime::{Backend, SimEngine};
+    use taxbreak::serving::ModelBackend;
+    let mut e = SimEngine::with_defaults(models::gpt2(), Platform::h200(), 5);
+    let (next, cache) = e.prefill_group(&[vec![1, 2, 3]]).unwrap();
+    let _ = e.decode_group(cache, 3, &next).unwrap();
+    let trace = e.take_trace();
+    let s = Schedule::from_serving_trace(&trace).unwrap();
+    let out = whatif::resimulate(&s);
+    let rel = (out.e2e_us - trace.meta.wall_us).abs() / trace.meta.wall_us;
+    assert!(rel < 1e-9, "serving identity replay must stay exact: {rel}");
+
+    // Eager identity: simulate -> schedule -> replay reproduces wall.
+    let cfg = whatif::bundled::dense_prefill();
+    let model = cfg.model_spec().unwrap();
+    let platform = cfg.platform_spec().unwrap();
+    let wl = Workload::prefill(1, 128);
+    let tr = simulate(&model, &platform, &wl, 3);
+    let mut backend = SimReplayBackend::new(platform, 4);
+    let a = analyze(&tr, &mut backend, &ReplayConfig::fast());
+    let es = Schedule::from_eager_trace(&tr, &a.phase2).unwrap();
+    let eo = whatif::resimulate(&es);
+    let rel = (eo.e2e_us - tr.meta.wall_us).abs() / tr.meta.wall_us;
+    assert!(rel < 1e-3, "eager identity replay drifted: {rel}");
+}

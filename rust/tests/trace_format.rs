@@ -20,7 +20,10 @@ const META_FIELDS: [&str; 7] = [
     "platform", "model", "phase", "batch", "seq", "m_tokens", "wall_us",
 ];
 /// Field names documented in docs/trace_format.md §4 (TraceEvent).
-const EVENT_FIELDS: [&str; 7] = ["kind", "name", "ts", "dur", "corr", "track", "meta"];
+/// `device` and `meta` are optional; when present they keep this order.
+const EVENT_FIELDS: [&str; 8] = [
+    "kind", "name", "ts", "dur", "corr", "track", "device", "meta",
+];
 /// Field names documented in docs/trace_format.md §5 (KernelMeta).
 const KERNEL_META_FIELDS: [&str; 9] = [
     "kernel_name", "family", "aten_op", "shapes_key", "grid", "block", "lib", "flops", "bytes",
@@ -63,6 +66,7 @@ fn sample_trace() -> Trace {
         dur_us: dur,
         correlation_id: corr,
         track: Track::Host,
+        device: None,
         meta: None,
     };
     t.push(host(EventKind::TorchOp, 1, 0.0, 2.5, "torch.mm"));
@@ -75,6 +79,7 @@ fn sample_trace() -> Trace {
         dur_us: 3.0,
         correlation_id: 1,
         track: Track::Device(0),
+        device: None,
         meta: Some(KernelMeta {
             kernel_name: "ampere_bf16_s16816gemm_q_64x2048x2048_tn".into(),
             family: "gemm_cublas".into(),
@@ -96,6 +101,19 @@ fn sample_trace() -> Trace {
         dur_us: 1.0,
         correlation_id: 2,
         track: Track::Device(3),
+        device: None,
+        meta: None,
+    });
+    // A kernel stamped onto a second *device* (spec v2 optional field):
+    // stream 0 of device 1.
+    t.push(TraceEvent {
+        kind: EventKind::Kernel,
+        name: "nccl_all_reduce_ring".into(),
+        ts_us: 31.0,
+        dur_us: 2.0,
+        correlation_id: 3,
+        track: Track::Device(0),
+        device: Some(1),
         meta: None,
     });
     t
@@ -126,19 +144,23 @@ fn emitted_fields_match_documented_names_exactly() {
     assert_eq!(keys(j.req("meta").unwrap()), META_FIELDS.to_vec());
 
     let events = j.arr_of("events").unwrap();
+    let mut saw_device = false;
     for ev in events {
         let ks = keys(ev);
-        // `meta` is optional and always last when present.
-        let expected: Vec<&str> = if ks.contains(&"meta") {
-            EVENT_FIELDS.to_vec()
-        } else {
-            EVENT_FIELDS[..6].to_vec()
-        };
+        // `device` and `meta` are optional; present fields must match
+        // the documented names in the documented order.
+        let expected: Vec<&str> = EVENT_FIELDS
+            .iter()
+            .copied()
+            .filter(|f| !matches!(*f, "device" | "meta") || ks.contains(f))
+            .collect();
         assert_eq!(ks, expected, "event field names/order drifted");
+        saw_device |= ks.contains(&"device");
         if let Some(meta) = ev.get("meta") {
             assert_eq!(keys(meta), KERNEL_META_FIELDS.to_vec());
         }
     }
+    assert!(saw_device, "sample trace must exercise the device field");
 }
 
 #[test]
@@ -166,12 +188,16 @@ fn spec_documents_every_field_and_event_kind() {
 
 #[test]
 fn track_encoding_matches_spec() {
-    // Spec §4: host == -1, device stream s == s (>= 0).
+    // Spec §4: host == -1, device stream s == s (>= 0); `device` is
+    // present only when stamped.
     let j = sample_trace().to_json();
     let events = j.arr_of("events").unwrap();
     assert_eq!(events[0].f64_of("track").unwrap(), -1.0);
     assert_eq!(events[3].f64_of("track").unwrap(), 0.0);
     assert_eq!(events[5].f64_of("track").unwrap(), 3.0);
+    assert!(events[5].get("device").is_none());
+    assert_eq!(events[6].f64_of("track").unwrap(), 0.0);
+    assert_eq!(events[6].usize_of("device").unwrap(), 1);
 }
 
 #[test]
@@ -190,9 +216,11 @@ fn chrome_export_fields_match_spec() {
     let t = sample_trace();
     let chrome = to_chrome_json(&t);
     let arr = chrome.as_arr().unwrap();
-    // §7: one leading process-name metadata event, then one complete
-    // event per trace event, in order.
-    assert_eq!(arr.len(), 1 + t.events.len());
+    // §7: one leading process-name metadata event, one thread_name
+    // metadata event per distinct tid (first-appearance order), then
+    // one complete event per trace event, in order. The sample's tids:
+    // 0 (host), 100 (dev0/s0), 103 (dev0/s3), 1100 (dev1/s0).
+    assert_eq!(arr.len(), 1 + 4 + t.events.len());
     let meta = &arr[0];
     assert_eq!(
         keys(meta),
@@ -205,14 +233,28 @@ fn chrome_export_fields_match_spec() {
         meta.req("args").unwrap().str_of("name").unwrap(),
         format!("{} {} @ {}", t.meta.model, t.meta.phase, t.meta.platform)
     );
-    for ev in &arr[1..] {
+    let expected_threads = [
+        (0.0, "host (dev 0)"),
+        (100.0, "dev 0 stream 0"),
+        (103.0, "dev 0 stream 3"),
+        (1100.0, "dev 1 stream 0"),
+    ];
+    for (tn, (tid, label)) in arr[1..5].iter().zip(expected_threads) {
+        assert_eq!(keys(tn), vec!["name", "ph", "pid", "tid", "args"]);
+        assert_eq!(tn.str_of("name").unwrap(), "thread_name");
+        assert_eq!(tn.str_of("ph").unwrap(), "M");
+        assert_eq!(tn.f64_of("tid").unwrap(), tid);
+        assert_eq!(tn.req("args").unwrap().str_of("name").unwrap(), label);
+    }
+    for ev in &arr[5..] {
         assert_eq!(keys(ev), CHROME_FIELDS.to_vec());
         assert_eq!(ev.str_of("ph").unwrap(), "X");
     }
-    // Host tid 0; device stream s -> tid 100 + s.
-    assert_eq!(arr[1].f64_of("tid").unwrap(), 0.0);
-    assert_eq!(arr[4].f64_of("tid").unwrap(), 100.0);
-    assert_eq!(arr[6].f64_of("tid").unwrap(), 103.0);
+    // Host tid 1000*d; device stream s -> tid 1000*d + 100 + s.
+    assert_eq!(arr[5].f64_of("tid").unwrap(), 0.0);
+    assert_eq!(arr[8].f64_of("tid").unwrap(), 100.0);
+    assert_eq!(arr[10].f64_of("tid").unwrap(), 103.0);
+    assert_eq!(arr[11].f64_of("tid").unwrap(), 1100.0);
 }
 
 #[test]
