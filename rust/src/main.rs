@@ -22,6 +22,12 @@
 //!   dispatch elision, kernel fusion / MoE dispatch reduction, device
 //!   swap — and report predicted e2e/HDBI/component deltas next to the
 //!   baseline.
+//! * `convert` — round-trip a trace between the canonical JSON dialect
+//!   and the compact binary dialect (`.tbt`); input format is detected
+//!   by magic, output follows the extension (or `--to`).
+//! * `bench-trace` — encode/decode throughput and bytes-per-event for
+//!   both trace dialects on the bundled moe-decode capture (the
+//!   `BENCH_trace.json` datapoint).
 //! * `models` / `platforms` — list the catalog.
 
 use taxbreak::hardware::Platform;
@@ -49,6 +55,8 @@ fn run() -> anyhow::Result<()> {
         "serve" => cmd_serve(args),
         "loadgen" => cmd_loadgen(args),
         "whatif" => cmd_whatif(args),
+        "convert" => cmd_convert(args),
+        "bench-trace" => cmd_bench_trace(args),
         "models" => {
             for m in models::catalog() {
                 println!(
@@ -96,9 +104,10 @@ USAGE:
                    [--fused] [--mitigation none|torch-compile|cuda-graphs|
                     kernel-fusion] [--tensor-parallel N | --expert-parallel N]
                    [--json]
+  taxbreak analyze --trace FILE [--json]       (decompose a saved trace)
   taxbreak trace   --model M --platform P [--phase ...] [--bs] [--sl] [--m]
                    [--tensor-parallel N | --expert-parallel N]
-                   --out FILE [--chrome FILE]
+                   --out FILE (.json or .tbt) [--chrome FILE]
   taxbreak serve   [--backend sim|pjrt] [--requests N] [--max-batch N]
                    [--report FILE] [--seed N]
                    sim:  [--model M] [--platform h100|h200]
@@ -118,6 +127,10 @@ USAGE:
                          | lib-elision[:fam+fam] | fusion:elem
                          | fusion:moe[:KEEP] | device:<h100|h200>
                          | tensor-parallel:<N>
+  taxbreak convert <IN> <OUT> [--to json|binary]
+                   (trace dialect round-trip: input detected by magic,
+                    output follows the extension — .tbt = binary)
+  taxbreak bench-trace [--out FILE] [--runs N]
   taxbreak models | platforms | help
 
 Artifact ids: fig2 fig5 fig6 table2 table3 table4 fig7 fig8 fig9 fig10 fig11";
@@ -226,6 +239,13 @@ impl Scenario {
 }
 
 fn cmd_analyze(mut args: Args) -> anyhow::Result<()> {
+    // `--trace FILE`: decompose a saved trace (either dialect) instead
+    // of simulating a fresh workload point.
+    if let Some(path) = args.opt("trace").map(|s| s.to_string()) {
+        let as_json = args.flag("json");
+        args.finish()?;
+        return analyze_trace_file(&path, as_json);
+    }
     let cfg = parse_run_config(&mut args)?;
     let as_json = args.flag("json");
     let scenario = Scenario::parse(&mut args)?;
@@ -280,6 +300,45 @@ fn cmd_analyze(mut args: Args) -> anyhow::Result<()> {
         a.phase2.kernels.len(),
         a.phase2.cache_hits
     );
+    println!("diagnosis [{}]: {}", a.diagnosis.target.as_str(), a.diagnosis.rationale);
+    if let Some(q) = &a.diagnosis.quantified {
+        println!("quantified: {}", q.render());
+    }
+    Ok(())
+}
+
+/// `taxbreak analyze --trace FILE`: run the TaxBreak decomposition on a
+/// previously saved trace — JSON or binary, detected by magic.
+fn analyze_trace_file(path: &str, as_json: bool) -> anyhow::Result<()> {
+    let trace = taxbreak::trace::Trace::load(std::path::Path::new(path))?;
+    let platform = Platform::by_name(&trace.meta.platform)?;
+    let mut backend = SimReplayBackend::new(platform, 0x5EED);
+    let mut a = analyze(&trace, &mut backend, &taxbreak::taxbreak::ReplayConfig::fast());
+    // Best-effort quantification: serving/graphed traces have no
+    // extractable per-kernel host chain and keep the qualitative
+    // diagnosis (same policy as the simulate path).
+    if trace.meta.phase != "serve" {
+        if let Ok(schedule) = taxbreak::whatif::Schedule::from_eager_trace(&trace, &a.phase2) {
+            taxbreak::whatif::quantify_diagnosis(&mut a, &schedule)?;
+        }
+    }
+    if as_json {
+        println!("{}", report::to_json(&a).pretty());
+        return Ok(());
+    }
+    let m = &trace.meta;
+    let title = format!(
+        "{} {} BS={} SL={} ({}, m={}) [{}]",
+        m.model, m.phase, m.batch, m.seq, m.platform, m.m_tokens, path
+    );
+    print!("{}", report::decomposition_table(&title, &a.decomposition).render());
+    if a.decomposition.per_device.len() > 1 {
+        print!(
+            "{}",
+            report::per_device_table("per-device decomposition", &a.decomposition).render()
+        );
+    }
+    print!("{}", report::family_launch_table("per-family launch latency (us)", &a).render());
     println!("diagnosis [{}]: {}", a.diagnosis.target.as_str(), a.diagnosis.rationale);
     if let Some(q) = &a.diagnosis.quantified {
         println!("quantified: {}", q.render());
@@ -396,7 +455,7 @@ fn cmd_trace(mut args: Args) -> anyhow::Result<()> {
     let (trace, _) =
         scenario.simulate(&cfg.model_spec()?, &cfg.platform_spec()?, &cfg.workload(), cfg.seed)?;
 
-    trace.save(std::path::Path::new(&out))?;
+    trace.save_auto(std::path::Path::new(&out))?;
     println!(
         "wrote {} ({} kernels, {:.2} ms wall)",
         out,
@@ -440,7 +499,7 @@ fn cmd_serve(mut args: Args) -> anyhow::Result<()> {
 }
 
 fn cmd_loadgen(mut args: Args) -> anyhow::Result<()> {
-    use taxbreak::serving::{run_sim_loadgen, LenDist, LoadgenConfig};
+    use taxbreak::serving::{run_sim_loadgen, run_sim_loadgen_streaming, LenDist, LoadgenConfig};
     let models = {
         let list = args.opt_list("models");
         if list.is_empty() {
@@ -480,12 +539,31 @@ fn cmd_loadgen(mut args: Args) -> anyhow::Result<()> {
     let capture_path = args.opt("capture").map(|s| s.to_string());
     let chrome_path = args.opt("chrome-out").map(|s| s.to_string());
     let bench_path = args.opt("bench-out").map(|s| s.to_string());
-    let cfg = LoadgenConfig {
-        capture: capture_path.is_some() || chrome_path.is_some(),
-        ..cfg
-    };
+    // Only the Chrome export needs the whole trace in memory; `--capture`
+    // streams each event to disk as the scheduler steps.
+    let cfg = LoadgenConfig { capture: chrome_path.is_some(), ..cfg };
     args.finish()?;
-    let report = run_sim_loadgen(&models, &platform, &cfg)?;
+    let report = match &capture_path {
+        Some(prefix) => {
+            let mut written: Vec<String> = Vec::new();
+            let mut factory = |model: &str,
+                               meta: &taxbreak::trace::TraceMeta|
+             -> anyhow::Result<Box<dyn taxbreak::trace::TraceSink>> {
+                let path = path_for_model(prefix, model);
+                let sink = taxbreak::trace::sink::file_sink(std::path::Path::new(&path), meta)?;
+                written.push(path);
+                Ok(sink)
+            };
+            let report = run_sim_loadgen_streaming(&models, &platform, &cfg, &mut factory)?;
+            for path in written {
+                println!(
+                    "wrote {path} (captured serving trace; replay with `taxbreak whatif --trace`)"
+                );
+            }
+            report
+        }
+        None => run_sim_loadgen(&models, &platform, &cfg)?,
+    };
     print!("{}", report.render());
     if let Some(p) = report_path {
         std::fs::write(&p, report.to_json().pretty())?;
@@ -497,16 +575,133 @@ fn cmd_loadgen(mut args: Args) -> anyhow::Result<()> {
     }
     for run in &report.runs {
         let Some(trace) = &run.trace else { continue };
-        if let Some(prefix) = &capture_path {
-            let path = path_for_model(prefix, &run.model);
-            trace.save(std::path::Path::new(&path))?;
-            println!("wrote {path} (captured serving trace; replay with `taxbreak whatif --trace`)");
-        }
         if let Some(prefix) = &chrome_path {
             let path = path_for_model(prefix, &run.model);
             taxbreak::trace::chrome::save_chrome(trace, std::path::Path::new(&path))?;
             println!("wrote {path} (chrome://tracing format)");
         }
+    }
+    Ok(())
+}
+
+fn cmd_convert(mut args: Args) -> anyhow::Result<()> {
+    use taxbreak::trace::binary::{self, Dialect};
+    let to = match args.opt("to").map(|s| s.to_string()) {
+        None => None,
+        Some(s) if s == "json" => Some(Dialect::Json),
+        Some(s) if s == "binary" || s == "tbt" => Some(Dialect::Binary),
+        Some(other) => anyhow::bail!("--to must be json|binary, got '{other}'"),
+    };
+    let usage = "usage: taxbreak convert <IN> <OUT> [--to json|binary]";
+    let input = args.shift().ok_or_else(|| anyhow::anyhow!("{usage}"))?;
+    let output = args.shift().ok_or_else(|| anyhow::anyhow!("{usage}"))?;
+    args.finish()?;
+    let stats =
+        binary::convert(std::path::Path::new(&input), std::path::Path::new(&output), to)?;
+    println!(
+        "{} ({}, {} bytes) -> {} ({}, {} bytes): {} events, {:.2}x size",
+        input,
+        stats.from.as_str(),
+        stats.in_bytes,
+        output,
+        stats.to.as_str(),
+        stats.out_bytes,
+        stats.events,
+        stats.out_bytes as f64 / stats.in_bytes.max(1) as f64,
+    );
+    Ok(())
+}
+
+fn cmd_bench_trace(mut args: Args) -> anyhow::Result<()> {
+    use std::time::Instant;
+    use taxbreak::trace::binary;
+    use taxbreak::util::json::Json;
+    let out_path = args.opt("out").map(|s| s.to_string());
+    let runs = args.opt_usize("runs", 5)?;
+    args.finish()?;
+    anyhow::ensure!(runs >= 1, "--runs must be >= 1");
+
+    // The bundled moe-decode capture — the paper's worst-tax workload
+    // and the corpus `BENCH_trace.json` tracks.
+    let cfg = taxbreak::whatif::bundled::by_name("moe-decode")?;
+    let trace = simulate(&cfg.model_spec()?, &cfg.platform_spec()?, &cfg.workload(), cfg.seed);
+    let events = trace.events.len();
+    anyhow::ensure!(events > 0, "bundled trace is empty");
+
+    let json_compact = trace.to_json().dump();
+    let json_pretty = trace.to_json().pretty();
+    let bin = binary::encode(&trace);
+
+    // Accumulate output sizes so the encode/decode loops stay observed.
+    let mut observed = 0usize;
+    let t0 = Instant::now();
+    for _ in 0..runs {
+        observed += binary::encode(&trace).len();
+    }
+    let bin_enc_s = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    for _ in 0..runs {
+        observed += binary::decode(&bin)
+            .map_err(|e| anyhow::anyhow!("{e}"))?
+            .events
+            .len();
+    }
+    let bin_dec_s = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    for _ in 0..runs {
+        observed += trace.to_json().dump().len();
+    }
+    let json_enc_s = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    for _ in 0..runs {
+        observed += taxbreak::trace::Trace::from_json(&Json::parse(&json_compact)?)?
+            .events
+            .len();
+    }
+    let json_dec_s = t0.elapsed().as_secs_f64();
+    anyhow::ensure!(observed > 0, "benchmark loops produced no output");
+
+    let rate = |secs: f64| {
+        if secs > 0.0 {
+            (events * runs) as f64 / secs
+        } else {
+            0.0
+        }
+    };
+    let per_event = |bytes: usize| bytes as f64 / events as f64;
+    let datapoint = Json::obj()
+        .with("bench", "trace")
+        .with("source", "moe-decode (bundled)")
+        .with("events", events)
+        .with("runs", runs)
+        .with(
+            "json_compact",
+            Json::obj()
+                .with("bytes", json_compact.len())
+                .with("bytes_per_event", per_event(json_compact.len()))
+                .with("encode_events_per_s", rate(json_enc_s))
+                .with("decode_events_per_s", rate(json_dec_s)),
+        )
+        .with(
+            "json_pretty",
+            Json::obj()
+                .with("bytes", json_pretty.len())
+                .with("bytes_per_event", per_event(json_pretty.len())),
+        )
+        .with(
+            "binary",
+            Json::obj()
+                .with("bytes", bin.len())
+                .with("bytes_per_event", per_event(bin.len()))
+                .with("encode_events_per_s", rate(bin_enc_s))
+                .with("decode_events_per_s", rate(bin_dec_s)),
+        )
+        .with("binary_vs_pretty_json", bin.len() as f64 / json_pretty.len() as f64)
+        .with("binary_vs_compact_json", bin.len() as f64 / json_compact.len() as f64);
+    println!("{}", datapoint.pretty());
+    if let Some(p) = out_path {
+        std::fs::write(&p, datapoint.pretty())?;
+        println!("wrote {p}");
     }
     Ok(())
 }

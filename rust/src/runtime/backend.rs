@@ -56,6 +56,16 @@ pub trait Backend: ModelBackend {
 
     /// Swap the recorder out, returning the captured trace.
     fn take_trace(&mut self) -> Trace;
+
+    /// Move out the events buffered since the last drain (run metadata
+    /// stays in place). The streaming capture path calls this after
+    /// every scheduler step and forwards into a [`crate::trace::TraceSink`],
+    /// so backend event memory stays bounded by one step's output
+    /// instead of growing with the whole run.
+    fn drain_events(&mut self) -> Vec<TraceEvent>;
+
+    /// Current run metadata, wall-clock stamped "now".
+    fn trace_meta(&self) -> TraceMeta;
 }
 
 /// Compiled-shape grid of the simulated engine (mirrors the AOT toy
@@ -447,6 +457,16 @@ impl Backend for SimEngine {
         let fresh = Trace::new(self.trace.meta.clone());
         std::mem::replace(&mut self.trace, fresh)
     }
+
+    fn drain_events(&mut self) -> Vec<TraceEvent> {
+        std::mem::take(&mut self.trace.events)
+    }
+
+    fn trace_meta(&self) -> TraceMeta {
+        let mut meta = self.trace.meta.clone();
+        meta.wall_us = self.tl.host_now(0);
+        meta
+    }
 }
 
 #[cfg(test)]
@@ -508,6 +528,25 @@ mod tests {
             assert!(ev.ts_us >= last - 1e-9);
             last = last.max(ev.ts_us);
         }
+    }
+
+    #[test]
+    fn drain_events_is_incremental_and_equivalent_to_take_trace() {
+        let mut a = engine(5);
+        let mut b = engine(5);
+        let (next, cache) = a.prefill_group(&[vec![1, 2, 3]]).unwrap();
+        let _ = a.decode_group(cache, 3, &next).unwrap();
+        let whole = a.take_trace();
+
+        let (next, cache) = b.prefill_group(&[vec![1, 2, 3]]).unwrap();
+        let mut drained = b.drain_events();
+        assert_eq!(drained.len(), 4, "one invocation = 4 events");
+        let _ = b.decode_group(cache, 3, &next).unwrap();
+        drained.extend(b.drain_events());
+        assert_eq!(drained, whole.events, "drained events == buffered events");
+        assert!(b.drain_events().is_empty(), "drain is a move, not a copy");
+        assert_eq!(b.trace_meta().wall_us, whole.meta.wall_us);
+        assert_eq!(b.trace_meta().phase, "serve");
     }
 
     #[test]

@@ -144,6 +144,19 @@ impl TraceRecorder {
     pub fn trace(&self) -> &Trace {
         &self.trace
     }
+
+    /// Move out the events recorded since the last drain (metadata and
+    /// correlation numbering stay in place) — streaming capture support.
+    pub fn drain_events(&mut self) -> Vec<TraceEvent> {
+        std::mem::take(&mut self.trace.events)
+    }
+
+    /// Run metadata with the wall-clock stamped "now".
+    pub fn meta_now(&self) -> TraceMeta {
+        let mut meta = self.trace.meta.clone();
+        meta.wall_us = self.now_us();
+        meta
+    }
 }
 
 #[cfg(test)]

@@ -20,7 +20,7 @@ use std::collections::VecDeque;
 use crate::runtime::backend::Backend;
 use crate::serving::batcher::{ModelBackend, StallGuard};
 use crate::serving::{event_split, hdbi_of, prompt_token_bound, Request, Scheduler, SchedulerConfig};
-use crate::trace::{EventKind, Trace};
+use crate::trace::{EventKind, Trace, TraceEvent, TraceMeta, TraceSink};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::stats::{Summary, Welford};
@@ -205,6 +205,64 @@ pub fn per_phase_split(trace: &Trace) -> Vec<PhaseSplit> {
     phases.to_vec()
 }
 
+/// Streaming accumulator of the serving splits (per-phase + totals):
+/// the single-pass equivalent of [`per_phase_split`] +
+/// [`crate::serving::real_trace_split`], fed one event at a time as the
+/// backend drains, so capture no longer requires holding the whole
+/// trace in memory.
+///
+/// Classification relies on the invariant both engines guarantee: the
+/// events of one invocation share a correlation id and are emitted
+/// contiguously, `TorchOp` first. (For arbitrary, possibly reordered
+/// traces, use the two-pass [`per_phase_split`].)
+#[derive(Debug, Clone)]
+struct ServingStats {
+    phases: [PhaseSplit; 2],
+    /// Phase of the invocation currently streaming through:
+    /// `(correlation_id, phase index)`.
+    current: Option<(u64, usize)>,
+    host_us: f64,
+    device_us: f64,
+    kernels: usize,
+}
+
+impl ServingStats {
+    fn new() -> ServingStats {
+        ServingStats {
+            phases: [
+                PhaseSplit { phase: "prefill", host_us: 0.0, device_us: 0.0, kernels: 0 },
+                PhaseSplit { phase: "decode", host_us: 0.0, device_us: 0.0, kernels: 0 },
+            ],
+            current: None,
+            host_us: 0.0,
+            device_us: 0.0,
+            kernels: 0,
+        }
+    }
+
+    fn observe(&mut self, e: &TraceEvent) {
+        let (host, dev, kernels) = event_split(e);
+        self.host_us += host;
+        self.device_us += dev;
+        self.kernels += kernels;
+        if e.kind == EventKind::TorchOp {
+            self.current = self
+                .phases
+                .iter()
+                .position(|p| e.name.contains(p.phase))
+                .map(|i| (e.correlation_id, i));
+        }
+        if let Some((corr, i)) = self.current {
+            if corr == e.correlation_id {
+                let p = &mut self.phases[i];
+                p.host_us += host;
+                p.device_us += dev;
+                p.kernels += kernels;
+            }
+        }
+    }
+}
+
 /// Per-device (replica) serving statistics — one row per `--devices`
 /// replica, partitioning the model run.
 #[derive(Debug, Clone, PartialEq)]
@@ -256,6 +314,12 @@ pub struct ModelRun {
     /// runs merge into one trace with `device`-stamped events and
     /// disjoint correlation-id ranges.
     pub trace: Option<Trace>,
+    /// High-water mark of events held between backend drain points (one
+    /// scheduler step's output). This — not the run's total event count
+    /// — bounds the streaming capture path's memory; the O(1)-memory
+    /// test pins it. Buffered capture ([`LoadgenConfig::capture`]) still
+    /// holds the whole trace on top of this.
+    pub peak_buffered_events: usize,
 }
 
 impl ModelRun {
@@ -538,7 +602,7 @@ pub fn drive<B: Backend>(
     requests: Vec<Request>,
     capture: bool,
 ) -> anyhow::Result<ModelRun> {
-    drive_collect(backend, sched, requests, capture).map(|o| o.run)
+    drive_collect(backend, sched, requests, capture, None).map(|o| o.run)
 }
 
 fn drive_collect<B: Backend>(
@@ -546,6 +610,7 @@ fn drive_collect<B: Backend>(
     sched: SchedulerConfig,
     requests: Vec<Request>,
     capture: bool,
+    mut sink: Option<&mut dyn TraceSink>,
 ) -> anyhow::Result<DriveOutcome> {
     let variant = backend.variant().to_string();
     let total_pages = sched.kv_pages.max(1) as f64;
@@ -555,6 +620,32 @@ fn drive_collect<B: Backend>(
     let mut occ_max = 0.0f64;
     let mut guard = StallGuard::default();
     let mut late_arrivals = 0usize;
+    // Streaming capture state: the backend is drained after every
+    // scheduler step, each event is split-accumulated and forwarded to
+    // the sink, and only `capture` retains the events in memory — the
+    // in-flight buffer is bounded by one step's output.
+    let mut stats = ServingStats::new();
+    let mut buffered: Vec<TraceEvent> = Vec::new();
+    let mut peak_buffered_events = 0usize;
+    let mut drain = |s: &mut Scheduler<B>,
+                     stats: &mut ServingStats,
+                     buffered: &mut Vec<TraceEvent>,
+                     peak: &mut usize,
+                     sink: &mut Option<&mut dyn TraceSink>|
+     -> anyhow::Result<()> {
+        let batch = s.backend.drain_events();
+        *peak = (*peak).max(batch.len());
+        for ev in &batch {
+            stats.observe(ev);
+            if let Some(sink) = sink.as_deref_mut() {
+                sink.event(ev)?;
+            }
+        }
+        if capture {
+            buffered.extend(batch);
+        }
+        Ok(())
+    };
 
     while !(queue.is_empty() && s.is_idle()) {
         let now = s.backend.now_us();
@@ -578,6 +669,7 @@ fn drive_collect<B: Backend>(
             continue;
         }
         s.step()?;
+        drain(&mut s, &mut stats, &mut buffered, &mut peak_buffered_events, &mut sink)?;
         // Same stall policy as `run_to_completion`: a request whose
         // worst case can never fit the pool must error, not spin.
         guard.observe(s.progress_marker(), || {
@@ -592,6 +684,9 @@ fn drive_collect<B: Backend>(
         occ.push(used);
         occ_max = occ_max.max(used);
     }
+    // Catch anything emitted outside a step (defensive; engines only
+    // record inside invocations).
+    drain(&mut s, &mut stats, &mut buffered, &mut peak_buffered_events, &mut sink)?;
 
     let iterations = s.iterations;
     let preemptions = s.preemptions;
@@ -603,9 +698,8 @@ fn drive_collect<B: Backend>(
     let tokens: usize = finished.iter().map(|f| f.generated.len()).sum();
     let rejected = finished.iter().filter(|f| f.rejected).count();
     let completed = finished.len() - rejected;
-    let trace = s.backend.take_trace();
-    let phases = per_phase_split(&trace);
-    let (host, dev, _) = crate::serving::real_trace_split(&trace);
+    let meta = s.backend.trace_meta();
+    let wall_us = meta.wall_us;
 
     let run = ModelRun {
         model: String::new(), // caller fills in the catalog name
@@ -616,23 +710,27 @@ fn drive_collect<B: Backend>(
         iterations,
         preemptions,
         late_arrivals,
-        wall_us: trace.meta.wall_us,
+        wall_us,
         tokens_generated: tokens,
         ttft_us: Summary::of(&ttfts),
         tpot_us: Summary::of(&tpots),
         kv_occupancy_mean: occ.mean(),
         kv_occupancy_max: occ_max,
-        phases,
+        phases: stats.phases.to_vec(),
         per_device: vec![DeviceLoad {
             device: 0, // replica drivers overwrite with the replica id
             completed,
             tokens_generated: tokens,
-            wall_us: trace.meta.wall_us,
+            wall_us,
             kv_occupancy_mean: occ.mean(),
             kv_occupancy_max: occ_max,
-            hdbi: hdbi_of(host, dev),
+            hdbi: hdbi_of(stats.host_us, stats.device_us),
         }],
-        trace: capture.then_some(trace),
+        trace: capture.then(|| Trace {
+            meta,
+            events: buffered,
+        }),
+        peak_buffered_events,
     };
     Ok(DriveOutcome { run, ttfts, tpots })
 }
@@ -662,6 +760,7 @@ fn merge_replicas(mut outcomes: Vec<DriveOutcome>, capture: bool) -> ModelRun {
     base.tokens_generated = 0;
     base.kv_occupancy_mean = 0.0;
     base.kv_occupancy_max = 0.0;
+    base.peak_buffered_events = 0;
     for p in &mut base.phases {
         p.host_us = 0.0;
         p.device_us = 0.0;
@@ -676,6 +775,7 @@ fn merge_replicas(mut outcomes: Vec<DriveOutcome>, capture: bool) -> ModelRun {
         base.late_arrivals += o.run.late_arrivals;
         base.wall_us = base.wall_us.max(o.run.wall_us);
         base.tokens_generated += o.run.tokens_generated;
+        base.peak_buffered_events = base.peak_buffered_events.max(o.run.peak_buffered_events);
         base.kv_occupancy_mean += o.run.kv_occupancy_mean / n as f64;
         base.kv_occupancy_max = base.kv_occupancy_max.max(o.run.kv_occupancy_max);
         ttfts.append(&mut o.ttfts);
@@ -714,6 +814,36 @@ fn merge_replicas(mut outcomes: Vec<DriveOutcome>, capture: bool) -> ModelRun {
     base
 }
 
+/// Re-stamps one replica's events into the shared per-model sink:
+/// correlation ids shift into the replica's disjoint range (mirroring
+/// [`merge_replicas`]) and `finish` is swallowed — the caller seals the
+/// merged capture once, with the slowest replica's wall.
+struct OffsetSink<'a> {
+    inner: &'a mut dyn TraceSink,
+    corr_offset: u64,
+}
+
+impl TraceSink for OffsetSink<'_> {
+    fn event(&mut self, ev: &TraceEvent) -> anyhow::Result<()> {
+        if self.corr_offset == 0 {
+            return self.inner.event(ev);
+        }
+        let mut ev = ev.clone();
+        ev.correlation_id += self.corr_offset;
+        self.inner.event(&ev)
+    }
+
+    fn finish(&mut self, _wall_us: f64) -> anyhow::Result<()> {
+        Ok(())
+    }
+}
+
+/// Opens one [`TraceSink`] per model for the streaming capture path:
+/// called with the catalog model name and the run's metadata (e.g.
+/// [`crate::trace::sink::file_sink`] on a per-model path).
+pub type SinkFactory<'a> =
+    dyn FnMut(&str, &TraceMeta) -> anyhow::Result<Box<dyn TraceSink>> + 'a;
+
 /// Run the load generator over the simulated engine for each named
 /// model (e.g. a dense/MoE mix) on one platform. With
 /// `cfg.devices > 1`, requests round-robin across that many
@@ -724,6 +854,29 @@ pub fn run_sim_loadgen(
     model_names: &[String],
     platform_name: &str,
     cfg: &LoadgenConfig,
+) -> anyhow::Result<LoadgenReport> {
+    run_sim_loadgen_inner(model_names, platform_name, cfg, None)
+}
+
+/// Streaming-capture loadgen (`taxbreak loadgen --capture out.tbt`):
+/// like [`run_sim_loadgen`], but every event additionally streams
+/// through a per-model sink as the scheduler steps, so a binary capture
+/// is O(1) in event count instead of buffering the whole run. The sink
+/// is finished once per model with the merged (slowest-replica) wall.
+pub fn run_sim_loadgen_streaming(
+    model_names: &[String],
+    platform_name: &str,
+    cfg: &LoadgenConfig,
+    sinks: &mut SinkFactory<'_>,
+) -> anyhow::Result<LoadgenReport> {
+    run_sim_loadgen_inner(model_names, platform_name, cfg, Some(sinks))
+}
+
+fn run_sim_loadgen_inner(
+    model_names: &[String],
+    platform_name: &str,
+    cfg: &LoadgenConfig,
+    mut sinks: Option<&mut SinkFactory<'_>>,
 ) -> anyhow::Result<LoadgenReport> {
     anyhow::ensure!(!model_names.is_empty(), "loadgen needs at least one model");
     anyhow::ensure!(cfg.requests > 0, "loadgen needs at least one request");
@@ -760,6 +913,12 @@ pub fn run_sim_loadgen(
         let vocab = Backend::vocab(&probe);
         let max_seq = ModelBackend::max_seq(&probe);
         let workload = generate_workload(cfg, prompt_token_bound(&probe, vocab)?, max_seq);
+        // One sink per model, opened against the run's metadata (wall is
+        // stamped at finish, below); replicas stream into it in turn.
+        let mut model_sink: Option<Box<dyn TraceSink>> = match sinks.as_deref_mut() {
+            Some(make) => Some(make(name, &Backend::trace_meta(&probe))?),
+            None => None,
+        };
         drop(probe);
 
         let mut outcomes = Vec::with_capacity(cfg.devices);
@@ -777,11 +936,21 @@ pub fn run_sim_loadgen(
                 cfg.streams,
                 r as u32,
             );
-            outcomes.push(drive_collect(engine, replica_sched, sub, cfg.capture)?);
+            // Correlation ids land in the same disjoint per-replica
+            // ranges merge_replicas assigns to the buffered capture.
+            let mut off = model_sink.as_deref_mut().map(|inner| OffsetSink {
+                inner,
+                corr_offset: (r as u64) * 1_000_000_000,
+            });
+            let sink_arg = off.as_mut().map(|o| o as &mut dyn TraceSink);
+            outcomes.push(drive_collect(engine, replica_sched, sub, cfg.capture, sink_arg)?);
         }
         let mut run = merge_replicas(outcomes, cfg.capture);
         run.model = name.clone();
         run.moe = moe;
+        if let Some(sink) = model_sink.as_deref_mut() {
+            sink.finish(run.wall_us)?;
+        }
         runs.push(run);
     }
     Ok(LoadgenReport {
@@ -948,5 +1117,117 @@ mod tests {
         assert_eq!(generate_workload(&cfg, 250, 128), generate_workload(&cfg, 250, 128));
         let other = LoadgenConfig { seed: 1, ..LoadgenConfig::default() };
         assert_ne!(generate_workload(&cfg, 250, 128), generate_workload(&other, 250, 128));
+    }
+
+    /// Test sink that lets the caller inspect the capture after the
+    /// factory-produced box is dropped inside the loadgen driver.
+    #[derive(Clone)]
+    struct SharedSink {
+        trace: std::rc::Rc<std::cell::RefCell<Trace>>,
+        finishes: std::rc::Rc<std::cell::Cell<usize>>,
+    }
+
+    impl SharedSink {
+        fn new(meta: &TraceMeta) -> SharedSink {
+            SharedSink {
+                trace: std::rc::Rc::new(std::cell::RefCell::new(Trace::new(meta.clone()))),
+                finishes: std::rc::Rc::new(std::cell::Cell::new(0)),
+            }
+        }
+    }
+
+    impl TraceSink for SharedSink {
+        fn event(&mut self, ev: &TraceEvent) -> anyhow::Result<()> {
+            self.trace.borrow_mut().push(ev.clone());
+            Ok(())
+        }
+
+        fn finish(&mut self, wall_us: f64) -> anyhow::Result<()> {
+            self.trace.borrow_mut().meta.wall_us = wall_us;
+            self.finishes.set(self.finishes.get() + 1);
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn streaming_capture_matches_buffered_trace() {
+        // Multi-replica run so the streamed path exercises OffsetSink's
+        // correlation re-stamping; replicas run sequentially, so the
+        // streamed order equals the merged buffered order.
+        let cfg = LoadgenConfig {
+            requests: 9,
+            rate_per_s: 0.0,
+            devices: 3,
+            sched: crate::serving::SchedulerConfig { kv_pages: 96, ..Default::default() },
+            capture: true,
+            ..Default::default()
+        };
+        let models = ["gpt2".to_string()];
+        let buffered = run_sim_loadgen(&models, "h200", &cfg).unwrap();
+        let expect = buffered.runs[0].trace.as_ref().unwrap();
+
+        let mut streamed: Option<SharedSink> = None;
+        let mut factory = |name: &str, meta: &TraceMeta| -> anyhow::Result<Box<dyn TraceSink>> {
+            assert_eq!(name, "gpt2");
+            let sink = SharedSink::new(meta);
+            streamed = Some(sink.clone());
+            Ok(Box::new(sink))
+        };
+        let report = run_sim_loadgen_streaming(&models, "h200", &cfg, &mut factory).unwrap();
+        let streamed = streamed.expect("factory runs once per model");
+        assert_eq!(streamed.finishes.get(), 1, "sink is sealed exactly once");
+        let got = streamed.trace.borrow();
+        assert_eq!(got.events, expect.events, "streamed events match the merged capture");
+        assert!((got.meta.wall_us - expect.meta.wall_us).abs() < 1e-9);
+        assert!((got.meta.wall_us - report.runs[0].wall_us).abs() < 1e-9);
+        // And the streaming run's KPIs agree with the buffered run's.
+        assert_eq!(report.runs[0].phases, buffered.runs[0].phases);
+    }
+
+    #[test]
+    fn capture_memory_is_bounded_by_one_step_not_the_run() {
+        let run_with = |requests: usize| {
+            let cfg = LoadgenConfig {
+                requests,
+                rate_per_s: 0.0,
+                capture: true,
+                ..Default::default()
+            };
+            run_sim_loadgen(&["gpt2".to_string()], "h200", &cfg)
+                .unwrap()
+                .runs
+                .remove(0)
+        };
+        let small = run_with(4);
+        let large = run_with(24);
+        let small_total = small.trace.as_ref().unwrap().events.len();
+        let large_total = large.trace.as_ref().unwrap().events.len();
+        assert!(large_total > 2 * small_total, "the run itself grew");
+        // The drain high-water mark is one scheduler step's output — it
+        // must not scale with the number of requests served.
+        assert!(small.peak_buffered_events > 0);
+        assert_eq!(
+            small.peak_buffered_events, large.peak_buffered_events,
+            "peak in-flight events are O(1) in run length"
+        );
+        assert!(large.peak_buffered_events < large_total / 4);
+    }
+
+    #[test]
+    fn streamed_stats_match_post_hoc_trace_splits() {
+        let cfg = LoadgenConfig {
+            requests: 6,
+            rate_per_s: 0.0,
+            capture: true,
+            ..Default::default()
+        };
+        let run = run_sim_loadgen(&["gpt2".to_string()], "h200", &cfg)
+            .unwrap()
+            .runs
+            .remove(0);
+        let trace = run.trace.as_ref().unwrap();
+        assert_eq!(run.phases, per_phase_split(trace), "single-pass == two-pass per-phase");
+        let (host, dev, _kernels) = crate::serving::real_trace_split(trace);
+        assert!((run.per_device[0].hdbi - hdbi_of(host, dev)).abs() < 1e-12);
     }
 }

@@ -17,7 +17,9 @@ pub mod request;
 
 pub use batcher::{ModelBackend, Scheduler, SchedulerConfig};
 pub use kv::PagedKvManager;
-pub use loadgen::{run_sim_loadgen, LenDist, LoadgenConfig, LoadgenReport};
+pub use loadgen::{
+    run_sim_loadgen, run_sim_loadgen_streaming, LenDist, LoadgenConfig, LoadgenReport, SinkFactory,
+};
 pub use request::{synthetic_requests, Request, RequestState};
 
 use crate::runtime::backend::Backend;
@@ -154,6 +156,14 @@ impl Backend for Engine {
 
     fn take_trace(&mut self) -> Trace {
         Engine::take_trace(self)
+    }
+
+    fn drain_events(&mut self) -> Vec<TraceEvent> {
+        self.recorder.drain_events()
+    }
+
+    fn trace_meta(&self) -> crate::trace::TraceMeta {
+        self.recorder.meta_now()
     }
 }
 

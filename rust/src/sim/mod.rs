@@ -34,7 +34,7 @@ use crate::kernels::family::Family;
 use crate::lowering::{self, LowerOpts, PassKind};
 use crate::models::ModelSpec;
 use crate::timeline::{self, StreamRef};
-use crate::trace::{EventKind, Trace, TraceEvent, TraceMeta, Track};
+use crate::trace::{EventKind, Trace, TraceBufferSink, TraceEvent, TraceMeta, TraceSink, Track};
 use crate::util::rng::Rng;
 
 /// Fixed per-pass python overhead at the reference CPU, us.
@@ -216,44 +216,10 @@ pub fn pass_glue_us(model: &ModelSpec) -> f64 {
     glue
 }
 
-/// Simulate one profiled iteration of `workload` on `platform`.
-///
-/// Deterministic in `(model, platform, workload, seed)`.
-pub fn simulate(
-    model: &ModelSpec,
-    platform: &Platform,
-    workload: &Workload,
-    seed: u64,
-) -> Trace {
-    simulate_inner(model, platform, workload, seed, true).0
-}
-
-/// Aggregates-only simulation: identical timeline, no event storage.
-pub fn simulate_summary(
-    model: &ModelSpec,
-    platform: &Platform,
-    workload: &Workload,
-    seed: u64,
-) -> SimSummary {
-    simulate_inner(model, platform, workload, seed, false).1
-}
-
-fn simulate_inner(
-    model: &ModelSpec,
-    platform: &Platform,
-    workload: &Workload,
-    seed: u64,
-    record: bool,
-) -> (Trace, SimSummary) {
-    let host = HostModel::new(platform.clone());
-    let base = Rng::new(seed)
-        .fork_str(&model.name)
-        .fork_str(&platform.name);
-    let mut host_rng = base.fork(1);
-    let mut dev_rng = base.fork(2);
-    let mut lower_rng = base.fork(3);
-
-    let mut trace = Trace::new(TraceMeta {
+/// The [`TraceMeta`] a simulated run of `workload` carries (`wall_us`
+/// is stamped at the end of the run — 0 here).
+pub fn trace_meta_of(model: &ModelSpec, platform: &Platform, workload: &Workload) -> TraceMeta {
+    TraceMeta {
         platform: platform.name.clone(),
         model: model.name.clone(),
         phase: workload.phase.as_str().to_string(),
@@ -265,7 +231,63 @@ fn simulate_inner(
             1
         },
         wall_us: 0.0,
-    });
+    }
+}
+
+/// Simulate one profiled iteration of `workload` on `platform`.
+///
+/// Deterministic in `(model, platform, workload, seed)`.
+pub fn simulate(
+    model: &ModelSpec,
+    platform: &Platform,
+    workload: &Workload,
+    seed: u64,
+) -> Trace {
+    let mut sink = TraceBufferSink::new(trace_meta_of(model, platform, workload));
+    simulate_inner(model, platform, workload, seed, Some(&mut sink))
+        .expect("buffering into memory cannot fail");
+    sink.into_trace()
+}
+
+/// Aggregates-only simulation: identical timeline, no event storage.
+pub fn simulate_summary(
+    model: &ModelSpec,
+    platform: &Platform,
+    workload: &Workload,
+    seed: u64,
+) -> SimSummary {
+    simulate_inner(model, platform, workload, seed, None)
+        .expect("no sink: nothing can fail")
+}
+
+/// Stream one simulated iteration through `sink` (the streaming binary
+/// writer gives O(1)-memory capture); `sink.finish` receives the
+/// run's wall-clock. The emitted events are identical to
+/// [`simulate`]'s.
+pub fn simulate_to_sink(
+    model: &ModelSpec,
+    platform: &Platform,
+    workload: &Workload,
+    seed: u64,
+    sink: &mut dyn TraceSink,
+) -> anyhow::Result<SimSummary> {
+    simulate_inner(model, platform, workload, seed, Some(sink))
+}
+
+fn simulate_inner(
+    model: &ModelSpec,
+    platform: &Platform,
+    workload: &Workload,
+    seed: u64,
+    mut sink: Option<&mut dyn TraceSink>,
+) -> anyhow::Result<SimSummary> {
+    let host = HostModel::new(platform.clone());
+    let base = Rng::new(seed)
+        .fork_str(&model.name)
+        .fork_str(&platform.name);
+    let mut host_rng = base.fork(1);
+    let mut dev_rng = base.fork(2);
+    let mut lower_rng = base.fork(3);
 
     let mit = workload.mitigation;
     let opts = LowerOpts {
@@ -328,8 +350,8 @@ fn simulate_inner(
                 );
                 let timing = tl.submit(StreamRef::PRIMARY, graph_ts, floor, dur);
                 tklqt_us += timing.launch_plus_queue_us;
-                if record {
-                    trace.push(TraceEvent {
+                if let Some(s) = sink.as_deref_mut() {
+                    s.event(&TraceEvent {
                         kind: EventKind::Kernel,
                         name: meta.kernel_name.clone(),
                         ts_us: timing.start_us,
@@ -338,7 +360,7 @@ fn simulate_inner(
                         track: Track::Device(0),
                         device: None,
                         meta: Some(meta),
-                    });
+                    })?;
                 }
             }
             host_busy_us += GRAPH_LAUNCH_US / st;
@@ -373,10 +395,10 @@ fn simulate_inner(
             host_busy_us += api_end - torch_ts;
             tklqt_us += timing.launch_plus_queue_us;
 
-            if !record {
+            let Some(s) = sink.as_deref_mut() else {
                 continue;
-            }
-            trace.push(TraceEvent {
+            };
+            s.event(&TraceEvent {
                 kind: EventKind::TorchOp,
                 name: format!("torch.{}", meta.aten_op.trim_start_matches("aten::")),
                 ts_us: torch_ts,
@@ -385,8 +407,8 @@ fn simulate_inner(
                 track: Track::Host,
                 device: None,
                 meta: None,
-            });
-            trace.push(TraceEvent {
+            })?;
+            s.event(&TraceEvent {
                 kind: EventKind::AtenOp,
                 name: meta.aten_op.clone(),
                 ts_us: aten_ts,
@@ -395,8 +417,8 @@ fn simulate_inner(
                 track: Track::Host,
                 device: None,
                 meta: None,
-            });
-            trace.push(TraceEvent {
+            })?;
+            s.event(&TraceEvent {
                 kind: EventKind::RuntimeApi,
                 name: "cudaLaunchKernel".to_string(),
                 ts_us: api_ts,
@@ -405,8 +427,8 @@ fn simulate_inner(
                 track: Track::Host,
                 device: None,
                 meta: None,
-            });
-            trace.push(TraceEvent {
+            })?;
+            s.event(&TraceEvent {
                 kind: EventKind::Kernel,
                 name: meta.kernel_name.clone(),
                 ts_us: timing.start_us,
@@ -415,7 +437,7 @@ fn simulate_inner(
                 track: Track::Device(0),
                 device: None,
                 meta: Some(meta),
-            });
+            })?;
         }
 
         // End-of-pass device sync (logits needed host-side).
@@ -424,15 +446,17 @@ fn simulate_inner(
     }
 
     tl.host_wait_until(0, tl.sync_point());
-    trace.meta.wall_us = tl.host_now(0);
-    let summary = SimSummary {
-        wall_us: trace.meta.wall_us,
+    let wall_us = tl.host_now(0);
+    if let Some(s) = sink.as_deref_mut() {
+        s.finish(wall_us)?;
+    }
+    Ok(SimSummary {
+        wall_us,
         device_active_us: tl.active_us(),
         kernels: tl.launched(),
         host_busy_us,
         tklqt_us,
-    };
-    (trace, summary)
+    })
 }
 
 #[cfg(test)]
@@ -571,6 +595,21 @@ mod summary_tests {
         assert_eq!(sum.kernels, trace.kernel_count());
         assert!((sum.wall_us - trace.meta.wall_us).abs() < 1e-9);
         assert!((sum.device_active_us - trace.device_active_us()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn streamed_sink_reproduces_buffered_trace() {
+        let m = models::gpt2();
+        let p = Platform::h200();
+        let wl = Workload::prefill(1, 128);
+        let buffered = simulate(&m, &p, &wl, 11);
+        let mut w =
+            crate::trace::BinaryTraceWriter::new(Vec::new(), &trace_meta_of(&m, &p, &wl))
+                .unwrap();
+        let sum = simulate_to_sink(&m, &p, &wl, 11, &mut w).unwrap();
+        let streamed = crate::trace::binary::decode(&w.into_inner()).unwrap();
+        assert_eq!(streamed, buffered, "streamed capture must match buffered");
+        assert!((sum.wall_us - buffered.meta.wall_us).abs() < 1e-12);
     }
 
     #[test]

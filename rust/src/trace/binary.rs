@@ -1,0 +1,793 @@
+//! Compact binary trace dialect (`.tbt`) — the streaming twin of the
+//! canonical JSON format in `docs/trace_format.md` §10.
+//!
+//! Layout (all multi-byte integers little-endian):
+//!
+//! ```text
+//! header   := magic "TXBT" | version u16 | flags u16
+//! meta     := 0x01 | platform str | model str | phase str
+//!                  | batch varint | seq varint | m_tokens varint
+//! event    := 0x02 | kind u8 | presence u8 | name str
+//!                  | ts f64 | dur f64 | corr varint | track varint
+//!                  | [device varint] | [kernel-meta]
+//! trailer  := 0x03 | event_count u64 | wall_us f64 | end "TXBE"
+//! ```
+//!
+//! The trailer — not the meta record — carries `wall_us`: a streaming
+//! writer does not know the wall-clock until the run ends, so the value
+//! is appended last and readers back-fill `TraceMeta::wall_us` from it.
+//! The fixed 21-byte trailer doubles as a truncation detector (missing
+//! or malformed trailer ⇒ typed error, never a silent partial parse).
+//!
+//! Strings are varint-length-prefixed UTF-8; varints are unsigned
+//! LEB128 (≤ 10 bytes); `f64`s are IEEE-754 bit patterns, so every
+//! value — including ones JSON cannot print losslessly — round-trips
+//! exactly. `track` encodes `Host` as 0 and `Device(s)` as `s + 1`.
+//!
+//! All reader entry points return [`BinaryTraceError`] directly (the
+//! vendored `anyhow` has no downcasting); callers that only need an
+//! opaque error let `?` convert via `std::error::Error`.
+
+use std::fmt;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use super::event::{EventKind, KernelMeta, Track, TraceEvent};
+use super::{Trace, TraceMeta};
+
+/// File magic: first four bytes of every binary trace.
+pub const MAGIC: [u8; 4] = *b"TXBT";
+/// Current dialect version (docs/trace_format.md §10).
+pub const VERSION: u16 = 1;
+/// Dialect flags. No flags are defined for version 1; readers reject
+/// any nonzero value rather than guess at semantics.
+pub const FLAGS: u16 = 0;
+/// Trailer end magic: last four bytes of every complete binary trace.
+pub const END_MAGIC: [u8; 4] = *b"TXBE";
+/// Canonical file extension for the binary dialect.
+pub const EXTENSION: &str = "tbt";
+
+/// Record tags.
+const TAG_META: u8 = 0x01;
+const TAG_EVENT: u8 = 0x02;
+const TAG_TRAILER: u8 = 0x03;
+
+/// Trailer size: tag + count u64 + wall f64 + end magic.
+pub const TRAILER_LEN: usize = 1 + 8 + 8 + 4;
+
+/// Presence bits in an event record.
+const PRESENT_DEVICE: u8 = 0b01;
+const PRESENT_META: u8 = 0b10;
+
+/// Upper bound on any single string length — a corrupt length prefix
+/// must not trigger a huge allocation before the read fails.
+const MAX_STR_LEN: u64 = 1 << 20;
+
+/// Typed errors from the binary reader/writer. Implements
+/// `std::error::Error`, so `?` converts it into `anyhow::Error` at
+/// call sites that don't match on variants.
+#[derive(Debug, PartialEq)]
+pub enum BinaryTraceError {
+    /// Underlying I/O failure (rendered, since `io::Error: !PartialEq`).
+    Io(String),
+    /// First four bytes are not `TXBT`.
+    BadMagic([u8; 4]),
+    /// Header version is not [`VERSION`].
+    UnsupportedVersion(u16),
+    /// Header flags contain bits this reader does not understand.
+    UnsupportedFlags(u16),
+    /// Input ended mid-record; `0` names what was being read.
+    Truncated(&'static str),
+    /// Structurally invalid content (bad tag, varint overflow, ...).
+    Corrupt(String),
+    /// Input ended cleanly on a record boundary but without a trailer —
+    /// the capture was cut off.
+    MissingTrailer,
+    /// Trailer event count disagrees with the events actually read.
+    CountMismatch { declared: u64, read: u64 },
+}
+
+impl fmt::Display for BinaryTraceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            BinaryTraceError::Io(e) => write!(f, "binary trace i/o error: {e}"),
+            BinaryTraceError::BadMagic(m) => {
+                write!(f, "bad magic {m:02x?}: not a TaxBreak binary trace (expected \"TXBT\")")
+            }
+            BinaryTraceError::UnsupportedVersion(v) => {
+                write!(f, "unsupported binary trace version {v} (this reader supports {VERSION})")
+            }
+            BinaryTraceError::UnsupportedFlags(fl) => {
+                write!(f, "unsupported binary trace flags {fl:#06x} (no flags are defined)")
+            }
+            BinaryTraceError::Truncated(what) => {
+                write!(f, "truncated binary trace while reading {what}")
+            }
+            BinaryTraceError::Corrupt(what) => write!(f, "corrupt binary trace: {what}"),
+            BinaryTraceError::MissingTrailer => {
+                write!(f, "binary trace ends without a trailer (truncated capture?)")
+            }
+            BinaryTraceError::CountMismatch { declared, read } => {
+                write!(f, "trailer declares {declared} events but {read} were read")
+            }
+        }
+    }
+}
+
+impl std::error::Error for BinaryTraceError {}
+
+impl From<std::io::Error> for BinaryTraceError {
+    fn from(e: std::io::Error) -> BinaryTraceError {
+        BinaryTraceError::Io(e.to_string())
+    }
+}
+
+type Result<T> = std::result::Result<T, BinaryTraceError>;
+
+/// Stable wire code for each event kind. The exhaustive match makes a
+/// new `EventKind` variant a compile error here; extend the §10.3 table
+/// in `docs/trace_format.md` together with this function.
+pub fn kind_code(kind: EventKind) -> u8 {
+    match kind {
+        EventKind::TorchOp => 0,
+        EventKind::AtenOp => 1,
+        EventKind::RuntimeApi => 2,
+        EventKind::Kernel => 3,
+        EventKind::Nvtx => 4,
+    }
+}
+
+pub fn kind_from_code(code: u8) -> Result<EventKind> {
+    Ok(match code {
+        0 => EventKind::TorchOp,
+        1 => EventKind::AtenOp,
+        2 => EventKind::RuntimeApi,
+        3 => EventKind::Kernel,
+        4 => EventKind::Nvtx,
+        other => {
+            return Err(BinaryTraceError::Corrupt(format!(
+                "unknown event kind code {other}"
+            )))
+        }
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Encoding primitives
+// ---------------------------------------------------------------------------
+
+fn put_varint(buf: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            buf.push(byte);
+            return;
+        }
+        buf.push(byte | 0x80);
+    }
+}
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_varint(buf, s.len() as u64);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn encode_meta(buf: &mut Vec<u8>, meta: &TraceMeta) {
+    buf.push(TAG_META);
+    put_str(buf, &meta.platform);
+    put_str(buf, &meta.model);
+    put_str(buf, &meta.phase);
+    put_varint(buf, meta.batch as u64);
+    put_varint(buf, meta.seq as u64);
+    put_varint(buf, meta.m_tokens as u64);
+}
+
+fn encode_event(buf: &mut Vec<u8>, ev: &TraceEvent) {
+    buf.push(TAG_EVENT);
+    buf.push(kind_code(ev.kind));
+    let mut presence = 0u8;
+    if ev.device.is_some() {
+        presence |= PRESENT_DEVICE;
+    }
+    if ev.meta.is_some() {
+        presence |= PRESENT_META;
+    }
+    buf.push(presence);
+    put_str(buf, &ev.name);
+    put_f64(buf, ev.ts_us);
+    put_f64(buf, ev.dur_us);
+    put_varint(buf, ev.correlation_id);
+    put_varint(
+        buf,
+        match ev.track {
+            Track::Host => 0,
+            Track::Device(s) => s as u64 + 1,
+        },
+    );
+    if let Some(d) = ev.device {
+        put_varint(buf, d as u64);
+    }
+    if let Some(m) = &ev.meta {
+        put_str(buf, &m.kernel_name);
+        put_str(buf, &m.family);
+        put_str(buf, &m.aten_op);
+        put_str(buf, &m.shapes_key);
+        for g in m.grid {
+            put_varint(buf, g as u64);
+        }
+        for b in m.block {
+            put_varint(buf, b as u64);
+        }
+        buf.push(m.lib_mediated as u8);
+        put_f64(buf, m.flops);
+        put_f64(buf, m.bytes);
+    }
+}
+
+fn encode_trailer(buf: &mut Vec<u8>, event_count: u64, wall_us: f64) {
+    buf.push(TAG_TRAILER);
+    buf.extend_from_slice(&event_count.to_le_bytes());
+    buf.extend_from_slice(&wall_us.to_le_bytes());
+    buf.extend_from_slice(&END_MAGIC);
+}
+
+// ---------------------------------------------------------------------------
+// Decoding primitives
+// ---------------------------------------------------------------------------
+
+fn get_exact<R: Read>(r: &mut R, buf: &mut [u8], what: &'static str) -> Result<()> {
+    r.read_exact(buf).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            BinaryTraceError::Truncated(what)
+        } else {
+            BinaryTraceError::Io(e.to_string())
+        }
+    })
+}
+
+fn get_u8<R: Read>(r: &mut R, what: &'static str) -> Result<u8> {
+    let mut b = [0u8; 1];
+    get_exact(r, &mut b, what)?;
+    Ok(b[0])
+}
+
+/// Read one byte, distinguishing clean EOF (`None`) from I/O failure.
+fn try_get_u8<R: Read>(r: &mut R) -> Result<Option<u8>> {
+    let mut b = [0u8; 1];
+    loop {
+        match r.read(&mut b) {
+            Ok(0) => return Ok(None),
+            Ok(_) => return Ok(Some(b[0])),
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(BinaryTraceError::Io(e.to_string())),
+        }
+    }
+}
+
+fn get_varint<R: Read>(r: &mut R, what: &'static str) -> Result<u64> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let byte = get_u8(r, what)?;
+        if shift == 63 && byte > 1 {
+            return Err(BinaryTraceError::Corrupt(format!("varint overflow in {what}")));
+        }
+        v |= u64::from(byte & 0x7f) << shift;
+        if byte & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+        if shift > 63 {
+            return Err(BinaryTraceError::Corrupt(format!("varint overflow in {what}")));
+        }
+    }
+}
+
+fn get_f64<R: Read>(r: &mut R, what: &'static str) -> Result<f64> {
+    let mut b = [0u8; 8];
+    get_exact(r, &mut b, what)?;
+    Ok(f64::from_le_bytes(b))
+}
+
+fn get_str<R: Read>(r: &mut R, what: &'static str) -> Result<String> {
+    let len = get_varint(r, what)?;
+    if len > MAX_STR_LEN {
+        return Err(BinaryTraceError::Corrupt(format!(
+            "string length {len} in {what} exceeds the {MAX_STR_LEN}-byte cap"
+        )));
+    }
+    let mut bytes = vec![0u8; len as usize];
+    get_exact(r, &mut bytes, what)?;
+    String::from_utf8(bytes)
+        .map_err(|_| BinaryTraceError::Corrupt(format!("invalid UTF-8 in {what}")))
+}
+
+fn decode_event<R: Read>(r: &mut R) -> Result<TraceEvent> {
+    let kind = kind_from_code(get_u8(r, "event kind")?)?;
+    let presence = get_u8(r, "event presence flags")?;
+    if presence & !(PRESENT_DEVICE | PRESENT_META) != 0 {
+        return Err(BinaryTraceError::Corrupt(format!(
+            "unknown presence bits {presence:#04x}"
+        )));
+    }
+    let name = get_str(r, "event name")?;
+    let ts_us = get_f64(r, "event ts")?;
+    let dur_us = get_f64(r, "event dur")?;
+    let correlation_id = get_varint(r, "event corr")?;
+    let track = match get_varint(r, "event track")? {
+        0 => Track::Host,
+        s => Track::Device((s - 1) as u32),
+    };
+    let device = if presence & PRESENT_DEVICE != 0 {
+        Some(get_varint(r, "event device")? as u32)
+    } else {
+        None
+    };
+    let meta = if presence & PRESENT_META != 0 {
+        let kernel_name = get_str(r, "meta kernel_name")?;
+        let family = get_str(r, "meta family")?;
+        let aten_op = get_str(r, "meta aten_op")?;
+        let shapes_key = get_str(r, "meta shapes_key")?;
+        let mut grid = [0u32; 3];
+        for g in &mut grid {
+            *g = get_varint(r, "meta grid")? as u32;
+        }
+        let mut block = [0u32; 3];
+        for b in &mut block {
+            *b = get_varint(r, "meta block")? as u32;
+        }
+        let lib = match get_u8(r, "meta lib")? {
+            0 => false,
+            1 => true,
+            other => {
+                return Err(BinaryTraceError::Corrupt(format!(
+                    "meta lib byte must be 0 or 1, got {other}"
+                )))
+            }
+        };
+        Some(KernelMeta {
+            kernel_name,
+            family,
+            aten_op,
+            shapes_key,
+            grid,
+            block,
+            lib_mediated: lib,
+            flops: get_f64(r, "meta flops")?,
+            bytes: get_f64(r, "meta bytes")?,
+        })
+    } else {
+        None
+    };
+    Ok(TraceEvent {
+        kind,
+        name,
+        ts_us,
+        dur_us,
+        correlation_id,
+        track,
+        device,
+        meta,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Streaming writer
+// ---------------------------------------------------------------------------
+
+/// Streaming append writer: one event is encoded into a reusable
+/// scratch buffer and flushed to the underlying `Write` at a time, so
+/// memory stays O(largest single event) regardless of event count.
+pub struct BinaryTraceWriter<W: Write> {
+    w: W,
+    scratch: Vec<u8>,
+    events_written: u64,
+    peak_buffered_bytes: usize,
+    finished: bool,
+}
+
+impl<W: Write> BinaryTraceWriter<W> {
+    /// Write the header + meta record. `meta.wall_us` is ignored here —
+    /// the wall-clock goes into the trailer at [`finish`](Self::finish).
+    pub fn new(mut w: W, meta: &TraceMeta) -> Result<BinaryTraceWriter<W>> {
+        let mut scratch = Vec::with_capacity(256);
+        scratch.extend_from_slice(&MAGIC);
+        scratch.extend_from_slice(&VERSION.to_le_bytes());
+        scratch.extend_from_slice(&FLAGS.to_le_bytes());
+        encode_meta(&mut scratch, meta);
+        w.write_all(&scratch)?;
+        let peak = scratch.len();
+        Ok(BinaryTraceWriter {
+            w,
+            scratch,
+            events_written: 0,
+            peak_buffered_bytes: peak,
+            finished: false,
+        })
+    }
+
+    /// Encode and flush one event.
+    pub fn event(&mut self, ev: &TraceEvent) -> Result<()> {
+        debug_assert!(!self.finished, "event() after finish()");
+        self.scratch.clear();
+        encode_event(&mut self.scratch, ev);
+        self.peak_buffered_bytes = self.peak_buffered_bytes.max(self.scratch.len());
+        self.w.write_all(&self.scratch)?;
+        self.events_written += 1;
+        Ok(())
+    }
+
+    /// Write the trailer (event count + wall-clock + end magic) and
+    /// flush. Idempotent: the trailer is written once.
+    pub fn finish(&mut self, wall_us: f64) -> Result<()> {
+        if self.finished {
+            return Ok(());
+        }
+        self.scratch.clear();
+        encode_trailer(&mut self.scratch, self.events_written, wall_us);
+        self.w.write_all(&self.scratch)?;
+        self.w.flush()?;
+        self.finished = true;
+        Ok(())
+    }
+
+    pub fn events_written(&self) -> u64 {
+        self.events_written
+    }
+
+    /// High-water mark of the scratch buffer — the writer's entire
+    /// event-dependent memory footprint (tests assert it is O(1) in
+    /// event count).
+    pub fn peak_buffered_bytes(&self) -> usize {
+        self.peak_buffered_bytes
+    }
+
+    pub fn into_inner(self) -> W {
+        self.w
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Streaming reader
+// ---------------------------------------------------------------------------
+
+/// Streaming reader: yields events one at a time without materializing
+/// the file. `meta().wall_us` is 0 until the trailer has been reached
+/// (it is stored at the end of the file); once `next_event` returns
+/// `Ok(None)` the wall is available.
+pub struct BinaryTraceReader<R: Read> {
+    r: R,
+    meta: TraceMeta,
+    events_read: u64,
+    wall_us: Option<f64>,
+    done: bool,
+}
+
+impl<R: Read> BinaryTraceReader<R> {
+    /// Parse the header + meta record.
+    pub fn new(mut r: R) -> Result<BinaryTraceReader<R>> {
+        let mut magic = [0u8; 4];
+        get_exact(&mut r, &mut magic, "magic")?;
+        if magic != MAGIC {
+            return Err(BinaryTraceError::BadMagic(magic));
+        }
+        let mut half = [0u8; 2];
+        get_exact(&mut r, &mut half, "version")?;
+        let version = u16::from_le_bytes(half);
+        if version != VERSION {
+            return Err(BinaryTraceError::UnsupportedVersion(version));
+        }
+        get_exact(&mut r, &mut half, "flags")?;
+        let flags = u16::from_le_bytes(half);
+        if flags != FLAGS {
+            return Err(BinaryTraceError::UnsupportedFlags(flags));
+        }
+        let tag = get_u8(&mut r, "meta record tag")?;
+        if tag != TAG_META {
+            return Err(BinaryTraceError::Corrupt(format!(
+                "expected meta record tag {TAG_META:#04x}, got {tag:#04x}"
+            )));
+        }
+        let meta = TraceMeta {
+            platform: get_str(&mut r, "meta platform")?,
+            model: get_str(&mut r, "meta model")?,
+            phase: get_str(&mut r, "meta phase")?,
+            batch: get_varint(&mut r, "meta batch")? as usize,
+            seq: get_varint(&mut r, "meta seq")? as usize,
+            m_tokens: get_varint(&mut r, "meta m_tokens")? as usize,
+            wall_us: 0.0,
+        };
+        Ok(BinaryTraceReader {
+            r,
+            meta,
+            events_read: 0,
+            wall_us: None,
+            done: false,
+        })
+    }
+
+    /// Metadata from the header. `wall_us` is back-filled from the
+    /// trailer once the stream is exhausted.
+    pub fn meta(&self) -> &TraceMeta {
+        &self.meta
+    }
+
+    /// Wall-clock from the trailer; `None` until the stream has been
+    /// fully consumed.
+    pub fn wall_us(&self) -> Option<f64> {
+        self.wall_us
+    }
+
+    pub fn events_read(&self) -> u64 {
+        self.events_read
+    }
+
+    /// Next event, or `Ok(None)` once the (validated) trailer has been
+    /// reached. A stream that ends without a trailer, declares a wrong
+    /// event count, or carries a malformed record yields a typed error
+    /// — never a silent partial parse.
+    pub fn next_event(&mut self) -> Result<Option<TraceEvent>> {
+        if self.done {
+            return Ok(None);
+        }
+        match try_get_u8(&mut self.r)? {
+            None => Err(BinaryTraceError::MissingTrailer),
+            Some(TAG_EVENT) => {
+                let ev = decode_event(&mut self.r)?;
+                self.events_read += 1;
+                Ok(Some(ev))
+            }
+            Some(TAG_TRAILER) => {
+                let mut b8 = [0u8; 8];
+                get_exact(&mut self.r, &mut b8, "trailer event count")?;
+                let declared = u64::from_le_bytes(b8);
+                get_exact(&mut self.r, &mut b8, "trailer wall_us")?;
+                let wall = f64::from_le_bytes(b8);
+                let mut end = [0u8; 4];
+                get_exact(&mut self.r, &mut end, "trailer end magic")?;
+                if end != END_MAGIC {
+                    return Err(BinaryTraceError::Corrupt(format!(
+                        "trailer end magic {end:02x?} != \"TXBE\""
+                    )));
+                }
+                if declared != self.events_read {
+                    return Err(BinaryTraceError::CountMismatch {
+                        declared,
+                        read: self.events_read,
+                    });
+                }
+                self.meta.wall_us = wall;
+                self.wall_us = Some(wall);
+                self.done = true;
+                Ok(None)
+            }
+            Some(tag) => Err(BinaryTraceError::Corrupt(format!(
+                "unknown record tag {tag:#04x}"
+            ))),
+        }
+    }
+
+    /// Drain the remaining events into a full [`Trace`].
+    pub fn into_trace(mut self) -> Result<Trace> {
+        let mut events = Vec::new();
+        while let Some(ev) = self.next_event()? {
+            events.push(ev);
+        }
+        Ok(Trace {
+            meta: self.meta,
+            events,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Whole-buffer helpers + dialect detection
+// ---------------------------------------------------------------------------
+
+/// Does this byte prefix look like a binary trace?
+pub fn is_binary(bytes: &[u8]) -> bool {
+    bytes.len() >= MAGIC.len() && bytes[..MAGIC.len()] == MAGIC
+}
+
+/// Encode a whole trace to bytes (header, meta, events, trailer).
+pub fn encode(trace: &Trace) -> Vec<u8> {
+    // Writing to a Vec cannot fail.
+    let mut w =
+        BinaryTraceWriter::new(Vec::new(), &trace.meta).expect("Vec write is infallible");
+    for ev in &trace.events {
+        w.event(ev).expect("Vec write is infallible");
+    }
+    w.finish(trace.meta.wall_us).expect("Vec write is infallible");
+    w.into_inner()
+}
+
+/// Decode a whole trace from bytes, rejecting trailing garbage.
+pub fn decode(bytes: &[u8]) -> Result<Trace> {
+    let mut cursor = std::io::Cursor::new(bytes);
+    let mut reader = BinaryTraceReader::new(&mut cursor)?;
+    let mut events = Vec::new();
+    while let Some(ev) = reader.next_event()? {
+        events.push(ev);
+    }
+    let meta = reader.meta().clone();
+    if (cursor.position() as usize) < bytes.len() {
+        return Err(BinaryTraceError::Corrupt(format!(
+            "{} trailing bytes after trailer",
+            bytes.len() - cursor.position() as usize
+        )));
+    }
+    Ok(Trace { meta, events })
+}
+
+/// The two on-disk dialects.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dialect {
+    Json,
+    Binary,
+}
+
+impl Dialect {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Dialect::Json => "json",
+            Dialect::Binary => "binary",
+        }
+    }
+
+    /// Detect the dialect of a byte buffer by magic.
+    pub fn sniff(bytes: &[u8]) -> Dialect {
+        if is_binary(bytes) {
+            Dialect::Binary
+        } else {
+            Dialect::Json
+        }
+    }
+
+    /// Dialect implied by a path's extension (`.tbt` ⇒ binary).
+    pub fn of_path(path: &Path) -> Dialect {
+        match path.extension().and_then(|e| e.to_str()) {
+            Some(e) if e.eq_ignore_ascii_case(EXTENSION) => Dialect::Binary,
+            _ => Dialect::Json,
+        }
+    }
+}
+
+/// What `convert` did, for reporting.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ConvertStats {
+    pub events: usize,
+    pub from: Dialect,
+    pub to: Dialect,
+    pub in_bytes: usize,
+    pub out_bytes: usize,
+}
+
+/// Convert a trace file between dialects. Input dialect is detected by
+/// magic; output dialect follows `to`, defaulting to the output path's
+/// extension. JSON output uses the canonical compact encoding, so
+/// JSON → binary → JSON round-trips byte-identically.
+pub fn convert(input: &Path, output: &Path, to: Option<Dialect>) -> anyhow::Result<ConvertStats> {
+    let bytes = std::fs::read(input)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", input.display()))?;
+    let from = Dialect::sniff(&bytes);
+    let trace = match from {
+        Dialect::Binary => decode(&bytes)?,
+        Dialect::Json => {
+            let text = std::str::from_utf8(&bytes)
+                .map_err(|e| anyhow::anyhow!("{} is not UTF-8 JSON: {e}", input.display()))?;
+            Trace::from_json(&crate::util::json::Json::parse(text)?)?
+        }
+    };
+    let to = to.unwrap_or_else(|| Dialect::of_path(output));
+    let out = match to {
+        Dialect::Binary => encode(&trace),
+        Dialect::Json => trace.to_json().dump().into_bytes(),
+    };
+    std::fs::write(output, &out)
+        .map_err(|e| anyhow::anyhow!("writing {}: {e}", output.display()))?;
+    Ok(ConvertStats {
+        events: trace.events.len(),
+        from,
+        to,
+        in_bytes: bytes.len(),
+        out_bytes: out.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn varint_roundtrip(v: u64) {
+        let mut buf = Vec::new();
+        put_varint(&mut buf, v);
+        assert!(buf.len() <= 10);
+        let mut r = std::io::Cursor::new(&buf);
+        assert_eq!(get_varint(&mut r, "test").unwrap(), v);
+        assert_eq!(r.position() as usize, buf.len());
+    }
+
+    #[test]
+    fn varint_edges() {
+        for v in [0, 1, 127, 128, 255, 300, 16383, 16384, u32::MAX as u64, u64::MAX] {
+            varint_roundtrip(v);
+        }
+    }
+
+    #[test]
+    fn varint_overflow_is_corrupt() {
+        // 11 continuation bytes can never be a valid u64.
+        let bytes = [0xffu8; 11];
+        let mut r = std::io::Cursor::new(&bytes[..]);
+        assert!(matches!(
+            get_varint(&mut r, "test"),
+            Err(BinaryTraceError::Corrupt(_))
+        ));
+        // 10 bytes whose last byte carries bits past 2^64.
+        let mut bytes = vec![0x80u8; 9];
+        bytes.push(0x02);
+        let mut r = std::io::Cursor::new(&bytes[..]);
+        assert!(matches!(
+            get_varint(&mut r, "test"),
+            Err(BinaryTraceError::Corrupt(_))
+        ));
+    }
+
+    #[test]
+    fn f64_bit_patterns_roundtrip() {
+        for v in [0.0, -0.0, 1.5, f64::MIN_POSITIVE, f64::MAX, f64::NAN] {
+            let mut buf = Vec::new();
+            put_f64(&mut buf, v);
+            let mut r = std::io::Cursor::new(&buf);
+            let back = get_f64(&mut r, "test").unwrap();
+            assert_eq!(back.to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn header_errors_are_typed() {
+        assert_eq!(
+            BinaryTraceReader::new(&b"NOPE"[..]).err(),
+            Some(BinaryTraceError::BadMagic(*b"NOPE"))
+        );
+        let mut v2 = Vec::new();
+        v2.extend_from_slice(&MAGIC);
+        v2.extend_from_slice(&2u16.to_le_bytes());
+        v2.extend_from_slice(&0u16.to_le_bytes());
+        assert_eq!(
+            BinaryTraceReader::new(&v2[..]).err(),
+            Some(BinaryTraceError::UnsupportedVersion(2))
+        );
+        let mut fl = Vec::new();
+        fl.extend_from_slice(&MAGIC);
+        fl.extend_from_slice(&VERSION.to_le_bytes());
+        fl.extend_from_slice(&0x0001u16.to_le_bytes());
+        assert_eq!(
+            BinaryTraceReader::new(&fl[..]).err(),
+            Some(BinaryTraceError::UnsupportedFlags(1))
+        );
+        assert_eq!(
+            BinaryTraceReader::new(&b"TX"[..]).err(),
+            Some(BinaryTraceError::Truncated("magic"))
+        );
+    }
+
+    #[test]
+    fn string_length_cap_guards_allocation() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&MAGIC);
+        buf.extend_from_slice(&VERSION.to_le_bytes());
+        buf.extend_from_slice(&FLAGS.to_le_bytes());
+        buf.push(TAG_META);
+        put_varint(&mut buf, u64::MAX); // platform length: absurd
+        assert!(matches!(
+            BinaryTraceReader::new(&buf[..]).err(),
+            Some(BinaryTraceError::Corrupt(_))
+        ));
+    }
+}

@@ -2,14 +2,25 @@
 //! real PJRT) and every TaxBreak analysis.
 //!
 //! The on-disk JSON format is specified in `docs/trace_format.md`; the
-//! conformance suite `rust/tests/trace_format.rs` enforces the spec
-//! (field names, event-kind tags, canonical encoding, byte-stability
-//! of save → load → save).
+//! compact binary dialect (`.tbt`, module [`binary`]) in its §10. The
+//! conformance suites `rust/tests/trace_format.rs` and
+//! `rust/tests/trace_binary.rs` enforce the spec (field names,
+//! event-kind tags, canonical encoding, byte-stability of
+//! save → load → save, cross-dialect golden bytes).
+//!
+//! [`Trace::load`] auto-detects the dialect by magic, so every reader
+//! (`analyze`, `whatif`, `decompose`, the chrome exporter) accepts
+//! either format transparently; writers pick by extension via
+//! [`Trace::save_auto`] / [`sink::file_sink`].
 
+pub mod binary;
 pub mod chrome;
 pub mod event;
+pub mod sink;
 
+pub use binary::{BinaryTraceError, BinaryTraceReader, BinaryTraceWriter, Dialect};
 pub use event::{EventKind, KernelMeta, Track, TraceEvent};
+pub use sink::{CountingSink, NullSink, TraceBufferSink, TraceSink};
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -174,15 +185,39 @@ impl Trace {
         Ok(Trace { meta, events })
     }
 
+    /// Save as canonical compact JSON (dialect spec §6).
     pub fn save(&self, path: &Path) -> anyhow::Result<()> {
         std::fs::write(path, self.to_json().dump())
             .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
     }
 
+    /// Save as the compact binary dialect (dialect spec §10).
+    pub fn save_binary(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, binary::encode(self))
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
+    }
+
+    /// Save in the dialect implied by the path's extension
+    /// (`.tbt` ⇒ binary, anything else ⇒ JSON).
+    pub fn save_auto(&self, path: &Path) -> anyhow::Result<()> {
+        match Dialect::of_path(path) {
+            Dialect::Binary => self.save_binary(path),
+            Dialect::Json => self.save(path),
+        }
+    }
+
+    /// Load a trace in either dialect, detected by magic: files
+    /// starting with `TXBT` parse as binary, everything else as JSON.
     pub fn load(path: &Path) -> anyhow::Result<Trace> {
-        let text = std::fs::read_to_string(path)
+        let bytes = std::fs::read(path)
             .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
-        Trace::from_json(&Json::parse(&text)?)
+        if binary::is_binary(&bytes) {
+            Ok(binary::decode(&bytes)?)
+        } else {
+            let text = std::str::from_utf8(&bytes)
+                .map_err(|e| anyhow::anyhow!("{} is not UTF-8 JSON: {e}", path.display()))?;
+            Trace::from_json(&Json::parse(text)?)
+        }
     }
 }
 
@@ -293,6 +328,17 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("t.json");
         t.save(&path).unwrap();
+        assert_eq!(Trace::load(&path).unwrap(), t);
+    }
+
+    #[test]
+    fn binary_save_load_auto_detects() {
+        let t = sample_trace();
+        let dir = std::env::temp_dir().join("taxbreak_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.tbt");
+        t.save_auto(&path).unwrap();
+        assert!(binary::is_binary(&std::fs::read(&path).unwrap()));
         assert_eq!(Trace::load(&path).unwrap(), t);
     }
 

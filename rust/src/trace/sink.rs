@@ -1,0 +1,236 @@
+//! `TraceSink` — the streaming event consumer every producer (simulator,
+//! timeline engine, loadgen capture) writes through.
+//!
+//! Producers no longer decide between "buffer everything" and "stream to
+//! disk": they emit events into a sink and call [`TraceSink::finish`]
+//! with the final wall-clock. [`TraceBufferSink`] reproduces the old
+//! in-memory behavior; [`BinaryTraceWriter`] streams to any `Write`
+//! with O(1) memory; [`file_sink`] picks by extension (`.tbt` streams
+//! binary, anything else buffers and saves canonical JSON — the JSON
+//! dialect stores `wall_us` in its head, so it cannot be streamed).
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use super::binary::{BinaryTraceWriter, Dialect};
+use super::event::TraceEvent;
+use super::{Trace, TraceMeta};
+
+/// Streaming consumer of trace events.
+pub trait TraceSink {
+    /// Consume one event.
+    fn event(&mut self, ev: &TraceEvent) -> anyhow::Result<()>;
+    /// Seal the capture with the run's wall-clock latency (us). Called
+    /// exactly once, after the last event.
+    fn finish(&mut self, wall_us: f64) -> anyhow::Result<()>;
+}
+
+/// The old buffer-everything behavior as a sink: accumulates into an
+/// in-memory [`Trace`], stamping the wall at `finish`.
+#[derive(Debug, Clone, Default)]
+pub struct TraceBufferSink {
+    trace: Trace,
+}
+
+impl TraceBufferSink {
+    pub fn new(meta: TraceMeta) -> TraceBufferSink {
+        TraceBufferSink {
+            trace: Trace::new(meta),
+        }
+    }
+
+    pub fn trace(&self) -> &Trace {
+        &self.trace
+    }
+
+    pub fn into_trace(self) -> Trace {
+        self.trace
+    }
+}
+
+impl TraceSink for TraceBufferSink {
+    fn event(&mut self, ev: &TraceEvent) -> anyhow::Result<()> {
+        self.trace.push(ev.clone());
+        Ok(())
+    }
+
+    fn finish(&mut self, wall_us: f64) -> anyhow::Result<()> {
+        self.trace.meta.wall_us = wall_us;
+        Ok(())
+    }
+}
+
+/// Discards everything (summary-only runs).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NullSink;
+
+impl TraceSink for NullSink {
+    fn event(&mut self, _ev: &TraceEvent) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    fn finish(&mut self, _wall_us: f64) -> anyhow::Result<()> {
+        Ok(())
+    }
+}
+
+impl<W: Write> TraceSink for BinaryTraceWriter<W> {
+    fn event(&mut self, ev: &TraceEvent) -> anyhow::Result<()> {
+        Ok(BinaryTraceWriter::event(self, ev)?)
+    }
+
+    fn finish(&mut self, wall_us: f64) -> anyhow::Result<()> {
+        Ok(BinaryTraceWriter::finish(self, wall_us)?)
+    }
+}
+
+/// Pass-through wrapper counting events and the finish wall — used by
+/// tests to observe what a producer streams without buffering it.
+pub struct CountingSink<S: TraceSink> {
+    pub inner: S,
+    pub events: u64,
+    pub wall_us: Option<f64>,
+}
+
+impl<S: TraceSink> CountingSink<S> {
+    pub fn new(inner: S) -> CountingSink<S> {
+        CountingSink {
+            inner,
+            events: 0,
+            wall_us: None,
+        }
+    }
+}
+
+impl<S: TraceSink> TraceSink for CountingSink<S> {
+    fn event(&mut self, ev: &TraceEvent) -> anyhow::Result<()> {
+        self.events += 1;
+        self.inner.event(ev)
+    }
+
+    fn finish(&mut self, wall_us: f64) -> anyhow::Result<()> {
+        self.wall_us = Some(wall_us);
+        self.inner.finish(wall_us)
+    }
+}
+
+/// JSON file sink: buffers (the JSON head carries `wall_us`, so the
+/// format is not streamable) and writes the canonical compact dump at
+/// `finish`.
+struct JsonFileSink {
+    path: PathBuf,
+    buffer: TraceBufferSink,
+}
+
+impl TraceSink for JsonFileSink {
+    fn event(&mut self, ev: &TraceEvent) -> anyhow::Result<()> {
+        self.buffer.event(ev)
+    }
+
+    fn finish(&mut self, wall_us: f64) -> anyhow::Result<()> {
+        self.buffer.finish(wall_us)?;
+        self.buffer.trace().save(&self.path)
+    }
+}
+
+/// Open a file-backed sink, dispatching dialect by extension: `.tbt`
+/// streams the binary dialect with O(1) memory; any other extension
+/// buffers and saves canonical JSON at `finish`.
+pub fn file_sink(path: &Path, meta: &TraceMeta) -> anyhow::Result<Box<dyn TraceSink>> {
+    match Dialect::of_path(path) {
+        Dialect::Binary => {
+            let file = std::fs::File::create(path)
+                .map_err(|e| anyhow::anyhow!("creating {}: {e}", path.display()))?;
+            let w = BinaryTraceWriter::new(std::io::BufWriter::new(file), meta)?;
+            Ok(Box::new(w))
+        }
+        Dialect::Json => Ok(Box::new(JsonFileSink {
+            path: path.to_path_buf(),
+            buffer: TraceBufferSink::new(meta.clone()),
+        })),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::binary;
+    use super::super::event::{EventKind, Track};
+    use super::*;
+
+    fn meta() -> TraceMeta {
+        TraceMeta {
+            platform: "h100".into(),
+            model: "gpt2".into(),
+            phase: "prefill".into(),
+            batch: 1,
+            seq: 128,
+            m_tokens: 1,
+            wall_us: 0.0,
+        }
+    }
+
+    fn ev(corr: u64) -> TraceEvent {
+        TraceEvent {
+            kind: EventKind::Kernel,
+            name: format!("k{corr}"),
+            ts_us: corr as f64,
+            dur_us: 1.0,
+            correlation_id: corr,
+            track: Track::Device(0),
+            device: None,
+            meta: None,
+        }
+    }
+
+    #[test]
+    fn buffer_sink_reproduces_push_loop() {
+        let mut s = TraceBufferSink::new(meta());
+        s.event(&ev(1)).unwrap();
+        s.event(&ev(2)).unwrap();
+        s.finish(99.5).unwrap();
+        let t = s.into_trace();
+        assert_eq!(t.events.len(), 2);
+        assert_eq!(t.meta.wall_us, 99.5);
+    }
+
+    #[test]
+    fn binary_writer_is_a_sink_and_roundtrips() {
+        let mut w = BinaryTraceWriter::new(Vec::new(), &meta()).unwrap();
+        for i in 1..=3 {
+            TraceSink::event(&mut w, &ev(i)).unwrap();
+        }
+        TraceSink::finish(&mut w, 42.0).unwrap();
+        let t = binary::decode(&w.into_inner()).unwrap();
+        assert_eq!(t.events.len(), 3);
+        assert_eq!(t.meta.wall_us, 42.0);
+        assert_eq!(t.meta.model, "gpt2");
+    }
+
+    #[test]
+    fn counting_sink_observes_without_interfering() {
+        let mut s = CountingSink::new(NullSink);
+        s.event(&ev(1)).unwrap();
+        s.event(&ev(2)).unwrap();
+        s.finish(7.0).unwrap();
+        assert_eq!(s.events, 2);
+        assert_eq!(s.wall_us, Some(7.0));
+    }
+
+    #[test]
+    fn file_sink_dispatches_by_extension() {
+        let dir = std::env::temp_dir().join("taxbreak_sink_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        for (name, dialect) in [("t.tbt", Dialect::Binary), ("t.json", Dialect::Json)] {
+            let path = dir.join(name);
+            let mut s = file_sink(&path, &meta()).unwrap();
+            s.event(&ev(1)).unwrap();
+            s.finish(5.0).unwrap();
+            drop(s);
+            let bytes = std::fs::read(&path).unwrap();
+            assert_eq!(Dialect::sniff(&bytes), dialect, "{name}");
+            let t = Trace::load(&path).unwrap();
+            assert_eq!(t.events.len(), 1);
+            assert_eq!(t.meta.wall_us, 5.0);
+        }
+    }
+}

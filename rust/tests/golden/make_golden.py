@@ -1,0 +1,275 @@
+#!/usr/bin/env python3
+"""Regenerate the golden trace corpus (v1_min / v2_multi, both dialects).
+
+Byte-exact replica of the Rust canonical JSON dumper
+(`util::json::Json::dump`, spec docs/trace_format.md §6) and of the
+binary encoder (`trace::binary::encode`, spec §10). The committed
+`.json`/`.tbt` files are what `tests/trace_binary.rs` pins byte-for-byte;
+rerun this script only when the spec itself changes, and review the
+resulting diff against the spec tables by hand.
+
+All float values in the corpus are short dyadic decimals so Python's
+`repr` and Rust's shortest-roundtrip `Display` agree.
+"""
+
+import struct
+from pathlib import Path
+
+HERE = Path(__file__).resolve().parent
+
+# --- canonical JSON (spec §6) ----------------------------------------------
+
+
+def jnum(f):
+    f = float(f)
+    if f != f or f in (float("inf"), float("-inf")):
+        return "null"
+    if f == int(f) and abs(f) < 9.0e15:
+        return str(int(f))
+    return repr(f)
+
+
+def jstr(s):
+    out = '"'
+    for c in s:
+        if c == '"':
+            out += '\\"'
+        elif c == "\\":
+            out += "\\\\"
+        elif c == "\n":
+            out += "\\n"
+        elif c == "\r":
+            out += "\\r"
+        elif c == "\t":
+            out += "\\t"
+        elif ord(c) < 0x20:
+            out += "\\u%04x" % ord(c)
+        else:
+            out += c
+    return out + '"'
+
+
+def kernel_meta_json(m):
+    parts = [
+        '"kernel_name":' + jstr(m["kernel_name"]),
+        '"family":' + jstr(m["family"]),
+        '"aten_op":' + jstr(m["aten_op"]),
+        '"shapes_key":' + jstr(m["shapes_key"]),
+        '"grid":[' + ",".join(jnum(g) for g in m["grid"]) + "]",
+        '"block":[' + ",".join(jnum(b) for b in m["block"]) + "]",
+        '"lib":' + ("true" if m["lib"] else "false"),
+        '"flops":' + jnum(m["flops"]),
+        '"bytes":' + jnum(m["bytes"]),
+    ]
+    return "{" + ",".join(parts) + "}"
+
+
+def event_json(e):
+    track = -1 if e["track"] == "host" else e["track"]
+    parts = [
+        '"kind":' + jstr(e["kind"]),
+        '"name":' + jstr(e["name"]),
+        '"ts":' + jnum(e["ts"]),
+        '"dur":' + jnum(e["dur"]),
+        '"corr":' + jnum(e["corr"]),
+        '"track":' + jnum(track),
+    ]
+    if e.get("device") is not None:
+        parts.append('"device":' + jnum(e["device"]))
+    if e.get("meta") is not None:
+        parts.append('"meta":' + kernel_meta_json(e["meta"]))
+    return "{" + ",".join(parts) + "}"
+
+
+def trace_json(t):
+    m = t["meta"]
+    meta = "{" + ",".join(
+        [
+            '"platform":' + jstr(m["platform"]),
+            '"model":' + jstr(m["model"]),
+            '"phase":' + jstr(m["phase"]),
+            '"batch":' + jnum(m["batch"]),
+            '"seq":' + jnum(m["seq"]),
+            '"m_tokens":' + jnum(m["m_tokens"]),
+            '"wall_us":' + jnum(m["wall_us"]),
+        ]
+    ) + "}"
+    events = "[" + ",".join(event_json(e) for e in t["events"]) + "]"
+    return '{"meta":' + meta + ',"events":' + events + "}"
+
+
+# --- binary dialect (spec §10) ---------------------------------------------
+
+KIND_CODE = {"torch_op": 0, "aten_op": 1, "runtime_api": 2, "kernel": 3, "nvtx": 4}
+
+
+def varint(v):
+    out = b""
+    while True:
+        byte = v & 0x7F
+        v >>= 7
+        if v == 0:
+            return out + bytes([byte])
+        out += bytes([byte | 0x80])
+
+
+def bstr(s):
+    raw = s.encode("utf-8")
+    return varint(len(raw)) + raw
+
+
+def bf64(v):
+    return struct.pack("<d", float(v))
+
+
+def trace_binary(t):
+    m = t["meta"]
+    out = b"TXBT" + struct.pack("<H", 1) + struct.pack("<H", 0)
+    out += (
+        b"\x01"
+        + bstr(m["platform"])
+        + bstr(m["model"])
+        + bstr(m["phase"])
+        + varint(m["batch"])
+        + varint(m["seq"])
+        + varint(m["m_tokens"])
+    )
+    for e in t["events"]:
+        presence = 0
+        if e.get("device") is not None:
+            presence |= 0b01
+        if e.get("meta") is not None:
+            presence |= 0b10
+        out += b"\x02" + bytes([KIND_CODE[e["kind"]], presence])
+        out += bstr(e["name"]) + bf64(e["ts"]) + bf64(e["dur"])
+        out += varint(e["corr"])
+        out += varint(0 if e["track"] == "host" else e["track"] + 1)
+        if e.get("device") is not None:
+            out += varint(e["device"])
+        km = e.get("meta")
+        if km is not None:
+            out += bstr(km["kernel_name"]) + bstr(km["family"])
+            out += bstr(km["aten_op"]) + bstr(km["shapes_key"])
+            for g in km["grid"]:
+                out += varint(g)
+            for b in km["block"]:
+                out += varint(b)
+            out += bytes([1 if km["lib"] else 0])
+            out += bf64(km["flops"]) + bf64(km["bytes"])
+    out += b"\x03" + struct.pack("<Q", len(t["events"])) + bf64(m["wall_us"]) + b"TXBE"
+    return out
+
+
+# --- the corpus ------------------------------------------------------------
+
+# v1_min: a spec-v1 trace — single device, no `device` field anywhere;
+# one full TorchOp→AtenOp→RuntimeApi→Kernel chain plus an NVTX range.
+V1_MIN = {
+    "meta": {
+        "platform": "h100",
+        "model": "gpt2",
+        "phase": "decode",
+        "batch": 1,
+        "seq": 128,
+        "m_tokens": 4,
+        "wall_us": 42.5,
+    },
+    "events": [
+        {"kind": "torch_op", "name": "decode.step", "ts": 0.0, "dur": 10.5, "corr": 1, "track": "host"},
+        {"kind": "aten_op", "name": "aten::mm", "ts": 0.5, "dur": 2.25, "corr": 1, "track": "host"},
+        {"kind": "runtime_api", "name": "cudaLaunchKernel", "ts": 2.75, "dur": 1.5, "corr": 1, "track": "host"},
+        {
+            "kind": "kernel",
+            "name": "ampere_bf16_gemm",
+            "ts": 4.25,
+            "dur": 6.25,
+            "corr": 1,
+            "track": 0,
+            "meta": {
+                "kernel_name": "ampere_bf16_gemm",
+                "family": "gemm_cublas",
+                "aten_op": "aten::mm",
+                "shapes_key": "f32[8,64]x[64,64]",
+                "grid": [8, 4, 1],
+                "block": [128, 1, 1],
+                "lib": True,
+                "flops": 65536.0,
+                "bytes": 32768.0,
+            },
+        },
+        {"kind": "nvtx", "name": "phase2.replay", "ts": 0.0, "dur": 42.5, "corr": 0, "track": "host"},
+    ],
+}
+
+# v2_multi: spec-v2 features — `device` stamps, multiple streams per
+# device, an unmediated kernel, fractional byte counts, and names that
+# exercise JSON escaping (quote, newline) and non-ASCII UTF-8.
+V2_MULTI = {
+    "meta": {
+        "platform": "h200",
+        "model": "olmoe-1b-7b",
+        "phase": "serve",
+        "batch": 2,
+        "seq": 64,
+        "m_tokens": 8,
+        "wall_us": 100.25,
+    },
+    "events": [
+        {"kind": "torch_op", "name": 'serve.prefill "réplica"\nstep', "ts": 0.0, "dur": 5.5, "corr": 1, "track": "host", "device": 0},
+        {
+            "kind": "kernel",
+            "name": "moe_dispatch",
+            "ts": 1.5,
+            "dur": 3.5,
+            "corr": 1,
+            "track": 1,
+            "device": 0,
+            "meta": {
+                "kernel_name": "moe_dispatch",
+                "family": "moe_routing",
+                "aten_op": "aten::topk",
+                "shapes_key": "bf16[2,64,8]",
+                "grid": [64, 1, 1],
+                "block": [256, 1, 1],
+                "lib": False,
+                "flops": 0.0,
+                "bytes": 1024.5,
+            },
+        },
+        {"kind": "aten_op", "name": "aten::topk", "ts": 0.25, "dur": 1.25, "corr": 2, "track": "host", "device": 1},
+        {"kind": "runtime_api", "name": "cudaLaunchKernel", "ts": 2.0, "dur": 0.25, "corr": 2, "track": "host", "device": 1},
+        {
+            "kind": "kernel",
+            "name": "gemm_k",
+            "ts": 2.5,
+            "dur": 4.75,
+            "corr": 2,
+            "track": 2,
+            "device": 1,
+            "meta": {
+                "kernel_name": "gemm_k",
+                "family": "gemm_cublas",
+                "aten_op": "aten::mm",
+                "shapes_key": "f32[2,64]x[64,64]",
+                "grid": [2, 2, 1],
+                "block": [128, 1, 1],
+                "lib": True,
+                "flops": 1048576.0,
+                "bytes": 65536.0,
+            },
+        },
+        {"kind": "nvtx", "name": "phase", "ts": 0.0, "dur": 100.25, "corr": 0, "track": "host"},
+    ],
+}
+
+
+def main():
+    for name, trace in [("v1_min", V1_MIN), ("v2_multi", V2_MULTI)]:
+        (HERE / f"{name}.json").write_bytes(trace_json(trace).encode("utf-8"))
+        (HERE / f"{name}.tbt").write_bytes(trace_binary(trace))
+        print(f"wrote {name}.json ({len(trace_json(trace).encode('utf-8'))} bytes), "
+              f"{name}.tbt ({len(trace_binary(trace))} bytes)")
+
+
+if __name__ == "__main__":
+    main()

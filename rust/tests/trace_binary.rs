@@ -1,0 +1,477 @@
+//! Cross-format lock on the binary trace dialect (`.tbt`).
+//!
+//! The committed golden corpus under `tests/golden/` pins both dialects
+//! byte-for-byte in both directions (JSON → binary and binary → JSON);
+//! a property suite checks arbitrary traces survive the round trip with
+//! the decomposition bit-identical; a robustness suite checks every
+//! way a binary file can be damaged yields a typed
+//! [`BinaryTraceError`] — never a panic or a silent partial parse.
+
+use std::path::PathBuf;
+
+use taxbreak::prop_assert;
+use taxbreak::sim::{simulate, Workload};
+use taxbreak::taxbreak::{decompose::decompose, phase2, Phase1, ReplayConfig, SimReplayBackend};
+use taxbreak::trace::binary::{self, BinaryTraceError, BinaryTraceWriter, Dialect};
+use taxbreak::trace::{EventKind, KernelMeta, Trace, TraceEvent, TraceMeta, TraceSink, Track};
+use taxbreak::util::json::Json;
+use taxbreak::util::prop::forall;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("golden")
+}
+
+fn golden_bytes(name: &str) -> Vec<u8> {
+    let path = golden_dir().join(name);
+    std::fs::read(&path).unwrap_or_else(|e| panic!("reading {}: {e}", path.display()))
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("taxbreak_trace_binary_{tag}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+const GOLDEN: [&str; 2] = ["v1_min", "v2_multi"];
+
+// -- golden corpus: byte stability in both directions -----------------------
+
+#[test]
+fn golden_json_is_canonical() {
+    for name in GOLDEN {
+        let bytes = golden_bytes(&format!("{name}.json"));
+        let text = std::str::from_utf8(&bytes).unwrap();
+        let trace = Trace::from_json(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(
+            trace.to_json().dump().as_bytes(),
+            bytes,
+            "{name}.json is not byte-stable under parse → dump"
+        );
+    }
+}
+
+#[test]
+fn golden_json_to_binary_reproduces_committed_bytes() {
+    for name in GOLDEN {
+        let text = String::from_utf8(golden_bytes(&format!("{name}.json"))).unwrap();
+        let trace = Trace::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(
+            binary::encode(&trace),
+            golden_bytes(&format!("{name}.tbt")),
+            "{name}: JSON → binary drifted from the committed .tbt"
+        );
+    }
+}
+
+#[test]
+fn golden_binary_to_json_reproduces_committed_bytes() {
+    for name in GOLDEN {
+        let tbt = golden_bytes(&format!("{name}.tbt"));
+        let trace = binary::decode(&tbt).unwrap();
+        assert_eq!(
+            trace.to_json().dump().as_bytes(),
+            golden_bytes(&format!("{name}.json")),
+            "{name}: binary → JSON drifted from the committed .json"
+        );
+        // And the binary bytes themselves are a fixed point.
+        assert_eq!(binary::encode(&trace), tbt, "{name}: decode → encode is not byte-stable");
+    }
+}
+
+#[test]
+fn golden_corpus_covers_both_spec_versions() {
+    // v1: no `device` field anywhere. v2: device-stamped, multi-stream.
+    let v1 = binary::decode(&golden_bytes("v1_min.tbt")).unwrap();
+    assert!(v1.events.iter().all(|e| e.device.is_none()));
+    let v2 = binary::decode(&golden_bytes("v2_multi.tbt")).unwrap();
+    assert!(v2.events.iter().any(|e| e.device == Some(1)));
+    let streams: std::collections::BTreeSet<_> = v2
+        .events
+        .iter()
+        .filter_map(|e| match e.track {
+            Track::Device(s) => Some(s),
+            Track::Host => None,
+        })
+        .collect();
+    assert!(streams.len() > 1, "v2_multi must span multiple streams");
+    // Wall is carried by the trailer and back-filled on read.
+    assert_eq!(v2.meta.wall_us, 100.25);
+}
+
+#[test]
+fn load_detects_dialect_by_magic_not_extension() {
+    let dir = temp_dir("sniff");
+    // Binary bytes behind a .json extension still load as binary.
+    let lying = dir.join("actually_binary.json");
+    std::fs::write(&lying, golden_bytes("v2_multi.tbt")).unwrap();
+    let from_lying = Trace::load(&lying).unwrap();
+    let from_json = Trace::from_json(
+        &Json::parse(std::str::from_utf8(&golden_bytes("v2_multi.json")).unwrap()).unwrap(),
+    )
+    .unwrap();
+    assert_eq!(from_lying, from_json);
+}
+
+#[test]
+fn convert_round_trips_the_golden_corpus_byte_identically() {
+    let dir = temp_dir("convert");
+    for name in GOLDEN {
+        let json_path = golden_dir().join(format!("{name}.json"));
+        let tbt_path = golden_dir().join(format!("{name}.tbt"));
+        // JSON → binary by output extension.
+        let out_tbt = dir.join(format!("{name}.tbt"));
+        let stats = binary::convert(&json_path, &out_tbt, None).unwrap();
+        assert_eq!((stats.from, stats.to), (Dialect::Json, Dialect::Binary));
+        assert_eq!(std::fs::read(&out_tbt).unwrap(), golden_bytes(&format!("{name}.tbt")));
+        // Binary → JSON by output extension.
+        let out_json = dir.join(format!("{name}.json"));
+        let stats = binary::convert(&tbt_path, &out_json, None).unwrap();
+        assert_eq!((stats.from, stats.to), (Dialect::Binary, Dialect::Json));
+        assert_eq!(std::fs::read(&out_json).unwrap(), golden_bytes(&format!("{name}.json")));
+        // Explicit --to overrides the extension.
+        let out_any = dir.join(format!("{name}.trace"));
+        let stats = binary::convert(&json_path, &out_any, Some(Dialect::Binary)).unwrap();
+        assert_eq!(stats.to, Dialect::Binary);
+        assert_eq!(std::fs::read(&out_any).unwrap(), golden_bytes(&format!("{name}.tbt")));
+    }
+}
+
+#[test]
+fn simulated_trace_save_load_save_is_byte_stable_in_binary() {
+    let trace = simulate(
+        &taxbreak::models::gpt2(),
+        &taxbreak::hardware::Platform::h100(),
+        &Workload::decode(1, 128, 2),
+        7,
+    );
+    let dir = temp_dir("stability");
+    let path = dir.join("sim.tbt");
+    trace.save_auto(&path).unwrap();
+    let first = std::fs::read(&path).unwrap();
+    assert!(binary::is_binary(&first), ".tbt extension selects the binary dialect");
+    let loaded = Trace::load(&path).unwrap();
+    assert_eq!(loaded, trace);
+    loaded.save_auto(&path).unwrap();
+    assert_eq!(std::fs::read(&path).unwrap(), first, "save → load → save must be byte-stable");
+}
+
+// -- property tests ---------------------------------------------------------
+
+fn arb_kernel_meta(g: &mut taxbreak::util::prop::Gen) -> KernelMeta {
+    let names = ["k", "ampere_bf16_gemm", "moe_dispatch_ε", "void cutlass::Kernel<…>"];
+    KernelMeta {
+        kernel_name: g.choice(&names).to_string(),
+        family: g.choice(&["gemm_cublas", "elementwise", "moe_routing"]).to_string(),
+        aten_op: g.choice(&["aten::mm", "aten::add", "aten::topk"]).to_string(),
+        shapes_key: g.choice(&["f32[1]", "bf16[8,64]x[64,64]", ""]).to_string(),
+        grid: [g.u64() as u32, g.usize_in(0, 9) as u32, 1],
+        block: [g.usize_in(1, 1024) as u32, 1, g.u64() as u32],
+        lib_mediated: g.bool(),
+        flops: g.f64_in(0.0, 1e15),
+        bytes: g.f64_in(0.0, 1e12),
+    }
+}
+
+fn arb_trace(g: &mut taxbreak::util::prop::Gen) -> Trace {
+    let mut t = Trace::new(TraceMeta {
+        platform: g.choice(&["h100", "h200", ""]).to_string(),
+        model: g.choice(&["gpt2", "olmoe-1b-7b", "m\"odel\n"]).to_string(),
+        phase: g.choice(&["prefill", "decode", "serve"]).to_string(),
+        batch: g.usize_in(0, 4096),
+        seq: g.usize_in(0, 1 << 20),
+        m_tokens: g.usize_in(0, 64),
+        wall_us: g.f64_in(0.0, 1e9),
+    });
+    let kinds = EventKind::ALL;
+    let names = ["e", "aten::mm", "decode.step \"q\"", "névtx\trange", ""];
+    for _ in 0..g.usize_in(0, 20) {
+        let kind = *g.choice(&kinds);
+        t.push(TraceEvent {
+            kind,
+            name: g.choice(&names).to_string(),
+            ts_us: g.f64_in(-1e6, 1e9),
+            dur_us: g.f64_in(0.0, 1e7),
+            // 53-bit ids: the JSON dialect stores numbers as f64, so
+            // larger ids are not representable there (the binary-only
+            // full-u64 range is covered by the bit-pattern test).
+            correlation_id: g.u64() >> 11,
+            track: if g.bool() {
+                Track::Host
+            } else {
+                Track::Device(g.usize_in(0, u32::MAX as usize) as u32)
+            },
+            device: g.bool().then(|| g.usize_in(0, 255) as u32),
+            meta: (kind == EventKind::Kernel && g.bool()).then(|| arb_kernel_meta(g)),
+        });
+    }
+    t
+}
+
+#[test]
+fn property_json_binary_json_round_trip_is_identity() {
+    forall("json → binary → json round trip", 80, |g| {
+        // Canonicalize through JSON first: the JSON dialect is the
+        // source of truth and its number canonicalization (e.g.
+        // integral floats printing as integers) is what byte equality
+        // is defined over.
+        let t = arb_trace(g);
+        let canon = Trace::from_json(&Json::parse(&t.to_json().dump()).unwrap()).unwrap();
+        let json1 = canon.to_json().dump();
+        let bin = binary::encode(&canon);
+        let back = match binary::decode(&bin) {
+            Ok(b) => b,
+            Err(e) => {
+                g.fail(format!("decode failed: {e}"));
+                return false;
+            }
+        };
+        prop_assert!(g, back == canon, "binary round trip changed the trace");
+        let json2 = back.to_json().dump();
+        prop_assert!(g, json2 == json1, "JSON bytes changed across the dialect round trip");
+        true
+    });
+}
+
+#[test]
+fn property_binary_preserves_f64_bit_patterns_json_cannot() {
+    // Values the JSON dialect flattens (-0.0 prints as "0") or rejects
+    // (non-finite) survive the binary dialect bit-for-bit.
+    let mut t = Trace::new(TraceMeta { wall_us: f64::NAN, ..Default::default() });
+    t.push(TraceEvent {
+        kind: EventKind::Nvtx,
+        name: "bits".into(),
+        ts_us: -0.0,
+        dur_us: f64::INFINITY,
+        correlation_id: u64::MAX,
+        track: Track::Device(u32::MAX),
+        device: Some(u32::MAX),
+        meta: None,
+    });
+    let back = binary::decode(&binary::encode(&t)).unwrap();
+    assert_eq!(back.meta.wall_us.to_bits(), f64::NAN.to_bits());
+    assert_eq!(back.events[0].ts_us.to_bits(), (-0.0f64).to_bits());
+    assert_eq!(back.events[0].dur_us, f64::INFINITY);
+    assert_eq!(back.events[0].correlation_id, u64::MAX);
+    assert_eq!(back.events[0].track, Track::Device(u32::MAX));
+    assert_eq!(back.events[0].device, Some(u32::MAX));
+}
+
+#[test]
+fn decomposition_and_hdbi_agree_bit_for_bit_across_dialects() {
+    let platform = taxbreak::hardware::Platform::h200();
+    let trace = simulate(&taxbreak::models::gpt2(), &platform, &Workload::decode(2, 256, 3), 11);
+    let dir = temp_dir("decomp");
+    trace.save_auto(&dir.join("t.json")).unwrap();
+    trace.save_auto(&dir.join("t.tbt")).unwrap();
+    let from_json = Trace::load(&dir.join("t.json")).unwrap();
+    let from_bin = Trace::load(&dir.join("t.tbt")).unwrap();
+    assert_eq!(from_json, from_bin);
+
+    let decompose_on = |t: &Trace| {
+        let p1 = Phase1::from_trace(t);
+        let mut backend = SimReplayBackend::new(platform.clone(), 13);
+        let p2 = phase2::run(&p1.db, &mut backend, &ReplayConfig::fast());
+        decompose(t, &p1, &p2)
+    };
+    let a = decompose_on(&from_json);
+    let b = decompose_on(&from_bin);
+    assert_eq!(a.dft_us().to_bits(), b.dft_us().to_bits());
+    assert_eq!(a.orchestration_us().to_bits(), b.orchestration_us().to_bits());
+    assert_eq!(a.hdbi().to_bits(), b.hdbi().to_bits(), "HDBI must agree bit-for-bit");
+    assert_eq!(a.n_kernels, b.n_kernels);
+}
+
+// -- robustness: damage yields typed errors, never panics or silence --------
+
+#[test]
+fn every_truncation_is_a_typed_error_never_a_partial_parse() {
+    let full = golden_bytes("v2_multi.tbt");
+    for len in 0..full.len() {
+        match binary::decode(&full[..len]) {
+            Ok(_) => panic!("prefix of {len}/{} bytes parsed successfully", full.len()),
+            Err(
+                BinaryTraceError::Truncated(_)
+                | BinaryTraceError::MissingTrailer
+                | BinaryTraceError::BadMagic(_)
+                | BinaryTraceError::Corrupt(_),
+            ) => {}
+            Err(other) => panic!("unexpected error class at prefix {len}: {other}"),
+        }
+    }
+}
+
+#[test]
+fn header_damage_is_reported_by_variant() {
+    let full = golden_bytes("v1_min.tbt");
+    let mut bad_magic = full.clone();
+    bad_magic[0] = b'J';
+    assert!(matches!(binary::decode(&bad_magic), Err(BinaryTraceError::BadMagic(_))));
+
+    let mut bad_version = full.clone();
+    bad_version[4] = 2;
+    assert_eq!(
+        binary::decode(&bad_version).unwrap_err(),
+        BinaryTraceError::UnsupportedVersion(2)
+    );
+
+    let mut bad_flags = full.clone();
+    bad_flags[6] = 1;
+    assert_eq!(binary::decode(&bad_flags).unwrap_err(), BinaryTraceError::UnsupportedFlags(1));
+}
+
+#[test]
+fn trailer_tampering_is_detected() {
+    let full = golden_bytes("v1_min.tbt");
+    let trailer_at = full.len() - binary::TRAILER_LEN;
+
+    // Event count in the trailer disagrees with the stream.
+    let mut miscounted = full.clone();
+    miscounted[trailer_at + 1] = 99;
+    assert_eq!(
+        binary::decode(&miscounted).unwrap_err(),
+        BinaryTraceError::CountMismatch { declared: 99, read: 5 }
+    );
+
+    // Broken end magic.
+    let mut bad_end = full.clone();
+    let n = bad_end.len();
+    bad_end[n - 1] = b'X';
+    assert!(matches!(binary::decode(&bad_end), Err(BinaryTraceError::Corrupt(_))));
+
+    // Bytes after a valid trailer are an error, not silently ignored.
+    let mut trailing = full.clone();
+    trailing.push(0);
+    assert!(matches!(binary::decode(&trailing), Err(BinaryTraceError::Corrupt(_))));
+}
+
+#[test]
+fn convert_surfaces_reader_errors_without_panicking() {
+    let dir = temp_dir("convert_err");
+    let out = dir.join("out.json");
+
+    let truncated = dir.join("truncated.tbt");
+    let full = golden_bytes("v2_multi.tbt");
+    std::fs::write(&truncated, &full[..full.len() / 2]).unwrap();
+    let err = binary::convert(&truncated, &out, None).unwrap_err();
+    assert!(err.to_string().contains("truncated"), "{err}");
+
+    let versioned = dir.join("future.tbt");
+    let mut bumped = full.clone();
+    bumped[4] = 9;
+    std::fs::write(&versioned, &bumped).unwrap();
+    let err = binary::convert(&versioned, &out, None).unwrap_err();
+    assert!(err.to_string().contains("version 9"), "{err}");
+
+    let missing = dir.join("does_not_exist.tbt");
+    assert!(binary::convert(&missing, &out, None).is_err());
+}
+
+// -- streaming writer: bounded memory ---------------------------------------
+
+#[test]
+fn streaming_writer_memory_is_o1_in_event_count() {
+    let ev = TraceEvent {
+        kind: EventKind::Kernel,
+        name: "k".into(),
+        ts_us: 1.0,
+        dur_us: 2.0,
+        correlation_id: 1,
+        track: Track::Device(0),
+        device: None,
+        meta: None,
+    };
+    let peak_for = |n: usize| {
+        let mut w = BinaryTraceWriter::new(std::io::sink(), &TraceMeta::default()).unwrap();
+        for _ in 0..n {
+            TraceSink::event(&mut w, &ev).unwrap();
+        }
+        TraceSink::finish(&mut w, 123.0).unwrap();
+        assert_eq!(w.events_written(), n as u64);
+        w.peak_buffered_bytes()
+    };
+    let small = peak_for(100);
+    let large = peak_for(10_000);
+    assert_eq!(small, large, "writer scratch must not grow with the event count");
+    assert!(large < 4096, "one event's encoding should stay well under a page: {large}");
+}
+
+// -- spec drift: the documented constants are the implemented ones ----------
+
+fn spec_text() -> String {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("docs")
+        .join("trace_format.md");
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("reading spec {}: {e}", path.display()))
+}
+
+#[test]
+fn spec_pins_the_binary_dialect_constants() {
+    let spec = spec_text();
+    assert!(spec.contains("## §10"), "spec must have a §10 binary dialect section");
+    assert_eq!(binary::MAGIC, *b"TXBT");
+    assert_eq!(binary::END_MAGIC, *b"TXBE");
+    assert!(spec.contains("`TXBT`"), "spec must document the TXBT magic");
+    assert!(spec.contains("`TXBE`"), "spec must document the TXBE end magic");
+    assert!(
+        spec.contains(&format!("dialect version {}", binary::VERSION)),
+        "spec must pin the dialect version"
+    );
+    assert!(
+        spec.contains(&format!("{}-byte trailer", binary::TRAILER_LEN)),
+        "spec must pin the trailer length"
+    );
+    assert!(spec.contains("`.tbt`"), "spec must document the extension");
+    assert_eq!(binary::EXTENSION, "tbt");
+    for kind in EventKind::ALL {
+        assert!(
+            spec.contains(&format!("| `{}` | {} |", kind.as_str(), binary::kind_code(kind))),
+            "spec §10 must map `{}` to wire code {}",
+            kind.as_str(),
+            binary::kind_code(kind)
+        );
+    }
+}
+
+// -- size claim + committed benchmark datapoint -----------------------------
+
+#[test]
+fn bundled_moe_decode_binary_is_at_least_30_percent_smaller_than_pretty_json() {
+    let cfg = taxbreak::whatif::bundled::by_name("moe-decode").unwrap();
+    let trace = simulate(
+        &cfg.model_spec().unwrap(),
+        &cfg.platform_spec().unwrap(),
+        &cfg.workload(),
+        cfg.seed,
+    );
+    let pretty = trace.to_json().pretty().len();
+    let bin = binary::encode(&trace).len();
+    assert!(
+        (bin as f64) <= 0.7 * pretty as f64,
+        "binary must be ≥30% smaller than pretty JSON: {bin} vs {pretty} bytes"
+    );
+}
+
+#[test]
+fn committed_bench_trace_datapoint_is_well_formed() {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_trace.json");
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()));
+    let v = Json::parse(&text).unwrap();
+    assert_eq!(v.str_of("bench").unwrap(), "trace");
+    let events = v.usize_of("events").unwrap();
+    assert!(events > 0);
+    let bytes_of = |dialect: &str| v.req(dialect).unwrap().usize_of("bytes").unwrap();
+    let (compact, pretty, bin) = (bytes_of("json_compact"), bytes_of("json_pretty"), bytes_of("binary"));
+    assert!(bin < compact && compact < pretty);
+    assert!(
+        (bin as f64) <= 0.7 * pretty as f64,
+        "committed datapoint must uphold the ≥30% size claim"
+    );
+    for dialect in ["json_compact", "json_pretty", "binary"] {
+        let d = v.req(dialect).unwrap();
+        let per_event = d.f64_of("bytes_per_event").unwrap();
+        let expect = d.usize_of("bytes").unwrap() as f64 / events as f64;
+        assert!((per_event - expect).abs() < 0.01, "{dialect}: bytes_per_event drifted");
+    }
+}
