@@ -183,6 +183,7 @@ mod tests {
             correlation_id: 1,
             track: Track::Host,
             device: None,
+            args: None,
             meta: None,
         });
         t.push(TraceEvent {
@@ -193,6 +194,7 @@ mod tests {
             correlation_id: 1,
             track: Track::Device(0),
             device: None,
+            args: None,
             meta: Some(meta("k", "f32[4]")),
         });
         let db = KernelDb::from_trace(&t);

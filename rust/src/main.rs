@@ -16,6 +16,12 @@
 //!   report with per-phase HDBI; `--capture`/`--chrome-out` save each
 //!   run's trace for replay and timeline inspection, `--bench-out`
 //!   emits the compact benchmark datapoint.
+//! * `replay` — deterministic re-execution of a spec-v3 serving capture
+//!   (`loadgen --capture`): arrivals, RNG draws and scheduler decisions
+//!   are replayed from the recorded events, not re-decided; `--verify`
+//!   proves record → replay → re-record is byte-identical in both trace
+//!   dialects, `--counterfactual` runs whatif prescriptions against the
+//!   replayed timeline.
 //! * `whatif` — counterfactual replay: re-simulate a recorded trace (or
 //!   a fresh workload point, or a `--bundled` preset) under composable
 //!   transforms — host-CPU scaling, CUDA-graph amortization, library
@@ -54,6 +60,7 @@ fn run() -> anyhow::Result<()> {
         "trace" => cmd_trace(args),
         "serve" => cmd_serve(args),
         "loadgen" => cmd_loadgen(args),
+        "replay" => cmd_replay(args),
         "whatif" => cmd_whatif(args),
         "convert" => cmd_convert(args),
         "bench-trace" => cmd_bench_trace(args),
@@ -119,6 +126,10 @@ USAGE:
                    [--kv-pages N] [--kv-page-tokens N] [--seed N]
                    [--devices N] [--streams N] [--report FILE]
                    [--capture FILE] [--chrome-out FILE] [--bench-out FILE]
+  taxbreak replay  <TRACE> [--counterfactual SPEC[,SPEC...]] [--verify]
+                   [--json] [--report FILE]
+                   (re-drive a `loadgen --capture` recording; --verify
+                    byte-compares the re-recording in both dialects)
   taxbreak whatif  --counterfactual SPEC[,SPEC...]
                    [--trace FILE | --bundled moe-decode|dense-prefill |
                     --model M --platform P --phase ... --bs --sl --m]
@@ -446,6 +457,136 @@ fn cmd_whatif(mut args: Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `taxbreak replay <TRACE>`: re-drive the engine + scheduler stack
+/// from a spec-v3 serving capture. Every nondeterministic input —
+/// arrivals, RNG draws, admission/preemption decisions, clock jumps —
+/// comes from the recorded events, so the replayed run reproduces the
+/// recording exactly (`--verify` proves it byte-for-byte in both
+/// dialects) and any capture becomes a deterministic substrate for
+/// `--counterfactual` analysis.
+fn cmd_replay(mut args: Args) -> anyhow::Result<()> {
+    use taxbreak::trace::binary;
+    use taxbreak::util::json::Json;
+    use taxbreak::whatif::{self, Schedule};
+
+    let usage = "usage: taxbreak replay <TRACE> \
+                 [--counterfactual SPEC[,SPEC...]] [--verify] [--json] [--report FILE]";
+    let specs = args.opt_list("counterfactual");
+    let verify = args.flag("verify");
+    let as_json = args.flag("json");
+    let report_path = args.opt("report").map(|s| s.to_string());
+    let path = args.shift().ok_or_else(|| anyhow::anyhow!("{usage}"))?;
+    args.finish()?;
+
+    let recording = taxbreak::trace::Trace::load(std::path::Path::new(&path))?;
+    let out = taxbreak::serving::replay(&recording)?;
+    let run = &out.run;
+
+    let mut kpis = Json::obj()
+        .with("trace", path.as_str())
+        .with("model", run.model.as_str())
+        .with("platform", recording.meta.platform.as_str())
+        .with("completed", run.completed)
+        .with("iterations", run.iterations)
+        .with("preemptions", run.preemptions)
+        .with("tokens_generated", run.tokens_generated)
+        .with("wall_us", run.wall_us)
+        .with("orchestration_us", run.orchestration_us())
+        .with("device_us", run.device_us())
+        .with(
+            "phases",
+            Json::Arr(
+                run.phases
+                    .iter()
+                    .map(|p| {
+                        Json::obj()
+                            .with("phase", p.phase)
+                            .with("host_us", p.host_us)
+                            .with("device_us", p.device_us)
+                            .with("kernels", p.kernels)
+                            .with("hdbi", p.hdbi())
+                    })
+                    .collect(),
+            ),
+        )
+        .with(
+            "per_device_hdbi",
+            Json::Arr(run.per_device.iter().map(|d| Json::from(d.hdbi)).collect()),
+        );
+
+    if verify {
+        // The fixed-point theorem, checked in both dialects: the
+        // replayed run's re-recording must be byte-identical to the
+        // input recording.
+        anyhow::ensure!(
+            out.trace.to_json().dump() == recording.to_json().dump(),
+            "replay diverged from the recording in the JSON dialect"
+        );
+        anyhow::ensure!(
+            binary::encode(&out.trace) == binary::encode(&recording),
+            "replay diverged from the recording in the binary dialect"
+        );
+        kpis.set("verified", Json::Bool(true));
+    }
+
+    if as_json {
+        println!("{}", kpis.pretty());
+    } else {
+        println!(
+            "== replay ({path}: {} on {}) ==",
+            run.model, recording.meta.platform
+        );
+        println!(
+            "{} requests completed, {} iterations ({} preemptions), {} tokens, wall {:.2} ms",
+            run.completed,
+            run.iterations,
+            run.preemptions,
+            run.tokens_generated,
+            run.wall_us / 1000.0
+        );
+        for p in &run.phases {
+            println!(
+                "  {:<8} host {:>10.1} us  device {:>10.1} us  kernels {:>6}  HDBI {:.3}",
+                p.phase,
+                p.host_us,
+                p.device_us,
+                p.kernels,
+                p.hdbi()
+            );
+        }
+        if run.per_device.len() > 1 {
+            let hdbis: Vec<String> =
+                run.per_device.iter().map(|d| format!("{:.3}", d.hdbi)).collect();
+            println!("  per-device HDBI: {}", hdbis.join(" "));
+        }
+        if verify {
+            println!(
+                "verify: record → replay → re-record is byte-identical in both dialects \
+                 ({} events)",
+                out.trace.events.len()
+            );
+        }
+    }
+
+    if !specs.is_empty() {
+        let cfs = whatif::parse_specs(&specs)?;
+        let schedule = Schedule::from_serving_trace(&out.trace)?;
+        let (result, _) = whatif::run_with_schedule(&schedule, &cfs)?;
+        if as_json {
+            println!("{}", whatif::report::to_json(&result).pretty());
+        } else {
+            print!("{}", whatif::report::whatif_table(&result).render());
+        }
+        kpis.set("whatif", whatif::report::to_json(&result));
+    }
+
+    if let Some(p) = report_path {
+        std::fs::write(&p, kpis.pretty())?;
+        println!("wrote {p}");
+    }
+    Ok(())
+}
+
 fn cmd_trace(mut args: Args) -> anyhow::Result<()> {
     let cfg = parse_run_config(&mut args)?;
     let out = args.opt_string("out", "trace.json");
@@ -539,9 +680,13 @@ fn cmd_loadgen(mut args: Args) -> anyhow::Result<()> {
     let capture_path = args.opt("capture").map(|s| s.to_string());
     let chrome_path = args.opt("chrome-out").map(|s| s.to_string());
     let bench_path = args.opt("bench-out").map(|s| s.to_string());
-    // Only the Chrome export needs the whole trace in memory; `--capture`
+    // The Chrome export and the bench datapoint's replay-throughput
+    // measurement need the whole trace in memory; `--capture` itself
     // streams each event to disk as the scheduler steps.
-    let cfg = LoadgenConfig { capture: chrome_path.is_some(), ..cfg };
+    let cfg = LoadgenConfig {
+        capture: chrome_path.is_some() || bench_path.is_some(),
+        ..cfg
+    };
     args.finish()?;
     let report = match &capture_path {
         Some(prefix) => {
@@ -557,7 +702,8 @@ fn cmd_loadgen(mut args: Args) -> anyhow::Result<()> {
             let report = run_sim_loadgen_streaming(&models, &platform, &cfg, &mut factory)?;
             for path in written {
                 println!(
-                    "wrote {path} (captured serving trace; replay with `taxbreak whatif --trace`)"
+                    "wrote {path} (captured serving trace; re-drive it with \
+                     `taxbreak replay {path}` or `taxbreak whatif --trace {path}`)"
                 );
             }
             report
@@ -570,7 +716,36 @@ fn cmd_loadgen(mut args: Args) -> anyhow::Result<()> {
         println!("wrote {p}");
     }
     if let Some(p) = bench_path {
-        std::fs::write(&p, report.bench_json().pretty())?;
+        use taxbreak::util::json::Json;
+        // The bench trajectory also tracks replay throughput: re-drive
+        // every captured run through `serving::replay` and time it.
+        let mut bench = report.bench_json();
+        let mut events = 0usize;
+        let mut tokens = 0usize;
+        let t0 = std::time::Instant::now();
+        for run in &report.runs {
+            let Some(trace) = &run.trace else { continue };
+            let out = taxbreak::serving::replay(trace)?;
+            anyhow::ensure!(
+                out.run.tokens_generated == run.tokens_generated,
+                "replay of the bench run diverged from its recording ({})",
+                run.model
+            );
+            events += trace.events.len();
+            tokens += out.run.tokens_generated;
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let rate = |n: usize| if secs > 0.0 { n as f64 / secs } else { 0.0 };
+        bench.set(
+            "replay",
+            Json::obj()
+                .with("events", events)
+                .with("tokens", tokens)
+                .with("wall_s", secs)
+                .with("events_per_s", rate(events))
+                .with("tokens_per_s", rate(tokens)),
+        );
+        std::fs::write(&p, bench.pretty())?;
         println!("wrote {p}");
     }
     for run in &report.runs {

@@ -19,13 +19,15 @@
 //!   real PJRT engine over AOT artifacts; see DESIGN.md §8 for the
 //!   split.
 
+use std::collections::VecDeque;
+
 use crate::hardware::Platform;
 use crate::kernels::cost;
 use crate::kernels::family::Family;
 use crate::models::ModelSpec;
 use crate::serving::ModelBackend;
 use crate::timeline::{self, StreamRef, Topology};
-use crate::trace::{EventKind, KernelMeta, Trace, TraceEvent, TraceMeta, Track};
+use crate::trace::{EventKind, KernelMeta, ReplayArgs, Trace, TraceEvent, TraceMeta, Track};
 use crate::util::rng::Rng;
 
 /// Greedy argmax over logits (first index wins ties) — the one shared
@@ -128,6 +130,12 @@ pub struct SimEngine {
     tl: timeline::Engine,
     /// Stream the next invocation lands on (round-robin).
     next_stream: u32,
+    /// Replay script: when armed, every timing draw pops the next
+    /// recorded value instead of sampling `timing_rng`, so a replayed
+    /// run reproduces the recording's virtual clock exactly (the RNG is
+    /// never re-seeded — Box-Muller spare caching makes re-seeding
+    /// unsound mid-stream).
+    script: Option<VecDeque<f64>>,
     trace: Trace,
     corr: u64,
 }
@@ -163,6 +171,7 @@ impl SimEngine {
             cfg,
             tl,
             next_stream: 0,
+            script: None,
             trace,
             corr: 0,
         }
@@ -199,6 +208,39 @@ impl SimEngine {
     /// single-replica traces stay spec-v1 byte-identical).
     fn stamp(&self) -> Option<u32> {
         (self.cfg.device_id != 0).then_some(self.cfg.device_id)
+    }
+
+    /// Arm the replay script: subsequent timing draws consume `draws`
+    /// front-to-front instead of sampling. `serving::replay` fills this
+    /// with the `rng_draw` values of a recording, in stream order.
+    pub fn script_draws(&mut self, draws: Vec<f64>) {
+        self.script = Some(draws.into());
+    }
+
+    /// One timing draw: sample (or pop the replay script) and record it
+    /// as a first-class `rng_draw` event, so the run's nondeterminism
+    /// is part of the trace and a replay can reproduce the clock
+    /// bit-identically. The recorded value is the *final* one — after
+    /// any `st_speed` scaling — so replay never re-derives it.
+    fn draw(&mut self, site: String, f: impl FnOnce(&mut Rng) -> f64) -> f64 {
+        let value = match self.script.as_mut() {
+            Some(q) => q.pop_front().unwrap_or_else(|| {
+                panic!("replay rng script exhausted at site '{site}' — the recording and the replayed run diverged")
+            }),
+            None => f(&mut self.timing_rng),
+        };
+        self.trace.push(TraceEvent {
+            kind: EventKind::RngDraw,
+            name: site.clone(),
+            ts_us: self.tl.host_now(0),
+            dur_us: 0.0,
+            correlation_id: 0,
+            track: Track::Host,
+            device: self.stamp(),
+            args: Some(ReplayArgs::RngDraw { site, value }),
+            meta: None,
+        });
+        value
     }
 
     /// Smallest compiled bucket that fits `n` sequences.
@@ -279,6 +321,7 @@ impl SimEngine {
             correlation_id: self.corr,
             track: Track::Host,
             device,
+            args: None,
             meta: None,
         });
         self.trace.push(TraceEvent {
@@ -289,6 +332,7 @@ impl SimEngine {
             correlation_id: self.corr,
             track: Track::Host,
             device,
+            args: None,
             meta: None,
         });
         self.trace.push(TraceEvent {
@@ -299,6 +343,7 @@ impl SimEngine {
             correlation_id: self.corr,
             track: Track::Host,
             device,
+            args: None,
             meta: None,
         });
         self.trace.push(TraceEvent {
@@ -309,6 +354,7 @@ impl SimEngine {
             correlation_id: self.corr,
             track: Track::Device(stream),
             device,
+            args: None,
             meta: Some(meta),
         });
     }
@@ -344,7 +390,25 @@ impl ModelBackend for SimEngine {
 
     fn wait_until_us(&mut self, t_us: f64) {
         // Virtual clock: jump over idle gaps so arrival-gated load
-        // generation doesn't busy-spin (a timeline idle jump).
+        // generation doesn't busy-spin (a timeline idle jump). The jump
+        // is a nondeterministic input to the recording (it depends on
+        // arrival timing), so it is recorded as a first-class
+        // `clock_jump` event: ts is the clock before the jump, dur the
+        // amount skipped.
+        let now = self.tl.host_now(0);
+        if t_us > now {
+            self.trace.push(TraceEvent {
+                kind: EventKind::ClockJump,
+                name: "clock_jump".to_string(),
+                ts_us: now,
+                dur_us: t_us - now,
+                correlation_id: 0,
+                track: Track::Host,
+                device: self.stamp(),
+                args: None,
+                meta: None,
+            });
+        }
         self.tl.host_wait_until(0, t_us);
     }
 
@@ -374,12 +438,17 @@ impl ModelBackend for SimEngine {
             .collect();
 
         let st = self.platform.cpu.st_speed;
-        let prep = self.timing_rng.lognormal_med(40.0, 0.20) / st;
-        let exec = self.timing_rng.lognormal_med(8.0, 0.15) / st;
+        let name = format!("prefill_b{bucket}_s{padded}");
+        let prep = self.draw(format!("prep::{name}"), |rng| {
+            rng.lognormal_med(40.0, 0.20) / st
+        });
+        let exec = self.draw(format!("exec::{name}"), |rng| {
+            rng.lognormal_med(8.0, 0.15) / st
+        });
         let dev = self.device_us(bucket * padded);
         let active = self.model.params_active();
         self.record(
-            &format!("prefill_b{bucket}_s{padded}"),
+            &name,
             prep,
             exec,
             dev,
@@ -412,12 +481,17 @@ impl ModelBackend for SimEngine {
         }
 
         let st = self.platform.cpu.st_speed;
-        let prep = self.timing_rng.lognormal_med(25.0, 0.20) / st;
-        let exec = self.timing_rng.lognormal_med(8.0, 0.15) / st;
+        let name = format!("decode_b{}", cache.bucket);
+        let prep = self.draw(format!("prep::{name}"), |rng| {
+            rng.lognormal_med(25.0, 0.20) / st
+        });
+        let exec = self.draw(format!("exec::{name}"), |rng| {
+            rng.lognormal_med(8.0, 0.15) / st
+        });
         let dev = self.device_us(cache.bucket);
         let active = self.model.params_active();
         self.record(
-            &format!("decode_b{}", cache.bucket),
+            &name,
             prep,
             exec,
             dev,
@@ -443,11 +517,13 @@ impl Backend for SimEngine {
 
     fn null_run(&mut self) -> anyhow::Result<(f64, f64)> {
         let st = self.platform.cpu.st_speed;
-        let dispatch = self.timing_rng.lognormal_med(5.0, 0.15) / st;
-        let gpu = &self.platform.gpu;
-        let launch = self
-            .timing_rng
-            .lognormal_med(gpu.t_sys_floor_us, gpu.floor_sigma);
+        let dispatch = self.draw("prep::null_kernel".to_string(), |rng| {
+            rng.lognormal_med(5.0, 0.15) / st
+        });
+        let (floor, sigma) = (self.platform.gpu.t_sys_floor_us, self.platform.gpu.floor_sigma);
+        let launch = self.draw("exec::null_kernel".to_string(), |rng| {
+            rng.lognormal_med(floor, sigma)
+        });
         self.record("null_kernel", dispatch, launch, 1.0, 0.0, 32.0);
         Ok((dispatch, launch))
     }
@@ -518,8 +594,17 @@ mod tests {
         let (next, cache) = e.prefill_group(&[vec![1, 2, 3]]).unwrap();
         let _ = e.decode_group(cache, 3, &next).unwrap();
         let trace = e.take_trace();
-        assert_eq!(trace.events.len(), 8); // 4 events per invocation
+        // 6 events per invocation: 2 rng draws + 4 observations.
+        assert_eq!(trace.events.len(), 12);
         assert_eq!(trace.kernel_count(), 2);
+        assert_eq!(
+            trace
+                .events
+                .iter()
+                .filter(|e| e.kind == EventKind::RngDraw)
+                .count(),
+            4
+        );
         crate::taxbreak::phase1::validate_trace(&trace).unwrap();
         assert!(trace.meta.wall_us > 0.0);
         // Virtual clock is monotone over host events.
@@ -540,7 +625,7 @@ mod tests {
 
         let (next, cache) = b.prefill_group(&[vec![1, 2, 3]]).unwrap();
         let mut drained = b.drain_events();
-        assert_eq!(drained.len(), 4, "one invocation = 4 events");
+        assert_eq!(drained.len(), 6, "one invocation = 6 events");
         let _ = b.decode_group(cache, 3, &next).unwrap();
         drained.extend(b.drain_events());
         assert_eq!(drained, whole.events, "drained events == buffered events");
@@ -619,5 +704,53 @@ mod tests {
         // emits no stamp at all (spec-v1 byte identity).
         assert!(multi.events.iter().all(|e| e.device == Some(2)));
         assert!(single.events.iter().all(|e| e.device.is_none()));
+    }
+
+    #[test]
+    fn scripted_draws_reproduce_a_recording_bit_identically() {
+        use crate::trace::ReplayArgs;
+        let drive = |e: &mut SimEngine| {
+            let _ = e.null_run().unwrap();
+            e.wait_until_us(500.0);
+            let (next, cache) = e.prefill_group(&[vec![1, 2, 3]]).unwrap();
+            let _ = e.decode_group(cache, 3, &next).unwrap();
+            e.take_trace()
+        };
+        let recorded = drive(&mut engine(5));
+        let draws: Vec<f64> = recorded
+            .events
+            .iter()
+            .filter_map(|ev| match &ev.args {
+                Some(ReplayArgs::RngDraw { value, .. }) => Some(*value),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(draws.len(), 6);
+        // A replay under a *different* seed, driven by the recorded
+        // draws, re-records the exact same trace.
+        let mut replayed = engine(99);
+        replayed.script_draws(draws);
+        let rerecorded = drive(&mut replayed);
+        assert_eq!(recorded.to_json().dump(), rerecorded.to_json().dump());
+    }
+
+    #[test]
+    fn idle_jumps_become_clock_jump_events() {
+        let mut e = engine(7);
+        e.wait_until_us(120.0);
+        e.wait_until_us(80.0); // backwards: no jump, no event
+        let (next, cache) = e.prefill_group(&[vec![1, 2]]).unwrap();
+        let _ = e.decode_group(cache, 2, &next).unwrap();
+        let t = e.take_trace();
+        let jumps: Vec<&TraceEvent> = t
+            .events
+            .iter()
+            .filter(|ev| ev.kind == EventKind::ClockJump)
+            .collect();
+        assert_eq!(jumps.len(), 1);
+        assert_eq!(jumps[0].ts_us, 0.0);
+        assert_eq!(jumps[0].dur_us, 120.0);
+        assert_eq!(jumps[0].correlation_id, 0);
+        crate::taxbreak::phase1::validate_trace(&t).unwrap();
     }
 }

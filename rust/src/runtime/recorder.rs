@@ -101,6 +101,7 @@ impl TraceRecorder {
             correlation_id: t.corr,
             track: Track::Host,
             device: None,
+            args: None,
             meta: None,
         });
         self.trace.push(TraceEvent {
@@ -111,6 +112,7 @@ impl TraceRecorder {
             correlation_id: t.corr,
             track: Track::Host,
             device: None,
+            args: None,
             meta: None,
         });
         self.trace.push(TraceEvent {
@@ -121,6 +123,7 @@ impl TraceRecorder {
             correlation_id: t.corr,
             track: Track::Host,
             device: None,
+            args: None,
             meta: None,
         });
         self.trace.push(TraceEvent {
@@ -131,6 +134,7 @@ impl TraceRecorder {
             correlation_id: t.corr,
             track: Track::Device(0),
             device: None,
+            args: None,
             meta: Some(meta),
         });
     }

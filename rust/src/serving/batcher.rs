@@ -28,10 +28,23 @@
 //! vocab token), and a group retires when all real members hit their
 //! decode budgets.
 
-use std::collections::VecDeque;
+use std::collections::{HashSet, VecDeque};
 
 use crate::serving::kv::PagedKvManager;
 use crate::serving::request::{Request, RequestState};
+
+/// One iteration's scheduling decisions — what [`Scheduler::step`]
+/// decided, in a form that can be recorded as a `sched_decision` trace
+/// event and replayed verbatim by [`Scheduler::script_decisions`].
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct StepDecision {
+    /// Request ids admitted this iteration, one inner vec per started
+    /// group (group boundaries matter: they fix bucket and padding).
+    pub admitted: Vec<Vec<u64>>,
+    /// Request ids requeued by KV backpressure preemption this
+    /// iteration, sorted ascending.
+    pub preempted: Vec<u64>,
+}
 
 /// Abstract model execution so the scheduler is testable without PJRT.
 pub trait ModelBackend {
@@ -149,6 +162,16 @@ pub struct Scheduler<B: ModelBackend> {
     /// Groups preempted under KV backpressure (for stats; always 0
     /// under reservation-backed admission).
     pub preemptions: usize,
+    /// What the most recent [`step`](Self::step) decided — recorded by
+    /// the capture path as a `sched_decision` event.
+    last_decision: StepDecision,
+    /// Decision replay script: when armed, `step` consumes one recorded
+    /// decision per iteration instead of running the admission
+    /// heuristics (decisions are *replayed, not re-decided*).
+    script: Option<VecDeque<StepDecision>>,
+    /// Every id the script ever admits — `submit` mirrors the recorded
+    /// door rejections by rejecting exactly the ids outside this set.
+    script_admitted: HashSet<u64>,
 }
 
 impl<B: ModelBackend> Scheduler<B> {
@@ -163,7 +186,37 @@ impl<B: ModelBackend> Scheduler<B> {
             finished: Vec::new(),
             iterations: 0,
             preemptions: 0,
+            last_decision: StepDecision::default(),
+            script: None,
+            script_admitted: HashSet::new(),
         }
+    }
+
+    /// Arm decision replay: every subsequent [`step`](Self::step) pops
+    /// the next recorded [`StepDecision`] and executes it verbatim.
+    /// `serving::replay` fills this from a recording's `sched_decision`
+    /// events (and sizes the KV pool so reservations cannot fail — the
+    /// recording already proved the schedule feasible).
+    pub fn script_decisions(&mut self, decisions: Vec<StepDecision>) {
+        self.script_admitted = decisions
+            .iter()
+            .flat_map(|d| d.admitted.iter().flatten().copied())
+            .collect();
+        self.script = Some(decisions.into());
+    }
+
+    /// What the most recent [`step`](Self::step) decided.
+    pub fn last_decision(&self) -> &StepDecision {
+        &self.last_decision
+    }
+
+    /// Sequences that will participate in the next decode iteration —
+    /// the `batch` field of the recorded `sched_decision` event.
+    pub fn active_members(&self) -> usize {
+        self.groups
+            .iter()
+            .map(|g| g.members.iter().filter(|m| !m.done()).count())
+            .sum()
     }
 
     /// Queue a request.  Unservable requests — a prompt the context
@@ -173,11 +226,19 @@ impl<B: ModelBackend> Scheduler<B> {
     /// of this queue, so one such request would otherwise head-of-line
     /// block every request behind it forever.
     pub fn submit(&mut self, request: Request) {
-        let max_seq = self.backend.max_seq();
-        let worst = self
-            .kv
-            .pages_for((request.prompt.len() + request.max_new_tokens).min(max_seq));
-        if request.prompt.len() > max_seq || worst > self.cfg.kv_pages {
+        let infeasible = if self.script.is_some() {
+            // Decision replay: the recording already decided — an id
+            // that never appears in any admitted group was rejected at
+            // the door, and the replay mirrors that verbatim.
+            !self.script_admitted.contains(&request.id)
+        } else {
+            let max_seq = self.backend.max_seq();
+            let worst = self
+                .kv
+                .pages_for((request.prompt.len() + request.max_new_tokens).min(max_seq));
+            request.prompt.len() > max_seq || worst > self.cfg.kv_pages
+        };
+        if infeasible {
             let mut st = RequestState::new(request);
             st.rejected = true;
             st.finish_us = Some(self.backend.now_us());
@@ -226,8 +287,28 @@ impl<B: ModelBackend> Scheduler<B> {
     /// active group by one decode step.
     pub fn step(&mut self) -> anyhow::Result<()> {
         self.iterations += 1;
-        self.admit()?;
-        self.advance()?;
+        self.last_decision = StepDecision::default();
+        let scripted = match self.script.as_mut() {
+            Some(q) => Some(q.pop_front().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "replay decision script exhausted at iteration {} — the \
+                     recording and the replayed run diverged",
+                    self.iterations
+                )
+            })?),
+            None => None,
+        };
+        match scripted {
+            Some(d) => {
+                self.admit_scripted(&d.admitted)?;
+                self.advance_scripted(&d.preempted)?;
+            }
+            None => {
+                self.admit()?;
+                self.advance()?;
+            }
+        }
+        self.last_decision.preempted.sort_unstable();
         self.retire();
         Ok(())
     }
@@ -334,8 +415,55 @@ impl<B: ModelBackend> Scheduler<B> {
         Ok(())
     }
 
+    /// Replayed admission: start exactly the recorded groups, extracting
+    /// members from the wait queue by id (order-independent — the queue
+    /// may hold requeued preemption victims in a different order).
+    fn admit_scripted(&mut self, admitted: &[Vec<u64>]) -> anyhow::Result<()> {
+        for group in admitted {
+            anyhow::ensure!(!group.is_empty(), "replay: recorded an empty admitted group");
+            let mut members = Vec::with_capacity(group.len());
+            for &id in group {
+                let pos = self.waiting.iter().position(|r| r.id == id).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "replay: admitted request {id} is not waiting — the \
+                         recording and the replayed run diverged"
+                    )
+                })?;
+                members.push(self.waiting.remove(pos).unwrap());
+            }
+            let padded_len = members.iter().map(|r| r.prompt.len()).max().unwrap();
+            self.start_group(members, padded_len)?;
+        }
+        Ok(())
+    }
+
+    /// Replayed advance: drop the recorded preemption victims first (a
+    /// preempted group never decodes in the step that drops it — the
+    /// live path pops victims before reaching them), then run the
+    /// normal front-to-back decode over the survivors.
+    fn advance_scripted(&mut self, preempted: &[u64]) -> anyhow::Result<()> {
+        if !preempted.is_empty() {
+            let mut gi = 0;
+            while gi < self.groups.len() {
+                let hit = self.groups[gi]
+                    .members
+                    .iter()
+                    .any(|m| !m.done() && preempted.contains(&m.request.id));
+                if hit {
+                    self.preempt_group(gi);
+                } else {
+                    gi += 1;
+                }
+            }
+        }
+        self.advance()
+    }
+
     fn start_group(&mut self, members: Vec<Request>, padded_len: usize) -> anyhow::Result<()> {
         let bucket = self.bucket_for(members.len())?;
+        self.last_decision
+            .admitted
+            .push(members.iter().map(|r| r.id).collect());
         let pad = self.backend.pad_id();
         // Right-pad prompts to the shared length with the dedicated pad
         // id (static shapes); pad can never collide with real content.
@@ -444,15 +572,23 @@ impl<B: ModelBackend> Scheduler<B> {
     /// progress is discarded; admission re-reserves for them).  Members
     /// that already finished keep their results.
     fn preempt_youngest(&mut self) {
-        let Some(g) = self.groups.pop() else {
-            return;
-        };
+        if !self.groups.is_empty() {
+            self.preempt_group(self.groups.len() - 1);
+        }
+    }
+
+    /// Drop group `idx`, requeueing its unfinished members and logging
+    /// them in [`Self::last_decision`] (so the recording can replay the
+    /// preemption verbatim).
+    fn preempt_group(&mut self, idx: usize) {
+        let g = self.groups.remove(idx);
         self.preemptions += 1;
         for m in g.members.into_iter().rev() {
             let _ = self.kv.release(m.request.id);
             if m.done() {
                 self.finished.push(m);
             } else {
+                self.last_decision.preempted.push(m.request.id);
                 self.waiting.push_front(m.request);
             }
         }
@@ -928,5 +1064,60 @@ mod tests {
         assert_eq!(s.finished().len(), 2, "both complete after preemption requeue");
         assert!(s.preemptions >= 1, "backpressure must have preempted");
         assert_eq!(s.kv.used_pages(), 0);
+    }
+
+    #[test]
+    fn scripted_decisions_reproduce_the_schedule() {
+        let submit_all = |s: &mut Scheduler<MockBackend>| {
+            for r in synthetic_requests(8, 251, 128, 7) {
+                s.submit(r);
+            }
+            s.submit(request(99, 200, 4)); // door-rejected in the recording
+        };
+        // Record: run under a constrained config, logging each step's
+        // decision and the mock backend's call pattern.
+        let cfg = SchedulerConfig {
+            max_batch: 4,
+            max_groups: 1,
+            kv_pages: 64,
+            kv_page_tokens: 16,
+        };
+        let mut rec = scheduler(cfg);
+        submit_all(&mut rec);
+        let mut decisions = Vec::new();
+        while !rec.is_idle() {
+            rec.step().unwrap();
+            decisions.push(rec.last_decision().clone());
+        }
+        let outputs = |s: Scheduler<MockBackend>| {
+            let mut f = s.into_finished();
+            f.sort_by_key(|st| st.request.id);
+            f.into_iter()
+                .map(|st| (st.request.id, st.rejected, st.generated))
+                .collect::<Vec<_>>()
+        };
+        let (rec_prefills, rec_decodes) = (rec.backend.prefills, rec.backend.decodes);
+        let recorded = outputs(rec);
+
+        // Replay: a *different* config (tighter batch cap, huge KV pool
+        // — the recording already proved feasibility) plus the script
+        // must reproduce the exact same schedule and outputs.
+        let mut rep = scheduler(SchedulerConfig {
+            max_batch: 1,
+            max_groups: 1,
+            kv_pages: 1 << 20,
+            kv_page_tokens: 16,
+        });
+        rep.script_decisions(decisions.clone());
+        submit_all(&mut rep);
+        let mut replayed_decisions = Vec::new();
+        while !rep.is_idle() {
+            rep.step().unwrap();
+            replayed_decisions.push(rep.last_decision().clone());
+        }
+        assert_eq!(decisions, replayed_decisions, "decisions replay verbatim");
+        assert_eq!(rep.backend.prefills, rec_prefills);
+        assert_eq!(rep.backend.decodes, rec_decodes);
+        assert_eq!(outputs(rep), recorded);
     }
 }

@@ -18,9 +18,12 @@
 use std::collections::VecDeque;
 
 use crate::runtime::backend::Backend;
-use crate::serving::batcher::{ModelBackend, StallGuard};
+use crate::serving::batcher::{ModelBackend, StallGuard, StepDecision};
 use crate::serving::{event_split, hdbi_of, prompt_token_bound, Request, Scheduler, SchedulerConfig};
-use crate::trace::{EventKind, Trace, TraceEvent, TraceMeta, TraceSink};
+use crate::trace::{
+    EventKind, NullSink, ReplayArgs, Trace, TraceBufferSink, TraceEvent, TraceMeta, TraceSink,
+    Track,
+};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::stats::{Summary, Welford};
@@ -588,69 +591,116 @@ impl LoadgenReport {
 
 /// [`drive`]'s full outcome: the run plus the raw latency samples
 /// (replica merging re-summarizes over the union).
-struct DriveOutcome {
-    run: ModelRun,
-    ttfts: Vec<f64>,
-    tpots: Vec<f64>,
+pub(crate) struct DriveOutcome {
+    pub(crate) run: ModelRun,
+    pub(crate) ttfts: Vec<f64>,
+    pub(crate) tpots: Vec<f64>,
+}
+
+/// The `arrival` recording event for one request: every nondeterministic
+/// input to the drive loop (who arrives, when, with what shape) becomes
+/// a first-class trace event, so [`crate::serving::replay`] can
+/// reconstruct the workload without re-running the generator.
+fn arrival_event(r: &Request, model: &str, device: Option<u32>) -> TraceEvent {
+    TraceEvent {
+        kind: EventKind::Arrival,
+        name: "arrival".to_string(),
+        ts_us: r.arrival_us,
+        dur_us: 0.0,
+        correlation_id: 0,
+        track: Track::Host,
+        device,
+        args: Some(ReplayArgs::Arrival {
+            req: r.id,
+            plen: r.prompt.len() as u64,
+            max_new: r.max_new_tokens as u64,
+            model: model.to_string(),
+        }),
+        meta: None,
+    }
+}
+
+/// Drain the backend's buffered events into stats + sink. The in-flight
+/// buffer is bounded by one step's output; only the sink decides
+/// whether anything is retained.
+fn drain_backend<B: Backend>(
+    s: &mut Scheduler<B>,
+    stats: &mut ServingStats,
+    peak: &mut usize,
+    sink: &mut dyn TraceSink,
+) -> anyhow::Result<()> {
+    let batch = s.backend.drain_events();
+    *peak = (*peak).max(batch.len());
+    for ev in &batch {
+        stats.observe(ev);
+        sink.event(ev)?;
+    }
+    Ok(())
 }
 
 /// Drive one backend through an arrival-stamped workload; the requests
 /// must be sorted by `arrival_us` (as [`generate_workload`] emits).
+/// Capture buffers through a [`TraceBufferSink`] on the same single
+/// event path every other sink uses.
 pub fn drive<B: Backend>(
     backend: B,
     sched: SchedulerConfig,
     requests: Vec<Request>,
     capture: bool,
 ) -> anyhow::Result<ModelRun> {
-    drive_collect(backend, sched, requests, capture, None).map(|o| o.run)
+    let mut buffer = capture.then(|| TraceBufferSink::new(backend.trace_meta()));
+    let mut null = NullSink;
+    let sink: &mut dyn TraceSink = match buffer.as_mut() {
+        Some(b) => b,
+        None => &mut null,
+    };
+    let mut out = drive_collect(backend, sched, requests, 0, None, sink)?;
+    if let Some(mut b) = buffer {
+        TraceSink::finish(&mut b, out.run.wall_us)?;
+        out.run.trace = Some(b.into_trace());
+    }
+    Ok(out.run)
 }
 
-fn drive_collect<B: Backend>(
+/// The one drive path: arrival-gated submission, iteration-level
+/// stepping, streaming drain into `sink`. Recording events (`arrival`,
+/// `sched_decision`; the backend contributes `rng_draw` / `clock_jump`)
+/// flow through the same sink as the observation events, stamped with
+/// the replica `device`. With `decisions`, the scheduler replays the
+/// recorded admissions/preemptions instead of re-deciding
+/// ([`Scheduler::script_decisions`]).
+pub(crate) fn drive_collect<B: Backend>(
     backend: B,
     sched: SchedulerConfig,
     requests: Vec<Request>,
-    capture: bool,
-    mut sink: Option<&mut dyn TraceSink>,
+    device: u32,
+    decisions: Option<Vec<StepDecision>>,
+    sink: &mut dyn TraceSink,
 ) -> anyhow::Result<DriveOutcome> {
     let variant = backend.variant().to_string();
+    let model_name = backend.trace_meta().model;
+    let stamp = (device != 0).then_some(device);
     let total_pages = sched.kv_pages.max(1) as f64;
     let mut queue: VecDeque<Request> = requests.into();
     let mut s = Scheduler::new(backend, sched);
+    if let Some(d) = decisions {
+        s.script_decisions(d);
+    }
     let mut occ = Welford::default();
     let mut occ_max = 0.0f64;
     let mut guard = StallGuard::default();
     let mut late_arrivals = 0usize;
-    // Streaming capture state: the backend is drained after every
-    // scheduler step, each event is split-accumulated and forwarded to
-    // the sink, and only `capture` retains the events in memory — the
-    // in-flight buffer is bounded by one step's output.
     let mut stats = ServingStats::new();
-    let mut buffered: Vec<TraceEvent> = Vec::new();
     let mut peak_buffered_events = 0usize;
-    let mut drain = |s: &mut Scheduler<B>,
-                     stats: &mut ServingStats,
-                     buffered: &mut Vec<TraceEvent>,
-                     peak: &mut usize,
-                     sink: &mut Option<&mut dyn TraceSink>|
-     -> anyhow::Result<()> {
-        let batch = s.backend.drain_events();
-        *peak = (*peak).max(batch.len());
-        for ev in &batch {
-            stats.observe(ev);
-            if let Some(sink) = sink.as_deref_mut() {
-                sink.event(ev)?;
-            }
-        }
-        if capture {
-            buffered.extend(batch);
-        }
-        Ok(())
-    };
 
     while !(queue.is_empty() && s.is_idle()) {
         let now = s.backend.now_us();
         while queue.front().is_some_and(|r| r.arrival_us <= now) {
-            s.submit(queue.pop_front().unwrap());
+            let r = queue.pop_front().unwrap();
+            let ev = arrival_event(&r, &model_name, stamp);
+            stats.observe(&ev);
+            sink.event(&ev)?;
+            s.submit(r);
         }
         if s.is_idle() {
             if let Some(front) = queue.front() {
@@ -663,13 +713,39 @@ fn drive_collect<B: Backend>(
                     late_arrivals += 1;
                     let mut r = queue.pop_front().unwrap();
                     r.arrival_us = s.backend.now_us();
+                    let ev = arrival_event(&r, &model_name, stamp);
+                    stats.observe(&ev);
+                    sink.event(&ev)?;
                     s.submit(r);
                 }
             }
             continue;
         }
         s.step()?;
-        drain(&mut s, &mut stats, &mut buffered, &mut peak_buffered_events, &mut sink)?;
+        drain_backend(&mut s, &mut stats, &mut peak_buffered_events, sink)?;
+        // The step's decisions become a first-class recording event
+        // (ts = the clock the step started at), closing the replay
+        // loop: admissions and preemptions are replayed, not
+        // re-decided.
+        let d = s.last_decision().clone();
+        let ev = TraceEvent {
+            kind: EventKind::SchedDecision,
+            name: "sched_decision".to_string(),
+            ts_us: now,
+            dur_us: 0.0,
+            correlation_id: 0,
+            track: Track::Host,
+            device: stamp,
+            args: Some(ReplayArgs::SchedDecision {
+                step: s.iterations as u64,
+                admitted: d.admitted,
+                preempted: d.preempted,
+                batch: s.active_members() as u64,
+            }),
+            meta: None,
+        };
+        stats.observe(&ev);
+        sink.event(&ev)?;
         // Same stall policy as `run_to_completion`: a request whose
         // worst case can never fit the pool must error, not spin.
         guard.observe(s.progress_marker(), || {
@@ -686,7 +762,7 @@ fn drive_collect<B: Backend>(
     }
     // Catch anything emitted outside a step (defensive; engines only
     // record inside invocations).
-    drain(&mut s, &mut stats, &mut buffered, &mut peak_buffered_events, &mut sink)?;
+    drain_backend(&mut s, &mut stats, &mut peak_buffered_events, sink)?;
 
     let iterations = s.iterations;
     let preemptions = s.preemptions;
@@ -726,10 +802,7 @@ fn drive_collect<B: Backend>(
             kv_occupancy_max: occ_max,
             hdbi: hdbi_of(stats.host_us, stats.device_us),
         }],
-        trace: capture.then(|| Trace {
-            meta,
-            events: buffered,
-        }),
+        trace: None, // captures live in whatever sink the caller chose
         peak_buffered_events,
     };
     Ok(DriveOutcome { run, ttfts, tpots })
@@ -737,10 +810,12 @@ fn drive_collect<B: Backend>(
 
 /// Merge the per-replica outcomes of one model into a single
 /// [`ModelRun`]: counters sum, wall is the slowest replica (they run
-/// concurrently in virtual time), latency summaries re-derive over the
-/// union of samples, and captured traces concatenate with disjoint
-/// correlation-id ranges (`device` stamps keep the lanes apart).
-fn merge_replicas(mut outcomes: Vec<DriveOutcome>, capture: bool) -> ModelRun {
+/// concurrently in virtual time), and latency summaries re-derive over
+/// the union of samples. Traces are not merged here: every replica
+/// already streamed through the shared per-model sink (correlation ids
+/// shifted into disjoint ranges by [`OffsetSink`]), so the capture
+/// exists exactly once.
+pub(crate) fn merge_replicas(mut outcomes: Vec<DriveOutcome>) -> ModelRun {
     debug_assert!(!outcomes.is_empty());
     if outcomes.len() == 1 {
         return outcomes.pop().expect("non-empty").run;
@@ -748,9 +823,7 @@ fn merge_replicas(mut outcomes: Vec<DriveOutcome>, capture: bool) -> ModelRun {
     let mut ttfts = Vec::new();
     let mut tpots = Vec::new();
     let mut per_device = Vec::with_capacity(outcomes.len());
-    let mut merged_trace: Option<Trace> = None;
     let mut base = outcomes[0].run.clone();
-    base.trace = None;
     base.completed = 0;
     base.rejected = 0;
     base.iterations = 0;
@@ -790,42 +863,27 @@ fn merge_replicas(mut outcomes: Vec<DriveOutcome>, capture: bool) -> ModelRun {
         let mut dev = o.run.per_device.remove(0);
         dev.device = r as u32;
         per_device.push(dev);
-        if capture {
-            if let Some(sub) = o.run.trace.take() {
-                let target = merged_trace.get_or_insert_with(|| {
-                    let mut t = Trace::new(sub.meta.clone());
-                    t.meta.wall_us = 0.0;
-                    t
-                });
-                target.meta.wall_us = target.meta.wall_us.max(sub.meta.wall_us);
-                // Disjoint correlation ranges per replica.
-                let offset = r as u64 * 1_000_000_000;
-                for mut e in sub.events {
-                    e.correlation_id += offset;
-                    target.push(e);
-                }
-            }
-        }
     }
     base.ttft_us = Summary::of(&ttfts);
     base.tpot_us = Summary::of(&tpots);
     base.per_device = per_device;
-    base.trace = merged_trace;
     base
 }
 
 /// Re-stamps one replica's events into the shared per-model sink:
-/// correlation ids shift into the replica's disjoint range (mirroring
-/// [`merge_replicas`]) and `finish` is swallowed — the caller seals the
-/// merged capture once, with the slowest replica's wall.
-struct OffsetSink<'a> {
-    inner: &'a mut dyn TraceSink,
-    corr_offset: u64,
+/// correlation ids shift into the replica's disjoint range and `finish`
+/// is swallowed — the caller seals the merged capture once, with the
+/// slowest replica's wall. Recording events (`arrival` / `rng_draw` /
+/// `sched_decision` / `clock_jump`) carry correlation id 0 — they
+/// belong to no kernel chain, and keep 0 on every replica.
+pub(crate) struct OffsetSink<'a> {
+    pub(crate) inner: &'a mut dyn TraceSink,
+    pub(crate) corr_offset: u64,
 }
 
 impl TraceSink for OffsetSink<'_> {
     fn event(&mut self, ev: &TraceEvent) -> anyhow::Result<()> {
-        if self.corr_offset == 0 {
+        if self.corr_offset == 0 || ev.correlation_id == 0 {
             return self.inner.event(ev);
         }
         let mut ev = ev.clone();
@@ -834,6 +892,29 @@ impl TraceSink for OffsetSink<'_> {
     }
 
     fn finish(&mut self, _wall_us: f64) -> anyhow::Result<()> {
+        Ok(())
+    }
+}
+
+/// Fans one event stream out to several sinks (e.g. the in-memory
+/// capture buffer and a streaming file sink), so the buffered and
+/// streamed captures can never diverge.
+pub(crate) struct TeeSink<'a> {
+    pub(crate) sinks: Vec<&'a mut dyn TraceSink>,
+}
+
+impl TraceSink for TeeSink<'_> {
+    fn event(&mut self, ev: &TraceEvent) -> anyhow::Result<()> {
+        for s in &mut self.sinks {
+            s.event(ev)?;
+        }
+        Ok(())
+    }
+
+    fn finish(&mut self, wall_us: f64) -> anyhow::Result<()> {
+        for s in &mut self.sinks {
+            s.finish(wall_us)?;
+        }
         Ok(())
     }
 }
@@ -913,12 +994,15 @@ fn run_sim_loadgen_inner(
         let vocab = Backend::vocab(&probe);
         let max_seq = ModelBackend::max_seq(&probe);
         let workload = generate_workload(cfg, prompt_token_bound(&probe, vocab)?, max_seq);
+        let meta = Backend::trace_meta(&probe);
         // One sink per model, opened against the run's metadata (wall is
         // stamped at finish, below); replicas stream into it in turn.
+        // A buffered capture is just another sink on the same path.
         let mut model_sink: Option<Box<dyn TraceSink>> = match sinks.as_deref_mut() {
-            Some(make) => Some(make(name, &Backend::trace_meta(&probe))?),
+            Some(make) => Some(make(name, &meta)?),
             None => None,
         };
+        let mut capture_buf = cfg.capture.then(|| TraceBufferSink::new(meta));
         drop(probe);
 
         let mut outcomes = Vec::with_capacity(cfg.devices);
@@ -936,18 +1020,31 @@ fn run_sim_loadgen_inner(
                 cfg.streams,
                 r as u32,
             );
-            // Correlation ids land in the same disjoint per-replica
-            // ranges merge_replicas assigns to the buffered capture.
-            let mut off = model_sink.as_deref_mut().map(|inner| OffsetSink {
-                inner,
+            // Every capture destination sits behind the same tee +
+            // correlation offset: replicas land in disjoint corr-id
+            // ranges, and buffered vs streamed captures see the exact
+            // same event sequence.
+            let mut fan: Vec<&mut dyn TraceSink> = Vec::new();
+            if let Some(buf) = capture_buf.as_mut() {
+                fan.push(buf);
+            }
+            if let Some(sk) = model_sink.as_deref_mut() {
+                fan.push(sk);
+            }
+            let mut tee = TeeSink { sinks: fan };
+            let mut off = OffsetSink {
+                inner: &mut tee,
                 corr_offset: (r as u64) * 1_000_000_000,
-            });
-            let sink_arg = off.as_mut().map(|o| o as &mut dyn TraceSink);
-            outcomes.push(drive_collect(engine, replica_sched, sub, cfg.capture, sink_arg)?);
+            };
+            outcomes.push(drive_collect(engine, replica_sched, sub, r as u32, None, &mut off)?);
         }
-        let mut run = merge_replicas(outcomes, cfg.capture);
+        let mut run = merge_replicas(outcomes);
         run.model = name.clone();
         run.moe = moe;
+        if let Some(mut buf) = capture_buf {
+            TraceSink::finish(&mut buf, run.wall_us)?;
+            run.trace = Some(buf.into_trace());
+        }
         if let Some(sink) = model_sink.as_deref_mut() {
             sink.finish(run.wall_us)?;
         }

@@ -13,13 +13,15 @@
 pub mod batcher;
 pub mod kv;
 pub mod loadgen;
+pub mod replay;
 pub mod request;
 
-pub use batcher::{ModelBackend, Scheduler, SchedulerConfig};
+pub use batcher::{ModelBackend, Scheduler, SchedulerConfig, StepDecision};
 pub use kv::PagedKvManager;
 pub use loadgen::{
     run_sim_loadgen, run_sim_loadgen_streaming, LenDist, LoadgenConfig, LoadgenReport, SinkFactory,
 };
+pub use replay::{replay, ReplayOutcome};
 pub use request::{synthetic_requests, Request, RequestState};
 
 use crate::runtime::backend::Backend;

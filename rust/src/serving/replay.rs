@@ -1,0 +1,292 @@
+//! `serving::replay` — re-drive the timeline engine from a recording.
+//!
+//! A spec-v3 capture (`taxbreak loadgen --capture`) records every
+//! nondeterministic input of a serving run as first-class trace events:
+//! `arrival` (who entered, when, with what shape), `rng_draw` (each
+//! consumed random value), `sched_decision` (each step's
+//! admissions/preemptions) and `clock_jump` (idle-time skips). Replay
+//! reconstructs the per-replica scripts from those events and drives
+//! the same engine + scheduler stack with every decision *replayed,
+//! not re-decided*:
+//!
+//! - arrivals are resubmitted at their recorded timestamps (prompt
+//!   token *values* never influence sim timing, so filler tokens of
+//!   the recorded length suffice);
+//! - the engine's timing RNG is replaced by the recorded draw script
+//!   ([`crate::runtime::SimEngine::script_draws`]);
+//! - the scheduler replays the recorded admission/preemption sequence
+//!   ([`crate::serving::Scheduler::script_decisions`]) against an
+//!   effectively unbounded KV pool — capacity pressure already shaped
+//!   the recorded decisions, so it must not be re-applied.
+//!
+//! The result is a *bit-identical* re-recording: record → replay →
+//! re-record is a byte-equal fixed point in both trace dialects
+//! (golden + property tests pin this). That makes any capture a
+//! deterministic substrate for counterfactual analysis — `taxbreak
+//! replay <trace> --counterfactual ...` re-runs `whatif` prescriptions
+//! against the replayed timeline.
+
+use std::collections::BTreeMap;
+
+use crate::serving::batcher::StepDecision;
+use crate::serving::loadgen::{
+    drive_collect, merge_replicas, ModelRun, OffsetSink,
+};
+use crate::serving::{Request, SchedulerConfig};
+use crate::trace::{
+    EventKind, ReplayArgs, Trace, TraceBufferSink, TraceEvent, TraceSink, Track,
+};
+
+/// Disjoint correlation-id range per replica — must match the offset
+/// `run_sim_loadgen` applies when recording.
+const REPLICA_CORR_STRIDE: u64 = 1_000_000_000;
+
+/// KV pool size for replayed schedulers: effectively unbounded, so the
+/// recorded admissions/preemptions are honored verbatim instead of
+/// being second-guessed by capacity checks.
+const REPLAY_KV_PAGES: usize = 1 << 20;
+
+/// One replica's reconstructed script: everything `drive_collect`
+/// needs to re-drive it deterministically.
+struct ReplicaScript {
+    device: u32,
+    requests: Vec<Request>,
+    draws: Vec<f64>,
+    decisions: Vec<StepDecision>,
+    /// Streams the replica's engine rotated over, inferred from the
+    /// highest device-track stream id. Stream labels are assigned
+    /// round-robin by invocation index, so `max + 1` reproduces the
+    /// recorded labeling exactly (an invocation count below the
+    /// recorded `--streams` yields the same labels either way).
+    streams: usize,
+}
+
+/// The outcome of replaying a recording: the re-driven run's KPIs plus
+/// the re-recorded trace (byte-identical to the input for a faithful
+/// recording).
+pub struct ReplayOutcome {
+    pub run: ModelRun,
+    pub trace: Trace,
+}
+
+/// Reconstruct the per-replica scripts from a recording's spec-v3
+/// events, keyed by replica device id (unstamped events are device 0).
+fn extract_scripts(recording: &Trace) -> anyhow::Result<Vec<ReplicaScript>> {
+    let mut by_dev: BTreeMap<u32, Vec<&TraceEvent>> = BTreeMap::new();
+    for e in &recording.events {
+        by_dev.entry(e.device_id()).or_default().push(e);
+    }
+    let mut scripts = Vec::with_capacity(by_dev.len());
+    for (device, events) in by_dev {
+        let mut s = ReplicaScript {
+            device,
+            requests: Vec::new(),
+            draws: Vec::new(),
+            decisions: Vec::new(),
+            streams: 1,
+        };
+        for e in events {
+            match (&e.kind, &e.args) {
+                (EventKind::Arrival, Some(ReplayArgs::Arrival { req, plen, max_new, model })) => {
+                    anyhow::ensure!(
+                        *model == recording.meta.model,
+                        "arrival for request {req} targets model '{model}', \
+                         but the trace head says '{}'",
+                        recording.meta.model
+                    );
+                    s.requests.push(Request {
+                        id: *req,
+                        // Token values never influence sim timing; only
+                        // the recorded length matters. 0 is always a
+                        // valid non-pad token.
+                        prompt: vec![0; *plen as usize],
+                        max_new_tokens: *max_new as usize,
+                        arrival_us: e.ts_us,
+                    });
+                }
+                (EventKind::RngDraw, Some(ReplayArgs::RngDraw { value, .. })) => {
+                    s.draws.push(*value);
+                }
+                (
+                    EventKind::SchedDecision,
+                    Some(ReplayArgs::SchedDecision { admitted, preempted, .. }),
+                ) => {
+                    s.decisions.push(StepDecision {
+                        admitted: admitted.clone(),
+                        preempted: preempted.clone(),
+                    });
+                }
+                _ => {}
+            }
+            if let Track::Device(stream) = e.track {
+                s.streams = s.streams.max(stream as usize + 1);
+            }
+        }
+        anyhow::ensure!(
+            !s.requests.is_empty() && !s.decisions.is_empty(),
+            "device {device} has kernels but no arrival/sched_decision recording events — \
+             this trace predates spec v3; re-capture it with `taxbreak loadgen --capture`"
+        );
+        scripts.push(s);
+    }
+    anyhow::ensure!(
+        !scripts.is_empty(),
+        "the trace is empty; nothing to replay"
+    );
+    Ok(scripts)
+}
+
+/// Replay a recorded serving trace: re-drive the engine + scheduler
+/// stack from the recording's spec-v3 events and return the re-driven
+/// KPIs plus the re-recorded trace. For a faithful recording the
+/// re-recording is byte-identical to the input in both dialects.
+pub fn replay(recording: &Trace) -> anyhow::Result<ReplayOutcome> {
+    let scripts = extract_scripts(recording)?;
+    let model = crate::models::by_name(&recording.meta.model)?;
+    let platform = crate::hardware::Platform::by_name(&recording.meta.platform)?;
+    let moe = model.is_moe();
+
+    let mut meta = recording.meta.clone();
+    meta.wall_us = 0.0;
+    let mut buf = TraceBufferSink::new(meta);
+    let mut outcomes = Vec::with_capacity(scripts.len());
+    for script in scripts {
+        // The replayed engine's seed is irrelevant: every timing draw
+        // comes from the recorded script, and the RNG is never
+        // consulted for anything that reaches the trace.
+        let mut engine = crate::runtime::SimEngine::with_topology(
+            model.clone(),
+            platform.clone(),
+            0,
+            script.streams,
+            script.device,
+        );
+        engine.script_draws(script.draws);
+        let sched = SchedulerConfig {
+            kv_pages: REPLAY_KV_PAGES,
+            ..SchedulerConfig::default()
+        };
+        let mut off = OffsetSink {
+            inner: &mut buf,
+            corr_offset: script.device as u64 * REPLICA_CORR_STRIDE,
+        };
+        outcomes.push(drive_collect(
+            engine,
+            sched,
+            script.requests,
+            script.device,
+            Some(script.decisions),
+            &mut off,
+        )?);
+    }
+    let mut run = merge_replicas(outcomes);
+    run.model = recording.meta.model.clone();
+    run.moe = moe;
+    TraceSink::finish(&mut buf, run.wall_us)?;
+    run.trace = None;
+    Ok(ReplayOutcome {
+        run,
+        trace: buf.into_trace(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::loadgen::{run_sim_loadgen, LoadgenConfig};
+    use crate::trace::binary;
+
+    fn fixed_point(cfg: LoadgenConfig) -> (Trace, ReplayOutcome) {
+        let report = run_sim_loadgen(&["gpt2".to_string()], "h200", &cfg).unwrap();
+        let recording = report.runs[0].trace.clone().unwrap();
+        let out = replay(&recording).unwrap();
+        assert_eq!(
+            out.trace.events, recording.events,
+            "replay must re-record the exact event stream"
+        );
+        assert_eq!(out.trace.meta, recording.meta);
+        assert_eq!(
+            out.trace.to_json().dump(),
+            recording.to_json().dump(),
+            "JSON dialect fixed point"
+        );
+        assert_eq!(
+            binary::encode(&out.trace),
+            binary::encode(&recording),
+            "binary dialect fixed point"
+        );
+        (recording, out)
+    }
+
+    #[test]
+    fn single_device_record_replay_rerecord_is_a_fixed_point() {
+        let cfg = LoadgenConfig {
+            requests: 6,
+            rate_per_s: 2000.0,
+            capture: true,
+            ..Default::default()
+        };
+        let (recording, out) = fixed_point(cfg);
+        assert!(recording.kernel_count() > 0);
+        assert_eq!(out.run.completed, 6);
+    }
+
+    #[test]
+    fn multi_device_multi_stream_record_replay_is_a_fixed_point() {
+        let cfg = LoadgenConfig {
+            requests: 9,
+            rate_per_s: 1500.0,
+            devices: 3,
+            streams: 2,
+            sched: SchedulerConfig { kv_pages: 96, ..Default::default() },
+            capture: true,
+            ..Default::default()
+        };
+        let (recording, out) = fixed_point(cfg);
+        let devs: std::collections::BTreeSet<u32> =
+            recording.events.iter().map(|e| e.device_id()).collect();
+        assert_eq!(devs.len(), 3, "the capture spans all replicas");
+        assert_eq!(out.run.completed, 9);
+        assert_eq!(out.run.per_device.len(), 3);
+    }
+
+    #[test]
+    fn replay_kpis_match_the_recorded_run() {
+        let cfg = LoadgenConfig {
+            requests: 5,
+            rate_per_s: 0.0,
+            capture: true,
+            ..Default::default()
+        };
+        let report = run_sim_loadgen(&["gpt2".to_string()], "h200", &cfg).unwrap();
+        let orig = &report.runs[0];
+        let recording = orig.trace.as_ref().unwrap();
+        let out = replay(recording).unwrap();
+        assert_eq!(out.run.completed, orig.completed);
+        assert_eq!(out.run.iterations, orig.iterations);
+        assert_eq!(out.run.tokens_generated, orig.tokens_generated);
+        assert_eq!(out.run.phases, orig.phases, "decomposition is identical");
+        assert!((out.run.wall_us - orig.wall_us).abs() < 1e-12);
+        assert!(
+            (out.run.per_device[0].hdbi - orig.per_device[0].hdbi).abs() < 1e-12,
+            "HDBI is identical"
+        );
+    }
+
+    #[test]
+    fn pre_v3_traces_are_rejected_with_a_recapture_hint() {
+        let report = run_sim_loadgen(
+            &["gpt2".to_string()],
+            "h200",
+            &LoadgenConfig { requests: 2, rate_per_s: 0.0, capture: true, ..Default::default() },
+        )
+        .unwrap();
+        let mut stripped = report.runs[0].trace.clone().unwrap();
+        stripped.events.retain(|e| e.args.is_none() && e.kind != EventKind::ClockJump);
+        let err = replay(&stripped).unwrap_err().to_string();
+        assert!(err.contains("taxbreak loadgen --capture"), "{err}");
+        let empty = Trace::new(stripped.meta.clone());
+        let err = replay(&empty).unwrap_err().to_string();
+        assert!(err.contains("nothing to replay"), "{err}");
+    }
+}

@@ -359,6 +359,7 @@ fn simulate_inner(
                         correlation_id: corr,
                         track: Track::Device(0),
                         device: None,
+                        args: None,
                         meta: Some(meta),
                     })?;
                 }
@@ -406,6 +407,7 @@ fn simulate_inner(
                 correlation_id: corr,
                 track: Track::Host,
                 device: None,
+                args: None,
                 meta: None,
             })?;
             s.event(&TraceEvent {
@@ -416,6 +418,7 @@ fn simulate_inner(
                 correlation_id: corr,
                 track: Track::Host,
                 device: None,
+                args: None,
                 meta: None,
             })?;
             s.event(&TraceEvent {
@@ -426,6 +429,7 @@ fn simulate_inner(
                 correlation_id: corr,
                 track: Track::Host,
                 device: None,
+                args: None,
                 meta: None,
             })?;
             s.event(&TraceEvent {
@@ -436,6 +440,7 @@ fn simulate_inner(
                 correlation_id: corr,
                 track: Track::Device(0),
                 device: None,
+                args: None,
                 meta: Some(meta),
             })?;
         }

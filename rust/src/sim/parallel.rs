@@ -80,6 +80,7 @@ fn push_chain(
         correlation_id: corr,
         track: Track::Host,
         device,
+        args: None,
         meta: None,
     });
     trace.push(TraceEvent {
@@ -90,6 +91,7 @@ fn push_chain(
         correlation_id: corr,
         track: Track::Host,
         device,
+        args: None,
         meta: None,
     });
     trace.push(TraceEvent {
@@ -100,6 +102,7 @@ fn push_chain(
         correlation_id: corr,
         track: Track::Host,
         device,
+        args: None,
         meta: None,
     });
     trace.push(TraceEvent {
@@ -110,6 +113,7 @@ fn push_chain(
         correlation_id: corr,
         track: Track::Device(stream),
         device,
+        args: None,
         meta: Some(meta),
     });
 }

@@ -9,7 +9,7 @@
 //!                  | batch varint | seq varint | m_tokens varint
 //! event    := 0x02 | kind u8 | presence u8 | name str
 //!                  | ts f64 | dur f64 | corr varint | track varint
-//!                  | [device varint] | [kernel-meta]
+//!                  | [device varint] | [replay-args] | [kernel-meta]
 //! trailer  := 0x03 | event_count u64 | wall_us f64 | end "TXBE"
 //! ```
 //!
@@ -32,7 +32,7 @@ use std::fmt;
 use std::io::{Read, Write};
 use std::path::Path;
 
-use super::event::{EventKind, KernelMeta, Track, TraceEvent};
+use super::event::{EventKind, KernelMeta, ReplayArgs, Track, TraceEvent};
 use super::{Trace, TraceMeta};
 
 /// File magic: first four bytes of every binary trace.
@@ -56,8 +56,11 @@ const TAG_TRAILER: u8 = 0x03;
 pub const TRAILER_LEN: usize = 1 + 8 + 8 + 4;
 
 /// Presence bits in an event record.
-const PRESENT_DEVICE: u8 = 0b01;
-const PRESENT_META: u8 = 0b10;
+const PRESENT_DEVICE: u8 = 0b001;
+const PRESENT_META: u8 = 0b010;
+/// Spec-v3 replay payload present (`args`, spec §10.4). Encoded
+/// between the device field and the kernel meta.
+const PRESENT_ARGS: u8 = 0b100;
 
 /// Upper bound on any single string length — a corrupt length prefix
 /// must not trigger a huge allocation before the read fails.
@@ -134,6 +137,10 @@ pub fn kind_code(kind: EventKind) -> u8 {
         EventKind::RuntimeApi => 2,
         EventKind::Kernel => 3,
         EventKind::Nvtx => 4,
+        EventKind::Arrival => 5,
+        EventKind::RngDraw => 6,
+        EventKind::SchedDecision => 7,
+        EventKind::ClockJump => 8,
     }
 }
 
@@ -144,6 +151,10 @@ pub fn kind_from_code(code: u8) -> Result<EventKind> {
         2 => EventKind::RuntimeApi,
         3 => EventKind::Kernel,
         4 => EventKind::Nvtx,
+        5 => EventKind::Arrival,
+        6 => EventKind::RngDraw,
+        7 => EventKind::SchedDecision,
+        8 => EventKind::ClockJump,
         other => {
             return Err(BinaryTraceError::Corrupt(format!(
                 "unknown event kind code {other}"
@@ -187,6 +198,46 @@ fn encode_meta(buf: &mut Vec<u8>, meta: &TraceMeta) {
     put_varint(buf, meta.m_tokens as u64);
 }
 
+fn encode_args(buf: &mut Vec<u8>, args: &ReplayArgs) {
+    match args {
+        ReplayArgs::Arrival {
+            req,
+            plen,
+            max_new,
+            model,
+        } => {
+            put_varint(buf, *req);
+            put_varint(buf, *plen);
+            put_varint(buf, *max_new);
+            put_str(buf, model);
+        }
+        ReplayArgs::RngDraw { site, value } => {
+            put_str(buf, site);
+            put_f64(buf, *value);
+        }
+        ReplayArgs::SchedDecision {
+            step,
+            admitted,
+            preempted,
+            batch,
+        } => {
+            put_varint(buf, *step);
+            put_varint(buf, admitted.len() as u64);
+            for group in admitted {
+                put_varint(buf, group.len() as u64);
+                for &id in group {
+                    put_varint(buf, id);
+                }
+            }
+            put_varint(buf, preempted.len() as u64);
+            for &id in preempted {
+                put_varint(buf, id);
+            }
+            put_varint(buf, *batch);
+        }
+    }
+}
+
 fn encode_event(buf: &mut Vec<u8>, ev: &TraceEvent) {
     buf.push(TAG_EVENT);
     buf.push(kind_code(ev.kind));
@@ -196,6 +247,9 @@ fn encode_event(buf: &mut Vec<u8>, ev: &TraceEvent) {
     }
     if ev.meta.is_some() {
         presence |= PRESENT_META;
+    }
+    if ev.args.is_some() {
+        presence |= PRESENT_ARGS;
     }
     buf.push(presence);
     put_str(buf, &ev.name);
@@ -211,6 +265,9 @@ fn encode_event(buf: &mut Vec<u8>, ev: &TraceEvent) {
     );
     if let Some(d) = ev.device {
         put_varint(buf, d as u64);
+    }
+    if let Some(args) = &ev.args {
+        encode_args(buf, args);
     }
     if let Some(m) = &ev.meta {
         put_str(buf, &m.kernel_name);
@@ -307,10 +364,69 @@ fn get_str<R: Read>(r: &mut R, what: &'static str) -> Result<String> {
         .map_err(|_| BinaryTraceError::Corrupt(format!("invalid UTF-8 in {what}")))
 }
 
+/// Upper bound on any single id-list length in a `SchedDecision`
+/// payload — same allocation guard as [`MAX_STR_LEN`].
+const MAX_LIST_LEN: u64 = 1 << 20;
+
+fn get_len<R: Read>(r: &mut R, what: &'static str) -> Result<usize> {
+    let len = get_varint(r, what)?;
+    if len > MAX_LIST_LEN {
+        return Err(BinaryTraceError::Corrupt(format!(
+            "list length {len} in {what} exceeds the {MAX_LIST_LEN}-entry cap"
+        )));
+    }
+    Ok(len as usize)
+}
+
+fn decode_args<R: Read>(r: &mut R, kind: EventKind) -> Result<ReplayArgs> {
+    Ok(match kind {
+        EventKind::Arrival => ReplayArgs::Arrival {
+            req: get_varint(r, "arrival req")?,
+            plen: get_varint(r, "arrival plen")?,
+            max_new: get_varint(r, "arrival max_new")?,
+            model: get_str(r, "arrival model")?,
+        },
+        EventKind::RngDraw => ReplayArgs::RngDraw {
+            site: get_str(r, "rng_draw site")?,
+            value: get_f64(r, "rng_draw value")?,
+        },
+        EventKind::SchedDecision => {
+            let step = get_varint(r, "sched_decision step")?;
+            let n_groups = get_len(r, "sched_decision group count")?;
+            let mut admitted = Vec::with_capacity(n_groups.min(64));
+            for _ in 0..n_groups {
+                let n = get_len(r, "sched_decision group size")?;
+                let mut group = Vec::with_capacity(n.min(1024));
+                for _ in 0..n {
+                    group.push(get_varint(r, "sched_decision admitted id")?);
+                }
+                admitted.push(group);
+            }
+            let n_pre = get_len(r, "sched_decision preempted count")?;
+            let mut preempted = Vec::with_capacity(n_pre.min(1024));
+            for _ in 0..n_pre {
+                preempted.push(get_varint(r, "sched_decision preempted id")?);
+            }
+            ReplayArgs::SchedDecision {
+                step,
+                admitted,
+                preempted,
+                batch: get_varint(r, "sched_decision batch")?,
+            }
+        }
+        other => {
+            return Err(BinaryTraceError::Corrupt(format!(
+                "event kind '{}' cannot carry an args payload",
+                other.as_str()
+            )))
+        }
+    })
+}
+
 fn decode_event<R: Read>(r: &mut R) -> Result<TraceEvent> {
     let kind = kind_from_code(get_u8(r, "event kind")?)?;
     let presence = get_u8(r, "event presence flags")?;
-    if presence & !(PRESENT_DEVICE | PRESENT_META) != 0 {
+    if presence & !(PRESENT_DEVICE | PRESENT_META | PRESENT_ARGS) != 0 {
         return Err(BinaryTraceError::Corrupt(format!(
             "unknown presence bits {presence:#04x}"
         )));
@@ -325,6 +441,16 @@ fn decode_event<R: Read>(r: &mut R) -> Result<TraceEvent> {
     };
     let device = if presence & PRESENT_DEVICE != 0 {
         Some(get_varint(r, "event device")? as u32)
+    } else {
+        None
+    };
+    let args = if presence & PRESENT_ARGS != 0 {
+        Some(decode_args(r, kind)?)
+    } else if kind.has_args() {
+        return Err(BinaryTraceError::Corrupt(format!(
+            "'{}' event lacks its args payload",
+            kind.as_str()
+        )));
     } else {
         None
     };
@@ -372,6 +498,7 @@ fn decode_event<R: Read>(r: &mut R) -> Result<TraceEvent> {
         correlation_id,
         track,
         device,
+        args,
         meta,
     })
 }

@@ -113,6 +113,7 @@ mod tests {
             correlation_id: 1,
             track: Track::Host,
             device: None,
+            args: None,
             meta: None,
         });
         t.push(TraceEvent {
@@ -123,6 +124,7 @@ mod tests {
             correlation_id: 1,
             track: Track::Device(3),
             device: None,
+            args: None,
             meta: None,
         });
         let j = to_chrome_json(&t);
@@ -161,6 +163,7 @@ mod tests {
                 correlation_id: 1 + dev as u64,
                 track: Track::Device(0),
                 device: (dev > 0).then_some(dev),
+                args: None,
                 meta: None,
             });
         }

@@ -10,6 +10,11 @@
 use crate::util::json::Json;
 
 /// Which trace source produced an event (CUPTI activity-kind analog).
+///
+/// The first five kinds are the spec-v1/v2 *observations*; the last
+/// four (spec v3, §4.2) are *recordings* — every source of
+/// nondeterminism a serving run consumes, captured so the run replays
+/// bit-identically (`serving::replay`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum EventKind {
     /// Python-level framework operator (`torch.*` call).
@@ -22,6 +27,18 @@ pub enum EventKind {
     Kernel,
     /// NVTX instrumentation range (Phase-2 replay scoping).
     Nvtx,
+    /// A request entering the serving system (spec v3). `ts` is the
+    /// effective submit time; the request parameters live in `args`.
+    Arrival,
+    /// One consumed random number (spec v3): site + final value, so
+    /// replay feeds the recorded value back instead of re-sampling.
+    RngDraw,
+    /// One scheduler step's admission/preemption outcome (spec v3) —
+    /// replayed, not re-decided.
+    SchedDecision,
+    /// The virtual clock jumping forward over idle time (spec v3).
+    /// `ts` is the clock before the jump, `dur` the jump amount.
+    ClockJump,
 }
 
 impl EventKind {
@@ -31,14 +48,18 @@ impl EventKind {
     /// The wildcard-free `guard` match makes a new variant a compile
     /// error *here* (not just in `as_str`): extend this array AND the
     /// §4.1 table in `docs/trace_format.md` together.
-    pub const ALL: [EventKind; 5] = {
+    pub const ALL: [EventKind; 9] = {
         const fn guard(k: EventKind) -> EventKind {
             match k {
                 EventKind::TorchOp
                 | EventKind::AtenOp
                 | EventKind::RuntimeApi
                 | EventKind::Kernel
-                | EventKind::Nvtx => k,
+                | EventKind::Nvtx
+                | EventKind::Arrival
+                | EventKind::RngDraw
+                | EventKind::SchedDecision
+                | EventKind::ClockJump => k,
             }
         }
         [
@@ -47,6 +68,10 @@ impl EventKind {
             guard(EventKind::RuntimeApi),
             guard(EventKind::Kernel),
             guard(EventKind::Nvtx),
+            guard(EventKind::Arrival),
+            guard(EventKind::RngDraw),
+            guard(EventKind::SchedDecision),
+            guard(EventKind::ClockJump),
         ]
     };
 
@@ -57,6 +82,10 @@ impl EventKind {
             EventKind::RuntimeApi => "runtime_api",
             EventKind::Kernel => "kernel",
             EventKind::Nvtx => "nvtx",
+            EventKind::Arrival => "arrival",
+            EventKind::RngDraw => "rng_draw",
+            EventKind::SchedDecision => "sched_decision",
+            EventKind::ClockJump => "clock_jump",
         }
     }
 
@@ -67,8 +96,21 @@ impl EventKind {
             "runtime_api" => EventKind::RuntimeApi,
             "kernel" => EventKind::Kernel,
             "nvtx" => EventKind::Nvtx,
+            "arrival" => EventKind::Arrival,
+            "rng_draw" => EventKind::RngDraw,
+            "sched_decision" => EventKind::SchedDecision,
+            "clock_jump" => EventKind::ClockJump,
             other => anyhow::bail!("unknown event kind '{other}'"),
         })
+    }
+
+    /// Does this kind carry a [`ReplayArgs`] payload? (`ClockJump`
+    /// needs only `ts`/`dur`, so it carries none.)
+    pub fn has_args(&self) -> bool {
+        matches!(
+            self,
+            EventKind::Arrival | EventKind::RngDraw | EventKind::SchedDecision
+        )
     }
 }
 
@@ -178,6 +220,130 @@ impl KernelMeta {
     }
 }
 
+/// Payload of a spec-v3 replay event (spec §4.2). The variant is
+/// implied by the owning event's [`EventKind`]; JSON serializes it
+/// under the `"args"` key, the binary dialect behind the
+/// `PRESENT_ARGS` presence bit.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ReplayArgs {
+    /// `Arrival`: the request as the drive loop saw it. Prompt *token
+    /// values* never influence sim timing (kernel names, FLOPs and
+    /// draws depend only on counts), so the length suffices for
+    /// bit-identical replay.
+    Arrival {
+        req: u64,
+        /// Prompt length in tokens.
+        plen: u64,
+        /// Generation budget (`max_new_tokens`).
+        max_new: u64,
+        /// Model the request targets.
+        model: String,
+    },
+    /// `RngDraw`: one consumed random value. `value` is the *final*
+    /// quantity the producer used (post any scaling), so replay
+    /// substitutes it verbatim without re-deriving RNG state.
+    RngDraw { site: String, value: f64 },
+    /// `SchedDecision`: one scheduler step. `admitted` preserves group
+    /// boundaries (one inner list per admitted batch group, member
+    /// request ids in admission order); `preempted` is sorted
+    /// ascending; `batch` is the number of active sequences after the
+    /// step.
+    SchedDecision {
+        step: u64,
+        admitted: Vec<Vec<u64>>,
+        preempted: Vec<u64>,
+        batch: u64,
+    },
+}
+
+impl ReplayArgs {
+    pub fn to_json(&self) -> Json {
+        match self {
+            ReplayArgs::Arrival {
+                req,
+                plen,
+                max_new,
+                model,
+            } => Json::obj()
+                .with("req", *req)
+                .with("plen", *plen)
+                .with("max_new", *max_new)
+                .with("model", model.as_str()),
+            ReplayArgs::RngDraw { site, value } => {
+                Json::obj().with("site", site.as_str()).with("value", *value)
+            }
+            ReplayArgs::SchedDecision {
+                step,
+                admitted,
+                preempted,
+                batch,
+            } => Json::obj()
+                .with("step", *step)
+                .with(
+                    "admitted",
+                    Json::Arr(
+                        admitted
+                            .iter()
+                            .map(|g| Json::Arr(g.iter().map(|&id| Json::from(id)).collect()))
+                            .collect(),
+                    ),
+                )
+                .with(
+                    "preempted",
+                    Json::Arr(preempted.iter().map(|&id| Json::from(id)).collect()),
+                )
+                .with("batch", *batch),
+        }
+    }
+
+    /// Parse the variant matching `kind` (the JSON payload itself is
+    /// untagged — the event kind selects the shape).
+    pub fn from_json(kind: EventKind, v: &Json) -> anyhow::Result<ReplayArgs> {
+        let ids = |key: &str| -> anyhow::Result<Vec<u64>> {
+            v.arr_of(key)?
+                .iter()
+                .map(|x| {
+                    x.as_u64()
+                        .ok_or_else(|| anyhow::anyhow!("{key} entries must be request ids"))
+                })
+                .collect()
+        };
+        Ok(match kind {
+            EventKind::Arrival => ReplayArgs::Arrival {
+                req: v.req("req")?.as_u64().unwrap_or(0),
+                plen: v.req("plen")?.as_u64().unwrap_or(0),
+                max_new: v.req("max_new")?.as_u64().unwrap_or(0),
+                model: v.str_of("model")?.to_string(),
+            },
+            EventKind::RngDraw => ReplayArgs::RngDraw {
+                site: v.str_of("site")?.to_string(),
+                value: v.f64_of("value")?,
+            },
+            EventKind::SchedDecision => ReplayArgs::SchedDecision {
+                step: v.req("step")?.as_u64().unwrap_or(0),
+                admitted: v
+                    .arr_of("admitted")?
+                    .iter()
+                    .map(|g| {
+                        g.as_arr()
+                            .ok_or_else(|| anyhow::anyhow!("admitted must be a list of groups"))?
+                            .iter()
+                            .map(|x| {
+                                x.as_u64().ok_or_else(|| {
+                                    anyhow::anyhow!("admitted group entries must be request ids")
+                                })
+                            })
+                            .collect()
+                    })
+                    .collect::<anyhow::Result<Vec<Vec<u64>>>>()?,
+                preempted: ids("preempted")?,
+                batch: v.req("batch")?.as_u64().unwrap_or(0),
+            },
+            other => anyhow::bail!("event kind '{}' carries no args", other.as_str()),
+        })
+    }
+}
+
 /// One trace event. Times are microseconds on a common clock.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TraceEvent {
@@ -186,6 +352,7 @@ pub struct TraceEvent {
     pub ts_us: f64,
     pub dur_us: f64,
     /// Links TorchOp -> AtenOp -> RuntimeApi -> Kernel chains.
+    /// Spec-v3 replay events carry `0` — they belong to no chain.
     pub correlation_id: u64,
     pub track: Track,
     /// Device (GPU / rank) the event belongs to. `None` means device 0
@@ -194,6 +361,9 @@ pub struct TraceEvent {
     /// Multi-device producers (tensor-parallel sim, replica serving)
     /// stamp it; `track` stays the stream id *within* the device.
     pub device: Option<u32>,
+    /// Spec-v3 replay payload; `None` for observation events and
+    /// `ClockJump` (spec §4.2), keeping v1/v2 traces byte-identical.
+    pub args: Option<ReplayArgs>,
     pub meta: Option<KernelMeta>,
 }
 
@@ -218,6 +388,9 @@ impl TraceEvent {
         if let Some(d) = self.device {
             o.set("device", Json::from(d));
         }
+        if let Some(args) = &self.args {
+            o.set("args", args.to_json());
+        }
         if let Some(meta) = &self.meta {
             o.set("meta", meta.to_json());
         }
@@ -225,14 +398,27 @@ impl TraceEvent {
     }
 
     pub fn from_json(v: &Json) -> anyhow::Result<TraceEvent> {
+        let kind = EventKind::parse(v.str_of("kind")?)?;
+        let args = match v.get("args") {
+            Some(a) => Some(ReplayArgs::from_json(kind, a)?),
+            None => {
+                anyhow::ensure!(
+                    !kind.has_args(),
+                    "'{}' event lacks its args payload",
+                    kind.as_str()
+                );
+                None
+            }
+        };
         Ok(TraceEvent {
-            kind: EventKind::parse(v.str_of("kind")?)?,
+            kind,
             name: v.str_of("name")?.to_string(),
             ts_us: v.f64_of("ts")?,
             dur_us: v.f64_of("dur")?,
             correlation_id: v.req("corr")?.as_u64().unwrap_or(0),
             track: Track::from_json(v.req("track")?)?,
             device: v.get("device").and_then(|d| d.as_u64()).map(|d| d as u32),
+            args,
             meta: match v.get("meta") {
                 Some(m) => Some(KernelMeta::from_json(m)?),
                 None => None,
@@ -283,6 +469,7 @@ mod tests {
             correlation_id: 42,
             track: Track::Device(0),
             device: None,
+            args: None,
             meta: Some(sample_meta()),
         };
         let back = TraceEvent::from_json(&ev.to_json()).unwrap();
@@ -299,6 +486,7 @@ mod tests {
             correlation_id: 7,
             track: Track::Host,
             device: None,
+            args: None,
             meta: None,
         };
         let back = TraceEvent::from_json(&ev.to_json()).unwrap();
@@ -315,6 +503,7 @@ mod tests {
             correlation_id: 3,
             track: Track::Device(1),
             device: Some(2),
+            args: None,
             meta: None,
         };
         assert_eq!(ev.device_id(), 2);
@@ -349,6 +538,7 @@ mod tests {
             correlation_id: 0,
             track: Track::Host,
             device: None,
+            args: None,
             meta: None,
         };
         assert_eq!(ev.end_us(), 12.5);

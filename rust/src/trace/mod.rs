@@ -19,7 +19,7 @@ pub mod event;
 pub mod sink;
 
 pub use binary::{BinaryTraceError, BinaryTraceReader, BinaryTraceWriter, Dialect};
-pub use event::{EventKind, KernelMeta, Track, TraceEvent};
+pub use event::{EventKind, KernelMeta, ReplayArgs, Track, TraceEvent};
 pub use sink::{CountingSink, NullSink, TraceBufferSink, TraceSink};
 
 use std::collections::HashMap;
@@ -151,6 +151,13 @@ impl Trace {
                 EventKind::RuntimeApi => chain.runtime_api = Some(e),
                 EventKind::Kernel => chain.kernel = Some(e),
                 EventKind::Nvtx => chain.nvtx = Some(e),
+                // Replay recordings (spec v3) belong to no kernel chain;
+                // they always carry correlation id 0, so the guard above
+                // already skipped them.
+                EventKind::Arrival
+                | EventKind::RngDraw
+                | EventKind::SchedDecision
+                | EventKind::ClockJump => {}
             }
         }
         map
@@ -234,6 +241,7 @@ mod tests {
             correlation_id: corr,
             track: Track::Device(0),
             device: None,
+            args: None,
             meta: Some(KernelMeta {
                 kernel_name: name.to_string(),
                 family: "elem_generic".into(),
@@ -257,6 +265,7 @@ mod tests {
             correlation_id: corr,
             track: Track::Host,
             device: None,
+            args: None,
             meta: None,
         }
     }

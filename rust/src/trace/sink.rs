@@ -178,6 +178,7 @@ mod tests {
             correlation_id: corr,
             track: Track::Device(0),
             device: None,
+            args: None,
             meta: None,
         }
     }

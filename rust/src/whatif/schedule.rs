@@ -15,7 +15,12 @@
 //!   `taxbreak loadgen --capture`) — engines execute synchronously, so
 //!   every invocation is a synced step whose preparation span is the
 //!   host path and whose execute-call + device spans follow serially;
-//!   inter-chain gaps are arrival idle time.
+//!   inter-chain gaps are arrival idle time.  Multi-replica captures
+//!   (`--devices N --streams M`) extract directly: each step carries
+//!   its replica `device` and stream label, replicas replay on
+//!   independent host threads of a matching [`timeline::Topology`],
+//!   and the re-derived wall is the slowest replica's — the same
+//!   merge convention the recording used.
 //!
 //! Re-simulating the unmodified schedule reproduces the recorded
 //! wall-clock (identity fidelity — enforced by `rust/tests/whatif.rs`);
@@ -79,6 +84,11 @@ pub struct Step {
     pub bytes: f64,
     /// Collapsed into a captured CUDA graph by a transform.
     pub graphed: bool,
+    /// Replica/device the step ran on (0 in single-timeline traces).
+    pub device: u32,
+    /// Stream label within the device (serving engines rotate
+    /// invocations over streams; host-blocking keeps them serial).
+    pub stream: u32,
 }
 
 impl Step {
@@ -105,6 +115,11 @@ pub struct Schedule {
     pub baseline_st_speed: f64,
     /// Phase-2 null-kernel floor (gap splitting, graph-launch floors).
     pub floor_hint_us: f64,
+    /// Replicas (devices) the schedule spans; each replays on its own
+    /// host thread.
+    pub devices: usize,
+    /// Stream lanes per device the re-simulation topology needs.
+    pub streams_per_device: usize,
 }
 
 impl Schedule {
@@ -118,14 +133,24 @@ impl Schedule {
     /// level via `sim::parallel`).
     pub fn from_eager_trace(trace: &Trace, p2: &Phase2Result) -> anyhow::Result<Schedule> {
         crate::taxbreak::phase1::validate_trace(trace)?;
+        let devices = 1 + trace.events.iter().map(|e| e.device_id()).max().unwrap_or(0) as usize;
+        let streams = 1 + trace
+            .events
+            .iter()
+            .filter_map(|e| match e.track {
+                Track::Device(s) => Some(s),
+                Track::Host => None,
+            })
+            .max()
+            .unwrap_or(0) as usize;
         anyhow::ensure!(
-            trace.events.iter().all(|e| e.device.is_none()
-                && match e.track {
-                    Track::Device(s) => s == 0,
-                    Track::Host => true,
-                }),
-            "schedule extraction requires a single-device, single-stream eager \
-             trace; multi-stream timelines do not replay on a serial schedule"
+            devices == 1 && streams == 1,
+            "eager schedule extraction requires a single-device, single-stream \
+             trace, but this one spans {devices} device(s) x {streams} stream(s); \
+             concurrent eager timelines do not replay on a serial schedule \
+             (replay them at the engine level via `sim::parallel`). Serving \
+             captures of any topology replay deterministically via \
+             `taxbreak replay <trace>`."
         );
         let chains = trace.correlation_chains();
         let mut ids: Vec<u64> = chains
@@ -206,6 +231,8 @@ impl Schedule {
                 flops: meta.flops,
                 bytes: meta.bytes,
                 graphed: false,
+                device: 0,
+                stream: 0,
             });
             prev_api_end = api.end_us();
             prev_kernel_end = prev_kernel_end.max(kernel.end_us());
@@ -221,33 +248,39 @@ impl Schedule {
             tail_host_us: tail,
             baseline_st_speed: crate::hardware::baseline_st_speed(&trace.meta.platform),
             floor_hint_us: floor_hint,
+            devices: 1,
+            streams_per_device: 1,
         })
     }
 
     /// Extract from a captured serving run (`phase == "serve"`): every
     /// invocation is host-blocking, inter-chain gaps are arrival idle.
     ///
-    /// Single-device traces only (a merged `loadgen --devices N`
-    /// capture interleaves N independent replica clocks — replaying
-    /// them serially would break identity fidelity). Stream labels are
-    /// irrelevant here: a host-blocking engine never overlaps streams.
+    /// Any `taxbreak loadgen --capture` output works, including merged
+    /// multi-replica / multi-stream captures: replicas carry disjoint
+    /// correlation-id ranges and `device` stamps, so each chain is
+    /// attributed to its replica's independent clock (per-device
+    /// `prev_end`), and the schedule records the topology the
+    /// re-simulation must rebuild. Spec-v3 recording events (`arrival`,
+    /// `rng_draw`, ...) carry correlation id 0 and never form chains,
+    /// so they pass through extraction untouched.
     pub fn from_serving_trace(trace: &Trace) -> anyhow::Result<Schedule> {
         crate::taxbreak::phase1::validate_trace(trace)?;
-        anyhow::ensure!(
-            trace.events.iter().all(|e| e.device.is_none()),
-            "schedule extraction requires a single-device serving trace; \
-             replay multi-replica runs per device (capture with --devices 1)"
-        );
         let chains = trace.correlation_chains();
         let mut ids: Vec<u64> = chains
             .iter()
             .filter(|(_, c)| c.kernel.is_some_and(|k| k.meta.is_some()))
             .map(|(&id, _)| id)
             .collect();
+        // Replica correlation ranges are offset by 1e9 per device, so
+        // the sorted order groups replicas and stays chronological
+        // within each.
         ids.sort();
 
         let mut steps = Vec::with_capacity(ids.len());
-        let mut prev_end = 0.0f64;
+        let mut prev_end: std::collections::HashMap<u32, f64> = std::collections::HashMap::new();
+        let mut devices = 1usize;
+        let mut streams = 1usize;
         for id in ids {
             let c = &chains[&id];
             let (torch, kernel) = match (c.torch_op, c.kernel) {
@@ -257,13 +290,21 @@ impl Schedule {
             let meta = kernel.meta.as_ref().expect("filtered for meta");
             let prep = c.aten_op.map(|a| a.dur_us).unwrap_or(0.0);
             let exec = c.runtime_api.map(|r| r.dur_us).unwrap_or(0.0);
+            let device = kernel.device_id();
+            let stream = match kernel.track {
+                Track::Device(s) => s,
+                Track::Host => 0,
+            };
+            devices = devices.max(device as usize + 1);
+            streams = streams.max(stream as usize + 1);
+            let prev = prev_end.entry(device).or_insert(0.0);
             steps.push(Step {
                 name: meta.kernel_name.clone(),
                 family: meta.family.clone(),
                 dedup_key: meta.dedup_key(),
                 lib_mediated: meta.lib_mediated,
                 synced: true,
-                pre_host_us: (torch.ts_us - prev_end).max(0.0),
+                pre_host_us: (torch.ts_us - *prev).max(0.0),
                 t_py_us: 0.0,
                 t_base_us: prep,
                 t_ct_us: 0.0,
@@ -274,10 +315,13 @@ impl Schedule {
                 flops: meta.flops,
                 bytes: meta.bytes,
                 graphed: false,
+                device,
+                stream,
             });
-            prev_end = kernel.end_us();
+            *prev = kernel.end_us();
         }
-        let tail = (trace.e2e_us() - prev_end).max(0.0);
+        let last = prev_end.values().fold(0.0f64, |a, &b| a.max(b));
+        let tail = (trace.e2e_us() - last).max(0.0);
         Ok(Schedule {
             mode: ScheduleMode::Synchronous,
             platform: trace.meta.platform.clone(),
@@ -287,6 +331,8 @@ impl Schedule {
             tail_host_us: tail,
             baseline_st_speed: crate::hardware::baseline_st_speed(&trace.meta.platform),
             floor_hint_us: 0.0,
+            devices,
+            streams_per_device: streams,
         })
     }
 }
@@ -341,29 +387,42 @@ impl Outcome {
 /// span + kernel span per step) for Chrome-timeline export.
 ///
 /// The timeline is the shared discrete-event engine
-/// ([`timeline::Engine`]) on the single topology — the identical
-/// host-cursor/stream-FIFO semantics the simulator runs on, so
-/// identity replay stays exact by construction.
+/// ([`timeline::Engine`]) on the schedule's own topology — one host
+/// thread per replica device, the identical host-cursor/stream-FIFO
+/// semantics the recording ran on, so identity replay stays exact by
+/// construction. The re-derived wall is the slowest replica's
+/// (matching the recording's merge convention); single-timeline
+/// schedules degenerate to the old serial behavior bit-for-bit.
 pub fn resimulate_with_trace(s: &Schedule, record: bool) -> (Outcome, Option<Trace>) {
     let mut out = Outcome::default();
     let mut events: Vec<TraceEvent> = Vec::new();
-    let mut tl = timeline::Engine::single();
+    let devices = s.devices.max(1);
+    let mut tl = timeline::Engine::new(timeline::Topology {
+        devices,
+        streams_per_device: s.streams_per_device.max(1),
+        host_threads: devices,
+    });
     let mut corr = 0u64;
 
     for step in &s.steps {
+        let tid = step.device as usize;
+        let sref = StreamRef {
+            device: step.device,
+            stream: step.stream,
+        };
         if step.synced {
-            tl.host_wait_until(0, tl.sync_point());
+            tl.host_wait_until(tid, tl.device_sync_point(step.device));
         }
-        tl.host_advance(0, step.pre_host_us);
+        tl.host_advance(tid, step.pre_host_us);
         // Segment-wise advances preserve the pre-engine cursor chain
         // `((t + py) + base) + ct` bit-for-bit (identity fidelity).
-        let (torch_ts, _) = tl.host_advance(0, step.t_py_us);
-        tl.host_advance(0, step.t_base_us);
-        let (_, api_ts) = tl.host_advance(0, step.t_ct_us);
-        let (_, api_end) = tl.host_advance(0, step.api_us);
+        let (torch_ts, _) = tl.host_advance(tid, step.t_py_us);
+        tl.host_advance(tid, step.t_base_us);
+        let (_, api_ts) = tl.host_advance(tid, step.t_ct_us);
+        let (_, api_end) = tl.host_advance(tid, step.api_us);
         let timing = match s.mode {
             ScheduleMode::Eager => tl.submit(
-                StreamRef::PRIMARY,
+                sref,
                 api_ts,
                 step.floor_us + step.excess_us,
                 step.device_us,
@@ -371,12 +430,12 @@ pub fn resimulate_with_trace(s: &Schedule, record: bool) -> (Outcome, Option<Tra
             ScheduleMode::Synchronous => {
                 // Host blocks through the device computation.
                 let timing = tl.submit(
-                    StreamRef::PRIMARY,
-                    api_end.max(tl.sync_point()),
+                    sref,
+                    api_end.max(tl.device_sync_point(step.device)),
                     step.floor_us + step.excess_us,
                     step.device_us,
                 );
-                tl.host_wait_until(0, timing.end_us);
+                tl.host_wait_until(tid, timing.end_us);
                 timing
             }
         };
@@ -388,6 +447,7 @@ pub fn resimulate_with_trace(s: &Schedule, record: bool) -> (Outcome, Option<Tra
         out.dkt_us += step.floor_us;
         if record {
             corr += 1;
+            let stamp = (step.device != 0).then_some(step.device);
             events.push(TraceEvent {
                 kind: EventKind::TorchOp,
                 name: format!("whatif.{}", step.name),
@@ -395,7 +455,8 @@ pub fn resimulate_with_trace(s: &Schedule, record: bool) -> (Outcome, Option<Tra
                 dur_us: api_end - torch_ts,
                 correlation_id: corr,
                 track: Track::Host,
-                device: None,
+                device: stamp,
+                args: None,
                 meta: None,
             });
             events.push(TraceEvent {
@@ -404,8 +465,9 @@ pub fn resimulate_with_trace(s: &Schedule, record: bool) -> (Outcome, Option<Tra
                 ts_us: timing.start_us,
                 dur_us: step.device_us,
                 correlation_id: corr,
-                track: Track::Device(0),
-                device: None,
+                track: Track::Device(step.stream),
+                device: stamp,
+                args: None,
                 meta: Some(KernelMeta {
                     kernel_name: step.name.clone(),
                     family: step.family.clone(),
@@ -420,9 +482,16 @@ pub fn resimulate_with_trace(s: &Schedule, record: bool) -> (Outcome, Option<Tra
             });
         }
     }
-    tl.host_wait_until(0, tl.sync_point());
-    tl.host_advance(0, s.tail_host_us);
-    out.e2e_us = tl.host_now(0).max(tl.sync_point());
+    // Every replica drains, then the slowest one carries the trailing
+    // host time — the recording's merge convention (wall = max).
+    for d in 0..devices {
+        tl.host_wait_until(d, tl.device_sync_point(d as u32));
+    }
+    let end = (0..devices)
+        .map(|d| tl.host_now(d))
+        .fold(0.0f64, f64::max)
+        .max(tl.sync_point());
+    out.e2e_us = end + s.tail_host_us;
 
     let trace = record.then(|| {
         let mut tr = Trace::new(crate::trace::TraceMeta {
@@ -539,7 +608,7 @@ mod tests {
     }
 
     #[test]
-    fn multi_stream_and_multi_device_traces_are_rejected() {
+    fn multi_stream_and_multi_device_eager_traces_are_rejected() {
         // Expert-parallel trace: kernels overlap across streams — a
         // serial replay would mis-derive the baseline.
         let ep = crate::sim::simulate_expert_parallel(
@@ -555,6 +624,10 @@ mod tests {
         let p2 = run(&p1.db, &mut backend, &ReplayConfig::fast());
         let err = Schedule::from_eager_trace(&ep, &p2).unwrap_err();
         assert!(err.to_string().contains("single-device"), "{err}");
+        // The rejection names the offending topology and the replay
+        // path that does handle it.
+        assert!(err.to_string().contains("stream(s)"), "{err}");
+        assert!(err.to_string().contains("taxbreak replay"), "{err}");
 
         // Tensor-parallel trace: device-stamped SPMD ranks.
         let tp = crate::sim::simulate_tensor_parallel(
@@ -566,8 +639,14 @@ mod tests {
         )
         .unwrap();
         assert!(Schedule::from_eager_trace(&tp, &p2).is_err());
+    }
 
-        // A device-stamped serving trace (merged replica capture).
+    #[test]
+    fn device_stamped_serving_traces_extract_and_replay_exactly() {
+        // A device-stamped serving trace (one replica of a merged
+        // `--devices N` capture): extraction attributes the chains to
+        // the replica's own clock and identity replay runs on a
+        // matching topology.
         let mut engine = crate::runtime::SimEngine::with_topology(
             models::gpt2(),
             Platform::h200(),
@@ -580,7 +659,42 @@ mod tests {
         let (next, cache) = engine.prefill_group(&[vec![1, 2]]).unwrap();
         let _ = engine.decode_group(cache, 2, &next).unwrap();
         let trace = engine.take_trace();
-        let err = Schedule::from_serving_trace(&trace).unwrap_err();
-        assert!(err.to_string().contains("single-device"), "{err}");
+        let s = Schedule::from_serving_trace(&trace).unwrap();
+        assert_eq!(s.mode, ScheduleMode::Synchronous);
+        assert_eq!(s.devices, 2, "device ids are preserved, not compacted");
+        assert!(s.steps.iter().all(|st| st.device == 1));
+        let out = resimulate(&s);
+        let rel = (out.e2e_us - trace.meta.wall_us).abs() / trace.meta.wall_us;
+        assert!(rel < 1e-9, "replica identity replay must be exact: {rel}");
+    }
+
+    #[test]
+    fn merged_multi_replica_capture_extracts_and_replays_exactly() {
+        // The previously-rejected case: a merged `loadgen --devices 2
+        // --streams 2 --capture` trace goes straight into schedule
+        // extraction, and identity re-simulation reproduces the merged
+        // (slowest-replica) wall exactly.
+        let cfg = crate::serving::LoadgenConfig {
+            requests: 8,
+            rate_per_s: 0.0,
+            devices: 2,
+            streams: 2,
+            sched: crate::serving::SchedulerConfig { kv_pages: 64, ..Default::default() },
+            capture: true,
+            ..Default::default()
+        };
+        let report =
+            crate::serving::run_sim_loadgen(&["gpt2".to_string()], "h200", &cfg).unwrap();
+        let trace = report.runs[0].trace.as_ref().unwrap();
+        let s = Schedule::from_serving_trace(trace).unwrap();
+        assert_eq!(s.mode, ScheduleMode::Synchronous);
+        assert_eq!(s.devices, 2);
+        assert_eq!(s.streams_per_device, 2);
+        assert!(s.steps.iter().any(|st| st.device == 0));
+        assert!(s.steps.iter().any(|st| st.device == 1));
+        let out = resimulate(&s);
+        assert_eq!(out.n_kernels, trace.kernel_count());
+        let rel = (out.e2e_us - trace.meta.wall_us).abs() / trace.meta.wall_us;
+        assert!(rel < 1e-9, "merged-capture identity replay must be exact: {rel}");
     }
 }

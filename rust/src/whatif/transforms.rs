@@ -461,6 +461,8 @@ impl TensorParallel {
             flops: 0.0,
             bytes: crate::sim::parallel::allreduce_wire_bytes(self.ways, act),
             graphed: false,
+            device: 0,
+            stream: 0,
         }
     }
 }
@@ -548,6 +550,8 @@ mod tests {
             flops: 100.0,
             bytes: 200.0,
             graphed: false,
+            device: 0,
+            stream: 0,
         }
     }
 
@@ -561,6 +565,8 @@ mod tests {
             tail_host_us: 10.0,
             baseline_st_speed: 1.0,
             floor_hint_us: 4.7,
+            devices: 1,
+            streams_per_device: 1,
         }
     }
 

@@ -24,6 +24,7 @@ fn validate_rejects_orphaned_kernels() {
         correlation_id: 1,
         track: Track::Host,
         device: None,
+        args: None,
         meta: None,
     });
     t.push(TraceEvent {
@@ -34,6 +35,7 @@ fn validate_rejects_orphaned_kernels() {
         correlation_id: 1,
         track: Track::Device(0),
         device: None,
+        args: None,
         meta: None,
     });
     let err = phase1::validate_trace(&t).unwrap_err().to_string();

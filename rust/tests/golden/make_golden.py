@@ -1,5 +1,6 @@
 #!/usr/bin/env python3
-"""Regenerate the golden trace corpus (v1_min / v2_multi, both dialects).
+"""Regenerate the golden trace corpus (v1_min / v2_multi / v3_replay,
+both dialects) and re-bless the recorded replay corpus.
 
 Byte-exact replica of the Rust canonical JSON dumper
 (`util::json::Json::dump`, spec docs/trace_format.md §6) and of the
@@ -10,9 +11,17 @@ resulting diff against the spec tables by hand.
 
 All float values in the corpus are short dyadic decimals so Python's
 `repr` and Rust's shortest-roundtrip `Display` agree.
+
+The recorded replay corpus (`replay/serve_v3.{json,tbt}`) cannot be
+hand-authored — its bytes come from the engine's cost model — so this
+script re-blesses it through `cargo test --test replay` (the golden
+test writes the files when they are absent). Skipped with a notice when
+no Rust toolchain is on PATH.
 """
 
+import shutil
 import struct
+import subprocess
 from pathlib import Path
 
 HERE = Path(__file__).resolve().parent
@@ -64,6 +73,32 @@ def kernel_meta_json(m):
     return "{" + ",".join(parts) + "}"
 
 
+def args_json(kind, a):
+    # Key orders mirror `ReplayArgs::to_json` (spec §4.2).
+    if kind == "arrival":
+        parts = [
+            '"req":' + jnum(a["req"]),
+            '"plen":' + jnum(a["plen"]),
+            '"max_new":' + jnum(a["max_new"]),
+            '"model":' + jstr(a["model"]),
+        ]
+    elif kind == "rng_draw":
+        parts = ['"site":' + jstr(a["site"]), '"value":' + jnum(a["value"])]
+    elif kind == "sched_decision":
+        groups = ",".join(
+            "[" + ",".join(jnum(i) for i in g) + "]" for g in a["admitted"]
+        )
+        parts = [
+            '"step":' + jnum(a["step"]),
+            '"admitted":[' + groups + "]",
+            '"preempted":[' + ",".join(jnum(i) for i in a["preempted"]) + "]",
+            '"batch":' + jnum(a["batch"]),
+        ]
+    else:
+        raise ValueError(f"kind {kind} carries no args")
+    return "{" + ",".join(parts) + "}"
+
+
 def event_json(e):
     track = -1 if e["track"] == "host" else e["track"]
     parts = [
@@ -76,6 +111,8 @@ def event_json(e):
     ]
     if e.get("device") is not None:
         parts.append('"device":' + jnum(e["device"]))
+    if e.get("args") is not None:
+        parts.append('"args":' + args_json(e["kind"], e["args"]))
     if e.get("meta") is not None:
         parts.append('"meta":' + kernel_meta_json(e["meta"]))
     return "{" + ",".join(parts) + "}"
@@ -100,7 +137,17 @@ def trace_json(t):
 
 # --- binary dialect (spec §10) ---------------------------------------------
 
-KIND_CODE = {"torch_op": 0, "aten_op": 1, "runtime_api": 2, "kernel": 3, "nvtx": 4}
+KIND_CODE = {
+    "torch_op": 0,
+    "aten_op": 1,
+    "runtime_api": 2,
+    "kernel": 3,
+    "nvtx": 4,
+    "arrival": 5,
+    "rng_draw": 6,
+    "sched_decision": 7,
+    "clock_jump": 8,
+}
 
 
 def varint(v):
@@ -137,15 +184,36 @@ def trace_binary(t):
     for e in t["events"]:
         presence = 0
         if e.get("device") is not None:
-            presence |= 0b01
+            presence |= 0b001
         if e.get("meta") is not None:
-            presence |= 0b10
+            presence |= 0b010
+        if e.get("args") is not None:
+            presence |= 0b100
         out += b"\x02" + bytes([KIND_CODE[e["kind"]], presence])
         out += bstr(e["name"]) + bf64(e["ts"]) + bf64(e["dur"])
         out += varint(e["corr"])
         out += varint(0 if e["track"] == "host" else e["track"] + 1)
         if e.get("device") is not None:
             out += varint(e["device"])
+        a = e.get("args")
+        if a is not None:
+            if e["kind"] == "arrival":
+                out += varint(a["req"]) + varint(a["plen"]) + varint(a["max_new"])
+                out += bstr(a["model"])
+            elif e["kind"] == "rng_draw":
+                out += bstr(a["site"]) + bf64(a["value"])
+            elif e["kind"] == "sched_decision":
+                out += varint(a["step"]) + varint(len(a["admitted"]))
+                for group in a["admitted"]:
+                    out += varint(len(group))
+                    for i in group:
+                        out += varint(i)
+                out += varint(len(a["preempted"]))
+                for i in a["preempted"]:
+                    out += varint(i)
+                out += varint(a["batch"])
+            else:
+                raise ValueError(f"kind {e['kind']} carries no args")
         km = e.get("meta")
         if km is not None:
             out += bstr(km["kernel_name"]) + bstr(km["family"])
@@ -263,12 +331,127 @@ V2_MULTI = {
 }
 
 
+# v3_replay: spec-v3 recording events — `arrival`, `rng_draw`,
+# `sched_decision` and `clock_jump` alongside an observation chain.
+# Recording events always carry correlation id 0 (they belong to no
+# kernel chain); `clock_jump` is the one new kind with no args payload.
+V3_REPLAY = {
+    "meta": {
+        "platform": "h200",
+        "model": "gpt2",
+        "phase": "serve",
+        "batch": 0,
+        "seq": 0,
+        "m_tokens": 0,
+        "wall_us": 99.5,
+    },
+    "events": [
+        {
+            "kind": "arrival",
+            "name": "arrival",
+            "ts": 0.0,
+            "dur": 0.0,
+            "corr": 0,
+            "track": "host",
+            "args": {"req": 0, "plen": 32, "max_new": 4, "model": "gpt2"},
+        },
+        {
+            "kind": "clock_jump",
+            "name": "clock_jump",
+            "ts": 0.0,
+            "dur": 2.5,
+            "corr": 0,
+            "track": "host",
+            "device": 1,
+        },
+        {
+            "kind": "rng_draw",
+            "name": "rng_draw",
+            "ts": 2.5,
+            "dur": 0.0,
+            "corr": 0,
+            "track": "host",
+            "args": {"site": "prep::prefill_b1", "value": 30.75},
+        },
+        {
+            "kind": "sched_decision",
+            "name": "sched_decision",
+            "ts": 2.5,
+            "dur": 0.0,
+            "corr": 0,
+            "track": "host",
+            "device": 1,
+            "args": {
+                "step": 1,
+                "admitted": [[0, 2], [1]],
+                "preempted": [3],
+                "batch": 4,
+            },
+        },
+        {"kind": "torch_op", "name": "serve.decode", "ts": 2.5, "dur": 6.0, "corr": 1, "track": "host"},
+        {
+            "kind": "kernel",
+            "name": "decode_b4",
+            "ts": 4.0,
+            "dur": 4.5,
+            "corr": 1,
+            "track": 0,
+            "meta": {
+                "kernel_name": "decode_b4",
+                "family": "gemm_cublas",
+                "aten_op": "aten::mm",
+                "shapes_key": "bf16[4,768]",
+                "grid": [4, 1, 1],
+                "block": [128, 1, 1],
+                "lib": True,
+                "flops": 4096.0,
+                "bytes": 2048.0,
+            },
+        },
+        {
+            "kind": "rng_draw",
+            "name": "rng_draw",
+            "ts": 8.5,
+            "dur": 0.0,
+            "corr": 0,
+            "track": "host",
+            "args": {"site": "exec::decode_b4", "value": -0.625},
+        },
+    ],
+}
+
+
+def bless_replay_corpus():
+    """Re-record `replay/serve_v3.{json,tbt}` through the Rust stack.
+
+    The golden test in `tests/replay.rs` writes the corpus when absent
+    and byte-checks it when present, so re-blessing = delete + run it.
+    """
+    replay_dir = HERE / "replay"
+    cargo = shutil.which("cargo")
+    if cargo is None:
+        print("cargo not on PATH — skipped re-blessing replay/serve_v3.{json,tbt}")
+        return
+    for f in ["serve_v3.json", "serve_v3.tbt"]:
+        (replay_dir / f).unlink(missing_ok=True)
+    subprocess.run(
+        [cargo, "test", "-q", "--test", "replay",
+         "golden_replay_corpus_is_a_byte_fixed_point_in_both_dialects"],
+        cwd=HERE.parent.parent,
+        check=True,
+    )
+    for f in ["serve_v3.json", "serve_v3.tbt"]:
+        path = replay_dir / f
+        print(f"blessed replay/{f} ({path.stat().st_size} bytes)")
+
+
 def main():
-    for name, trace in [("v1_min", V1_MIN), ("v2_multi", V2_MULTI)]:
+    for name, trace in [("v1_min", V1_MIN), ("v2_multi", V2_MULTI), ("v3_replay", V3_REPLAY)]:
         (HERE / f"{name}.json").write_bytes(trace_json(trace).encode("utf-8"))
         (HERE / f"{name}.tbt").write_bytes(trace_binary(trace))
         print(f"wrote {name}.json ({len(trace_json(trace).encode('utf-8'))} bytes), "
               f"{name}.tbt ({len(trace_binary(trace))} bytes)")
+    bless_replay_corpus()
 
 
 if __name__ == "__main__":

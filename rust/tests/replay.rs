@@ -1,0 +1,163 @@
+//! Integration: `serving::replay` — deterministic record/replay.
+//!
+//! Two locks on the replay contract (DESIGN.md §13):
+//!
+//! * a **golden corpus** under `tests/golden/replay/` pins one recorded
+//!   multi-device, multi-stream serving run byte-for-byte in both
+//!   dialects, and pins that replaying it re-records those exact bytes;
+//! * a **property suite** checks that arbitrary loadgen configurations
+//!   satisfy the record → replay → re-record fixed point in both
+//!   dialects, with the replayed KPIs identical to the recorded run's.
+
+use std::path::PathBuf;
+
+use taxbreak::prop_assert;
+use taxbreak::serving::loadgen::LenDist;
+use taxbreak::serving::{replay, run_sim_loadgen, LoadgenConfig, SchedulerConfig};
+use taxbreak::trace::{binary, Trace};
+use taxbreak::util::prop::forall;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("golden")
+        .join("replay")
+}
+
+/// The corpus workload: multi-device, multi-stream, open-loop — the
+/// topology the pre-replay `whatif` path used to reject. Changing any
+/// field invalidates the committed corpus; regenerate it with
+/// `tests/golden/make_golden.py` (which re-blesses through this test).
+fn golden_recording() -> Trace {
+    let cfg = LoadgenConfig {
+        requests: 8,
+        rate_per_s: 1500.0,
+        prompt_len: LenDist::Uniform { lo: 8, hi: 24 },
+        output_len: LenDist::Uniform { lo: 2, hi: 6 },
+        seed: 42,
+        devices: 2,
+        streams: 2,
+        sched: SchedulerConfig { kv_pages: 128, ..SchedulerConfig::default() },
+        capture: true,
+    };
+    let report = run_sim_loadgen(&["gpt2".to_string()], "h200", &cfg).unwrap();
+    report.runs[0].trace.clone().unwrap()
+}
+
+/// One test holds every golden assertion (blessing + byte checks), so
+/// parallel test execution never races on the corpus files.
+#[test]
+fn golden_replay_corpus_is_a_byte_fixed_point_in_both_dialects() {
+    let dir = golden_dir();
+    std::fs::create_dir_all(&dir).unwrap();
+    let json_path = dir.join("serve_v3.json");
+    let tbt_path = dir.join("serve_v3.tbt");
+
+    let recording = golden_recording();
+    let json_bytes = recording.to_json().dump().into_bytes();
+    let tbt_bytes = binary::encode(&recording);
+    if !json_path.exists() || !tbt_path.exists() {
+        std::fs::write(&json_path, &json_bytes).unwrap();
+        std::fs::write(&tbt_path, &tbt_bytes).unwrap();
+        eprintln!("blessed golden replay corpus into {}", dir.display());
+    }
+
+    // The committed corpus matches today's recorder output bit-for-bit
+    // (recorder drift must be deliberate: regenerate via make_golden.py).
+    assert_eq!(
+        std::fs::read(&json_path).unwrap(),
+        json_bytes,
+        "recorded run drifted from the committed serve_v3.json"
+    );
+    assert_eq!(
+        std::fs::read(&tbt_path).unwrap(),
+        tbt_bytes,
+        "recorded run drifted from the committed serve_v3.tbt"
+    );
+
+    // Replaying the committed corpus re-records those exact bytes —
+    // the fixed point, from each dialect's own file.
+    let from_json = Trace::load(&json_path).unwrap();
+    let out = replay(&from_json).unwrap();
+    assert_eq!(
+        out.trace.to_json().dump().into_bytes(),
+        json_bytes,
+        "replay of serve_v3.json is not a JSON-dialect fixed point"
+    );
+    let from_tbt = Trace::load(&tbt_path).unwrap();
+    let out = replay(&from_tbt).unwrap();
+    assert_eq!(
+        binary::encode(&out.trace),
+        tbt_bytes,
+        "replay of serve_v3.tbt is not a binary-dialect fixed point"
+    );
+
+    // The corpus exercises the previously-rejected topology.
+    let devices: std::collections::BTreeSet<u32> =
+        from_tbt.events.iter().map(|e| e.device_id()).collect();
+    assert_eq!(devices.len(), 2, "corpus must span two replicas");
+    assert_eq!(out.run.completed, 8);
+}
+
+#[test]
+fn prop_arbitrary_loadgen_configs_satisfy_the_replay_fixed_point() {
+    forall("record → replay → re-record is byte-equal", 10, |g| {
+        let devices = g.usize_in(1, 3);
+        let cfg = LoadgenConfig {
+            // >= one request per replica keeps every replica's script
+            // non-empty, so the per-device KPI partition compares 1:1.
+            requests: g.usize_in(devices, 8),
+            rate_per_s: *g.choice(&[0.0, 600.0, 2500.0]),
+            prompt_len: LenDist::Uniform { lo: g.usize_in(1, 8), hi: g.usize_in(8, 32) },
+            output_len: LenDist::Uniform { lo: 1, hi: g.usize_in(1, 6) },
+            seed: g.u64(),
+            devices,
+            streams: g.usize_in(1, 2),
+            sched: SchedulerConfig {
+                max_batch: g.usize_in(1, 8),
+                kv_pages: 64 * devices,
+                ..SchedulerConfig::default()
+            },
+            capture: true,
+        };
+        let model = g.choice(&["gpt2", "olmoe-1b-7b"]).to_string();
+        let platform = g.choice(&["h100", "h200"]).to_string();
+
+        let report = run_sim_loadgen(&[model], &platform, &cfg).unwrap();
+        let orig = &report.runs[0];
+        let recording = orig.trace.as_ref().unwrap();
+        let out = replay(recording).unwrap();
+
+        prop_assert!(
+            g,
+            out.trace.to_json().dump() == recording.to_json().dump(),
+            "JSON dialect fixed point violated"
+        );
+        prop_assert!(
+            g,
+            binary::encode(&out.trace) == binary::encode(recording),
+            "binary dialect fixed point violated"
+        );
+        prop_assert!(
+            g,
+            (out.run.completed, out.run.iterations, out.run.tokens_generated)
+                == (orig.completed, orig.iterations, orig.tokens_generated),
+            "replayed KPIs diverged: {:?} vs {:?}",
+            (out.run.completed, out.run.iterations, out.run.tokens_generated),
+            (orig.completed, orig.iterations, orig.tokens_generated)
+        );
+        prop_assert!(
+            g,
+            out.run.phases == orig.phases,
+            "replayed decomposition diverged"
+        );
+        prop_assert!(
+            g,
+            (out.run.wall_us - orig.wall_us).abs() < 1e-12,
+            "replayed wall diverged: {} vs {}",
+            out.run.wall_us,
+            orig.wall_us
+        );
+        true
+    });
+}

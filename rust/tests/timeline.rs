@@ -178,6 +178,7 @@ fn reference_simulate(
                 correlation_id: corr,
                 track: Track::Host,
                 device: None,
+                args: None,
                 meta: None,
             });
             trace.push(TraceEvent {
@@ -188,6 +189,7 @@ fn reference_simulate(
                 correlation_id: corr,
                 track: Track::Host,
                 device: None,
+                args: None,
                 meta: None,
             });
             trace.push(TraceEvent {
@@ -198,6 +200,7 @@ fn reference_simulate(
                 correlation_id: corr,
                 track: Track::Host,
                 device: None,
+                args: None,
                 meta: None,
             });
             trace.push(TraceEvent {
@@ -208,6 +211,7 @@ fn reference_simulate(
                 correlation_id: corr,
                 track: Track::Device(0),
                 device: None,
+                args: None,
                 meta: Some(meta),
             });
         }

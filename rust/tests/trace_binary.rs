@@ -13,7 +13,9 @@ use taxbreak::prop_assert;
 use taxbreak::sim::{simulate, Workload};
 use taxbreak::taxbreak::{decompose::decompose, phase2, Phase1, ReplayConfig, SimReplayBackend};
 use taxbreak::trace::binary::{self, BinaryTraceError, BinaryTraceWriter, Dialect};
-use taxbreak::trace::{EventKind, KernelMeta, Trace, TraceEvent, TraceMeta, TraceSink, Track};
+use taxbreak::trace::{
+    EventKind, KernelMeta, ReplayArgs, Trace, TraceEvent, TraceMeta, TraceSink, Track,
+};
 use taxbreak::util::json::Json;
 use taxbreak::util::prop::forall;
 
@@ -32,7 +34,7 @@ fn temp_dir(tag: &str) -> PathBuf {
     dir
 }
 
-const GOLDEN: [&str; 2] = ["v1_min", "v2_multi"];
+const GOLDEN: [&str; 3] = ["v1_min", "v2_multi", "v3_replay"];
 
 // -- golden corpus: byte stability in both directions -----------------------
 
@@ -79,7 +81,7 @@ fn golden_binary_to_json_reproduces_committed_bytes() {
 }
 
 #[test]
-fn golden_corpus_covers_both_spec_versions() {
+fn golden_corpus_covers_every_spec_version() {
     // v1: no `device` field anywhere. v2: device-stamped, multi-stream.
     let v1 = binary::decode(&golden_bytes("v1_min.tbt")).unwrap();
     assert!(v1.events.iter().all(|e| e.device.is_none()));
@@ -96,6 +98,38 @@ fn golden_corpus_covers_both_spec_versions() {
     assert!(streams.len() > 1, "v2_multi must span multiple streams");
     // Wall is carried by the trailer and back-filled on read.
     assert_eq!(v2.meta.wall_us, 100.25);
+
+    // v3: all four recording kinds present with their args payloads,
+    // every recording event on correlation id 0.
+    let v3 = binary::decode(&golden_bytes("v3_replay.tbt")).unwrap();
+    for kind in [
+        EventKind::Arrival,
+        EventKind::RngDraw,
+        EventKind::SchedDecision,
+        EventKind::ClockJump,
+    ] {
+        let e = v3
+            .events
+            .iter()
+            .find(|e| e.kind == kind)
+            .unwrap_or_else(|| panic!("v3_replay lacks a {} event", kind.as_str()));
+        assert_eq!(e.correlation_id, 0, "{} must carry corr 0", kind.as_str());
+        assert_eq!(e.args.is_some(), kind.has_args());
+    }
+    match v3
+        .events
+        .iter()
+        .find_map(|e| match &e.args {
+            Some(ReplayArgs::SchedDecision { admitted, .. }) => Some(admitted),
+            _ => None,
+        }) {
+        Some(admitted) => assert_eq!(
+            admitted,
+            &vec![vec![0, 2], vec![1]],
+            "group boundaries survive the round trip"
+        ),
+        None => panic!("v3_replay lacks a sched_decision args payload"),
+    }
 }
 
 #[test]
@@ -201,6 +235,33 @@ fn arb_trace(g: &mut taxbreak::util::prop::Gen) -> Trace {
                 Track::Device(g.usize_in(0, u32::MAX as usize) as u32)
             },
             device: g.bool().then(|| g.usize_in(0, 255) as u32),
+            // Spec-v3 kinds must carry their payload (readers in both
+            // dialects reject an arrival/rng_draw/sched_decision
+            // without one).
+            args: match kind {
+                EventKind::Arrival => Some(ReplayArgs::Arrival {
+                    req: g.u64() >> 11,
+                    plen: g.usize_in(0, 1 << 16) as u64,
+                    max_new: g.usize_in(0, 4096) as u64,
+                    model: g.choice(&["gpt2", "olmoe-1b-7b", ""]).to_string(),
+                }),
+                EventKind::RngDraw => Some(ReplayArgs::RngDraw {
+                    site: g.choice(&["exec::decode_b8", "prep::null_kernel", ""]).to_string(),
+                    value: g.f64_in(-1e9, 1e9),
+                }),
+                EventKind::SchedDecision => Some(ReplayArgs::SchedDecision {
+                    step: g.u64() >> 11,
+                    admitted: {
+                        let groups = g.usize_in(0, 3);
+                        (0..groups)
+                            .map(|_| (0..g.usize_in(0, 4)).map(|_| g.u64() >> 11).collect())
+                            .collect()
+                    },
+                    preempted: (0..g.usize_in(0, 4)).map(|_| g.u64() >> 11).collect(),
+                    batch: g.usize_in(0, 256) as u64,
+                }),
+                _ => None,
+            },
             meta: (kind == EventKind::Kernel && g.bool()).then(|| arb_kernel_meta(g)),
         });
     }
@@ -245,6 +306,7 @@ fn property_binary_preserves_f64_bit_patterns_json_cannot() {
         correlation_id: u64::MAX,
         track: Track::Device(u32::MAX),
         device: Some(u32::MAX),
+        args: None,
         meta: None,
     });
     let back = binary::decode(&binary::encode(&t)).unwrap();
@@ -378,6 +440,7 @@ fn streaming_writer_memory_is_o1_in_event_count() {
         correlation_id: 1,
         track: Track::Device(0),
         device: None,
+        args: None,
         meta: None,
     };
     let peak_for = |n: usize| {

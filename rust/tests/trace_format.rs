@@ -12,7 +12,7 @@
 use std::path::PathBuf;
 
 use taxbreak::trace::chrome::to_chrome_json;
-use taxbreak::trace::{EventKind, KernelMeta, Trace, TraceEvent, TraceMeta, Track};
+use taxbreak::trace::{EventKind, KernelMeta, ReplayArgs, Trace, TraceEvent, TraceMeta, Track};
 use taxbreak::util::json::Json;
 
 /// Field names documented in docs/trace_format.md §3 (TraceMeta).
@@ -20,9 +20,10 @@ const META_FIELDS: [&str; 7] = [
     "platform", "model", "phase", "batch", "seq", "m_tokens", "wall_us",
 ];
 /// Field names documented in docs/trace_format.md §4 (TraceEvent).
-/// `device` and `meta` are optional; when present they keep this order.
-const EVENT_FIELDS: [&str; 8] = [
-    "kind", "name", "ts", "dur", "corr", "track", "device", "meta",
+/// `device`, `args` and `meta` are optional; when present they keep
+/// this order.
+const EVENT_FIELDS: [&str; 9] = [
+    "kind", "name", "ts", "dur", "corr", "track", "device", "args", "meta",
 ];
 /// Field names documented in docs/trace_format.md §5 (KernelMeta).
 const KERNEL_META_FIELDS: [&str; 9] = [
@@ -67,6 +68,7 @@ fn sample_trace() -> Trace {
         correlation_id: corr,
         track: Track::Host,
         device: None,
+        args: None,
         meta: None,
     };
     t.push(host(EventKind::TorchOp, 1, 0.0, 2.5, "torch.mm"));
@@ -80,6 +82,7 @@ fn sample_trace() -> Trace {
         correlation_id: 1,
         track: Track::Device(0),
         device: None,
+        args: None,
         meta: Some(KernelMeta {
             kernel_name: "ampere_bf16_s16816gemm_q_64x2048x2048_tn".into(),
             family: "gemm_cublas".into(),
@@ -102,6 +105,7 @@ fn sample_trace() -> Trace {
         correlation_id: 2,
         track: Track::Device(3),
         device: None,
+        args: None,
         meta: None,
     });
     // A kernel stamped onto a second *device* (spec v2 optional field):
@@ -114,8 +118,73 @@ fn sample_trace() -> Trace {
         correlation_id: 3,
         track: Track::Device(0),
         device: Some(1),
+        args: None,
         meta: None,
     });
+    t
+}
+
+/// A trace exercising the four spec-v3 recording kinds and their
+/// `args` payloads (separate from [`sample_trace`] so the chrome /
+/// track-index tests keep their fixed shapes).
+fn v3_sample_trace() -> Trace {
+    let mut t = Trace::new(TraceMeta {
+        platform: "h200".into(),
+        model: "gpt2".into(),
+        phase: "serve".into(),
+        batch: 0,
+        seq: 0,
+        m_tokens: 0,
+        wall_us: 99.5,
+    });
+    let v3 = |kind, ts: f64, dur: f64, name: &str, device, args| TraceEvent {
+        kind,
+        name: name.to_string(),
+        ts_us: ts,
+        dur_us: dur,
+        correlation_id: 0,
+        track: Track::Host,
+        device,
+        args,
+        meta: None,
+    };
+    t.push(v3(
+        EventKind::Arrival,
+        0.0,
+        0.0,
+        "arrival",
+        None,
+        Some(ReplayArgs::Arrival { req: 0, plen: 32, max_new: 4, model: "gpt2".into() }),
+    ));
+    t.push(v3(
+        EventKind::RngDraw,
+        1.0,
+        0.0,
+        "prep::prefill_b1",
+        None,
+        Some(ReplayArgs::RngDraw { site: "prep::prefill_b1".into(), value: 30.75 }),
+    ));
+    t.push(v3(
+        EventKind::ClockJump,
+        2.0,
+        5.5,
+        "clock_jump",
+        Some(1),
+        None,
+    ));
+    t.push(v3(
+        EventKind::SchedDecision,
+        7.5,
+        0.0,
+        "sched_decision",
+        Some(1),
+        Some(ReplayArgs::SchedDecision {
+            step: 1,
+            admitted: vec![vec![0, 2], vec![1]],
+            preempted: vec![3],
+            batch: 4,
+        }),
+    ));
     t
 }
 
@@ -147,12 +216,12 @@ fn emitted_fields_match_documented_names_exactly() {
     let mut saw_device = false;
     for ev in events {
         let ks = keys(ev);
-        // `device` and `meta` are optional; present fields must match
-        // the documented names in the documented order.
+        // `device`, `args` and `meta` are optional; present fields must
+        // match the documented names in the documented order.
         let expected: Vec<&str> = EVENT_FIELDS
             .iter()
             .copied()
-            .filter(|f| !matches!(*f, "device" | "meta") || ks.contains(f))
+            .filter(|f| !matches!(*f, "device" | "args" | "meta") || ks.contains(f))
             .collect();
         assert_eq!(ks, expected, "event field names/order drifted");
         saw_device |= ks.contains(&"device");
@@ -259,10 +328,77 @@ fn chrome_export_fields_match_spec() {
 
 #[test]
 fn event_kind_tags_roundtrip_the_documented_set() {
-    let documented = ["torch_op", "aten_op", "runtime_api", "kernel", "nvtx"];
+    let documented = [
+        "torch_op",
+        "aten_op",
+        "runtime_api",
+        "kernel",
+        "nvtx",
+        "arrival",
+        "rng_draw",
+        "sched_decision",
+        "clock_jump",
+    ];
     assert_eq!(EventKind::ALL.len(), documented.len());
     for (kind, tag) in EventKind::ALL.iter().zip(documented) {
         assert_eq!(kind.as_str(), tag);
         assert_eq!(EventKind::parse(tag).unwrap(), *kind);
     }
+}
+
+#[test]
+fn v3_args_payloads_match_documented_keys_exactly() {
+    // Spec §4.2: the args object is untagged (the event kind selects
+    // the shape) and its keys are pinned, in order.
+    let j = v3_sample_trace().to_json();
+    let events = j.arr_of("events").unwrap();
+    assert_eq!(
+        keys(&events[0]),
+        vec!["kind", "name", "ts", "dur", "corr", "track", "args"]
+    );
+    assert_eq!(
+        keys(events[0].req("args").unwrap()),
+        vec!["req", "plen", "max_new", "model"]
+    );
+    assert_eq!(keys(events[1].req("args").unwrap()), vec!["site", "value"]);
+    // ClockJump carries no args; a stamped device still precedes it.
+    assert_eq!(
+        keys(&events[2]),
+        vec!["kind", "name", "ts", "dur", "corr", "track", "device"]
+    );
+    assert_eq!(
+        keys(&events[3]),
+        vec!["kind", "name", "ts", "dur", "corr", "track", "device", "args"]
+    );
+    assert_eq!(
+        keys(events[3].req("args").unwrap()),
+        vec!["step", "admitted", "preempted", "batch"]
+    );
+    // Group boundaries survive: admitted is a list of lists.
+    let admitted = events[3].req("args").unwrap().arr_of("admitted").unwrap();
+    assert_eq!(admitted.len(), 2);
+    assert_eq!(admitted[0].as_arr().unwrap().len(), 2);
+}
+
+#[test]
+fn v3_trace_is_byte_stable_and_replay_kinds_carry_corr_zero() {
+    let t = v3_sample_trace();
+    let text = t.to_json().dump();
+    let back = Trace::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(back, t, "v3 JSON round trip must reconstruct the trace");
+    assert_eq!(back.to_json().dump(), text, "v3 JSON must be byte-stable");
+    assert!(t.events.iter().all(|e| e.correlation_id == 0));
+    // A has-args kind without its payload is a parse error, not a
+    // silently defaulted event.
+    let mut stripped = Json::parse(&text).unwrap();
+    if let Json::Obj(entries) = &mut stripped {
+        let events = entries.iter_mut().find(|(k, _)| k == "events").unwrap();
+        if let Json::Arr(evs) = &mut events.1 {
+            if let Json::Obj(fields) = &mut evs[0] {
+                fields.retain(|(k, _)| k != "args");
+            }
+        }
+    }
+    let err = Trace::from_json(&stripped).unwrap_err().to_string();
+    assert!(err.contains("lacks its args payload"), "{err}");
 }
