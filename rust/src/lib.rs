@@ -40,6 +40,7 @@
 //! | [`timeline`] | discrete-event engine: host threads × streams × devices, one clock for sim/whatif/serving |
 //! | [`sim`] | host+device co-simulation → traces (single-stream and tensor/expert-parallel scenarios) |
 //! | [`taxbreak`] | **the paper's contribution**: two-phase pipeline, Eq. 1-3, baselines, diagnostics |
+//! | [`obs`] | live telemetry: metrics registry, streaming windowed decomposition, Prometheus/JSON exposition |
 //! | [`serving`] | request router, continuous batcher, reservation-backed paged-KV manager, scheduler, load generator |
 //! | [`runtime`] | backend abstraction (simulated / real PJRT), AOT artifact + weights loading, trace instrumentation |
 //! | [`whatif`] | counterfactual replay: transform a recorded schedule, re-simulate, quantify each prescription |
@@ -70,6 +71,7 @@ pub mod host;
 pub mod kernels;
 pub mod lowering;
 pub mod models;
+pub mod obs;
 pub mod repro;
 pub mod runtime;
 pub mod serving;

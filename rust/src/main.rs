@@ -15,7 +15,10 @@
 //!   dense-vs-MoE model mix, and a throughput/TTFT/TPOT/KV-occupancy
 //!   report with per-phase HDBI; `--capture`/`--chrome-out` save each
 //!   run's trace for replay and timeline inspection, `--bench-out`
-//!   emits the compact benchmark datapoint.
+//!   emits the compact benchmark datapoint, `--metrics-out` streams the
+//!   run through the live telemetry plane (`obs`) and writes a
+//!   Prometheus text + JSON metrics snapshot, with `--window-us`
+//!   controlling the per-window HDBI series resolution.
 //! * `replay` — deterministic re-execution of a spec-v3 serving capture
 //!   (`loadgen --capture`): arrivals, RNG draws and scheduler decisions
 //!   are replayed from the recorded events, not re-decided; `--verify`
@@ -126,10 +129,12 @@ USAGE:
                    [--kv-pages N] [--kv-page-tokens N] [--seed N]
                    [--devices N] [--streams N] [--report FILE]
                    [--capture FILE] [--chrome-out FILE] [--bench-out FILE]
+                   [--metrics-out FILE] [--window-us US]
   taxbreak replay  <TRACE> [--counterfactual SPEC[,SPEC...]] [--verify]
                    [--json] [--report FILE]
                    (re-drive a `loadgen --capture` recording; --verify
-                    byte-compares the re-recording in both dialects)
+                    byte-compares the re-recording in both dialects and
+                    checks the telemetry snapshot is a fixed point too)
   taxbreak whatif  --counterfactual SPEC[,SPEC...]
                    [--trace FILE | --bundled moe-decode|dense-prefill |
                     --model M --platform P --phase ... --bs --sl --m]
@@ -323,7 +328,10 @@ fn cmd_analyze(mut args: Args) -> anyhow::Result<()> {
 fn analyze_trace_file(path: &str, as_json: bool) -> anyhow::Result<()> {
     let trace = taxbreak::trace::Trace::load(std::path::Path::new(path))?;
     let platform = Platform::by_name(&trace.meta.platform)?;
-    let mut backend = SimReplayBackend::new(platform, 0x5EED);
+    // Same seed as the streaming decomposer's finalize pass, so
+    // `loadgen --metrics-out` snapshots are bit-identical to this
+    // command on the captured trace (DESIGN.md §14).
+    let mut backend = SimReplayBackend::new(platform, taxbreak::obs::ANALYZE_REPLAY_SEED);
     let mut a = analyze(&trace, &mut backend, &taxbreak::taxbreak::ReplayConfig::fast());
     // Best-effort quantification: serving/graphed traces have no
     // extractable per-kernel host chain and keep the qualitative
@@ -526,7 +534,20 @@ fn cmd_replay(mut args: Args) -> anyhow::Result<()> {
             binary::encode(&out.trace) == binary::encode(&recording),
             "replay diverged from the recording in the binary dialect"
         );
+        // The telemetry snapshot is a pure function of (events, wall),
+        // so it must be a fixed point too (DESIGN.md §14): the same
+        // windowed decomposition, exposed byte-for-byte.
+        let platform = Platform::by_name(&recording.meta.platform)?;
+        let window_us = recording.e2e_us() / 8.0;
+        let (_, reg_rec) =
+            taxbreak::obs::snapshot_of_trace(&recording, platform.clone(), window_us);
+        let (_, reg_rep) = taxbreak::obs::snapshot_of_trace(&out.trace, platform, window_us);
+        anyhow::ensure!(
+            reg_rec.prometheus_text() == reg_rep.prometheus_text(),
+            "the replayed run's metrics snapshot diverged from the recording's"
+        );
         kpis.set("verified", Json::Bool(true));
+        kpis.set("metrics_fixed_point", Json::Bool(true));
     }
 
     if as_json {
@@ -562,7 +583,7 @@ fn cmd_replay(mut args: Args) -> anyhow::Result<()> {
         if verify {
             println!(
                 "verify: record → replay → re-record is byte-identical in both dialects \
-                 ({} events)",
+                 ({} events), and the telemetry snapshot is a fixed point",
                 out.trace.events.len()
             );
         }
@@ -675,16 +696,23 @@ fn cmd_loadgen(mut args: Args) -> anyhow::Result<()> {
         devices: args.opt_usize("devices", base.devices)?,
         streams: args.opt_usize("streams", base.streams)?,
         capture: false,
+        metrics: false,
+        window_us: 0.0,
     };
     let report_path = args.opt("report").map(|s| s.to_string());
     let capture_path = args.opt("capture").map(|s| s.to_string());
     let chrome_path = args.opt("chrome-out").map(|s| s.to_string());
     let bench_path = args.opt("bench-out").map(|s| s.to_string());
+    let metrics_path = args.opt("metrics-out").map(|s| s.to_string());
     // The Chrome export and the bench datapoint's replay-throughput
     // measurement need the whole trace in memory; `--capture` itself
-    // streams each event to disk as the scheduler steps.
+    // streams each event to disk as the scheduler steps, and the
+    // telemetry plane (`--metrics-out`) taps the same stream without
+    // buffering it.
     let cfg = LoadgenConfig {
         capture: chrome_path.is_some() || bench_path.is_some(),
+        metrics: metrics_path.is_some(),
+        window_us: args.opt_f64("window-us", 0.0)?,
         ..cfg
     };
     args.finish()?;
@@ -714,6 +742,16 @@ fn cmd_loadgen(mut args: Args) -> anyhow::Result<()> {
     if let Some(p) = report_path {
         std::fs::write(&p, report.to_json().pretty())?;
         println!("wrote {p}");
+    }
+    if let Some(p) = metrics_path {
+        let reg = report
+            .metrics_registry()
+            .ok_or_else(|| anyhow::anyhow!("--metrics-out produced no telemetry"))?;
+        std::fs::write(&p, reg.prometheus_text())?;
+        println!("wrote {p} (Prometheus text exposition)");
+        let jp = json_twin(&p);
+        std::fs::write(&jp, reg.to_json().pretty())?;
+        println!("wrote {jp} (metrics JSON snapshot)");
     }
     if let Some(p) = bench_path {
         use taxbreak::util::json::Json;
@@ -745,6 +783,27 @@ fn cmd_loadgen(mut args: Args) -> anyhow::Result<()> {
                 .with("events_per_s", rate(events))
                 .with("tokens_per_s", rate(tokens)),
         );
+        // Streaming-telemetry throughput: feed every captured event
+        // through the windowed online decomposer (the `--metrics-out`
+        // path, replay pass included) and time it.
+        let mut online_events = 0usize;
+        let t0 = std::time::Instant::now();
+        for run in &report.runs {
+            let Some(trace) = &run.trace else { continue };
+            let spec = Platform::by_name(&trace.meta.platform)?;
+            let (r, _) = taxbreak::obs::snapshot_of_trace(trace, spec, 0.0);
+            anyhow::ensure!(
+                r.totals.n_kernels > 0,
+                "online decomposition of the bench run saw no kernels ({})",
+                run.model
+            );
+            online_events += trace.events.len();
+        }
+        let osecs = t0.elapsed().as_secs_f64();
+        bench.set(
+            "online_decompose_events_per_sec",
+            if osecs > 0.0 { online_events as f64 / osecs } else { 0.0 },
+        );
         std::fs::write(&p, bench.pretty())?;
         println!("wrote {p}");
     }
@@ -752,11 +811,39 @@ fn cmd_loadgen(mut args: Args) -> anyhow::Result<()> {
         let Some(trace) = &run.trace else { continue };
         if let Some(prefix) = &chrome_path {
             let path = path_for_model(prefix, &run.model);
-            taxbreak::trace::chrome::save_chrome(trace, std::path::Path::new(&path))?;
+            // Metrics-enabled runs also carry their per-window HDBI and
+            // KV-occupancy series as Perfetto counter tracks.
+            let mut counters = Vec::new();
+            if let Some(t) = &run.telemetry {
+                counters.push(chrome::CounterSeries {
+                    name: "hdbi".into(),
+                    points: t.online.hdbi_series(),
+                });
+                counters.push(chrome::CounterSeries {
+                    name: "kv_occupancy".into(),
+                    points: t.probe.kv_series(),
+                });
+            }
+            chrome::save_chrome_with_counters(trace, &counters, std::path::Path::new(&path))?;
             println!("wrote {path} (chrome://tracing format)");
         }
     }
     Ok(())
+}
+
+/// Path for the JSON twin of a metrics exposition file
+/// ("m.prom" -> "m.json"); appends ".json" when the input already has
+/// that extension.
+fn json_twin(path: &str) -> String {
+    let twin = std::path::Path::new(path)
+        .with_extension("json")
+        .to_string_lossy()
+        .into_owned();
+    if twin == path {
+        format!("{path}.json")
+    } else {
+        twin
+    }
 }
 
 fn cmd_convert(mut args: Args) -> anyhow::Result<()> {

@@ -1,0 +1,66 @@
+//! Live observability plane: metrics registry, streaming windowed
+//! decomposition, and serving-side probes.
+//!
+//! The paper's decomposition (Eq. 1–3) is a whole-run aggregate; this
+//! module makes it a live signal. Three pieces:
+//!
+//! - [`registry`]: labeled counters / gauges / log-bucketed histograms
+//!   with deterministic Prometheus text exposition and JSON snapshots;
+//! - [`online`]: [`OnlineDecomposer`], a [`crate::trace::TraceSink`]
+//!   that maintains per-window T_fw / T_lib / T_launch / HDBI slices as
+//!   events stream past, with end-of-run totals bit-identical to the
+//!   post-hoc [`crate::taxbreak::decompose::decompose`] pass;
+//! - [`probe`]: [`ServingProbe`], sampling serving-side state (KV
+//!   occupancy, queue depth, TTFT/TPOT) the trace never carries.
+//!
+//! `taxbreak loadgen --metrics-out <file> [--window-us N]` wires all
+//! three together; metric names and labels are specified in
+//! `docs/metrics.md` (pinned by a spec-drift test), semantics in
+//! DESIGN.md §14.
+
+pub mod online;
+pub mod probe;
+pub mod registry;
+
+pub use online::{
+    EventCounts, OnlineDecomposer, OnlineReport, PhaseWindow, StreamActivity, WindowSlice,
+    ANALYZE_REPLAY_SEED, PHASES,
+};
+pub use probe::ServingProbe;
+pub use registry::{fmt_value, Histogram, MetricKind, MetricsRegistry};
+
+use crate::hardware::Platform;
+use crate::trace::{Trace, TraceSink};
+
+/// Per-model telemetry bundle produced by an instrumented loadgen run.
+#[derive(Debug, Clone)]
+pub struct Telemetry {
+    /// Trace-derived windowed decomposition (pure function of the
+    /// event stream + wall clock).
+    pub online: OnlineReport,
+    /// Serving-side samples (KV occupancy, queue depth, latency).
+    pub probe: ServingProbe,
+}
+
+/// Post-hoc equivalent of the streaming path: feed every event of an
+/// in-memory [`Trace`] through an [`OnlineDecomposer`] and return the
+/// report plus a registry snapshot labeled with the trace's model name.
+///
+/// Used by `taxbreak replay --verify` and the conformance tests: the
+/// result is a pure function of `(events, wall_us)`, so byte-identical
+/// traces yield byte-identical snapshots (DESIGN.md §14).
+pub fn snapshot_of_trace(
+    trace: &Trace,
+    platform: Platform,
+    window_us: f64,
+) -> (OnlineReport, MetricsRegistry) {
+    let mut online = OnlineDecomposer::new(window_us);
+    for e in &trace.events {
+        online.observe(e);
+    }
+    let _ = TraceSink::finish(&mut online, trace.meta.wall_us);
+    let report = online.finalize(platform);
+    let mut reg = MetricsRegistry::new();
+    report.register_into(&mut reg, &trace.meta.model);
+    (report, reg)
+}

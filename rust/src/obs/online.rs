@@ -1,0 +1,772 @@
+//! Streaming (online) Eq. 1–3 decomposition over a trace event stream.
+//!
+//! [`OnlineDecomposer`] implements [`TraceSink`], so it can sit in the
+//! same sink fan-out as a file capture and consume a serving run (or
+//! any trace) event by event. It maintains:
+//!
+//! - an incremental Phase-1 view: invocation chains assembled by
+//!   correlation id, the kernel database built with
+//!   [`KernelDb::record`] as kernel events stream past;
+//! - per-window slices on the *virtual* clock (`--window-us`): kernel
+//!   launches, T_fw (ΔFT), T_lib (I_lib·ΔCT), T_launch (ΔKT),
+//!   device-active time, per-phase HDBI and the output-token proxy for
+//!   kernel-launches-per-output-token (the paper's 8–11× MoE dispatch
+//!   amplification, live);
+//! - event-stream counters (arrivals, RNG draws, clock jumps,
+//!   scheduler decisions, per-stream device activity) fed by the
+//!   spec-v3 recording events — which stay invisible to the
+//!   decomposition itself, exactly as in the post-hoc path.
+//!
+//! [`OnlineDecomposer::finalize`] runs the Phase-2 replay over the
+//! incrementally-built database with the same backend seed and config
+//! as `taxbreak analyze` ([`ANALYZE_REPLAY_SEED`] + fast config), then
+//! folds the retained per-invocation records *in correlation order*
+//! through the identical accumulation loop as
+//! [`crate::taxbreak::decompose::decompose`] — so the end-of-run totals
+//! are bit-identical to the post-hoc pass on the same trace, field by
+//! field (pinned by `rust/tests/obs.rs`). See DESIGN.md §14 for the
+//! full semantics and the window boundary rules.
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::hardware::Platform;
+use crate::kernels::KernelDb;
+use crate::taxbreak::decompose::{hdbi_of, Decomposition};
+use crate::taxbreak::phase2::{run as phase2_run, ReplayConfig, SimReplayBackend};
+use crate::trace::{EventKind, ReplayArgs, TraceEvent, TraceSink, Track};
+use crate::util::json::Json;
+
+/// Phase-2 replay seed used by `taxbreak analyze` — and therefore by
+/// [`OnlineDecomposer::finalize`], so the online totals land on the
+/// same calibration bits as the post-hoc pass.
+pub const ANALYZE_REPLAY_SEED: u64 = 0x5EED;
+
+/// Serving phase labels, in classification order ("prefill" is checked
+/// first — matches `serving::loadgen`'s phase split).
+pub const PHASES: [&str; 2] = ["prefill", "decode"];
+
+const OTHER_PHASE: u8 = 2;
+
+/// Per-phase share of one window (or of the whole run).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PhaseWindow {
+    pub invocations: usize,
+    pub orchestration_us: f64,
+    pub device_us: f64,
+}
+
+impl PhaseWindow {
+    pub fn hdbi(&self) -> f64 {
+        hdbi_of(self.orchestration_us, self.device_us)
+    }
+}
+
+/// One virtual-time window of the decomposition. Windows are
+/// half-open `[index·W, (index+1)·W)` intervals of the trace clock; an
+/// invocation belongs to the window containing its kernel's completion
+/// timestamp. Only non-empty windows are materialized.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct WindowSlice {
+    pub index: u64,
+    pub start_us: f64,
+    pub end_us: f64,
+    pub n_kernels: usize,
+    pub t_py_us: f64,
+    pub t_base_us: f64,
+    pub dct_us: f64,
+    pub dkt_us: f64,
+    pub device_active_us: f64,
+    /// Output-token proxy: Σ post-step active batch over the window's
+    /// `SchedDecision` events (each serving step advances every active
+    /// sequence by one token). 0 for eager traces.
+    pub tokens: usize,
+    pub phases: [PhaseWindow; 2],
+}
+
+impl WindowSlice {
+    /// ΔFT: T_Py + dispatch baseline.
+    pub fn t_fw_us(&self) -> f64 {
+        self.t_py_us + self.t_base_us
+    }
+
+    pub fn orchestration_us(&self) -> f64 {
+        self.t_py_us + self.t_base_us + self.dct_us + self.dkt_us
+    }
+
+    pub fn hdbi(&self) -> f64 {
+        hdbi_of(self.orchestration_us(), self.device_active_us)
+    }
+
+    pub fn launches_per_token(&self) -> f64 {
+        if self.tokens == 0 {
+            0.0
+        } else {
+            self.n_kernels as f64 / self.tokens as f64
+        }
+    }
+}
+
+/// Event-stream counters maintained by the sink (the instrumentation
+/// plane: spec-v3 recording events feed these, never the decomposition).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct EventCounts {
+    pub total: usize,
+    /// Events carrying correlation id 0 (recordings + floor probes).
+    pub recording: usize,
+    pub by_kind: BTreeMap<&'static str, usize>,
+    pub arrivals: usize,
+    pub rng_draws: usize,
+    pub clock_jumps: usize,
+    /// Σ idle time skipped by clock jumps, us.
+    pub clock_jump_us: f64,
+    pub sched_steps: usize,
+    /// Requests admitted across all scheduler steps.
+    pub admitted: usize,
+    pub preempted: usize,
+    /// Σ post-step active batch — the output-token proxy.
+    pub batch_sum: usize,
+}
+
+/// Per-(device, stream) kernel activity observed on the stream.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StreamActivity {
+    pub device: u32,
+    pub stream: u32,
+    pub kernels: usize,
+    pub active_us: f64,
+}
+
+/// Compact per-invocation record retained until [`finalize`] — the
+/// strings are interned, so memory is O(kernels), not O(events), and no
+/// raw [`TraceEvent`]s are buffered.
+///
+/// [`finalize`]: OnlineDecomposer::finalize
+#[derive(Debug, Clone, Copy)]
+struct InvRecord {
+    corr: u64,
+    key: u32,
+    family: u32,
+    device: u32,
+    phase: u8,
+    lib: bool,
+    t_py_us: f64,
+    device_us: f64,
+    window: u64,
+}
+
+/// Open invocation chain (events seen so far for one correlation id).
+#[derive(Debug, Clone, Copy, Default)]
+struct PendingChain {
+    torch_ts: Option<f64>,
+    phase: u8,
+    aten_ts: Option<f64>,
+    api_seen: bool,
+    kernel: Option<KernelHit>,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct KernelHit {
+    end_us: f64,
+    dur_us: f64,
+    device: u32,
+    /// Interned (key, family, lib_mediated) — `None` for meta-less
+    /// kernels, which the post-hoc Phase 1 skips too.
+    interned: Option<(u32, u32, bool)>,
+}
+
+/// The streaming decomposer. Feed it a trace (as a [`TraceSink`] or via
+/// [`observe`](OnlineDecomposer::observe)), then [`finalize`] it.
+///
+/// [`finalize`]: OnlineDecomposer::finalize
+#[derive(Debug, Clone, Default)]
+pub struct OnlineDecomposer {
+    window_us: f64,
+    db: KernelDb,
+    keys: Vec<String>,
+    key_ix: HashMap<String, u32>,
+    families: Vec<String>,
+    family_ix: HashMap<String, u32>,
+    pending: HashMap<u64, PendingChain>,
+    records: Vec<InvRecord>,
+    counts: EventCounts,
+    streams: BTreeMap<(u32, u32), StreamActivity>,
+    /// Output-token proxy per window (from `SchedDecision` events).
+    token_windows: BTreeMap<u64, usize>,
+    /// Observed event span (fallback e2e when no wall was recorded).
+    lo_ts: f64,
+    hi_ts: f64,
+    wall_us: f64,
+}
+
+fn phase_of(torch_name: &str) -> u8 {
+    for (i, p) in PHASES.iter().enumerate() {
+        if torch_name.contains(p) {
+            return i as u8;
+        }
+    }
+    OTHER_PHASE
+}
+
+impl OnlineDecomposer {
+    /// `window_us <= 0` means a single whole-run window.
+    pub fn new(window_us: f64) -> OnlineDecomposer {
+        OnlineDecomposer {
+            window_us,
+            lo_ts: f64::INFINITY,
+            hi_ts: f64::NEG_INFINITY,
+            ..Default::default()
+        }
+    }
+
+    pub fn window_us(&self) -> f64 {
+        self.window_us
+    }
+
+    fn window_of(&self, t_us: f64) -> u64 {
+        if self.window_us <= 0.0 {
+            0
+        } else {
+            (t_us / self.window_us).floor().max(0.0) as u64
+        }
+    }
+
+    fn intern(table: &mut Vec<String>, index: &mut HashMap<String, u32>, s: String) -> u32 {
+        if let Some(&i) = index.get(&s) {
+            return i;
+        }
+        let i = table.len() as u32;
+        table.push(s.clone());
+        index.insert(s, i);
+        i
+    }
+
+    /// Consume one event. Order-insensitive: chains close as soon as
+    /// all four components arrived; stragglers close at finalize.
+    pub fn observe(&mut self, e: &TraceEvent) {
+        self.counts.total += 1;
+        *self.counts.by_kind.entry(e.kind.as_str()).or_insert(0) += 1;
+        self.lo_ts = self.lo_ts.min(e.ts_us);
+        self.hi_ts = self.hi_ts.max(e.end_us());
+
+        if e.correlation_id == 0 {
+            self.counts.recording += 1;
+            match e.kind {
+                EventKind::Arrival => self.counts.arrivals += 1,
+                EventKind::RngDraw => self.counts.rng_draws += 1,
+                EventKind::ClockJump => {
+                    self.counts.clock_jumps += 1;
+                    self.counts.clock_jump_us += e.dur_us;
+                }
+                EventKind::SchedDecision => {
+                    self.counts.sched_steps += 1;
+                    if let Some(ReplayArgs::SchedDecision {
+                        admitted,
+                        preempted,
+                        batch,
+                        ..
+                    }) = &e.args
+                    {
+                        self.counts.admitted += admitted.iter().map(|g| g.len()).sum::<usize>();
+                        self.counts.preempted += preempted.len();
+                        self.counts.batch_sum += *batch as usize;
+                        let w = self.window_of(e.ts_us);
+                        *self.token_windows.entry(w).or_insert(0) += *batch as usize;
+                    }
+                }
+                _ => {}
+            }
+            return;
+        }
+
+        match e.kind {
+            EventKind::TorchOp => {
+                let c = self.pending.entry(e.correlation_id).or_default();
+                c.torch_ts = Some(e.ts_us);
+                c.phase = phase_of(&e.name);
+            }
+            EventKind::AtenOp => {
+                self.pending.entry(e.correlation_id).or_default().aten_ts = Some(e.ts_us);
+            }
+            EventKind::RuntimeApi => {
+                self.pending.entry(e.correlation_id).or_default().api_seen = true;
+            }
+            EventKind::Kernel => {
+                let stream = match e.track {
+                    Track::Device(s) => s,
+                    Track::Host => 0,
+                };
+                let device = e.device_id();
+                let s = self.streams.entry((device, stream)).or_default();
+                s.device = device;
+                s.stream = stream;
+                s.kernels += 1;
+                s.active_us += e.dur_us;
+
+                let interned = e.meta.as_ref().map(|m| {
+                    self.db.record(m, e.dur_us);
+                    let key = Self::intern(&mut self.keys, &mut self.key_ix, m.dedup_key());
+                    let family =
+                        Self::intern(&mut self.families, &mut self.family_ix, m.family.clone());
+                    (key, family, m.lib_mediated)
+                });
+                let c = self.pending.entry(e.correlation_id).or_default();
+                c.kernel = Some(KernelHit {
+                    end_us: e.end_us(),
+                    dur_us: e.dur_us,
+                    device,
+                    interned,
+                });
+            }
+            _ => return,
+        }
+
+        // Close the chain early once all four components are present
+        // (the recorder invariant: at most one event per kind per
+        // correlation id, kernel last). Chains missing host events
+        // close at finalize with the same fallbacks as Phase 1.
+        let complete = match self.pending.get(&e.correlation_id) {
+            Some(c) => {
+                c.torch_ts.is_some() && c.aten_ts.is_some() && c.api_seen && c.kernel.is_some()
+            }
+            None => false,
+        };
+        if complete {
+            let c = self.pending.remove(&e.correlation_id).unwrap();
+            self.close_chain(e.correlation_id, &c);
+        }
+    }
+
+    fn close_chain(&mut self, corr: u64, c: &PendingChain) {
+        let Some(k) = c.kernel else { return };
+        let Some((key, family, lib)) = k.interned else {
+            return; // meta-less kernels are skipped, as in Phase 1
+        };
+        let t_py = match (c.torch_ts, c.aten_ts) {
+            (Some(t), Some(a)) => (a - t).max(0.0),
+            _ => 0.0,
+        };
+        let phase = if c.torch_ts.is_some() {
+            c.phase
+        } else {
+            OTHER_PHASE
+        };
+        self.records.push(InvRecord {
+            corr,
+            key,
+            family,
+            device: k.device,
+            phase,
+            lib,
+            t_py_us: t_py,
+            device_us: k.dur_us,
+            window: self.window_of(k.end_us),
+        });
+    }
+
+    /// Events seen so far (all kinds).
+    pub fn events_seen(&self) -> usize {
+        self.counts.total
+    }
+
+    /// Run Phase 2 over the incrementally-built kernel database and
+    /// fold the retained invocation records into totals + windows.
+    /// Uses the exact replay seed/config of `taxbreak analyze`, and the
+    /// exact accumulation order of the post-hoc `decompose()` (records
+    /// sorted by correlation id), so totals are bit-identical to it.
+    pub fn finalize(mut self, platform: Platform) -> OnlineReport {
+        // Drain chains that never saw all four components.
+        let mut leftovers: Vec<(u64, PendingChain)> = self.pending.drain().collect();
+        leftovers.sort_by_key(|(corr, _)| *corr);
+        for (corr, c) in leftovers {
+            self.close_chain(corr, &c);
+        }
+        self.records.sort_by_key(|r| r.corr);
+
+        let mut backend = SimReplayBackend::new(platform, ANALYZE_REPLAY_SEED);
+        let p2 = phase2_run(&self.db, &mut backend, &ReplayConfig::fast());
+
+        let e2e_us = if self.wall_us > 0.0 {
+            self.wall_us
+        } else if self.lo_ts.is_finite() {
+            self.hi_ts - self.lo_ts
+        } else {
+            0.0
+        };
+
+        let mut totals = Decomposition {
+            e2e_us,
+            floor_us: p2.floor.mean,
+            ..Default::default()
+        };
+        let mut windows: BTreeMap<u64, WindowSlice> = BTreeMap::new();
+        let mut phase_totals = [PhaseWindow::default(); 2];
+        for r in &self.records {
+            let dct = p2
+                .replay_of(&self.keys[r.key as usize])
+                .map(|k| k.dct_us)
+                .unwrap_or(0.0);
+            let lib_dct = if r.lib { dct } else { 0.0 };
+
+            totals.n_kernels += 1;
+            totals.t_py_us += r.t_py_us;
+            totals.t_base_us += p2.dispatch_base_us;
+            totals.dct_us += lib_dct;
+            totals.dkt_us += p2.floor.mean;
+            totals.device_active_us += r.device_us;
+
+            let slice = totals
+                .per_family
+                .entry(self.families[r.family as usize].clone())
+                .or_default();
+            slice.invocations += 1;
+            slice.t_py_us += r.t_py_us;
+            slice.t_base_us += p2.dispatch_base_us;
+            slice.dct_us += lib_dct;
+            slice.dkt_us += p2.floor.mean;
+            slice.device_us += r.device_us;
+
+            let dev = totals.per_device.entry(r.device).or_default();
+            dev.invocations += 1;
+            dev.t_py_us += r.t_py_us;
+            dev.t_base_us += p2.dispatch_base_us;
+            dev.dct_us += lib_dct;
+            dev.dkt_us += p2.floor.mean;
+            dev.device_active_us += r.device_us;
+
+            let w = windows.entry(r.window).or_default();
+            w.n_kernels += 1;
+            w.t_py_us += r.t_py_us;
+            w.t_base_us += p2.dispatch_base_us;
+            w.dct_us += lib_dct;
+            w.dkt_us += p2.floor.mean;
+            w.device_active_us += r.device_us;
+            let orch = r.t_py_us + p2.dispatch_base_us + lib_dct + p2.floor.mean;
+            if (r.phase as usize) < 2 {
+                let p = &mut w.phases[r.phase as usize];
+                p.invocations += 1;
+                p.orchestration_us += orch;
+                p.device_us += r.device_us;
+                let pt = &mut phase_totals[r.phase as usize];
+                pt.invocations += 1;
+                pt.orchestration_us += orch;
+                pt.device_us += r.device_us;
+            }
+        }
+
+        // Token-only windows (scheduler steps with no kernel in-window)
+        // still materialize, so the series covers the whole run.
+        for (&w, &toks) in &self.token_windows {
+            windows.entry(w).or_default().tokens += toks;
+        }
+        // `+=` above touched existing windows with 0; re-assign cleanly.
+        for (w, slice) in windows.iter_mut() {
+            slice.index = *w;
+            slice.tokens = self.token_windows.get(w).copied().unwrap_or(slice.tokens);
+            if self.window_us > 0.0 {
+                slice.start_us = *w as f64 * self.window_us;
+                slice.end_us = slice.start_us + self.window_us;
+            } else {
+                slice.start_us = 0.0;
+                slice.end_us = e2e_us;
+            }
+        }
+
+        OnlineReport {
+            window_us: self.window_us,
+            totals,
+            phase_totals,
+            windows: windows.into_values().collect(),
+            counts: self.counts,
+            streams: self.streams.into_values().collect(),
+        }
+    }
+}
+
+impl TraceSink for OnlineDecomposer {
+    fn event(&mut self, ev: &TraceEvent) -> anyhow::Result<()> {
+        self.observe(ev);
+        Ok(())
+    }
+
+    fn finish(&mut self, wall_us: f64) -> anyhow::Result<()> {
+        self.wall_us = wall_us;
+        Ok(())
+    }
+}
+
+/// Finalized online decomposition: whole-run totals (bit-identical to
+/// the post-hoc [`decompose`](crate::taxbreak::decompose::decompose)),
+/// the per-window series, per-phase shares, event counters and
+/// per-stream activity.
+#[derive(Debug, Clone)]
+pub struct OnlineReport {
+    pub window_us: f64,
+    pub totals: Decomposition,
+    pub phase_totals: [PhaseWindow; 2],
+    pub windows: Vec<WindowSlice>,
+    pub counts: EventCounts,
+    pub streams: Vec<StreamActivity>,
+}
+
+impl OnlineReport {
+    /// Kernel launches per output token over the whole run (token
+    /// proxy: Σ scheduler batch). 0 when no scheduler ran (eager).
+    pub fn launches_per_token(&self) -> f64 {
+        if self.counts.batch_sum == 0 {
+            0.0
+        } else {
+            self.totals.n_kernels as f64 / self.counts.batch_sum as f64
+        }
+    }
+
+    /// The per-window HDBI series as `(window_start_us, hdbi)` points.
+    pub fn hdbi_series(&self) -> Vec<(f64, f64)> {
+        self.windows
+            .iter()
+            .map(|w| (w.start_us, w.hdbi()))
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let d = &self.totals;
+        let totals = Json::obj()
+            .with("n_kernels", d.n_kernels)
+            .with("t_py_us", d.t_py_us)
+            .with("t_base_us", d.t_base_us)
+            .with("t_fw_us", d.dft_us())
+            .with("dct_us", d.dct_us)
+            .with("dkt_us", d.dkt_us)
+            .with("orchestration_us", d.orchestration_us())
+            .with("device_active_us", d.device_active_us)
+            .with("e2e_us", d.e2e_us)
+            .with("hdbi", d.hdbi());
+        let phases = Json::Arr(
+            PHASES
+                .iter()
+                .zip(self.phase_totals.iter())
+                .map(|(name, p)| {
+                    Json::obj()
+                        .with("phase", *name)
+                        .with("invocations", p.invocations)
+                        .with("orchestration_us", p.orchestration_us)
+                        .with("device_us", p.device_us)
+                        .with("hdbi", p.hdbi())
+                })
+                .collect(),
+        );
+        let windows = Json::Arr(
+            self.windows
+                .iter()
+                .map(|w| {
+                    Json::obj()
+                        .with("index", w.index as usize)
+                        .with("start_us", w.start_us)
+                        .with("end_us", w.end_us)
+                        .with("kernels", w.n_kernels)
+                        .with("t_fw_us", w.t_fw_us())
+                        .with("t_lib_us", w.dct_us)
+                        .with("t_launch_us", w.dkt_us)
+                        .with("orchestration_us", w.orchestration_us())
+                        .with("device_active_us", w.device_active_us)
+                        .with("hdbi", w.hdbi())
+                        .with("hdbi_prefill", w.phases[0].hdbi())
+                        .with("hdbi_decode", w.phases[1].hdbi())
+                        .with("tokens", w.tokens)
+                        .with("launches_per_token", w.launches_per_token())
+                })
+                .collect(),
+        );
+        let mut by_kind = Json::obj();
+        for (k, n) in &self.counts.by_kind {
+            by_kind.set(k, Json::from(*n));
+        }
+        let events = Json::obj()
+            .with("total", self.counts.total)
+            .with("recording", self.counts.recording)
+            .with("by_kind", by_kind)
+            .with("arrivals", self.counts.arrivals)
+            .with("rng_draws", self.counts.rng_draws)
+            .with("clock_jumps", self.counts.clock_jumps)
+            .with("clock_jump_us", self.counts.clock_jump_us)
+            .with("sched_steps", self.counts.sched_steps)
+            .with("admitted", self.counts.admitted)
+            .with("preempted", self.counts.preempted)
+            .with("output_tokens", self.counts.batch_sum);
+        let streams = Json::Arr(
+            self.streams
+                .iter()
+                .map(|s| {
+                    Json::obj()
+                        .with("device", s.device)
+                        .with("stream", s.stream)
+                        .with("kernels", s.kernels)
+                        .with("active_us", s.active_us)
+                        .with("idle_fraction", self.stream_idle_fraction(s))
+                })
+                .collect(),
+        );
+        Json::obj()
+            .with("window_us", self.window_us)
+            .with("totals", totals)
+            .with("phases", phases)
+            .with("kernel_launches_per_output_token", self.launches_per_token())
+            .with("windows", windows)
+            .with("events", events)
+            .with("streams", streams)
+    }
+
+    /// Fraction of the run a stream spent idle (1 − active/e2e).
+    pub fn stream_idle_fraction(&self, s: &StreamActivity) -> f64 {
+        if self.totals.e2e_us <= 0.0 {
+            0.0
+        } else {
+            (1.0 - s.active_us / self.totals.e2e_us).clamp(0.0, 1.0)
+        }
+    }
+
+    /// Register every trace-derived metric under the given model label
+    /// (names and labels per `docs/metrics.md`).
+    pub fn register_into(&self, reg: &mut super::MetricsRegistry, model: &str) {
+        let m: &[(&str, &str)] = &[("model", model)];
+        for (kind, n) in &self.counts.by_kind {
+            reg.counter_add(
+                "taxbreak_events_total",
+                "Trace events consumed, by event kind.",
+                &[("model", model), ("kind", kind)],
+                *n as f64,
+            );
+        }
+        let c = &self.counts;
+        for (name, help, v) in [
+            (
+                "taxbreak_recording_events_total",
+                "Spec-v3 recording events (correlation id 0).",
+                c.recording as f64,
+            ),
+            (
+                "taxbreak_arrivals_total",
+                "Requests that entered the serving system.",
+                c.arrivals as f64,
+            ),
+            (
+                "taxbreak_rng_draws_total",
+                "Random values consumed by the engine.",
+                c.rng_draws as f64,
+            ),
+            (
+                "taxbreak_clock_jumps_total",
+                "Virtual-clock jumps over idle time.",
+                c.clock_jumps as f64,
+            ),
+            (
+                "taxbreak_clock_jump_us_total",
+                "Idle microseconds skipped by clock jumps.",
+                c.clock_jump_us,
+            ),
+            (
+                "taxbreak_sched_steps_total",
+                "Scheduler steps (iteration-level batching).",
+                c.sched_steps as f64,
+            ),
+            (
+                "taxbreak_sched_admitted_total",
+                "Requests admitted by the scheduler.",
+                c.admitted as f64,
+            ),
+            (
+                "taxbreak_sched_preempted_total",
+                "Preemptions issued by the scheduler.",
+                c.preempted as f64,
+            ),
+            (
+                "taxbreak_output_tokens_total",
+                "Output-token proxy: post-step active batch, summed.",
+                c.batch_sum as f64,
+            ),
+            (
+                "taxbreak_kernel_launches_total",
+                "Kernel launches decomposed (Phase-1 invocations).",
+                self.totals.n_kernels as f64,
+            ),
+            (
+                "taxbreak_t_fw_us_total",
+                "Framework translation time ΔFT (T_Py + dispatch baseline), us.",
+                self.totals.dft_us(),
+            ),
+            (
+                "taxbreak_t_lib_us_total",
+                "Library dispatch overhead I_lib·ΔCT, us.",
+                self.totals.dct_us,
+            ),
+            (
+                "taxbreak_t_launch_us_total",
+                "Kernel-launch floor ΔKT, us.",
+                self.totals.dkt_us,
+            ),
+            (
+                "taxbreak_orchestration_us_total",
+                "T_Orchestration (Eq. 2), us.",
+                self.totals.orchestration_us(),
+            ),
+            (
+                "taxbreak_device_active_us_total",
+                "Device-active (kernel execution) time, us.",
+                self.totals.device_active_us,
+            ),
+        ] {
+            reg.counter_add(name, help, m, v);
+        }
+        reg.gauge_set(
+            "taxbreak_e2e_us",
+            "End-to-end wall clock of the run, us.",
+            m,
+            self.totals.e2e_us,
+        );
+        reg.gauge_set(
+            "taxbreak_hdbi",
+            "Host-Device Balance Index (Eq. 3) over the whole run.",
+            m,
+            self.totals.hdbi(),
+        );
+        for (name, p) in PHASES.iter().zip(self.phase_totals.iter()) {
+            reg.gauge_set(
+                "taxbreak_phase_hdbi",
+                "Per-phase HDBI over the whole run.",
+                &[("model", model), ("phase", name)],
+                p.hdbi(),
+            );
+        }
+        reg.gauge_set(
+            "taxbreak_kernel_launches_per_output_token",
+            "Kernel launches per generated token (dispatch amplification).",
+            m,
+            self.launches_per_token(),
+        );
+        for w in &self.windows {
+            let idx = w.index.to_string();
+            reg.gauge_set(
+                "taxbreak_window_hdbi",
+                "Per-window HDBI (virtual-time windows of --window-us).",
+                &[("model", model), ("window", &idx)],
+                w.hdbi(),
+            );
+        }
+        for s in &self.streams {
+            let d = s.device.to_string();
+            let st = s.stream.to_string();
+            let labels: &[(&str, &str)] = &[("model", model), ("device", &d), ("stream", &st)];
+            reg.gauge_set(
+                "taxbreak_stream_active_us",
+                "Device-active time per (device, stream), us.",
+                labels,
+                s.active_us,
+            );
+            reg.gauge_set(
+                "taxbreak_stream_idle_fraction",
+                "Idle fraction per (device, stream) over the run wall.",
+                labels,
+                self.stream_idle_fraction(s),
+            );
+        }
+    }
+}

@@ -1,0 +1,211 @@
+//! Serving-side probe: KV occupancy, scheduler queue depth and latency
+//! histograms sampled while the load generator runs.
+//!
+//! [`ServingProbe`] complements [`super::OnlineDecomposer`]: the
+//! decomposer watches the *trace* and is therefore a pure function of
+//! it (DESIGN.md §14), while the probe watches serving-side state that
+//! never reaches the trace — free-page counts, reservation totals,
+//! admission-queue depth. Replay reproduces the former bit-for-bit; the
+//! probe's view is only meaningful on recorded runs (KV occupancy is
+//! not modeled under replay, DESIGN.md §13), which is why
+//! `replay --verify` compares trace-derived snapshots only.
+
+use std::collections::BTreeMap;
+
+use super::registry::{Histogram, MetricsRegistry};
+use crate::util::stats::Welford;
+
+/// Streaming sampler for serving-side state, advanced once per
+/// scheduler step via [`ServingProbe::on_step`].
+#[derive(Debug, Clone, Default)]
+pub struct ServingProbe {
+    window_us: f64,
+    steps: u64,
+    kv_occupancy: Histogram,
+    queue_depth: Histogram,
+    ttft_us: Histogram,
+    tpot_us: Histogram,
+    /// Per-window mean occupancy ratio (the Perfetto counter series).
+    occupancy_windows: BTreeMap<u64, Welford>,
+    last_used_pages: u64,
+    last_reserved_pages: u64,
+    last_free_pages: u64,
+    total_pages: u64,
+}
+
+impl ServingProbe {
+    /// `window_us <= 0` collapses the occupancy series to one point.
+    pub fn new(window_us: f64) -> ServingProbe {
+        ServingProbe {
+            window_us,
+            ..Default::default()
+        }
+    }
+
+    fn window_of(&self, t_us: f64) -> u64 {
+        if self.window_us <= 0.0 {
+            0
+        } else {
+            (t_us / self.window_us).floor().max(0.0) as u64
+        }
+    }
+
+    /// Record one scheduler step's KV + queue state at virtual time
+    /// `now_us`. `used` counts pages holding live tokens, `reserved`
+    /// the admission-reserved worst-case pages, `free` the remainder.
+    pub fn on_step(&mut self, now_us: f64, used: u64, reserved: u64, free: u64, queue: usize) {
+        self.steps += 1;
+        let total = used + reserved + free;
+        let ratio = if total == 0 {
+            0.0
+        } else {
+            (used + reserved) as f64 / total as f64
+        };
+        self.kv_occupancy.observe(ratio);
+        self.queue_depth.observe(queue as f64);
+        self.occupancy_windows
+            .entry(self.window_of(now_us))
+            .or_default()
+            .push(ratio);
+        self.last_used_pages = used;
+        self.last_reserved_pages = reserved;
+        self.last_free_pages = free;
+        self.total_pages = total;
+    }
+
+    /// Observe one completed request's time-to-first-token (us).
+    pub fn observe_ttft_us(&mut self, v: f64) {
+        self.ttft_us.observe(v);
+    }
+
+    /// Observe one completed request's mean time-per-output-token (us).
+    pub fn observe_tpot_us(&mut self, v: f64) {
+        self.tpot_us.observe(v);
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// Per-window mean KV occupancy ratio as `(window_start_us, ratio)`
+    /// points — the KV counter-track series for the chrome exporter.
+    pub fn kv_series(&self) -> Vec<(f64, f64)> {
+        let w = self.window_us.max(0.0);
+        self.occupancy_windows
+            .iter()
+            .map(|(ix, acc)| (*ix as f64 * w, acc.mean()))
+            .collect()
+    }
+
+    /// Register every probe metric under the given model label (names
+    /// and labels per `docs/metrics.md`).
+    pub fn register_into(&self, reg: &mut MetricsRegistry, model: &str) {
+        let m: &[(&str, &str)] = &[("model", model)];
+        reg.counter_add(
+            "taxbreak_probe_steps_total",
+            "Scheduler steps sampled by the serving probe.",
+            m,
+            self.steps as f64,
+        );
+        for (name, help, v) in [
+            (
+                "taxbreak_kv_pages_used",
+                "KV pages holding live tokens at end of run.",
+                self.last_used_pages,
+            ),
+            (
+                "taxbreak_kv_pages_reserved",
+                "KV pages reserved for admitted requests at end of run.",
+                self.last_reserved_pages,
+            ),
+            (
+                "taxbreak_kv_pages_free",
+                "Free KV pages at end of run.",
+                self.last_free_pages,
+            ),
+            (
+                "taxbreak_kv_pages_total",
+                "Total KV pages in the pool.",
+                self.total_pages,
+            ),
+        ] {
+            reg.gauge_set(name, help, m, v as f64);
+        }
+        reg.histogram_merge(
+            "taxbreak_kv_occupancy_ratio",
+            "Committed (used+reserved) fraction of KV pages, per step.",
+            m,
+            &self.kv_occupancy,
+        );
+        reg.histogram_merge(
+            "taxbreak_sched_queue_depth",
+            "Requests waiting for admission, sampled per step.",
+            m,
+            &self.queue_depth,
+        );
+        reg.histogram_merge(
+            "taxbreak_ttft_us",
+            "Time to first token per completed request, us.",
+            m,
+            &self.ttft_us,
+        );
+        reg.histogram_merge(
+            "taxbreak_tpot_us",
+            "Mean time per output token per completed request, us.",
+            m,
+            &self.tpot_us,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn occupancy_windows_track_means() {
+        let mut p = ServingProbe::new(100.0);
+        p.on_step(10.0, 2, 2, 4, 0); // ratio 0.5, window 0
+        p.on_step(50.0, 6, 0, 2, 1); // ratio 0.75, window 0
+        p.on_step(150.0, 8, 0, 0, 3); // ratio 1.0, window 1
+        let series = p.kv_series();
+        assert_eq!(series.len(), 2);
+        assert_eq!(series[0].0, 0.0);
+        assert!((series[0].1 - 0.625).abs() < 1e-12);
+        assert_eq!(series[1], (100.0, 1.0));
+        assert_eq!(p.steps(), 3);
+    }
+
+    #[test]
+    fn zero_window_collapses_to_single_point() {
+        let mut p = ServingProbe::new(0.0);
+        p.on_step(10.0, 1, 0, 1, 0);
+        p.on_step(9000.0, 1, 0, 1, 0);
+        assert_eq!(p.kv_series().len(), 1);
+    }
+
+    #[test]
+    fn empty_pool_counts_as_zero_occupancy() {
+        let mut p = ServingProbe::new(50.0);
+        p.on_step(0.0, 0, 0, 0, 5);
+        assert_eq!(p.kv_series(), vec![(0.0, 0.0)]);
+    }
+
+    #[test]
+    fn registers_gauges_and_histograms() {
+        let mut p = ServingProbe::new(50.0);
+        p.on_step(0.0, 3, 1, 4, 2);
+        p.observe_ttft_us(1234.5);
+        p.observe_tpot_us(88.0);
+        let mut reg = MetricsRegistry::new();
+        p.register_into(&mut reg, "gpt2");
+        let text = reg.prometheus_text();
+        assert!(text.contains("taxbreak_probe_steps_total{model=\"gpt2\"} 1\n"));
+        assert!(text.contains("taxbreak_kv_pages_used{model=\"gpt2\"} 3\n"));
+        assert!(text.contains("taxbreak_kv_pages_reserved{model=\"gpt2\"} 1\n"));
+        assert!(text.contains("taxbreak_kv_pages_total{model=\"gpt2\"} 8\n"));
+        assert!(text.contains("taxbreak_ttft_us_count{model=\"gpt2\"} 1\n"));
+        assert!(text.contains("taxbreak_tpot_us_sum{model=\"gpt2\"} 88\n"));
+        assert!(text.contains("taxbreak_sched_queue_depth_sum{model=\"gpt2\"} 2\n"));
+    }
+}

@@ -1,0 +1,484 @@
+//! Metrics registry: labeled counters, gauges and log-bucketed
+//! histograms with Prometheus text exposition and JSON snapshot export.
+//!
+//! Everything is deterministic by construction: families and samples
+//! live in `BTreeMap`s keyed by name / rendered label set, histogram
+//! bucket bounds are fixed powers of two, and numbers render through
+//! one shared formatter — two registries fed the same observations
+//! produce byte-identical expositions. That determinism is what lets
+//! `taxbreak replay --verify` treat the metrics snapshot as a replay
+//! fixed point (DESIGN.md §14). The exposition format follows the
+//! Prometheus text format 0.0.4 (`# HELP` / `# TYPE` headers, cumulative
+//! `_bucket{le=...}` / `_sum` / `_count` histogram series); metric names
+//! and labels are specified in `docs/metrics.md`.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Prometheus metric kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricKind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl MetricKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            MetricKind::Counter => "counter",
+            MetricKind::Gauge => "gauge",
+            MetricKind::Histogram => "histogram",
+        }
+    }
+}
+
+/// Smallest histogram bucket bound exponent: 2^-10 ≈ 0.00098 (sub-us
+/// ratios and fractions land in real buckets, not a catch-all).
+pub const HIST_MIN_EXP: i32 = -10;
+/// Largest finite bucket bound exponent: 2^30 ≈ 1.07e9 us ≈ 18 min.
+pub const HIST_MAX_EXP: i32 = 30;
+
+const N_FINITE_BUCKETS: usize = (HIST_MAX_EXP - HIST_MIN_EXP + 1) as usize;
+
+/// Log-bucketed histogram: finite bucket upper bounds are the powers of
+/// two `2^HIST_MIN_EXP ..= 2^HIST_MAX_EXP`, plus the implicit `+Inf`
+/// overflow bucket. Counts are stored per-bucket (non-cumulative) and
+/// rendered cumulatively as the exposition format requires.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    sum: f64,
+    count: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram {
+            counts: vec![0; N_FINITE_BUCKETS + 1],
+            sum: 0.0,
+            count: 0,
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    /// Upper bound of finite bucket `i`.
+    pub fn bound(i: usize) -> f64 {
+        2f64.powi(HIST_MIN_EXP + i as i32)
+    }
+
+    /// Index of the first bucket whose bound is `>= v` (the `+Inf`
+    /// overflow bucket for anything above `2^HIST_MAX_EXP`).
+    fn bucket_of(v: f64) -> usize {
+        for i in 0..N_FINITE_BUCKETS {
+            if v <= Histogram::bound(i) {
+                return i;
+            }
+        }
+        N_FINITE_BUCKETS
+    }
+
+    pub fn observe(&mut self, v: f64) {
+        self.counts[Histogram::bucket_of(v)] += 1;
+        self.sum += v;
+        self.count += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// `(le, cumulative_count)` pairs over every finite bucket plus
+    /// `(+Inf, total)` — exactly the exposition series.
+    pub fn cumulative(&self) -> Vec<(f64, u64)> {
+        let mut out = Vec::with_capacity(self.counts.len());
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            let le = if i < N_FINITE_BUCKETS {
+                Histogram::bound(i)
+            } else {
+                f64::INFINITY
+            };
+            out.push((le, acc));
+        }
+        out
+    }
+}
+
+/// One sample: parsed label pairs plus the value.
+#[derive(Debug, Clone, PartialEq)]
+enum MetricValue {
+    Num(f64),
+    Hist(Histogram),
+}
+
+#[derive(Debug, Clone)]
+struct Sample {
+    labels: Vec<(String, String)>,
+    value: MetricValue,
+}
+
+/// A named metric family: kind, help text, samples keyed by their
+/// rendered (sorted) label set.
+#[derive(Debug, Clone)]
+pub struct MetricFamily {
+    kind: MetricKind,
+    help: String,
+    samples: BTreeMap<String, Sample>,
+}
+
+/// The registry: `BTreeMap` of families, so iteration (and therefore
+/// exposition) order is the lexicographic metric-name order.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsRegistry {
+    families: BTreeMap<String, MetricFamily>,
+}
+
+/// Escape a label value per the exposition format (`\`, `"`, newline).
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            other => out.push(other),
+        }
+    }
+    out
+}
+
+/// Render a label set as `k1="v1",k2="v2"` with keys sorted.
+fn label_key(labels: &[(&str, &str)]) -> String {
+    let mut pairs: Vec<_> = labels.to_vec();
+    pairs.sort();
+    pairs
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+/// Exposition number formatting: integral values print without a
+/// fraction, `+Inf` as the exposition spells it, everything else via
+/// Rust's shortest-roundtrip float formatting.
+pub fn fmt_value(v: f64) -> String {
+    if v.is_infinite() {
+        if v > 0.0 {
+            "+Inf".into()
+        } else {
+            "-Inf".into()
+        }
+    } else if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    fn family(&mut self, name: &str, kind: MetricKind, help: &str) -> &mut MetricFamily {
+        let f = self
+            .families
+            .entry(name.to_string())
+            .or_insert_with(|| MetricFamily {
+                kind,
+                help: help.to_string(),
+                samples: BTreeMap::new(),
+            });
+        assert!(
+            f.kind == kind,
+            "metric '{name}' re-registered as {} (was {})",
+            kind.as_str(),
+            f.kind.as_str()
+        );
+        f
+    }
+
+    fn sample(
+        &mut self,
+        name: &str,
+        kind: MetricKind,
+        help: &str,
+        labels: &[(&str, &str)],
+    ) -> &mut Sample {
+        let key = label_key(labels);
+        let owned: Vec<(String, String)> = {
+            let mut pairs: Vec<_> = labels.to_vec();
+            pairs.sort();
+            pairs
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.to_string()))
+                .collect()
+        };
+        let f = self.family(name, kind, help);
+        f.samples.entry(key).or_insert_with(|| Sample {
+            labels: owned,
+            value: match kind {
+                MetricKind::Histogram => MetricValue::Hist(Histogram::new()),
+                _ => MetricValue::Num(0.0),
+            },
+        })
+    }
+
+    /// Add to a counter (creating it at 0 on first touch).
+    pub fn counter_add(&mut self, name: &str, help: &str, labels: &[(&str, &str)], v: f64) {
+        let s = self.sample(name, MetricKind::Counter, help, labels);
+        if let MetricValue::Num(ref mut n) = s.value {
+            *n += v;
+        }
+    }
+
+    /// Set a gauge.
+    pub fn gauge_set(&mut self, name: &str, help: &str, labels: &[(&str, &str)], v: f64) {
+        let s = self.sample(name, MetricKind::Gauge, help, labels);
+        s.value = MetricValue::Num(v);
+    }
+
+    /// Observe one value into a histogram.
+    pub fn observe(&mut self, name: &str, help: &str, labels: &[(&str, &str)], v: f64) {
+        let s = self.sample(name, MetricKind::Histogram, help, labels);
+        if let MetricValue::Hist(ref mut h) = s.value {
+            h.observe(v);
+        }
+    }
+
+    /// Merge a pre-built histogram under a label set (the serving probe
+    /// aggregates off-registry, then registers the result).
+    pub fn histogram_merge(
+        &mut self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        h: &Histogram,
+    ) {
+        let s = self.sample(name, MetricKind::Histogram, help, labels);
+        s.value = MetricValue::Hist(h.clone());
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.families.is_empty()
+    }
+
+    /// Prometheus text exposition (format 0.0.4) of the full registry.
+    pub fn prometheus_text(&self) -> String {
+        let mut out = String::new();
+        for (name, f) in &self.families {
+            out.push_str(&format!("# HELP {name} {}\n", f.help));
+            out.push_str(&format!("# TYPE {name} {}\n", f.kind.as_str()));
+            for s in f.samples.values() {
+                let base = label_key(
+                    &s.labels
+                        .iter()
+                        .map(|(k, v)| (k.as_str(), v.as_str()))
+                        .collect::<Vec<_>>(),
+                );
+                match &s.value {
+                    MetricValue::Num(v) => {
+                        if base.is_empty() {
+                            out.push_str(&format!("{name} {}\n", fmt_value(*v)));
+                        } else {
+                            out.push_str(&format!("{name}{{{base}}} {}\n", fmt_value(*v)));
+                        }
+                    }
+                    MetricValue::Hist(h) => {
+                        for (le, c) in h.cumulative() {
+                            let le = fmt_value(le);
+                            if base.is_empty() {
+                                out.push_str(&format!("{name}_bucket{{le=\"{le}\"}} {c}\n"));
+                            } else {
+                                out.push_str(&format!("{name}_bucket{{{base},le=\"{le}\"}} {c}\n"));
+                            }
+                        }
+                        let suffix = |s: &str| {
+                            if base.is_empty() {
+                                format!("{name}_{s}")
+                            } else {
+                                format!("{name}_{s}{{{base}}}")
+                            }
+                        };
+                        out.push_str(&format!("{} {}\n", suffix("sum"), fmt_value(h.sum)));
+                        out.push_str(&format!("{} {}\n", suffix("count"), h.count));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// JSON snapshot of the registry (one object per family). Histogram
+    /// buckets are exported sparsely: only buckets that received
+    /// observations appear, each with its upper bound and cumulative
+    /// count, followed by the `+Inf` total.
+    pub fn to_json(&self) -> Json {
+        let mut root = Json::obj();
+        for (name, f) in &self.families {
+            let mut samples = Vec::with_capacity(f.samples.len());
+            for s in f.samples.values() {
+                let mut labels = Json::obj();
+                for (k, v) in &s.labels {
+                    labels.set(k, Json::Str(v.clone()));
+                }
+                let mut o = Json::obj().with("labels", labels);
+                match &s.value {
+                    MetricValue::Num(v) => o.set("value", Json::Num(*v)),
+                    MetricValue::Hist(h) => {
+                        o.set("count", Json::from(h.count as usize));
+                        o.set("sum", Json::Num(h.sum));
+                        let mut buckets = Vec::new();
+                        let mut prev = 0u64;
+                        for (le, c) in h.cumulative() {
+                            if c != prev || le.is_infinite() {
+                                buckets.push(
+                                    Json::obj()
+                                        .with(
+                                            "le",
+                                            if le.is_infinite() {
+                                                Json::Str("+Inf".into())
+                                            } else {
+                                                Json::Num(le)
+                                            },
+                                        )
+                                        .with("count", c as usize),
+                                );
+                                prev = c;
+                            }
+                        }
+                        o.set("buckets", Json::Arr(buckets));
+                    }
+                }
+                samples.push(o);
+            }
+            root.set(
+                name,
+                Json::obj()
+                    .with("kind", f.kind.as_str())
+                    .with("help", f.help.as_str())
+                    .with("samples", Json::Arr(samples)),
+            );
+        }
+        root
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_render() {
+        let mut r = MetricsRegistry::new();
+        r.counter_add("tb_events_total", "events", &[("model", "gpt2")], 3.0);
+        r.counter_add("tb_events_total", "events", &[("model", "gpt2")], 2.0);
+        r.counter_add("tb_events_total", "events", &[("model", "olmoe")], 1.0);
+        let text = r.prometheus_text();
+        assert!(text.contains("# HELP tb_events_total events\n"));
+        assert!(text.contains("# TYPE tb_events_total counter\n"));
+        assert!(text.contains("tb_events_total{model=\"gpt2\"} 5\n"));
+        assert!(text.contains("tb_events_total{model=\"olmoe\"} 1\n"));
+    }
+
+    #[test]
+    fn gauges_overwrite() {
+        let mut r = MetricsRegistry::new();
+        r.gauge_set("tb_hdbi", "hdbi", &[], 0.25);
+        r.gauge_set("tb_hdbi", "hdbi", &[], 0.75);
+        assert!(r.prometheus_text().contains("tb_hdbi 0.75\n"));
+    }
+
+    #[test]
+    fn label_sets_are_sorted_and_escaped() {
+        let mut r = MetricsRegistry::new();
+        r.gauge_set("g", "g", &[("z", "a\"b\\c\nd"), ("a", "1")], 1.0);
+        let text = r.prometheus_text();
+        assert!(text.contains("g{a=\"1\",z=\"a\\\"b\\\\c\\nd\"} 1\n"));
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_log_spaced() {
+        let mut h = Histogram::new();
+        for v in [0.5, 3.0, 3.9, 1000.0, 1e12] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert!((h.sum() - (0.5 + 3.0 + 3.9 + 1000.0 + 1e12)).abs() < 1.0);
+        let cum = h.cumulative();
+        // Monotone non-decreasing, ends at the total in +Inf.
+        for w in cum.windows(2) {
+            assert!(w[0].1 <= w[1].1);
+            assert!(w[0].0 < w[1].0);
+        }
+        let (last_le, last_c) = *cum.last().unwrap();
+        assert!(last_le.is_infinite());
+        assert_eq!(last_c, 5);
+        // 3.0 and 3.9 share the le=4 bucket.
+        let at_4 = cum.iter().find(|(le, _)| *le == 4.0).unwrap().1;
+        let at_2 = cum.iter().find(|(le, _)| *le == 2.0).unwrap().1;
+        assert_eq!(at_4 - at_2, 2);
+    }
+
+    #[test]
+    fn histogram_renders_exposition_series() {
+        let mut r = MetricsRegistry::new();
+        r.observe("tb_kv", "kv", &[("model", "m")], 0.5);
+        r.observe("tb_kv", "kv", &[("model", "m")], 0.25);
+        let text = r.prometheus_text();
+        assert!(text.contains("# TYPE tb_kv histogram\n"));
+        assert!(text.contains("tb_kv_bucket{model=\"m\",le=\"0.5\"} 2\n"));
+        assert!(text.contains("tb_kv_bucket{model=\"m\",le=\"+Inf\"} 2\n"));
+        assert!(text.contains("tb_kv_sum{model=\"m\"} 0.75\n"));
+        assert!(text.contains("tb_kv_count{model=\"m\"} 2\n"));
+    }
+
+    #[test]
+    fn json_snapshot_roundtrips_and_is_sparse() {
+        let mut r = MetricsRegistry::new();
+        r.counter_add("c", "a counter", &[("model", "m")], 2.0);
+        r.observe("h", "a histogram", &[], 3.0);
+        let j = r.to_json();
+        let back = Json::parse(&j.dump()).unwrap();
+        let c = back.req("c").unwrap();
+        assert_eq!(c.str_of("kind").unwrap(), "counter");
+        assert_eq!(c.arr_of("samples").unwrap()[0].f64_of("value").unwrap(), 2.0);
+        let h = back.req("h").unwrap().arr_of("samples").unwrap()[0].clone();
+        assert_eq!(h.usize_of("count").unwrap(), 1);
+        // Sparse: one touched bucket + the +Inf terminator.
+        assert_eq!(h.arr_of("buckets").unwrap().len(), 2);
+    }
+
+    #[test]
+    fn identical_observations_render_identically() {
+        let build = || {
+            let mut r = MetricsRegistry::new();
+            r.counter_add("c", "c", &[("m", "x")], 1.0);
+            r.observe("h", "h", &[("m", "x")], 2.5);
+            r.gauge_set("g", "g", &[], 0.125);
+            r
+        };
+        assert_eq!(build().prometheus_text(), build().prometheus_text());
+        assert_eq!(build().to_json().dump(), build().to_json().dump());
+    }
+
+    #[test]
+    fn fmt_value_shapes() {
+        assert_eq!(fmt_value(5.0), "5");
+        assert_eq!(fmt_value(0.5), "0.5");
+        assert_eq!(fmt_value(f64::INFINITY), "+Inf");
+        assert_eq!(fmt_value(-3.0), "-3");
+    }
+}

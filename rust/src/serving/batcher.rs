@@ -252,6 +252,12 @@ impl<B: ModelBackend> Scheduler<B> {
         self.waiting.len() + self.groups.iter().map(|g| g.members.len()).sum::<usize>()
     }
 
+    /// Requests submitted but not yet admitted into a batch group —
+    /// the admission-queue depth the serving probe samples per step.
+    pub fn waiting(&self) -> usize {
+        self.waiting.len()
+    }
+
     pub fn is_idle(&self) -> bool {
         self.pending() == 0
     }

@@ -17,6 +17,7 @@
 
 use std::collections::VecDeque;
 
+use crate::obs::{OnlineDecomposer, ServingProbe, Telemetry};
 use crate::runtime::backend::Backend;
 use crate::serving::batcher::{ModelBackend, StallGuard, StepDecision};
 use crate::serving::{event_split, hdbi_of, prompt_token_bound, Request, Scheduler, SchedulerConfig};
@@ -112,6 +113,14 @@ pub struct LoadgenConfig {
     /// serving-side what-if hook (`taxbreak loadgen --capture` /
     /// `--chrome-out`, then `taxbreak whatif --trace`).
     pub capture: bool,
+    /// Attach live telemetry ([`ModelRun::telemetry`]): an
+    /// [`OnlineDecomposer`] in the event fan-out plus a [`ServingProbe`]
+    /// sampling KV/queue state per step (`taxbreak loadgen
+    /// --metrics-out`). Streaming — does not imply `capture`.
+    pub metrics: bool,
+    /// Virtual-time window for the per-window decomposition series, us;
+    /// `<= 0` collapses to a single whole-run window.
+    pub window_us: f64,
 }
 
 impl Default for LoadgenConfig {
@@ -126,6 +135,8 @@ impl Default for LoadgenConfig {
             devices: 1,
             streams: 1,
             capture: false,
+            metrics: false,
+            window_us: 0.0,
         }
     }
 }
@@ -317,6 +328,11 @@ pub struct ModelRun {
     /// runs merge into one trace with `device`-stamped events and
     /// disjoint correlation-id ranges.
     pub trace: Option<Trace>,
+    /// Live telemetry (only with [`LoadgenConfig::metrics`]): the
+    /// finalized online decomposition (windowed HDBI series, totals
+    /// bit-identical to the post-hoc pass) plus the serving probe's
+    /// KV/queue/latency samples.
+    pub telemetry: Option<Telemetry>,
     /// High-water mark of events held between backend drain points (one
     /// scheduler step's output). This — not the run's total event count
     /// — bounds the streaming capture path's memory; the O(1)-memory
@@ -388,7 +404,8 @@ impl LoadgenReport {
             "per-model serving KPIs",
             &[
                 "model", "kind", "done", "tok/s", "TTFT p50(ms)", "TTFT p95(ms)",
-                "TPOT p50(ms)", "HDBI", "HDBI pf", "HDBI dec", "KV occ", "preempt",
+                "TTFT p99(ms)", "TPOT p50(ms)", "TPOT p99(ms)", "HDBI", "HDBI pf",
+                "HDBI dec", "KV occ", "preempt",
             ],
         );
         for r in &self.runs {
@@ -399,7 +416,9 @@ impl LoadgenReport {
                 format!("{:.1}", r.throughput_tps()),
                 ms(r.ttft_us.p50 / 1000.0),
                 ms(r.ttft_us.p95 / 1000.0),
+                ms(r.ttft_us.p99 / 1000.0),
                 ms(r.tpot_us.p50 / 1000.0),
+                ms(r.tpot_us.p99 / 1000.0),
                 ratio(r.hdbi()),
                 r.phase("prefill").map(|p| ratio(p.hdbi())).unwrap_or_default(),
                 r.phase("decode").map(|p| ratio(p.hdbi())).unwrap_or_default(),
@@ -414,8 +433,8 @@ impl LoadgenReport {
                  iterations        {}\n\
                  tokens generated  {}\n\
                  wall              {:.1} ms\n\
-                 TTFT mean/p95     {:.2} / {:.2} ms\n\
-                 TPOT mean/p95     {:.2} / {:.2} ms\n\
+                 TTFT mean/p95/p99 {:.2} / {:.2} / {:.2} ms\n\
+                 TPOT mean/p95/p99 {:.2} / {:.2} / {:.2} ms\n\
                  orchestration     {:.2} ms | device {:.2} ms | HDBI {:.2}\n",
                 r.variant,
                 if r.moe { "moe" } else { "dense" },
@@ -424,8 +443,10 @@ impl LoadgenReport {
                 r.wall_us / 1000.0,
                 r.ttft_us.mean / 1000.0,
                 r.ttft_us.p95 / 1000.0,
+                r.ttft_us.p99 / 1000.0,
                 r.tpot_us.mean / 1000.0,
                 r.tpot_us.p95 / 1000.0,
+                r.tpot_us.p99 / 1000.0,
                 r.orchestration_us() / 1000.0,
                 r.device_us() / 1000.0,
                 r.hdbi(),
@@ -453,6 +474,39 @@ impl LoadgenReport {
                     p.kernels,
                     p.hdbi(),
                 ));
+            }
+            if let Some(t) = &r.telemetry {
+                let o = &t.online;
+                out.push_str(&format!(
+                    "  online: HDBI {:.3} | T_fw {:.2} ms | T_lib {:.2} ms | T_launch {:.2} ms | \
+                     {:.1} launches/token | {} windows\n",
+                    o.totals.hdbi(),
+                    o.totals.dft_us() / 1000.0,
+                    o.totals.dct_us / 1000.0,
+                    o.totals.dkt_us / 1000.0,
+                    o.launches_per_token(),
+                    o.windows.len(),
+                ));
+                for w in o.windows.iter().take(16) {
+                    out.push_str(&format!(
+                        "    [{:>3}] {:>8.1}..{:<8.1} ms  hdbi {:.2}  pf {:.2}  dec {:.2}  \
+                         kernels {:>6}  tokens {:>5}\n",
+                        w.index,
+                        w.start_us / 1000.0,
+                        w.end_us / 1000.0,
+                        w.hdbi(),
+                        w.phases[0].hdbi(),
+                        w.phases[1].hdbi(),
+                        w.n_kernels,
+                        w.tokens,
+                    ));
+                }
+                if o.windows.len() > 16 {
+                    out.push_str(&format!(
+                        "    ... {} more windows\n",
+                        o.windows.len() - 16
+                    ));
+                }
             }
             if r.per_device.len() > 1 {
                 let mut t = Table::new(
@@ -506,31 +560,35 @@ impl LoadgenReport {
                         .with("hdbi", d.hdbi),
                 );
             }
-            runs.push(
-                Json::obj()
-                    .with("model", r.model.as_str())
-                    .with("variant", r.variant.as_str())
-                    .with("moe", r.moe)
-                    .with("completed", r.completed)
-                    .with("rejected", r.rejected)
-                    .with("iterations", r.iterations)
-                    .with("preemptions", r.preemptions)
-                    .with("late_arrivals", r.late_arrivals)
-                    .with("wall_us", r.wall_us)
-                    .with("tokens_generated", r.tokens_generated)
-                    .with("throughput_tps", r.throughput_tps())
-                    .with("ttft_mean_us", r.ttft_us.mean)
-                    .with("ttft_p50_us", r.ttft_us.p50)
-                    .with("ttft_p95_us", r.ttft_us.p95)
-                    .with("tpot_mean_us", r.tpot_us.mean)
-                    .with("tpot_p50_us", r.tpot_us.p50)
-                    .with("tpot_p95_us", r.tpot_us.p95)
-                    .with("kv_occupancy_mean", r.kv_occupancy_mean)
-                    .with("kv_occupancy_max", r.kv_occupancy_max)
-                    .with("hdbi", r.hdbi())
-                    .with("phases", phases)
-                    .with("per_device", per_device),
-            );
+            let mut obj = Json::obj()
+                .with("model", r.model.as_str())
+                .with("variant", r.variant.as_str())
+                .with("moe", r.moe)
+                .with("completed", r.completed)
+                .with("rejected", r.rejected)
+                .with("iterations", r.iterations)
+                .with("preemptions", r.preemptions)
+                .with("late_arrivals", r.late_arrivals)
+                .with("wall_us", r.wall_us)
+                .with("tokens_generated", r.tokens_generated)
+                .with("throughput_tps", r.throughput_tps())
+                .with("ttft_mean_us", r.ttft_us.mean)
+                .with("ttft_p50_us", r.ttft_us.p50)
+                .with("ttft_p95_us", r.ttft_us.p95)
+                .with("ttft_p99_us", r.ttft_us.p99)
+                .with("tpot_mean_us", r.tpot_us.mean)
+                .with("tpot_p50_us", r.tpot_us.p50)
+                .with("tpot_p95_us", r.tpot_us.p95)
+                .with("tpot_p99_us", r.tpot_us.p99)
+                .with("kv_occupancy_mean", r.kv_occupancy_mean)
+                .with("kv_occupancy_max", r.kv_occupancy_max)
+                .with("hdbi", r.hdbi())
+                .with("phases", phases)
+                .with("per_device", per_device);
+            if let Some(t) = &r.telemetry {
+                obj = obj.with("telemetry", t.online.to_json());
+            }
+            runs.push(obj);
         }
         Json::obj()
             .with("platform", self.platform.as_str())
@@ -569,6 +627,8 @@ impl LoadgenReport {
                     .with("model", r.model.as_str())
                     .with("throughput_tps", r.throughput_tps())
                     .with("tpot_p50_us", r.tpot_us.p50)
+                    .with("tpot_p99_us", r.tpot_us.p99)
+                    .with("ttft_p99_us", r.ttft_us.p99)
                     .with("hdbi", r.hdbi())
                     .with("per_device", per_device),
             );
@@ -586,6 +646,22 @@ impl LoadgenReport {
             .with("tpot_p50_us", crate::util::stats::mean(&tpot_p50s))
             .with("hdbi", hdbi_of(host, dev))
             .with("per_model", per_model)
+    }
+
+    /// Merge every run's telemetry into one model-labeled registry
+    /// (`taxbreak loadgen --metrics-out`). `None` when no run carries
+    /// telemetry (the config didn't ask for metrics).
+    pub fn metrics_registry(&self) -> Option<crate::obs::MetricsRegistry> {
+        let mut reg = crate::obs::MetricsRegistry::new();
+        let mut any = false;
+        for r in &self.runs {
+            if let Some(t) = &r.telemetry {
+                t.online.register_into(&mut reg, &r.model);
+                t.probe.register_into(&mut reg, &r.model);
+                any = true;
+            }
+        }
+        any.then_some(reg)
     }
 }
 
@@ -654,7 +730,7 @@ pub fn drive<B: Backend>(
         Some(b) => b,
         None => &mut null,
     };
-    let mut out = drive_collect(backend, sched, requests, 0, None, sink)?;
+    let mut out = drive_collect(backend, sched, requests, 0, None, None, sink)?;
     if let Some(mut b) = buffer {
         TraceSink::finish(&mut b, out.run.wall_us)?;
         out.run.trace = Some(b.into_trace());
@@ -675,6 +751,7 @@ pub(crate) fn drive_collect<B: Backend>(
     requests: Vec<Request>,
     device: u32,
     decisions: Option<Vec<StepDecision>>,
+    mut probe: Option<&mut ServingProbe>,
     sink: &mut dyn TraceSink,
 ) -> anyhow::Result<DriveOutcome> {
     let variant = backend.variant().to_string();
@@ -759,6 +836,17 @@ pub(crate) fn drive_collect<B: Backend>(
         let used = s.kv.used_pages() as f64 / total_pages;
         occ.push(used);
         occ_max = occ_max.max(used);
+        if let Some(p) = probe.as_deref_mut() {
+            let held = s.kv.used_pages() as u64;
+            let reserved = s.kv.reserved_pages() as u64;
+            p.on_step(
+                s.backend.now_us(),
+                held - reserved,
+                reserved,
+                s.kv.free_pages() as u64,
+                s.waiting(),
+            );
+        }
     }
     // Catch anything emitted outside a step (defensive; engines only
     // record inside invocations).
@@ -803,6 +891,7 @@ pub(crate) fn drive_collect<B: Backend>(
             hdbi: hdbi_of(stats.host_us, stats.device_us),
         }],
         trace: None, // captures live in whatever sink the caller chose
+        telemetry: None,
         peak_buffered_events,
     };
     Ok(DriveOutcome { run, ttfts, tpots })
@@ -1004,6 +1093,12 @@ fn run_sim_loadgen_inner(
         };
         let mut capture_buf = cfg.capture.then(|| TraceBufferSink::new(meta));
         drop(probe);
+        // Live telemetry: the online decomposer joins the sink fan-out
+        // (it sees exactly the stream a capture would), the serving
+        // probe samples scheduler-side state each step. Both stream —
+        // neither requires `capture`.
+        let mut online = cfg.metrics.then(|| OnlineDecomposer::new(cfg.window_us));
+        let mut kv_probe = cfg.metrics.then(|| ServingProbe::new(cfg.window_us));
 
         let mut outcomes = Vec::with_capacity(cfg.devices);
         for r in 0..cfg.devices {
@@ -1031,12 +1126,32 @@ fn run_sim_loadgen_inner(
             if let Some(sk) = model_sink.as_deref_mut() {
                 fan.push(sk);
             }
+            if let Some(o) = online.as_mut() {
+                fan.push(o);
+            }
             let mut tee = TeeSink { sinks: fan };
             let mut off = OffsetSink {
                 inner: &mut tee,
                 corr_offset: (r as u64) * 1_000_000_000,
             };
-            outcomes.push(drive_collect(engine, replica_sched, sub, r as u32, None, &mut off)?);
+            let out = drive_collect(
+                engine,
+                replica_sched,
+                sub,
+                r as u32,
+                None,
+                kv_probe.as_mut(),
+                &mut off,
+            )?;
+            if let Some(p) = kv_probe.as_mut() {
+                for &v in &out.ttfts {
+                    p.observe_ttft_us(v);
+                }
+                for &v in &out.tpots {
+                    p.observe_tpot_us(v);
+                }
+            }
+            outcomes.push(out);
         }
         let mut run = merge_replicas(outcomes);
         run.model = name.clone();
@@ -1047,6 +1162,13 @@ fn run_sim_loadgen_inner(
         }
         if let Some(sink) = model_sink.as_deref_mut() {
             sink.finish(run.wall_us)?;
+        }
+        if let (Some(mut o), Some(p)) = (online, kv_probe) {
+            TraceSink::finish(&mut o, run.wall_us)?;
+            run.telemetry = Some(Telemetry {
+                online: o.finalize(platform.clone()),
+                probe: p,
+            });
         }
         runs.push(run);
     }
@@ -1279,6 +1401,37 @@ mod tests {
         assert!((got.meta.wall_us - report.runs[0].wall_us).abs() < 1e-9);
         // And the streaming run's KPIs agree with the buffered run's.
         assert_eq!(report.runs[0].phases, buffered.runs[0].phases);
+    }
+
+    #[test]
+    fn metrics_run_attaches_telemetry_and_builds_a_registry() {
+        let cfg = LoadgenConfig {
+            requests: 5,
+            rate_per_s: 0.0,
+            capture: true,
+            metrics: true,
+            window_us: 200.0,
+            ..Default::default()
+        };
+        let report = run_sim_loadgen(&["gpt2".to_string()], "h200", &cfg).unwrap();
+        let run = &report.runs[0];
+        let t = run.telemetry.as_ref().expect("metrics runs carry telemetry");
+        assert!(t.online.totals.n_kernels > 0);
+        assert!(!t.online.windows.is_empty());
+        assert!(t.probe.steps() > 0, "the probe samples every scheduler step");
+        assert!(run.ttft_us.p99 >= run.ttft_us.p95);
+        assert!(run.tpot_us.p99 >= run.tpot_us.p95);
+        let reg = report.metrics_registry().expect("telemetry yields a registry");
+        let text = reg.prometheus_text();
+        assert!(text.contains("taxbreak_hdbi{model=\"gpt2\"}"), "{text}");
+        assert!(text.contains("taxbreak_probe_steps_total{model=\"gpt2\"}"), "{text}");
+        let json = report.to_json();
+        assert!(json.arr_of("runs").unwrap()[0].get("telemetry").is_some());
+        // No metrics requested → no telemetry, no registry.
+        let plain = LoadgenConfig { metrics: false, ..cfg };
+        let r2 = run_sim_loadgen(&["gpt2".to_string()], "h200", &plain).unwrap();
+        assert!(r2.runs[0].telemetry.is_none());
+        assert!(r2.metrics_registry().is_none());
     }
 
     #[test]

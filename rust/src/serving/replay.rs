@@ -176,6 +176,7 @@ pub fn replay(recording: &Trace) -> anyhow::Result<ReplayOutcome> {
             script.requests,
             script.device,
             Some(script.decisions),
+            None,
             &mut off,
         )?);
     }

@@ -4,6 +4,15 @@
 use crate::trace::{Trace, Track};
 use crate::util::json::Json;
 
+/// One Perfetto counter track: a named series of `(ts_us, value)`
+/// points, rendered as chrome "C" events under the trace's pid (e.g.
+/// the per-window HDBI and KV-occupancy series from a metrics-enabled
+/// loadgen run — docs/trace_format.md §7).
+pub struct CounterSeries {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
 /// Chrome tid for one event: host threads and device streams get
 /// disjoint, per-device lanes. Device `d`'s host thread maps to
 /// `1000*d` (so the default device keeps the historical tid 0) and its
@@ -33,7 +42,15 @@ fn thread_label(track: Track, device: u32) -> String {
 /// multi-device timelines render as labeled lanes instead of every
 /// kernel collapsing onto an anonymous tid.
 pub fn to_chrome_json(trace: &Trace) -> Json {
-    let mut events = Vec::with_capacity(trace.events.len() + 4);
+    to_chrome_json_with_counters(trace, &[])
+}
+
+/// [`to_chrome_json`] plus counter tracks: each [`CounterSeries`]
+/// appends its points as "C" events (tid 0) after the "X" events, so
+/// Perfetto renders them as value-over-time lanes below the timeline.
+pub fn to_chrome_json_with_counters(trace: &Trace, counters: &[CounterSeries]) -> Json {
+    let n_points: usize = counters.iter().map(|c| c.points.len()).sum();
+    let mut events = Vec::with_capacity(trace.events.len() + n_points + 4);
     let label = format!(
         "{} {} @ {}",
         trace.meta.model, trace.meta.phase, trace.meta.platform
@@ -88,12 +105,34 @@ pub fn to_chrome_json(trace: &Trace) -> Json {
                 .with("args", args),
         );
     }
+    for c in counters {
+        for &(ts, value) in &c.points {
+            events.push(
+                Json::obj()
+                    .with("name", c.name.as_str())
+                    .with("ph", "C")
+                    .with("ts", ts)
+                    .with("pid", 1u32)
+                    .with("tid", 0u32)
+                    .with("args", Json::obj().with(c.name.as_str(), value)),
+            );
+        }
+    }
     Json::Arr(events)
 }
 
 /// Write the chrome trace to a file.
 pub fn save_chrome(trace: &Trace, path: &std::path::Path) -> anyhow::Result<()> {
-    std::fs::write(path, to_chrome_json(trace).dump())
+    save_chrome_with_counters(trace, &[], path)
+}
+
+/// Write the chrome trace plus counter tracks to a file.
+pub fn save_chrome_with_counters(
+    trace: &Trace,
+    counters: &[CounterSeries],
+    path: &std::path::Path,
+) -> anyhow::Result<()> {
+    std::fs::write(path, to_chrome_json_with_counters(trace, counters).dump())
         .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
 }
 
@@ -149,6 +188,42 @@ mod tests {
         assert_eq!(arr[3].str_of("ph").unwrap(), "X");
         assert_eq!(arr[4].f64_of("tid").unwrap(), 103.0);
         assert_eq!(arr[4].str_of("cat").unwrap(), "kernel");
+    }
+
+    #[test]
+    fn counter_series_append_c_events_after_the_timeline() {
+        let mut t = Trace::new(TraceMeta::default());
+        t.push(TraceEvent {
+            kind: EventKind::Kernel,
+            name: "k".into(),
+            ts_us: 0.0,
+            dur_us: 1.0,
+            correlation_id: 1,
+            track: Track::Device(0),
+            device: None,
+            args: None,
+            meta: None,
+        });
+        let counters = [CounterSeries {
+            name: "hdbi".into(),
+            points: vec![(0.0, 0.4), (50.0, 0.8)],
+        }];
+        let j = to_chrome_json_with_counters(&t, &counters);
+        let arr = j.as_arr().unwrap();
+        // process_name + thread_name + 1 X event + 2 C events.
+        assert_eq!(arr.len(), 5);
+        let c = &arr[3];
+        assert_eq!(c.str_of("ph").unwrap(), "C");
+        assert_eq!(c.str_of("name").unwrap(), "hdbi");
+        assert_eq!(c.f64_of("ts").unwrap(), 0.0);
+        assert_eq!(c.req("args").unwrap().f64_of("hdbi").unwrap(), 0.4);
+        assert_eq!(arr[4].f64_of("ts").unwrap(), 50.0);
+        assert_eq!(arr[4].req("args").unwrap().f64_of("hdbi").unwrap(), 0.8);
+        // The no-counter entry point is the counters == [] special case.
+        assert_eq!(
+            to_chrome_json(&t).dump(),
+            to_chrome_json_with_counters(&t, &[]).dump()
+        );
     }
 
     #[test]

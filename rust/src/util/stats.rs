@@ -78,6 +78,7 @@ pub struct Summary {
     pub p5: f64,
     pub p50: f64,
     pub p95: f64,
+    pub p99: f64,
     pub max: f64,
     pub ci95: f64,
 }
@@ -93,6 +94,7 @@ impl Summary {
                 p5: 0.0,
                 p50: 0.0,
                 p95: 0.0,
+                p99: 0.0,
                 max: 0.0,
                 ci95: 0.0,
             };
@@ -107,6 +109,7 @@ impl Summary {
             p5: percentile_of_sorted(&sorted, 5.0),
             p50: percentile_of_sorted(&sorted, 50.0),
             p95: percentile_of_sorted(&sorted, 95.0),
+            p99: percentile_of_sorted(&sorted, 99.0),
             max: sorted[sorted.len() - 1],
             ci95: ci95_half_width(xs),
         }
@@ -201,7 +204,9 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 100.0);
         assert!((s.p50 - 50.5).abs() < 1e-12);
-        assert!(s.p5 < s.p50 && s.p50 < s.p95);
+        assert!(s.p5 < s.p50 && s.p50 < s.p95 && s.p95 < s.p99);
+        // numpy.percentile(1..=100, 99) == 99.01
+        assert!((s.p99 - 99.01).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,326 @@
+//! Integration: the live telemetry plane (`obs`).
+//!
+//! Three locks on the online-decomposition contract (DESIGN.md §14):
+//!
+//! * **bit-identity** — the streaming decomposer's end-of-run totals
+//!   equal the post-hoc two-phase pipeline (`taxbreak analyze`) on the
+//!   same trace, bit for bit, on eager sim traces and spec-v3 serving
+//!   captures alike;
+//! * a **property suite** — for arbitrary loadgen configurations and
+//!   window sizes, the per-window slices partition the aggregate:
+//!   integer fields sum exactly, float fields to float-fold tolerance;
+//! * a **spec-drift test** — every metric name the registry exposes is
+//!   documented in `docs/metrics.md`, and vice versa.
+
+use std::path::PathBuf;
+
+use taxbreak::hardware::Platform;
+use taxbreak::obs::{self, OnlineReport};
+use taxbreak::prop_assert;
+use taxbreak::serving::loadgen::LenDist;
+use taxbreak::serving::{run_sim_loadgen, LoadgenConfig, SchedulerConfig};
+use taxbreak::sim::simulate;
+use taxbreak::taxbreak::{analyze, Decomposition, ReplayConfig, SimReplayBackend};
+use taxbreak::trace::Trace;
+use taxbreak::util::prop::forall;
+
+/// The post-hoc reference: the same pipeline `taxbreak analyze --trace`
+/// runs (same seed, same replay config).
+fn posthoc(trace: &Trace) -> Decomposition {
+    let platform = Platform::by_name(&trace.meta.platform).unwrap();
+    let mut backend = SimReplayBackend::new(platform, obs::ANALYZE_REPLAY_SEED);
+    analyze(trace, &mut backend, &ReplayConfig::fast()).decomposition
+}
+
+fn online(trace: &Trace, window_us: f64) -> OnlineReport {
+    let platform = Platform::by_name(&trace.meta.platform).unwrap();
+    obs::snapshot_of_trace(trace, platform, window_us).0
+}
+
+/// Bitwise equality on every scalar, exact equality on the per-family
+/// and per-device partitions.
+fn assert_bit_identical(got: &Decomposition, want: &Decomposition) {
+    assert_eq!(got.n_kernels, want.n_kernels, "n_kernels");
+    for (x, y, name) in [
+        (got.t_py_us, want.t_py_us, "t_py_us"),
+        (got.t_base_us, want.t_base_us, "t_base_us"),
+        (got.dct_us, want.dct_us, "dct_us"),
+        (got.dkt_us, want.dkt_us, "dkt_us"),
+        (got.device_active_us, want.device_active_us, "device_active_us"),
+        (got.e2e_us, want.e2e_us, "e2e_us"),
+        (got.floor_us, want.floor_us, "floor_us"),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits(), "{name}: online {x} vs post-hoc {y}");
+    }
+    assert_eq!(got.per_family, want.per_family, "per-family partition");
+    assert_eq!(got.per_device, want.per_device, "per-device partition");
+}
+
+#[test]
+fn online_totals_are_bit_identical_to_decompose_on_the_bundled_eager_trace() {
+    let cfg = taxbreak::whatif::bundled::by_name("moe-decode").unwrap();
+    let trace = simulate(
+        &cfg.model_spec().unwrap(),
+        &cfg.platform_spec().unwrap(),
+        &cfg.workload(),
+        cfg.seed,
+    );
+    let rep = online(&trace, 0.0);
+    assert_bit_identical(&rep.totals, &posthoc(&trace));
+    // W <= 0 collapses the series to the single whole-run window.
+    assert_eq!(rep.windows.len(), 1);
+    assert_eq!(rep.windows[0].start_us, 0.0);
+    assert_eq!(rep.windows[0].end_us.to_bits(), rep.totals.e2e_us.to_bits());
+    assert_eq!(rep.windows[0].n_kernels, rep.totals.n_kernels);
+    // Eager traces carry no scheduler, so no recording events and no
+    // token proxy.
+    assert_eq!(rep.counts.recording, 0);
+    assert_eq!(rep.launches_per_token(), 0.0);
+}
+
+#[test]
+fn online_totals_are_bit_identical_to_decompose_on_v3_serving_captures() {
+    let cfg = LoadgenConfig {
+        requests: 8,
+        rate_per_s: 1500.0,
+        seed: 42,
+        devices: 2,
+        streams: 2,
+        sched: SchedulerConfig { kv_pages: 128, ..SchedulerConfig::default() },
+        capture: true,
+        metrics: true,
+        window_us: 400.0,
+        ..LoadgenConfig::default()
+    };
+    let models = ["gpt2".to_string(), "olmoe-1b-7b".to_string()];
+    let report = run_sim_loadgen(&models, "h200", &cfg).unwrap();
+    for run in &report.runs {
+        let trace = run.trace.as_ref().unwrap();
+        let want = posthoc(trace);
+
+        // The snapshot taken post-hoc from the capture...
+        let rep = online(trace, 0.0);
+        assert_bit_identical(&rep.totals, &want);
+        assert!(rep.counts.recording > 0, "v3 recording events are visible to the counters");
+        assert!(rep.counts.batch_sum > 0);
+        assert!(rep.launches_per_token() > 0.0);
+
+        // ...and the one streamed live during the run agree with the
+        // two-phase pipeline bit for bit.
+        let live = &run.telemetry.as_ref().unwrap().online;
+        assert_bit_identical(&live.totals, &want);
+        assert!(live.windows.len() > 1, "windowed series splits the run");
+    }
+}
+
+/// Float components are re-summed per window in a different order than
+/// the flat fold, so the partition is exact for integers and
+/// float-fold-tolerant for the `us` components.
+fn assert_windows_partition(rep: &OnlineReport) {
+    let t = &rep.totals;
+    let sum = |f: fn(&taxbreak::obs::WindowSlice) -> f64| -> f64 {
+        rep.windows.iter().map(f).sum()
+    };
+    let n: usize = rep.windows.iter().map(|w| w.n_kernels).sum();
+    assert_eq!(n, t.n_kernels, "kernel counts partition exactly");
+    let toks: usize = rep.windows.iter().map(|w| w.tokens).sum();
+    assert_eq!(toks, rep.counts.batch_sum, "token counts partition exactly");
+    let close = |a: f64, b: f64, name: &str| {
+        let tol = 1e-9 * b.abs().max(1.0);
+        assert!((a - b).abs() <= tol, "{name}: windows sum {a} vs totals {b}");
+    };
+    close(sum(|w| w.t_py_us), t.t_py_us, "t_py_us");
+    close(sum(|w| w.t_base_us), t.t_base_us, "t_base_us");
+    close(sum(|w| w.dct_us), t.dct_us, "dct_us");
+    close(sum(|w| w.dkt_us), t.dkt_us, "dkt_us");
+    close(sum(|w| w.device_active_us), t.device_active_us, "device_active_us");
+    for p in 0..2 {
+        let inv: usize = rep.windows.iter().map(|w| w.phases[p].invocations).sum();
+        assert_eq!(inv, rep.phase_totals[p].invocations, "phase {p} invocations");
+        let orch: f64 = rep.windows.iter().map(|w| w.phases[p].orchestration_us).sum();
+        close(orch, rep.phase_totals[p].orchestration_us, "phase orchestration_us");
+        let dev: f64 = rep.windows.iter().map(|w| w.phases[p].device_us).sum();
+        close(dev, rep.phase_totals[p].device_us, "phase device_us");
+    }
+    // Windows are half-open [k·W, (k+1)·W), ascending, non-overlapping.
+    if rep.window_us > 0.0 {
+        for pair in rep.windows.windows(2) {
+            assert!(pair[0].index < pair[1].index);
+        }
+        for w in &rep.windows {
+            assert_eq!(w.start_us, w.index as f64 * rep.window_us);
+            assert_eq!(w.end_us, w.start_us + rep.window_us);
+        }
+    }
+}
+
+#[test]
+fn prop_window_slices_partition_the_aggregate_for_arbitrary_configs() {
+    forall("windowed slices partition the online decomposition", 8, |g| {
+        let devices = g.usize_in(1, 3);
+        let cfg = LoadgenConfig {
+            requests: g.usize_in(devices, 8),
+            rate_per_s: *g.choice(&[0.0, 800.0, 2500.0]),
+            prompt_len: LenDist::Uniform { lo: g.usize_in(1, 8), hi: g.usize_in(8, 24) },
+            output_len: LenDist::Uniform { lo: 1, hi: g.usize_in(1, 6) },
+            seed: g.u64(),
+            devices,
+            streams: g.usize_in(1, 2),
+            sched: SchedulerConfig { kv_pages: 64 * devices, ..SchedulerConfig::default() },
+            capture: true,
+            ..LoadgenConfig::default()
+        };
+        let model = g.choice(&["gpt2", "olmoe-1b-7b"]).to_string();
+        let platform = g.choice(&["h100", "h200"]).to_string();
+        let report = run_sim_loadgen(&[model], &platform, &cfg).unwrap();
+        let trace = report.runs[0].trace.as_ref().unwrap();
+        let want = posthoc(trace);
+
+        // Any window size — including one that splinters the run into
+        // hundreds of slices — leaves the totals bit-identical and the
+        // partition exact.
+        let frac = *g.choice(&[0.0, 0.03, 0.2, 0.7, 2.0]);
+        let rep = online(trace, trace.e2e_us() * frac);
+        assert_bit_identical(&rep.totals, &want);
+        assert_windows_partition(&rep);
+        prop_assert!(
+            g,
+            rep.totals.n_kernels > 0,
+            "a served run must launch kernels"
+        );
+        true
+    });
+}
+
+#[test]
+fn moe_serving_windows_separate_prefill_from_decode_hdbi() {
+    let cfg = LoadgenConfig {
+        requests: 6,
+        rate_per_s: 0.0,
+        seed: 3,
+        capture: true,
+        ..LoadgenConfig::default()
+    };
+    let report = run_sim_loadgen(&["olmoe-1b-7b".to_string()], "h200", &cfg).unwrap();
+    let trace = report.runs[0].trace.as_ref().unwrap();
+    let rep = online(trace, trace.e2e_us() / 12.0);
+
+    let [pf, dec] = &rep.phase_totals;
+    assert!(pf.invocations > 0 && dec.invocations > 0, "both phases ran");
+    assert!(
+        (pf.hdbi() - dec.hdbi()).abs() > 0.01,
+        "prefill ({:.3}) and decode ({:.3}) HDBI must be distinct",
+        pf.hdbi(),
+        dec.hdbi()
+    );
+    assert!(
+        pf.hdbi() > dec.hdbi(),
+        "MoE decode is more host-bound than prefill (the paper's contrast)"
+    );
+    // The per-window series resolves the contrast over time: windows
+    // dominated by each phase exist, and their HDBI values spread.
+    assert!(rep.windows.iter().any(|w| w.phases[0].invocations > w.phases[1].invocations));
+    assert!(rep.windows.iter().any(|w| w.phases[1].invocations > w.phases[0].invocations));
+    let active = rep.windows.iter().filter(|w| w.n_kernels > 0);
+    let hdbis: Vec<f64> = active.map(|w| w.hdbi()).collect();
+    let spread = hdbis.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+        - hdbis.iter().cloned().fold(f64::INFINITY, f64::min);
+    assert!(spread > 0.01, "per-window HDBI is flat ({hdbis:?})");
+}
+
+/// Every metric the registry can emit, by name. `docs/metrics.md` is
+/// the user-facing contract: adding, renaming or dropping a metric
+/// must update both this list and the doc, or this test fails.
+const METRIC_NAMES: [&str; 32] = [
+    "taxbreak_events_total",
+    "taxbreak_recording_events_total",
+    "taxbreak_arrivals_total",
+    "taxbreak_rng_draws_total",
+    "taxbreak_clock_jumps_total",
+    "taxbreak_clock_jump_us_total",
+    "taxbreak_sched_steps_total",
+    "taxbreak_sched_admitted_total",
+    "taxbreak_sched_preempted_total",
+    "taxbreak_output_tokens_total",
+    "taxbreak_kernel_launches_total",
+    "taxbreak_t_fw_us_total",
+    "taxbreak_t_lib_us_total",
+    "taxbreak_t_launch_us_total",
+    "taxbreak_orchestration_us_total",
+    "taxbreak_device_active_us_total",
+    "taxbreak_e2e_us",
+    "taxbreak_hdbi",
+    "taxbreak_phase_hdbi",
+    "taxbreak_kernel_launches_per_output_token",
+    "taxbreak_window_hdbi",
+    "taxbreak_stream_active_us",
+    "taxbreak_stream_idle_fraction",
+    "taxbreak_probe_steps_total",
+    "taxbreak_kv_pages_used",
+    "taxbreak_kv_pages_reserved",
+    "taxbreak_kv_pages_free",
+    "taxbreak_kv_pages_total",
+    "taxbreak_kv_occupancy_ratio",
+    "taxbreak_sched_queue_depth",
+    "taxbreak_ttft_us",
+    "taxbreak_tpot_us",
+];
+
+fn metrics_doc() -> String {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .unwrap()
+        .join("docs")
+        .join("metrics.md");
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("{}: {e}", path.display()))
+}
+
+#[test]
+fn metrics_doc_names_every_metric_and_nothing_else() {
+    let doc = metrics_doc();
+    for name in METRIC_NAMES {
+        assert!(doc.contains(&format!("`{name}`")), "docs/metrics.md is missing `{name}`");
+    }
+    // Every `taxbreak_*` identifier the doc names is a real metric.
+    for line in doc.lines() {
+        let mut rest = line;
+        while let Some(i) = rest.find("`taxbreak_") {
+            let tail = &rest[i + 1..];
+            let end = tail.find('`').unwrap_or(tail.len());
+            let name = &tail[..end];
+            assert!(
+                METRIC_NAMES.contains(&name),
+                "docs/metrics.md documents unknown metric `{name}`"
+            );
+            rest = &tail[end..];
+        }
+    }
+}
+
+#[test]
+fn a_metrics_run_exposes_exactly_the_documented_names() {
+    let cfg = LoadgenConfig {
+        requests: 4,
+        rate_per_s: 0.0,
+        capture: true,
+        metrics: true,
+        window_us: 500.0,
+        ..LoadgenConfig::default()
+    };
+    let report = run_sim_loadgen(&["gpt2".to_string()], "h200", &cfg).unwrap();
+    let reg = report.metrics_registry().unwrap();
+    let text = reg.prometheus_text();
+    for name in METRIC_NAMES {
+        assert!(
+            text.contains(&format!("# TYPE {name} ")),
+            "a metrics run must expose `{name}`"
+        );
+    }
+    // And nothing undocumented leaks out.
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let name = rest.split_whitespace().next().unwrap();
+            assert!(METRIC_NAMES.contains(&name), "undocumented metric `{name}` exposed");
+        }
+    }
+}

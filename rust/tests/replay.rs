@@ -39,6 +39,7 @@ fn golden_recording() -> Trace {
         streams: 2,
         sched: SchedulerConfig { kv_pages: 128, ..SchedulerConfig::default() },
         capture: true,
+        ..LoadgenConfig::default()
     };
     let report = run_sim_loadgen(&["gpt2".to_string()], "h200", &cfg).unwrap();
     report.runs[0].trace.clone().unwrap()
@@ -99,6 +100,42 @@ fn golden_replay_corpus_is_a_byte_fixed_point_in_both_dialects() {
     assert_eq!(out.run.completed, 8);
 }
 
+/// DESIGN.md §14: the telemetry snapshot is a pure function of
+/// `(events, wall_us)`, so replaying a recording reproduces not just
+/// the bytes but the entire windowed metrics exposition.
+#[test]
+fn replayed_runs_reproduce_identical_metrics_snapshots() {
+    use taxbreak::hardware::Platform;
+    let cfg = LoadgenConfig {
+        requests: 6,
+        rate_per_s: 1200.0,
+        seed: 9,
+        devices: 2,
+        streams: 2,
+        sched: SchedulerConfig { kv_pages: 128, ..SchedulerConfig::default() },
+        capture: true,
+        ..LoadgenConfig::default()
+    };
+    let report = run_sim_loadgen(&["olmoe-1b-7b".to_string()], "h200", &cfg).unwrap();
+    let recording = report.runs[0].trace.as_ref().unwrap();
+    let out = replay(recording).unwrap();
+
+    let platform = Platform::by_name("h200").unwrap();
+    let window_us = recording.e2e_us() / 6.0;
+    let (rep_rec, reg_rec) =
+        taxbreak::obs::snapshot_of_trace(recording, platform.clone(), window_us);
+    let (rep_out, reg_out) = taxbreak::obs::snapshot_of_trace(&out.trace, platform, window_us);
+    assert_eq!(
+        reg_rec.prometheus_text(),
+        reg_out.prometheus_text(),
+        "the Prometheus exposition must be a replay fixed point"
+    );
+    assert_eq!(reg_rec.to_json().dump(), reg_out.to_json().dump());
+    assert!(rep_rec.totals.n_kernels > 0);
+    assert_eq!(rep_rec.totals.n_kernels, rep_out.totals.n_kernels);
+    assert!(rep_rec.windows.len() > 1, "a fractional window splits the run");
+}
+
 #[test]
 fn prop_arbitrary_loadgen_configs_satisfy_the_replay_fixed_point() {
     forall("record → replay → re-record is byte-equal", 10, |g| {
@@ -119,6 +156,7 @@ fn prop_arbitrary_loadgen_configs_satisfy_the_replay_fixed_point() {
                 ..SchedulerConfig::default()
             },
             capture: true,
+            ..LoadgenConfig::default()
         };
         let model = g.choice(&["gpt2", "olmoe-1b-7b"]).to_string();
         let platform = g.choice(&["h100", "h200"]).to_string();

@@ -327,6 +327,39 @@ fn chrome_export_fields_match_spec() {
 }
 
 #[test]
+fn chrome_counter_events_match_spec() {
+    use taxbreak::trace::chrome::{to_chrome_json_with_counters, CounterSeries};
+    let t = sample_trace();
+    let counters = [
+        CounterSeries { name: "hdbi".into(), points: vec![(0.0, 0.25), (500.0, 0.75)] },
+        CounterSeries { name: "kv_occupancy".into(), points: vec![(0.0, 0.5)] },
+    ];
+    let chrome = to_chrome_json_with_counters(&t, &counters);
+    let arr = chrome.as_arr().unwrap();
+    // §7.1: counter ("C") events append after the complete events, one
+    // per point, series in caller order.
+    let base = 1 + 4 + t.events.len();
+    assert_eq!(arr.len(), base + 3);
+    let expected = [("hdbi", 0.0, 0.25), ("hdbi", 500.0, 0.75), ("kv_occupancy", 0.0, 0.5)];
+    for (c, (name, ts, value)) in arr[base..].iter().zip(expected) {
+        assert_eq!(keys(c), vec!["name", "ph", "ts", "pid", "tid", "args"]);
+        assert_eq!(c.str_of("name").unwrap(), name);
+        assert_eq!(c.str_of("ph").unwrap(), "C");
+        assert_eq!(c.f64_of("ts").unwrap(), ts);
+        assert_eq!(c.f64_of("pid").unwrap(), 1.0);
+        assert_eq!(c.f64_of("tid").unwrap(), 0.0);
+        let args = c.req("args").unwrap();
+        assert_eq!(keys(args), vec![name], "args holds exactly the series key");
+        assert_eq!(args.f64_of(name).unwrap(), value);
+    }
+    // An empty counter list reduces to the plain export, byte for byte.
+    assert_eq!(
+        to_chrome_json_with_counters(&t, &[]).dump(),
+        to_chrome_json(&t).dump()
+    );
+}
+
+#[test]
 fn event_kind_tags_roundtrip_the_documented_set() {
     let documented = [
         "torch_op",
