@@ -131,6 +131,98 @@ fn main() {
         },
     ));
 
+    // --- interned event hot paths ----------------------------------------
+    // The raw-speed pass: dedup keys are interned-symbol composites, so
+    // the per-kernel cache probe is a hash of five Copy fields instead
+    // of a formatted String. Both paths are timed — the ratio is the
+    // win the interning bought.
+    let metas: Vec<_> = trace
+        .events
+        .iter()
+        .filter_map(|e| e.meta.clone())
+        .collect();
+    results.push(bench_items(
+        "intern::dedup_value_key (per-kernel probe)",
+        2,
+        50,
+        metas.len() as f64,
+        || {
+            for m in &metas {
+                black_box(m.dedup());
+            }
+        },
+    ));
+    results.push(bench_items(
+        "intern::dedup_string_key (legacy render)",
+        2,
+        50,
+        metas.len() as f64,
+        || {
+            for m in &metas {
+                black_box(m.dedup_key());
+            }
+        },
+    ));
+
+    // --- streaming sink chain ---------------------------------------------
+    // One event at a time through the binary writer (the loadgen
+    // `--capture` path): scratch-buffer reuse keeps this O(1)
+    // allocation per event.
+    results.push(bench_items(
+        "sink::binary_writer_stream (scratch reuse)",
+        2,
+        30,
+        trace.events.len() as f64,
+        || {
+            use taxbreak::trace::TraceSink;
+            let mut w =
+                taxbreak::trace::binary::BinaryTraceWriter::new(std::io::sink(), &trace.meta)
+                    .unwrap();
+            for e in &trace.events {
+                TraceSink::event(&mut w, e).unwrap();
+            }
+            TraceSink::finish(&mut w, trace.meta.wall_us).unwrap();
+        },
+    ));
+    results.push(bench_items(
+        "sink::online_decompose_stream (interned maps)",
+        2,
+        30,
+        trace.events.len() as f64,
+        || {
+            let mut o = taxbreak::obs::OnlineDecomposer::new(0.0);
+            for e in &trace.events {
+                o.observe(e);
+            }
+            black_box(o.finalize(platform.clone()));
+        },
+    ));
+
+    // --- timeline engine ---------------------------------------------------
+    // Submit + sync-point polling on a multi-device topology: the
+    // ReadyIndex makes every poll O(1) instead of a stream fold.
+    results.push(bench_items(
+        "timeline::submit_poll_2x2 (ReadyIndex)",
+        2,
+        30,
+        100_000.0,
+        || {
+            use taxbreak::timeline::{Engine, StreamRef, Topology};
+            let mut e = Engine::new(Topology {
+                devices: 2,
+                streams_per_device: 2,
+                host_threads: 1,
+            });
+            let mut acc = 0.0f64;
+            for i in 0..100_000u32 {
+                let s = StreamRef { device: i & 1, stream: (i >> 1) & 1 };
+                e.submit(s, i as f64, 1.0, 2.5);
+                acc += e.sync_point() + e.device_sync_point(i & 1);
+            }
+            black_box((acc, e.launched()));
+        },
+    ));
+
     // --- serving scheduler (mock-speed control loop) -----------------------
     results.push(bench(
         "serving::scheduler_16req (kv+batcher bookkeeping)",

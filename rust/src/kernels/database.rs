@@ -8,7 +8,7 @@
 
 use std::collections::HashMap;
 
-use crate::trace::{KernelMeta, Trace};
+use crate::trace::{DedupKey, KernelMeta, Trace};
 
 /// One unique kernel entry.
 #[derive(Debug, Clone, PartialEq)]
@@ -24,7 +24,7 @@ pub struct KernelEntry {
 #[derive(Debug, Clone, Default)]
 pub struct KernelDb {
     entries: Vec<KernelEntry>,
-    index: HashMap<String, usize>,
+    index: HashMap<DedupKey, usize>,
 }
 
 impl KernelDb {
@@ -43,9 +43,10 @@ impl KernelDb {
         db
     }
 
-    /// Record one invocation.
+    /// Record one invocation. Allocation-free on the repeat path: the
+    /// dedup key is the `Copy` [`DedupKey`], not a formatted string.
     pub fn record(&mut self, meta: &KernelMeta, device_us: f64) {
-        let key = meta.dedup_key();
+        let key = meta.dedup();
         match self.index.get(&key) {
             Some(&i) => {
                 let e = &mut self.entries[i];
@@ -76,8 +77,8 @@ impl KernelDb {
         self.entries.is_empty()
     }
 
-    pub fn get(&self, key: &str) -> Option<&KernelEntry> {
-        self.index.get(key).map(|&i| &self.entries[i])
+    pub fn get(&self, key: DedupKey) -> Option<&KernelEntry> {
+        self.index.get(&key).map(|&i| &self.entries[i])
     }
 
     /// Total invocations across all entries (== trace kernel count).
@@ -113,12 +114,12 @@ impl KernelDb {
     /// replay cache partitioning.
     pub fn partition_cached<'a>(
         &'a self,
-        cached_keys: &HashMap<String, f64>,
+        cached_keys: &HashMap<DedupKey, f64>,
     ) -> (Vec<&'a KernelEntry>, Vec<&'a KernelEntry>) {
         let mut uncached = Vec::new();
         let mut cached = Vec::new();
         for e in &self.entries {
-            if cached_keys.contains_key(&e.meta.dedup_key()) {
+            if cached_keys.contains_key(&e.meta.dedup()) {
                 cached.push(e);
             } else {
                 uncached.push(e);
@@ -135,10 +136,10 @@ mod tests {
 
     fn meta(name: &str, shapes: &str) -> KernelMeta {
         KernelMeta {
-            kernel_name: name.to_string(),
+            kernel_name: name.into(),
             family: "elem_vector".into(),
             aten_op: "aten::mul".into(),
-            shapes_key: shapes.to_string(),
+            shapes_key: shapes.into(),
             grid: [1, 1, 1],
             block: [256, 1, 1],
             lib_mediated: false,
@@ -155,7 +156,7 @@ mod tests {
         db.record(&meta("k1", "f32[16]"), 3.0);
         assert_eq!(db.len(), 2);
         assert_eq!(db.total_invocations(), 3);
-        let e = db.get(&meta("k1", "f32[8]").dedup_key()).unwrap();
+        let e = db.get(meta("k1", "f32[8]").dedup()).unwrap();
         assert_eq!(e.invocations, 2);
         assert!((e.mean_device_us - 3.0).abs() < 1e-12);
     }
@@ -208,7 +209,7 @@ mod tests {
         db.record(&meta("a", "x"), 1.0);
         db.record(&meta("b", "y"), 1.0);
         let mut cache = HashMap::new();
-        cache.insert(meta("a", "x").dedup_key(), 1.0);
+        cache.insert(meta("a", "x").dedup(), 1.0);
         let (uncached, cached) = db.partition_cached(&cache);
         assert_eq!(uncached.len(), 1);
         assert_eq!(cached.len(), 1);

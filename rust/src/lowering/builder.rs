@@ -9,6 +9,7 @@
 use crate::kernels::family::Family;
 use crate::models::{GemmLib, ModelSpec};
 use crate::trace::KernelMeta;
+use crate::util::intern::Sym;
 
 /// Elements per thread-block used to synthesize launch configs.
 const BLOCK_THREADS: u32 = 256;
@@ -52,8 +53,10 @@ pub struct SeqBuilder<'m> {
     marks: Vec<Mark>,
     /// Symbol/shape-key cache: kernel names repeat heavily (layers ×
     /// experts × steps), and `format!` per invocation dominated the
-    /// lowering profile (§Perf L3.2). Keyed by FNV of the inputs.
-    name_cache: std::collections::HashMap<u64, String>,
+    /// lowering profile (§Perf L3.2). Keyed by FNV of the inputs; the
+    /// values are interned [`Sym`]s, so a cache hit is a `Copy`, not a
+    /// `String` clone.
+    name_cache: std::collections::HashMap<u64, Sym>,
 }
 
 impl<'m> SeqBuilder<'m> {
@@ -77,12 +80,16 @@ impl<'m> SeqBuilder<'m> {
         });
     }
 
-    /// Memoized string build: returns a clone of the cached rendering.
-    fn cached(&mut self, key_parts: (&str, &str, usize), build: impl FnOnce() -> String) -> String {
+    /// Memoized symbol build: renders (and interns) once per distinct
+    /// key, then hands out the `Copy` symbol.
+    fn cached(&mut self, key_parts: (&str, &str, usize), build: impl FnOnce() -> String) -> Sym {
         let mut h = crate::util::rng::fnv1a(key_parts.0.as_bytes());
         h ^= crate::util::rng::fnv1a(key_parts.1.as_bytes()).rotate_left(17);
         h ^= (key_parts.2 as u64).wrapping_mul(0x9E3779B97F4A7C15);
-        self.name_cache.entry(h).or_insert_with(build).clone()
+        *self
+            .name_cache
+            .entry(h)
+            .or_insert_with(|| Sym::from_owned(build()))
     }
 
     pub fn len(&self) -> usize {
@@ -107,16 +114,16 @@ impl<'m> SeqBuilder<'m> {
         &mut self,
         family: Family,
         aten_op: &str,
-        kernel_name: String,
-        shapes_key: String,
+        kernel_name: Sym,
+        shapes_key: Sym,
         grid: [u32; 3],
         flops: f64,
         bytes: f64,
     ) {
         self.out.push(KernelMeta {
             kernel_name,
-            family: family.tag().to_string(),
-            aten_op: aten_op.to_string(),
+            family: family.tag().into(),
+            aten_op: aten_op.into(),
             shapes_key,
             grid,
             block: [BLOCK_THREADS, 1, 1],
@@ -157,11 +164,13 @@ impl<'m> SeqBuilder<'m> {
 
     /// Reduction over `elements` (mean/max/softmax/norm inner loops).
     pub fn reduce(&mut self, aten_op: &str, tag: &str, elements: usize) {
+        let sym = self.cached(("reduce", tag, 0), || format!("reduce_kernel<512, {tag}>"));
+        let shapes = self.cached(("elem-shape", "", elements), || format!("bf16[{elements}]"));
         self.push(
             Family::Reduce,
             aten_op,
-            format!("reduce_kernel<512, {tag}>"),
-            format!("bf16[{elements}]"),
+            sym,
+            shapes,
             self.grid_for(elements),
             elements as f64,
             EB * elements as f64,
@@ -170,11 +179,13 @@ impl<'m> SeqBuilder<'m> {
 
     /// Prefix-scan (cumsum — MoE routing bookkeeping).
     pub fn scan(&mut self, aten_op: &str, tag: &str, elements: usize) {
+        let sym = self.cached(("scan", tag, 0), || format!("scan_kernel<{tag}>"));
+        let shapes = self.cached(("scan-shape", "", elements), || format!("i32[{elements}]"));
         self.push(
             Family::Scan,
             aten_op,
-            format!("scan_kernel<{tag}>"),
-            format!("i32[{elements}]"),
+            sym,
+            shapes,
             self.grid_for(elements),
             elements as f64,
             2.0 * 4.0 * elements as f64,
@@ -220,11 +231,15 @@ impl<'m> SeqBuilder<'m> {
     /// top-k over `rows` rows of `cols` (router).
     pub fn topk(&mut self, aten_op: &str, rows: usize, cols: usize) {
         let elements = rows * cols;
+        let sym = self.cached(("topk", "", cols), || format!("radix_topk_kernel<{cols}>"));
+        let shapes = self.cached(("topk-shape", "", (rows << 20) ^ cols), || {
+            format!("f32[{rows},{cols}]")
+        });
         self.push(
             Family::TopK,
             aten_op,
-            format!("radix_topk_kernel<{cols}>"),
-            format!("f32[{rows},{cols}]"),
+            sym,
+            shapes,
             self.grid_for(elements),
             elements as f64,
             2.0 * 4.0 * elements as f64,
@@ -233,11 +248,12 @@ impl<'m> SeqBuilder<'m> {
 
     /// cudaMemsetAsync of `bytes`.
     pub fn memset(&mut self, bytes: usize) {
+        let shapes = self.cached(("memset-shape", "", bytes), || format!("u8[{bytes}]"));
         self.push(
             Family::Memset,
             "cudaMemsetAsync",
-            "memset_kernel".to_string(),
-            format!("u8[{bytes}]"),
+            "memset_kernel".into(),
+            shapes,
             self.grid_for(bytes / 16),
             0.0,
             bytes as f64,
@@ -283,11 +299,17 @@ impl<'m> SeqBuilder<'m> {
         let flops = 4.0 * (b * heads * sq * ctx * head_dim) as f64;
         let bytes = EB * (b * heads) as f64 * (2.0 * (sq * head_dim) as f64
             + 2.0 * (ctx * head_dim) as f64);
+        let sym = self.cached(("fa", "", head_dim), || {
+            format!("flash_fwd_kernel_hdim{head_dim}")
+        });
+        let shapes = self.cached(("fa-shape", "", (heads << 20) ^ head_dim), || {
+            format!("bf16[{b},{heads},{sq},{head_dim}]x[{ctx}]")
+        });
         self.push(
             Family::FusedAttention,
             "flash::attention_fwd",
-            format!("flash_fwd_kernel_hdim{head_dim}"),
-            format!("bf16[{b},{heads},{sq},{head_dim}]x[{ctx}]"),
+            sym,
+            shapes,
             [(b * heads) as u32, (sq as u32).div_ceil(128).max(1), 1],
             flops,
             bytes,

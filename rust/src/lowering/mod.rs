@@ -341,8 +341,8 @@ pub fn fuse_elementwise(seq: Vec<KernelMeta>) -> Vec<KernelMeta> {
         } else {
             if let Some((mut acc, n)) = run.take() {
                 if n > 1 {
-                    acc.kernel_name = format!("triton_fused_pointwise_{n}");
-                    acc.aten_op = "inductor::fused".to_string();
+                    acc.kernel_name = format!("triton_fused_pointwise_{n}").into();
+                    acc.aten_op = "inductor::fused".into();
                 }
                 out.push(acc);
             }
@@ -351,8 +351,8 @@ pub fn fuse_elementwise(seq: Vec<KernelMeta>) -> Vec<KernelMeta> {
     }
     if let Some((mut acc, n)) = run.take() {
         if n > 1 {
-            acc.kernel_name = format!("triton_fused_pointwise_{n}");
-            acc.aten_op = "inductor::fused".to_string();
+            acc.kernel_name = format!("triton_fused_pointwise_{n}").into();
+            acc.aten_op = "inductor::fused".into();
         }
         out.push(acc);
     }

@@ -33,7 +33,8 @@ use crate::hardware::Platform;
 use crate::kernels::KernelDb;
 use crate::taxbreak::decompose::{hdbi_of, Decomposition};
 use crate::taxbreak::phase2::{run as phase2_run, ReplayConfig, SimReplayBackend};
-use crate::trace::{EventKind, ReplayArgs, TraceEvent, TraceSink, Track};
+use crate::trace::{DedupKey, EventKind, ReplayArgs, TraceEvent, TraceSink, Track};
+use crate::util::intern::Sym;
 use crate::util::json::Json;
 
 /// Phase-2 replay seed used by `taxbreak analyze` — and therefore by
@@ -137,15 +138,16 @@ pub struct StreamActivity {
 }
 
 /// Compact per-invocation record retained until [`finalize`] — the
-/// strings are interned, so memory is O(kernels), not O(events), and no
-/// raw [`TraceEvent`]s are buffered.
+/// dedup key and family are `Copy` interned symbols, so memory stays
+/// O(kernels), not O(events), no raw [`TraceEvent`]s are buffered, and
+/// recording one costs zero allocations.
 ///
 /// [`finalize`]: OnlineDecomposer::finalize
 #[derive(Debug, Clone, Copy)]
 struct InvRecord {
     corr: u64,
-    key: u32,
-    family: u32,
+    key: DedupKey,
+    family: Sym,
     device: u32,
     phase: u8,
     lib: bool,
@@ -169,9 +171,9 @@ struct KernelHit {
     end_us: f64,
     dur_us: f64,
     device: u32,
-    /// Interned (key, family, lib_mediated) — `None` for meta-less
+    /// `(dedup key, family, lib_mediated)` — `None` for meta-less
     /// kernels, which the post-hoc Phase 1 skips too.
-    interned: Option<(u32, u32, bool)>,
+    interned: Option<(DedupKey, Sym, bool)>,
 }
 
 /// The streaming decomposer. Feed it a trace (as a [`TraceSink`] or via
@@ -182,10 +184,6 @@ struct KernelHit {
 pub struct OnlineDecomposer {
     window_us: f64,
     db: KernelDb,
-    keys: Vec<String>,
-    key_ix: HashMap<String, u32>,
-    families: Vec<String>,
-    family_ix: HashMap<String, u32>,
     pending: HashMap<u64, PendingChain>,
     records: Vec<InvRecord>,
     counts: EventCounts,
@@ -228,16 +226,6 @@ impl OnlineDecomposer {
         } else {
             (t_us / self.window_us).floor().max(0.0) as u64
         }
-    }
-
-    fn intern(table: &mut Vec<String>, index: &mut HashMap<String, u32>, s: String) -> u32 {
-        if let Some(&i) = index.get(&s) {
-            return i;
-        }
-        let i = table.len() as u32;
-        table.push(s.clone());
-        index.insert(s, i);
-        i
     }
 
     /// Consume one event. Order-insensitive: chains close as soon as
@@ -304,10 +292,7 @@ impl OnlineDecomposer {
 
                 let interned = e.meta.as_ref().map(|m| {
                     self.db.record(m, e.dur_us);
-                    let key = Self::intern(&mut self.keys, &mut self.key_ix, m.dedup_key());
-                    let family =
-                        Self::intern(&mut self.families, &mut self.family_ix, m.family.clone());
-                    (key, family, m.lib_mediated)
+                    (m.dedup(), m.family, m.lib_mediated)
                 });
                 let c = self.pending.entry(e.correlation_id).or_default();
                 c.kernel = Some(KernelHit {
@@ -401,10 +386,7 @@ impl OnlineDecomposer {
         let mut windows: BTreeMap<u64, WindowSlice> = BTreeMap::new();
         let mut phase_totals = [PhaseWindow::default(); 2];
         for r in &self.records {
-            let dct = p2
-                .replay_of(&self.keys[r.key as usize])
-                .map(|k| k.dct_us)
-                .unwrap_or(0.0);
+            let dct = p2.replay_of(r.key).map(|k| k.dct_us).unwrap_or(0.0);
             let lib_dct = if r.lib { dct } else { 0.0 };
 
             totals.n_kernels += 1;
@@ -414,10 +396,12 @@ impl OnlineDecomposer {
             totals.dkt_us += p2.floor.mean;
             totals.device_active_us += r.device_us;
 
-            let slice = totals
-                .per_family
-                .entry(self.families[r.family as usize].clone())
-                .or_default();
+            // Probe by `&str` first; allocate the `String` key only on
+            // first sight of a family (same trick as `decompose()`).
+            let slice = match totals.per_family.get_mut(r.family.as_str()) {
+                Some(s) => s,
+                None => totals.per_family.entry(r.family.to_string()).or_default(),
+            };
             slice.invocations += 1;
             slice.t_py_us += r.t_py_us;
             slice.t_base_us += p2.dispatch_base_us;

@@ -302,10 +302,10 @@ impl SimEngine {
         );
         self.tl.host_wait_until(0, timing.end_us);
         let meta = KernelMeta {
-            kernel_name: format!("sim::{name}"),
-            family: "sim_exec".to_string(),
-            aten_op: format!("exec::{name}"),
-            shapes_key: name.to_string(),
+            kernel_name: format!("sim::{name}").into(),
+            family: "sim_exec".into(),
+            aten_op: format!("exec::{name}").into(),
+            shapes_key: name.into(),
             grid: [1, 1, 1],
             block: [1, 1, 1],
             lib_mediated: false,

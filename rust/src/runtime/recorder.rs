@@ -83,10 +83,10 @@ impl TraceRecorder {
     pub fn finish(&mut self, t: InvocationTimer, name: &str, flops: f64, bytes: f64) {
         let sync_end = self.now_us();
         let meta = KernelMeta {
-            kernel_name: format!("pjrt::{name}"),
-            family: "pjrt_exec".to_string(),
-            aten_op: format!("exec::{name}"),
-            shapes_key: name.to_string(),
+            kernel_name: format!("pjrt::{name}").into(),
+            family: "pjrt_exec".into(),
+            aten_op: format!("exec::{name}").into(),
+            shapes_key: name.into(),
             grid: [1, 1, 1],
             block: [1, 1, 1],
             lib_mediated: false,

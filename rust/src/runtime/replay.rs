@@ -33,7 +33,7 @@ impl ReplayBackend for PjrtReplayBackend<'_> {
         // floor. Entries are tagged with their observed name so Eq. 9
         // matching still applies.
         let mut m = ReplayMeasurement {
-            observed_name: entry.meta.kernel_name.clone(),
+            observed_name: entry.meta.kernel_name.to_string(),
             ..Default::default()
         };
         for i in 0..cfg.warmup + cfg.runs {

@@ -166,10 +166,7 @@ pub fn replay(recording: &Trace) -> anyhow::Result<ReplayOutcome> {
             kv_pages: REPLAY_KV_PAGES,
             ..SchedulerConfig::default()
         };
-        let mut off = OffsetSink {
-            inner: &mut buf,
-            corr_offset: script.device as u64 * REPLICA_CORR_STRIDE,
-        };
+        let mut off = OffsetSink::new(&mut buf, script.device as u64 * REPLICA_CORR_STRIDE);
         outcomes.push(drive_collect(
             engine,
             sched,

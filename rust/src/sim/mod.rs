@@ -353,7 +353,7 @@ fn simulate_inner(
                 if let Some(s) = sink.as_deref_mut() {
                     s.event(&TraceEvent {
                         kind: EventKind::Kernel,
-                        name: meta.kernel_name.clone(),
+                        name: meta.kernel_name.to_string(),
                         ts_us: timing.start_us,
                         dur_us: dur,
                         correlation_id: corr,
@@ -412,7 +412,7 @@ fn simulate_inner(
             })?;
             s.event(&TraceEvent {
                 kind: EventKind::AtenOp,
-                name: meta.aten_op.clone(),
+                name: meta.aten_op.to_string(),
                 ts_us: aten_ts,
                 dur_us: api_end - aten_ts,
                 correlation_id: corr,
@@ -434,7 +434,7 @@ fn simulate_inner(
             })?;
             s.event(&TraceEvent {
                 kind: EventKind::Kernel,
-                name: meta.kernel_name.clone(),
+                name: meta.kernel_name.to_string(),
                 ts_us: timing.start_us,
                 dur_us: dur,
                 correlation_id: corr,

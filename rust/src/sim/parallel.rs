@@ -107,7 +107,7 @@ fn push_chain(
     });
     trace.push(TraceEvent {
         kind: EventKind::Kernel,
-        name: meta.kernel_name.clone(),
+        name: meta.kernel_name.to_string(),
         ts_us: kernel_ts,
         dur_us: kernel_dur,
         correlation_id: corr,
@@ -247,7 +247,7 @@ pub fn simulate_tensor_parallel(
                     Some(r as u32),
                     0,
                     torch_name.clone(),
-                    shard_meta.aten_op.clone(),
+                    shard_meta.aten_op.to_string(),
                     torch_ts,
                     aten_ts,
                     api_ts,
@@ -265,14 +265,15 @@ pub fn simulate_tensor_parallel(
                 let dur_ar = allreduce_device_us(ways, act_bytes);
                 let dep = tl.join(&streams);
                 let ar_meta = KernelMeta {
-                    kernel_name: "nccl_all_reduce_ring".to_string(),
-                    family: Family::Memcpy.tag().to_string(),
-                    aten_op: "nccl::all_reduce".to_string(),
+                    kernel_name: "nccl_all_reduce_ring".into(),
+                    family: Family::Memcpy.tag().into(),
+                    aten_op: "nccl::all_reduce".into(),
                     shapes_key: format!(
                         "bf16[{},{}]xtp{ways}",
                         workload.batch * seq_q,
                         model.d_model
-                    ),
+                    )
+                    .into(),
                     grid: [ways as u32, 1, 1],
                     block: [256, 1, 1],
                     lib_mediated: false,
@@ -469,7 +470,7 @@ pub fn simulate_expert_parallel(
                 None,
                 cur_stream,
                 format!("torch.{}", meta.aten_op.trim_start_matches("aten::")),
-                meta.aten_op.clone(),
+                meta.aten_op.to_string(),
                 torch_ts,
                 aten_ts,
                 api_ts,

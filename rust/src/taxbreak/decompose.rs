@@ -157,7 +157,7 @@ pub fn decompose(trace: &Trace, p1: &Phase1, p2: &Phase2Result) -> Decomposition
     };
     for inv in &p1.invocations {
         let dct = p2
-            .replay_of(&inv.dedup_key)
+            .replay_of(inv.dedup_key)
             .map(|k| k.dct_us)
             .unwrap_or(0.0);
         let lib_dct = if inv.lib_mediated { dct } else { 0.0 };
@@ -169,7 +169,13 @@ pub fn decompose(trace: &Trace, p1: &Phase1, p2: &Phase2Result) -> Decomposition
         d.dkt_us += p2.floor.mean;
         d.device_active_us += inv.device_us;
 
-        let slice = d.per_family.entry(inv.family.clone()).or_default();
+        // The family universe is tiny, so probe by `&str` first and
+        // allocate the `String` key only when a family is first seen —
+        // O(1) allocations per run, not per invocation.
+        let slice = match d.per_family.get_mut(inv.family.as_str()) {
+            Some(s) => s,
+            None => d.per_family.entry(inv.family.to_string()).or_default(),
+        };
         slice.invocations += 1;
         slice.t_py_us += inv.t_py_us;
         slice.t_base_us += p2.dispatch_base_us;

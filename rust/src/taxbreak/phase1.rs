@@ -7,19 +7,21 @@
 //! ATen metadata, invocation frequency, `I_lib` classification).
 
 use crate::kernels::KernelDb;
-use crate::trace::{EventKind, Trace};
+use crate::trace::{DedupKey, EventKind, Trace};
+use crate::util::intern::Sym;
 
 /// One kernel invocation's Phase-1 measurements.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Invocation {
     /// Index into the trace's kernel events (invocation order).
     pub correlation_id: u64,
-    /// Dedup key into the kernel database.
-    pub dedup_key: String,
+    /// Dedup key into the kernel database (`Copy` — no per-invocation
+    /// string formatting on the hot extraction path).
+    pub dedup_key: DedupKey,
     /// Measured T_Py for this invocation, us.
     pub t_py_us: f64,
-    /// Kernel family tag.
-    pub family: String,
+    /// Kernel family tag (interned).
+    pub family: Sym,
     /// `I_lib`.
     pub lib_mediated: bool,
     /// Device execution time, us.
@@ -72,9 +74,9 @@ impl Phase1 {
             };
             invocations.push(Invocation {
                 correlation_id: id,
-                dedup_key: meta.dedup_key(),
+                dedup_key: meta.dedup(),
                 t_py_us: t_py,
-                family: meta.family.clone(),
+                family: meta.family,
                 lib_mediated: meta.lib_mediated,
                 device_us: kernel.dur_us,
                 launch_plus_queue_us: launch_plus_queue,

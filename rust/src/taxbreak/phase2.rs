@@ -24,7 +24,7 @@ use crate::kernels::database::KernelEntry;
 use crate::kernels::family::Family;
 use crate::kernels::KernelDb;
 use crate::taxbreak::matching::{self, MatchKind};
-use crate::trace::KernelMeta;
+use crate::trace::{DedupKey, KernelMeta};
 use crate::util::rng::Rng;
 use crate::util::stats::{self, Summary};
 
@@ -101,7 +101,7 @@ pub struct KernelReplay {
 #[derive(Debug, Clone)]
 pub struct Phase2Result {
     /// dedup key → replay measurements.
-    pub kernels: HashMap<String, KernelReplay>,
+    pub kernels: HashMap<DedupKey, KernelReplay>,
     /// Null-kernel floor distribution (Table III).
     pub floor: Summary,
     /// Eq. 7 dispatch baseline: median T_dispatch of framework-native
@@ -114,8 +114,8 @@ pub struct Phase2Result {
 }
 
 impl Phase2Result {
-    pub fn replay_of(&self, key: &str) -> Option<&KernelReplay> {
-        self.kernels.get(key)
+    pub fn replay_of(&self, key: DedupKey) -> Option<&KernelReplay> {
+        self.kernels.get(&key)
     }
 }
 
@@ -125,19 +125,19 @@ pub fn run_with_cache(
     db: &KernelDb,
     backend: &mut dyn ReplayBackend,
     cfg: &ReplayConfig,
-    seed_cache: &mut HashMap<String, KernelReplay>,
+    seed_cache: &mut HashMap<DedupKey, KernelReplay>,
 ) -> Phase2Result {
     // Null-kernel floor first (dynamic system floor).
     let floor_runs = backend.null_kernel(cfg);
     let floor = Summary::of(&floor_runs);
 
-    let mut kernels: HashMap<String, KernelReplay> = HashMap::new();
+    let mut kernels: HashMap<DedupKey, KernelReplay> = HashMap::new();
     let mut cache_hits = 0usize;
     let mut profiled = 0usize;
     let mut dispatch_native: Vec<f64> = Vec::new();
 
     for entry in db.entries() {
-        let key = entry.meta.dedup_key();
+        let key = entry.meta.dedup();
         if let Some(cached) = seed_cache.get(&key) {
             cache_hits += 1;
             let mut k = cached.clone();
@@ -164,7 +164,7 @@ pub fn run_with_cache(
             dct_us: 0.0, // filled once the baseline is known
             match_kind,
         };
-        seed_cache.insert(key.clone(), replay.clone());
+        seed_cache.insert(key, replay.clone());
         kernels.insert(key, replay);
     }
 
@@ -234,7 +234,7 @@ impl ReplayBackend for SimReplayBackend {
             observed_name: if stream.next_f64() < self.variant_prob {
                 format!("{}_v2", entry.meta.kernel_name)
             } else {
-                entry.meta.kernel_name.clone()
+                entry.meta.kernel_name.to_string()
             },
             ..Default::default()
         };

@@ -60,6 +60,47 @@ impl Default for Topology {
     }
 }
 
+/// O(1) readiness index over the stream array: the sync points and
+/// launch counter the hot loops poll after every submit, maintained
+/// incrementally instead of re-folded over all streams per query.
+///
+/// Exactness: a stream cursor only moves forward (durations are
+/// non-negative, `start >= cursor`), and `f64::max` of a monotone
+/// sequence is order-independent, so the running maxima are
+/// *bit-identical* to the linear fold they replace — debug builds
+/// assert it on every query. Float *sums* (`active_us`) stay
+/// query-time folds: an incremental sum would change addition order.
+#[derive(Debug, Clone)]
+struct ReadyIndex {
+    /// Per-device max sync point (when the device drains).
+    device_sync: Vec<f64>,
+    /// Global max sync point (when every stream drains).
+    global_sync: f64,
+    /// Kernels launched across every stream.
+    launched: usize,
+}
+
+impl ReadyIndex {
+    fn new(devices: usize) -> ReadyIndex {
+        ReadyIndex {
+            device_sync: vec![0.0; devices],
+            global_sync: 0.0,
+            launched: 0,
+        }
+    }
+
+    fn note(&mut self, device: u32, end_us: f64) {
+        let d = device as usize;
+        if end_us > self.device_sync[d] {
+            self.device_sync[d] = end_us;
+        }
+        if end_us > self.global_sync {
+            self.global_sync = end_us;
+        }
+        self.launched += 1;
+    }
+}
+
 /// The discrete-event timeline engine.
 #[derive(Debug, Clone)]
 pub struct Engine {
@@ -69,6 +110,8 @@ pub struct Engine {
     /// Device-major stream states: index = device * streams_per_device
     /// + stream.
     streams: Vec<Stream>,
+    /// Incrementally-maintained sync points / launch counter.
+    ready: ReadyIndex,
 }
 
 impl Engine {
@@ -86,6 +129,7 @@ impl Engine {
             topo,
             hosts: vec![0.0; topo.host_threads],
             streams: vec![Stream::new(); topo.devices * topo.streams_per_device],
+            ready: ReadyIndex::new(topo.devices),
         }
     }
 
@@ -142,8 +186,11 @@ impl Engine {
         launch_gap_us: f64,
         dur_us: f64,
     ) -> KernelTiming {
+        debug_assert!(dur_us >= 0.0, "kernel durations are non-negative");
         let i = self.idx(s);
-        self.streams[i].submit(api_start_us, launch_gap_us, dur_us)
+        let t = self.streams[i].submit(api_start_us, launch_gap_us, dur_us);
+        self.ready.note(s.device, t.end_us);
+        t
     }
 
     /// Submit with an extra readiness dependency: the kernel cannot
@@ -158,8 +205,11 @@ impl Engine {
         dur_us: f64,
         dep_us: f64,
     ) -> KernelTiming {
+        debug_assert!(dur_us >= 0.0, "kernel durations are non-negative");
         let i = self.idx(s);
-        self.streams[i].submit_dep(api_start_us, launch_gap_us, dep_us, dur_us)
+        let t = self.streams[i].submit_dep(api_start_us, launch_gap_us, dep_us, dur_us);
+        self.ready.note(s.device, t.end_us);
+        t
     }
 
     /// When stream `s` drains (cudaStreamSynchronize).
@@ -168,22 +218,33 @@ impl Engine {
     }
 
     /// When every stream of `device` drains (cudaDeviceSynchronize).
+    /// O(1): read off the [`ReadyIndex`] instead of folding the
+    /// device's streams (bit-identical — monotone cursors).
     pub fn device_sync_point(&self, device: u32) -> f64 {
-        let spd = self.topo.streams_per_device;
-        let base = device as usize * spd;
-        self.streams[base..base + spd]
-            .iter()
-            .map(Stream::sync_point)
-            .fold(0.0f64, f64::max)
+        let d = device as usize;
+        assert!(d < self.topo.devices, "device {d} outside topology");
+        debug_assert_eq!(self.ready.device_sync[d], {
+            let spd = self.topo.streams_per_device;
+            self.streams[d * spd..(d + 1) * spd]
+                .iter()
+                .map(Stream::sync_point)
+                .fold(0.0f64, f64::max)
+        });
+        self.ready.device_sync[d]
     }
 
     /// When every stream on every device drains. With the single
     /// topology this is exactly the one stream's `sync_point()`.
+    /// O(1): read off the [`ReadyIndex`].
     pub fn sync_point(&self) -> f64 {
-        self.streams
-            .iter()
-            .map(Stream::sync_point)
-            .fold(0.0f64, f64::max)
+        debug_assert_eq!(
+            self.ready.global_sync,
+            self.streams
+                .iter()
+                .map(Stream::sync_point)
+                .fold(0.0f64, f64::max)
+        );
+        self.ready.global_sync
     }
 
     /// Latest cursor over an explicit stream set (all-reduce join).
@@ -211,9 +272,13 @@ impl Engine {
         self.streams.iter().map(Stream::active_us).sum()
     }
 
-    /// Kernels launched over every stream.
+    /// Kernels launched over every stream. O(1): counted at submit.
     pub fn launched(&self) -> usize {
-        self.streams.iter().map(Stream::launched).sum()
+        debug_assert_eq!(
+            self.ready.launched,
+            self.streams.iter().map(Stream::launched).sum::<usize>()
+        );
+        self.ready.launched
     }
 }
 
@@ -310,6 +375,45 @@ mod tests {
             ]),
             41.0
         );
+    }
+
+    #[test]
+    fn ready_index_matches_linear_fold_under_interleaved_submits() {
+        // Exercise the O(1) index against the fold it replaced: the
+        // debug_asserts inside the queries do the comparison, so this
+        // test just has to interleave submits and queries across a
+        // non-trivial topology. Deterministic pseudo-random pattern.
+        let mut e = Engine::new(Topology {
+            devices: 3,
+            streams_per_device: 2,
+            host_threads: 1,
+        });
+        let mut rng = crate::util::rng::Rng::new(7);
+        let mut dep = 0.0f64;
+        for i in 0..500 {
+            let s = StreamRef {
+                device: rng.below(3) as u32,
+                stream: rng.below(2) as u32,
+            };
+            let api = i as f64 * 0.25;
+            let gap = 1.0 + rng.next_f64();
+            let dur = rng.next_f64() * 5.0;
+            let t = if i % 3 == 0 {
+                e.submit_after(s, api, gap, dur, dep)
+            } else {
+                e.submit(s, api, gap, dur)
+            };
+            dep = t.end_us;
+            // Each query re-checks the index against the fold in
+            // debug builds.
+            let per_dev: f64 = (0..3u32)
+                .map(|d| e.device_sync_point(d))
+                .fold(0.0f64, f64::max);
+            assert_eq!(per_dev, e.sync_point(), "global max is the max of per-device maxes");
+            assert_eq!(e.launched(), i + 1);
+        }
+        assert!(e.sync_point() > 0.0);
+        assert!(e.active_us() > 0.0);
     }
 
     #[test]

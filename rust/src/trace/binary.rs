@@ -477,10 +477,10 @@ fn decode_event<R: Read>(r: &mut R) -> Result<TraceEvent> {
             }
         };
         Some(KernelMeta {
-            kernel_name,
-            family,
-            aten_op,
-            shapes_key,
+            kernel_name: kernel_name.into(),
+            family: family.into(),
+            aten_op: aten_op.into(),
+            shapes_key: shapes_key.into(),
             grid,
             block,
             lib_mediated: lib,

@@ -7,6 +7,7 @@
 //! runtime (`runtime`) emit them, and every TaxBreak analysis consumes
 //! only this representation (trace-format-as-interface, DESIGN.md §9).
 
+use crate::util::intern::Sym;
 use crate::util::json::Json;
 
 /// Which trace source produced an event (CUPTI activity-kind analog).
@@ -147,16 +148,23 @@ impl Track {
 /// dedup cache keys on (paper §III-B: "operator, shapes, dtypes, scalar
 /// arguments, target kernel name, and launch configuration"), plus the
 /// analytic work estimates used for utilization reporting.
+///
+/// The four string fields are interned [`Sym`]s: the lowering emits a
+/// tiny, tile-quantized vocabulary repeated across millions of events,
+/// so cloning/hashing metadata is pointer work and the Phase-2 dedup
+/// key is the `Copy` [`DedupKey`] instead of a per-call `String`
+/// (DESIGN.md §15). Serialization is unchanged byte-for-byte — the
+/// golden corpus pins it.
 #[derive(Debug, Clone, PartialEq)]
 pub struct KernelMeta {
     /// Raw kernel symbol as a profiler would see it.
-    pub kernel_name: String,
+    pub kernel_name: Sym,
     /// Kernel family tag (see `kernels::family`).
-    pub family: String,
+    pub family: Sym,
     /// Originating ATen operator (e.g. `aten::mm`).
-    pub aten_op: String,
+    pub aten_op: Sym,
     /// Canonical shapes/dtypes/scalars key.
-    pub shapes_key: String,
+    pub shapes_key: Sym,
     pub grid: [u32; 3],
     pub block: [u32; 3],
     /// `I_lib`: routed through a vendor library front-end (cuBLAS/cuDNN).
@@ -198,10 +206,10 @@ impl KernelMeta {
             ])
         };
         Ok(KernelMeta {
-            kernel_name: v.str_of("kernel_name")?.to_string(),
-            family: v.str_of("family")?.to_string(),
-            aten_op: v.str_of("aten_op")?.to_string(),
-            shapes_key: v.str_of("shapes_key")?.to_string(),
+            kernel_name: v.str_of("kernel_name")?.into(),
+            family: v.str_of("family")?.into(),
+            aten_op: v.str_of("aten_op")?.into(),
+            shapes_key: v.str_of("shapes_key")?.into(),
             grid: dim3("grid")?,
             block: dim3("block")?,
             lib_mediated: v.req("lib")?.as_bool().unwrap_or(false),
@@ -211,9 +219,47 @@ impl KernelMeta {
     }
 
     /// The Phase-2 deduplication key (paper: kernels sharing identical
-    /// ATen metadata, kernel name and launch config are replayed once).
+    /// ATen metadata, kernel name and launch config are replayed once)
+    /// as a `Copy` value — the hot-path form: no allocation, pointer
+    /// hash/compare. Two metas share a `DedupKey` iff their
+    /// [`dedup_key`](Self::dedup_key) strings are byte-equal (interning
+    /// maps equal content to one symbol).
+    pub fn dedup(&self) -> DedupKey {
+        DedupKey {
+            aten_op: self.aten_op,
+            shapes_key: self.shapes_key,
+            kernel_name: self.kernel_name,
+            grid: self.grid,
+            block: self.block,
+        }
+    }
+
+    /// The dedup key rendered as the stable string form. Cold paths
+    /// only: the Phase-2 replay RNG forks on these exact bytes (so they
+    /// are part of the pinned bit-identity surface) and `whatif`
+    /// schedules carry them for reporting.
     pub fn dedup_key(&self) -> String {
-        format!(
+        self.dedup().to_string()
+    }
+}
+
+/// The Phase-2 dedup key as a `Copy`, allocation-free value. Field
+/// order mirrors the string form `aten|shapes|kernel|grid|block`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct DedupKey {
+    pub aten_op: Sym,
+    pub shapes_key: Sym,
+    pub kernel_name: Sym,
+    pub grid: [u32; 3],
+    pub block: [u32; 3],
+}
+
+impl std::fmt::Display for DedupKey {
+    /// Byte-identical to the pre-interning `dedup_key()` format string
+    /// — `phase2::SimReplayBackend` forks its RNG on these bytes.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
             "{}|{}|{}|{:?}|{:?}",
             self.aten_op, self.shapes_key, self.kernel_name, self.grid, self.block
         )
@@ -526,6 +572,22 @@ mod tests {
         assert_ne!(a.dedup_key(), b.dedup_key());
         let c = sample_meta();
         assert_eq!(a.dedup_key(), c.dedup_key());
+    }
+
+    #[test]
+    fn dedup_value_key_agrees_with_string_key() {
+        // The Copy key and the string key induce the same equivalence
+        // classes, and Display renders the pinned pre-interning format.
+        let a = sample_meta();
+        let mut b = sample_meta();
+        b.block = [64, 1, 1];
+        assert_ne!(a.dedup(), b.dedup());
+        assert_eq!(a.dedup(), sample_meta().dedup());
+        assert_eq!(a.dedup().to_string(), a.dedup_key());
+        assert_eq!(
+            a.dedup_key(),
+            "aten::mm|f32[128,64]x[64,32]|ampere_bf16_gemm_128x64|[8, 4, 1]|[128, 1, 1]"
+        );
     }
 
     #[test]

@@ -19,7 +19,7 @@ pub mod event;
 pub mod sink;
 
 pub use binary::{BinaryTraceError, BinaryTraceReader, BinaryTraceWriter, Dialect};
-pub use event::{EventKind, KernelMeta, ReplayArgs, Track, TraceEvent};
+pub use event::{DedupKey, EventKind, KernelMeta, ReplayArgs, Track, TraceEvent};
 pub use sink::{CountingSink, NullSink, TraceBufferSink, TraceSink};
 
 use std::collections::HashMap;
@@ -243,7 +243,7 @@ mod tests {
             device: None,
             args: None,
             meta: Some(KernelMeta {
-                kernel_name: name.to_string(),
+                kernel_name: name.into(),
                 family: "elem_generic".into(),
                 aten_op: "aten::mul".into(),
                 shapes_key: "f32[8]".into(),

@@ -1,0 +1,205 @@
+//! Global string interner for hot trace-event symbols.
+//!
+//! Kernel metadata repeats a tiny vocabulary (kernel symbols, family
+//! tags, ATen ops, shape keys are all emitted by the lowering's
+//! quantized name cache) across millions of events, so storing them as
+//! per-event `String`s made `KernelMeta` clone/hash/compare costs — and
+//! the per-call `dedup_key()` allocation — the dominant trace-path
+//! overhead (DESIGN.md §15). [`Sym`] replaces them: a `Copy` handle to
+//! a leaked, deduplicated `&'static str`.
+//!
+//! Invariant: equal strings intern to the *same* pointer, so `Sym`
+//! equality and hashing are pointer operations, never content scans.
+//! The table only grows (entries are `Box::leak`ed); its size is
+//! bounded by the lowering vocabulary, which tile-quantizes kernel
+//! names precisely so this universe stays small. The hit/miss counters
+//! make that claim observable: `stats()` reports (hits, misses) where
+//! `misses` is the number of distinct symbols ever allocated.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::hash::{Hash, Hasher};
+use std::ops::Deref;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+static INTERNER: OnceLock<Mutex<HashMap<&'static str, &'static str>>> = OnceLock::new();
+static HITS: AtomicU64 = AtomicU64::new(0);
+static MISSES: AtomicU64 = AtomicU64::new(0);
+
+fn table() -> &'static Mutex<HashMap<&'static str, &'static str>> {
+    INTERNER.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+fn intern_with(s: &str, leak: impl FnOnce() -> &'static str) -> &'static str {
+    let mut map = table().lock().unwrap_or_else(|e| e.into_inner());
+    if let Some(&v) = map.get(s) {
+        HITS.fetch_add(1, Ordering::Relaxed);
+        return v;
+    }
+    MISSES.fetch_add(1, Ordering::Relaxed);
+    let leaked = leak();
+    map.insert(leaked, leaked);
+    leaked
+}
+
+/// (hits, misses) over the process lifetime: `hits` counts symbol
+/// lookups satisfied without allocating, `misses` the distinct symbols
+/// ever allocated (== table size). The loadgen bench report exposes
+/// both so capture runs can assert O(vocabulary), not O(events),
+/// allocation.
+pub fn stats() -> (u64, u64) {
+    (HITS.load(Ordering::Relaxed), MISSES.load(Ordering::Relaxed))
+}
+
+/// An interned string symbol: `Copy`, pointer-compared, pointer-hashed.
+///
+/// `Sym` derefs to `str`, so read sites (`.as_str()`, `format!`,
+/// `.starts_with(..)`, passing `&sym` where `&str` is expected) keep
+/// working unchanged; only construction goes through the interner
+/// (`Sym::from(&str | String)`).
+#[derive(Clone, Copy)]
+pub struct Sym(&'static str);
+
+impl Sym {
+    pub fn new(s: &str) -> Sym {
+        Sym(intern_with(s, || Box::leak(s.to_owned().into_boxed_str())))
+    }
+
+    /// Intern an owned string, reusing its allocation on first sight.
+    pub fn from_owned(s: String) -> Sym {
+        Sym(intern_with(&s, || Box::leak(s.into_boxed_str())))
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        self.0
+    }
+}
+
+impl Deref for Sym {
+    type Target = str;
+
+    fn deref(&self) -> &str {
+        self.0
+    }
+}
+
+// No `Borrow<str>` impl: `Sym` hashes by pointer while `str` hashes by
+// content, so a `HashMap<Sym, _>` must never be probed with a bare
+// `&str` — the Borrow contract (hash equality across forms) would not
+// hold. Intern first, then look up.
+
+impl PartialEq for Sym {
+    fn eq(&self, other: &Sym) -> bool {
+        // The interner maps equal content to one pointer.
+        std::ptr::eq(self.0, other.0)
+    }
+}
+
+impl Eq for Sym {}
+
+impl Hash for Sym {
+    fn hash<H: Hasher>(&self, state: &mut H) {
+        (self.0.as_ptr() as usize).hash(state);
+    }
+}
+
+impl PartialEq<&str> for Sym {
+    fn eq(&self, other: &&str) -> bool {
+        self.0 == *other
+    }
+}
+
+impl PartialEq<str> for Sym {
+    fn eq(&self, other: &str) -> bool {
+        self.0 == other
+    }
+}
+
+impl PartialEq<Sym> for &str {
+    fn eq(&self, other: &Sym) -> bool {
+        *self == other.0
+    }
+}
+
+impl From<&str> for Sym {
+    fn from(s: &str) -> Sym {
+        Sym::new(s)
+    }
+}
+
+impl From<String> for Sym {
+    fn from(s: String) -> Sym {
+        Sym::from_owned(s)
+    }
+}
+
+impl fmt::Display for Sym {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.0)
+    }
+}
+
+impl fmt::Debug for Sym {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(self.0, f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn equal_content_is_one_pointer() {
+        let a = Sym::new("taxbreak::intern_test_a");
+        let b = Sym::from_owned("taxbreak::intern_test_a".to_string());
+        assert_eq!(a, b);
+        assert!(std::ptr::eq(a.as_str(), b.as_str()));
+        let c = Sym::new("taxbreak::intern_test_c");
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn str_comparisons_and_deref_work() {
+        let s = Sym::new("aten::mm_test");
+        assert_eq!(s, "aten::mm_test");
+        assert_eq!("aten::mm_test", s);
+        assert!(s.starts_with("aten::"));
+        assert_eq!(format!("{s}"), "aten::mm_test");
+        assert_eq!(format!("{s:?}"), "\"aten::mm_test\"");
+        fn takes_str(x: &str) -> usize {
+            x.len()
+        }
+        assert_eq!(takes_str(&s), 12);
+    }
+
+    #[test]
+    fn hash_is_consistent_with_eq() {
+        use std::collections::HashMap;
+        let mut m: HashMap<Sym, u32> = HashMap::new();
+        m.insert(Sym::new("sym_hash_test"), 1);
+        *m.entry(Sym::from_owned("sym_hash_test".into())).or_insert(0) += 1;
+        assert_eq!(m.len(), 1);
+        assert_eq!(m[&Sym::new("sym_hash_test")], 2);
+    }
+
+    #[test]
+    fn repeat_interning_counts_hits_not_misses() {
+        let (_, m0) = stats();
+        let _ = Sym::new("taxbreak::intern_counter_probe");
+        let (h1, m1) = stats();
+        assert!(m1 >= m0);
+        for _ in 0..10 {
+            let _ = Sym::new("taxbreak::intern_counter_probe");
+        }
+        let (h2, m2) = stats();
+        assert!(h2 >= h1 + 10, "repeat lookups must count as hits");
+        // Other tests may intern concurrently; the probe itself must
+        // not have allocated again.
+        assert!(m2 >= m1);
+        let before = stats().1;
+        let _ = Sym::new("taxbreak::intern_counter_probe");
+        assert_eq!(stats().1, before, "no new allocation on a hit");
+    }
+}

@@ -187,9 +187,9 @@ impl Schedule {
 
             let t_py = (aten.ts_us - torch.ts_us).max(0.0);
             let t_dispatch = (api.ts_us - aten.ts_us).max(0.0);
-            let key = meta.dedup_key();
+            let key = meta.dedup();
             let t_ct = if meta.lib_mediated {
-                p2.replay_of(&key)
+                p2.replay_of(key)
                     .map(|k| k.dct_us)
                     .unwrap_or(0.0)
                     .min(t_dispatch)
@@ -205,7 +205,7 @@ impl Schedule {
                 && (kernel.ts_us - prev_kernel_end).abs() < 1e-9;
             let (floor, excess) = if queued {
                 let iso = p2
-                    .replay_of(&key)
+                    .replay_of(key)
                     .map(|k| (k.t_launch.mean - floor_hint).max(0.0))
                     .unwrap_or(0.0);
                 (floor_hint.min(gap_obs), iso)
@@ -215,9 +215,9 @@ impl Schedule {
             };
 
             steps.push(Step {
-                name: meta.kernel_name.clone(),
-                family: meta.family.clone(),
-                dedup_key: key,
+                name: meta.kernel_name.to_string(),
+                family: meta.family.to_string(),
+                dedup_key: meta.dedup_key(),
                 lib_mediated: meta.lib_mediated,
                 synced,
                 pre_host_us: pre_host,
@@ -299,8 +299,8 @@ impl Schedule {
             streams = streams.max(stream as usize + 1);
             let prev = prev_end.entry(device).or_insert(0.0);
             steps.push(Step {
-                name: meta.kernel_name.clone(),
-                family: meta.family.clone(),
+                name: meta.kernel_name.to_string(),
+                family: meta.family.to_string(),
                 dedup_key: meta.dedup_key(),
                 lib_mediated: meta.lib_mediated,
                 synced: true,
@@ -469,10 +469,10 @@ pub fn resimulate_with_trace(s: &Schedule, record: bool) -> (Outcome, Option<Tra
                 device: stamp,
                 args: None,
                 meta: Some(KernelMeta {
-                    kernel_name: step.name.clone(),
-                    family: step.family.clone(),
-                    aten_op: String::new(),
-                    shapes_key: String::new(),
+                    kernel_name: step.name.as_str().into(),
+                    family: step.family.as_str().into(),
+                    aten_op: "".into(),
+                    shapes_key: "".into(),
                     grid: [1, 1, 1],
                     block: [1, 1, 1],
                     lib_mediated: step.lib_mediated,

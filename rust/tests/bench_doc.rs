@@ -1,0 +1,136 @@
+//! Spec-drift lock for the bench trajectory (`docs/bench.md`).
+//!
+//! The committed `BENCH_*.json` datapoints are a contract between the
+//! CLI (`taxbreak bench-trace`, `taxbreak loadgen --bench-out`), the
+//! CI regression guard (`scripts/check_bench.py`) and whoever reads
+//! the trajectory. Mirroring the `docs/metrics.md` test in
+//! `tests/obs.rs`: every field a datapoint can carry is named below,
+//! the doc must document each one, every field the doc's tables name
+//! must exist here, and the fields `LoadgenReport::bench_json` emits
+//! at runtime must all be documented.
+
+use std::path::PathBuf;
+
+use taxbreak::serving::{run_sim_loadgen, LoadgenConfig};
+use taxbreak::util::json::Json;
+
+/// Every field the three bench datapoints can carry.  Adding, renaming
+/// or dropping a field must update both this list and `docs/bench.md`,
+/// or this test fails.  (The `replay` object and the trace-codec
+/// fields are assembled in `main.rs`; their names are pinned here and
+/// by the CI smoke's greps.)
+const BENCH_FIELDS: [&str; 35] = [
+    // shared envelope
+    "bench",
+    "source",
+    // BENCH_trace.json (taxbreak bench-trace)
+    "events",
+    "runs",
+    "json_compact",
+    "json_pretty",
+    "binary",
+    "bytes",
+    "bytes_per_event",
+    "encode_events_per_s",
+    "decode_events_per_s",
+    "binary_vs_pretty_json",
+    "binary_vs_compact_json",
+    // BENCH_loadgen.json / BENCH_timeline.json (loadgen --bench-out)
+    "platform",
+    "requests",
+    "devices",
+    "streams",
+    "intern_hits",
+    "intern_misses",
+    "throughput_tps",
+    "tpot_p50_us",
+    "tpot_p99_us",
+    "ttft_p99_us",
+    "hdbi",
+    "per_model",
+    "model",
+    "per_device",
+    "device",
+    "kv_occupancy_mean",
+    "replay",
+    "tokens",
+    "wall_s",
+    "events_per_s",
+    "tokens_per_s",
+    "online_decompose_events_per_sec",
+];
+
+fn bench_doc() -> String {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .unwrap()
+        .join("docs")
+        .join("bench.md");
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("{}: {e}", path.display()))
+}
+
+#[test]
+fn bench_doc_names_every_field_and_nothing_else() {
+    let doc = bench_doc();
+    for name in BENCH_FIELDS {
+        assert!(doc.contains(&format!("`{name}`")), "docs/bench.md is missing `{name}`");
+    }
+    // Every field a doc table's first column names is a real field:
+    // rows look like "| `field` | meaning |" (several rows name a
+    // field group, "| `a`, `b` | ...").
+    for line in doc.lines() {
+        let Some(rest) = line.strip_prefix("| `") else { continue };
+        let Some(cell_end) = rest.find(" |") else { continue };
+        for token in rest[..cell_end].split(", ") {
+            let name = token.trim_matches('`');
+            assert!(
+                BENCH_FIELDS.contains(&name),
+                "docs/bench.md documents unknown bench field `{name}`"
+            );
+        }
+    }
+}
+
+/// Recursively collect object keys of a bench datapoint.
+fn keys_of(j: &Json, out: &mut Vec<String>) {
+    match j {
+        Json::Obj(pairs) => {
+            for (k, v) in pairs {
+                out.push(k.clone());
+                keys_of(v, out);
+            }
+        }
+        Json::Arr(items) => {
+            for v in items {
+                keys_of(v, out);
+            }
+        }
+        _ => {}
+    }
+}
+
+#[test]
+fn loadgen_bench_json_emits_only_documented_fields() {
+    let cfg = LoadgenConfig {
+        requests: 3,
+        rate_per_s: 0.0,
+        devices: 2,
+        sched: taxbreak::serving::SchedulerConfig {
+            kv_pages: 64,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let report = run_sim_loadgen(&["gpt2".to_string()], "h200", &cfg).unwrap();
+    let bench = report.bench_json();
+    let mut keys = Vec::new();
+    keys_of(&bench, &mut keys);
+    assert!(keys.contains(&"throughput_tps".to_string()));
+    assert!(keys.contains(&"intern_hits".to_string()));
+    for k in keys {
+        assert!(
+            BENCH_FIELDS.contains(&k.as_str()),
+            "bench_json emits `{k}`, which docs/bench.md does not document"
+        );
+    }
+}

@@ -78,6 +78,55 @@ fn online_totals_are_bit_identical_to_decompose_on_the_bundled_eager_trace() {
     assert_eq!(rep.launches_per_token(), 0.0);
 }
 
+/// The committed golden replay corpus (`tests/golden/replay/serve_v3.tbt`)
+/// pins the engine's bytes across refactors; this pins the *analysis*
+/// on those bytes: the streaming decomposer and the post-hoc pipeline
+/// must stay bit-identical on the exact committed capture, so a hot-path
+/// change (e.g. symbol interning of kernel metadata) that perturbed
+/// either path would fail here even if both paths drifted together on
+/// freshly generated traces.
+#[test]
+fn online_totals_are_bit_identical_to_decompose_on_the_golden_replay_corpus() {
+    // The corpus workload of tests/replay.rs::golden_recording —
+    // regenerated here so the check runs even on a fresh checkout
+    // where the blessing test hasn't written the files yet.
+    let cfg = LoadgenConfig {
+        requests: 8,
+        rate_per_s: 1500.0,
+        prompt_len: LenDist::Uniform { lo: 8, hi: 24 },
+        output_len: LenDist::Uniform { lo: 2, hi: 6 },
+        seed: 42,
+        devices: 2,
+        streams: 2,
+        sched: SchedulerConfig { kv_pages: 128, ..SchedulerConfig::default() },
+        capture: true,
+        ..LoadgenConfig::default()
+    };
+    let report = run_sim_loadgen(&["gpt2".to_string()], "h200", &cfg).unwrap();
+    let trace = report.runs[0].trace.clone().unwrap();
+    let want = posthoc(&trace);
+    let rep = online(&trace, 0.0);
+    assert_bit_identical(&rep.totals, &want);
+    assert!(want.n_kernels > 0);
+    let h = want.hdbi();
+    assert!(h > 0.0 && h < 1.0, "golden corpus HDBI out of range: {h}");
+
+    // When the blessed on-disk corpus is present, the decomposition of
+    // its *bytes* must agree too — a drift in the wire format or in
+    // interned-symbol reconstruction from disk would surface here.
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("golden")
+        .join("replay")
+        .join("serve_v3.tbt");
+    if path.exists() {
+        let from_disk = Trace::load(&path).unwrap();
+        assert_bit_identical(&posthoc(&from_disk), &want);
+    } else {
+        eprintln!("serve_v3.tbt not blessed yet — skipped the on-disk half");
+    }
+}
+
 #[test]
 fn online_totals_are_bit_identical_to_decompose_on_v3_serving_captures() {
     let cfg = LoadgenConfig {

@@ -183,7 +183,7 @@ fn reference_simulate(
             });
             trace.push(TraceEvent {
                 kind: EventKind::AtenOp,
-                name: meta.aten_op.clone(),
+                name: meta.aten_op.to_string(),
                 ts_us: aten_ts,
                 dur_us: api_end - aten_ts,
                 correlation_id: corr,
@@ -205,7 +205,7 @@ fn reference_simulate(
             });
             trace.push(TraceEvent {
                 kind: EventKind::Kernel,
-                name: meta.kernel_name.clone(),
+                name: meta.kernel_name.to_string(),
                 ts_us: timing.start_us,
                 dur_us: dur,
                 correlation_id: corr,

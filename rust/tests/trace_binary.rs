@@ -194,10 +194,10 @@ fn simulated_trace_save_load_save_is_byte_stable_in_binary() {
 fn arb_kernel_meta(g: &mut taxbreak::util::prop::Gen) -> KernelMeta {
     let names = ["k", "ampere_bf16_gemm", "moe_dispatch_ε", "void cutlass::Kernel<…>"];
     KernelMeta {
-        kernel_name: g.choice(&names).to_string(),
-        family: g.choice(&["gemm_cublas", "elementwise", "moe_routing"]).to_string(),
-        aten_op: g.choice(&["aten::mm", "aten::add", "aten::topk"]).to_string(),
-        shapes_key: g.choice(&["f32[1]", "bf16[8,64]x[64,64]", ""]).to_string(),
+        kernel_name: (*g.choice(&names)).into(),
+        family: (*g.choice(&["gemm_cublas", "elementwise", "moe_routing"])).into(),
+        aten_op: (*g.choice(&["aten::mm", "aten::add", "aten::topk"])).into(),
+        shapes_key: (*g.choice(&["f32[1]", "bf16[8,64]x[64,64]", ""])).into(),
         grid: [g.u64() as u32, g.usize_in(0, 9) as u32, 1],
         block: [g.usize_in(1, 1024) as u32, 1, g.u64() as u32],
         lib_mediated: g.bool(),

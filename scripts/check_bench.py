@@ -1,0 +1,101 @@
+#!/usr/bin/env python3
+"""Bench-trajectory regression guard.
+
+Compares freshly measured BENCH_*.json datapoints against the committed
+baselines and fails if any guarded wall-clock rate drops below
+RATIO_FLOOR x the committed value.  Only higher-is-better throughput
+rates are guarded: latency percentiles, HDBI and size ratios move for
+legitimate modelling reasons and are pinned elsewhere (golden corpus,
+fixed-point tests), not here.
+
+Usage:
+    scripts/check_bench.py BASELINE_DIR FRESH.json [FRESH.json ...]
+
+Each fresh file is matched to BASELINE_DIR/<basename>.  Committed
+values <= 0 are skipped (a zero floor guards nothing by design).
+"""
+
+import json
+import sys
+
+RATIO_FLOOR = 0.5
+
+# Guarded fields per bench kind, as paths into the JSON object.
+GUARDED = {
+    "trace": [
+        ("json_compact", "encode_events_per_s"),
+        ("json_compact", "decode_events_per_s"),
+        ("binary", "encode_events_per_s"),
+        ("binary", "decode_events_per_s"),
+    ],
+    "loadgen": [
+        ("throughput_tps",),
+        ("replay", "events_per_s"),
+        ("replay", "tokens_per_s"),
+        ("online_decompose_events_per_sec",),
+    ],
+}
+
+
+def lookup(obj, path):
+    for key in path:
+        if not isinstance(obj, dict) or key not in obj:
+            return None
+        obj = obj[key]
+    return obj if isinstance(obj, (int, float)) else None
+
+
+def check(baseline_path, fresh_path):
+    with open(baseline_path) as f:
+        base = json.load(f)
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+    kind = base.get("bench")
+    if kind not in GUARDED:
+        raise SystemExit(f"{baseline_path}: unknown bench kind {kind!r}")
+    if fresh.get("bench") != kind:
+        raise SystemExit(
+            f"{fresh_path}: bench kind {fresh.get('bench')!r} != baseline {kind!r}"
+        )
+    failures = []
+    for path in GUARDED[kind]:
+        dotted = ".".join(path)
+        committed = lookup(base, path)
+        if committed is None or committed <= 0:
+            print(f"  skip {dotted}: no committed floor")
+            continue
+        measured = lookup(fresh, path)
+        if measured is None:
+            failures.append(f"{dotted}: missing from {fresh_path}")
+            continue
+        ratio = measured / committed
+        status = "ok" if ratio >= RATIO_FLOOR else "FAIL"
+        print(f"  {status} {dotted}: {measured:.6g} vs floor {committed:.6g} ({ratio:.2f}x)")
+        if ratio < RATIO_FLOOR:
+            failures.append(
+                f"{dotted}: {measured:.6g} < {RATIO_FLOOR} x committed {committed:.6g}"
+            )
+    return failures
+
+
+def main(argv):
+    if len(argv) < 3:
+        raise SystemExit(__doc__)
+    baseline_dir, fresh_paths = argv[1], argv[2:]
+    all_failures = []
+    for fresh in fresh_paths:
+        name = fresh.rsplit("/", 1)[-1]
+        baseline = f"{baseline_dir}/{name}"
+        print(f"{name}:")
+        all_failures += [f"{name} {f}" for f in check(baseline, fresh)]
+    if all_failures:
+        print("\nbench regression guard failed:", file=sys.stderr)
+        for f in all_failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print("\nbench regression guard passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

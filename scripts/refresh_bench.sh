@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# Regenerate the three committed bench-trajectory datapoints with the
+# exact flag sets the CI smoke uses, so a refreshed file is directly
+# comparable to the committed one (scripts/check_bench.py guards the
+# wall-clock rates at 0.5x).  Run from the repo root on a quiet
+# machine; commit the refreshed files when the rates move for a reason
+# worth recording (docs/bench.md explains the trajectory semantics).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+cargo build --release
+
+cargo run --release -- bench-trace --runs 5 --out BENCH_trace.json
+
+cargo run --release -- loadgen --models gpt2,olmoe-1b-7b --requests 60 \
+  --rate 3000 --bench-out BENCH_loadgen.json
+
+cargo run --release -- loadgen --models olmoe-1b-7b --requests 48 \
+  --rate 2000 --devices 2 --streams 2 --kv-pages 128 \
+  --bench-out BENCH_timeline.json
+
+echo "refreshed BENCH_trace.json BENCH_loadgen.json BENCH_timeline.json"
