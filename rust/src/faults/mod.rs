@@ -1,0 +1,491 @@
+//! Fault injection: deterministic, seeded perturbations of a serving
+//! run (`taxbreak loadgen --faults SPEC`).
+//!
+//! TaxBreak's decomposition is only actionable if it survives
+//! non-fair-weather runs: production serving is defined by SLOs under
+//! device stalls, host jitter storms, transient launch failures and KV
+//! pressure. A [`FaultPlan`] is a *pre-realized* list of fault windows
+//! — every window is fixed before the run starts, a pure function of
+//! the spec (and, for `storm:SEED:N` clauses, of the seed), never of
+//! run dynamics. That choice is what keeps record → replay → re-record
+//! a byte-equal fixed point under faults (DESIGN.md §16):
+//!
+//! * every armed window is emitted as a first-class spec-v4 `fault`
+//!   trace event (corr id 0, decomposition-blind), so a capture carries
+//!   its own fault schedule;
+//! * replay re-arms the schedule from those events and re-applies the
+//!   *computed* perturbations (device stalls, launch-failure retries)
+//!   while the *sampled* perturbations (host jitter) ride the recorded
+//!   `rng_draw` values automatically;
+//! * KV-pressure windows shape only live admission decisions, which
+//!   replay takes from the recorded `sched_decision` events verbatim.
+//!
+//! The four kinds map onto the paper's overhead components: host
+//! jitter dilates the T_fw/T_lib/T_launch host segments, device stalls
+//! dilate kernel time on a stream, launch failures pay the launch path
+//! again per retry, and KV pressure converts capacity into queueing
+//! (sheds/preemptions) without touching any segment.
+
+use crate::util::rng::Rng;
+
+/// Kind of an injected fault window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FaultKind {
+    /// Multiplicative straggler window on a device stream: kernel
+    /// durations on the target stream are scaled by `magnitude`.
+    DeviceStall,
+    /// Host jitter storm: host-latency draws (prep and/or exec) are
+    /// scaled by `magnitude` while the window is active.
+    HostJitter,
+    /// Transient kernel-launch failures: a launch issued inside the
+    /// window fails `ceil(magnitude)` times before succeeding, paying
+    /// the launch path (a fresh exec draw + exponential backoff) per
+    /// attempt; at [`MAX_LAUNCH_ATTEMPTS`] the invocation fails with a
+    /// typed transient error instead.
+    LaunchFail,
+    /// Transient KV-page pressure: a `magnitude` fraction of the pool
+    /// is sequestered while the window is active, forcing backpressure
+    /// (sheds / preemptions) at admission time.
+    KvPressure,
+}
+
+impl FaultKind {
+    /// Stable tag serialized in the spec-v4 `fault` event.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FaultKind::DeviceStall => "device_stall",
+            FaultKind::HostJitter => "host_jitter",
+            FaultKind::LaunchFail => "launch_fail",
+            FaultKind::KvPressure => "kv_pressure",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<FaultKind> {
+        Ok(match s {
+            "device_stall" => FaultKind::DeviceStall,
+            "host_jitter" => FaultKind::HostJitter,
+            "launch_fail" => FaultKind::LaunchFail,
+            "kv_pressure" => FaultKind::KvPressure,
+            other => anyhow::bail!(
+                "unknown fault kind '{other}' (expected device_stall, host_jitter, \
+                 launch_fail or kv_pressure)"
+            ),
+        })
+    }
+}
+
+/// Host-latency segment a jitter window targets. The simulated engine
+/// splits each invocation's host span into a preparation draw (the
+/// T_fw framework analog, the `AtenOp` span) and an execute-call draw
+/// (the T_lib/T_launch analog, the `RuntimeApi` span) — jitter can
+/// dilate either individually or both.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HostSeg {
+    Prep,
+    Exec,
+}
+
+/// Bounded retry budget for transient launch failures: a window asking
+/// for this many (or more) failures exhausts the retry loop and the
+/// invocation fails with a typed transient error — never a panic.
+pub const MAX_LAUNCH_ATTEMPTS: u32 = 6;
+
+/// Base of the deterministic exponential backoff paid between launch
+/// retries, us (attempt `i` waits `BACKOFF_BASE_US * 2^i`).
+pub const BACKOFF_BASE_US: f64 = 25.0;
+
+/// Marker every transient launch-exhaustion error carries; the
+/// scheduler detects it by substring (the vendored error type has no
+/// downcast) and degrades the group to `Failed` instead of panicking.
+pub const TRANSIENT_LAUNCH_MARKER: &str = "transient launch failure";
+
+/// One realized fault window. `target` is the stable string serialized
+/// into the spec-v4 `fault` event:
+/// `stream:N` / `stream:*` (device stalls), `host:prep` / `host:exec` /
+/// `host:all` (jitter), `launch` (launch failures), `kv` (KV pressure).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultWindow {
+    pub kind: FaultKind,
+    pub target: String,
+    pub onset_us: f64,
+    pub dur_us: f64,
+    pub magnitude: f64,
+}
+
+impl FaultWindow {
+    /// Is the window active at virtual time `t_us`? Half-open
+    /// `[onset, onset + dur)`, so back-to-back windows never overlap.
+    pub fn active_at(&self, t_us: f64) -> bool {
+        t_us >= self.onset_us && t_us < self.onset_us + self.dur_us
+    }
+
+    /// Does the stall window target `stream`? (`stream:*` hits all.)
+    fn hits_stream(&self, stream: u32) -> bool {
+        self.target == "stream:*" || self.target == format!("stream:{stream}")
+    }
+
+    /// Does the jitter window target host segment `seg`?
+    fn hits_seg(&self, seg: HostSeg) -> bool {
+        match seg {
+            HostSeg::Prep => self.target == "host:prep" || self.target == "host:all",
+            HostSeg::Exec => self.target == "host:exec" || self.target == "host:all",
+        }
+    }
+}
+
+/// A deterministic fault plan: the realized window list plus the spec
+/// it was parsed from (echoed in reports).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub spec: String,
+    pub windows: Vec<FaultWindow>,
+}
+
+impl FaultPlan {
+    /// Parse a `--faults` spec: `;`-separated clauses, each
+    ///
+    /// * `stall:ONSET:DUR:MAG[:STREAM]` — device stall (`MAG >= 1`
+    ///   multiplier; `STREAM` a stream id, default every stream),
+    /// * `jitter:ONSET:DUR:MAG[:SEG]` — host jitter (`SEG` one of
+    ///   `prep`/`exec`/`all`, default `all`),
+    /// * `launchfail:ONSET:DUR:ATTEMPTS` — launches inside the window
+    ///   fail `ATTEMPTS` times before succeeding,
+    /// * `kv:ONSET:DUR:FRAC` — sequester `FRAC` (0..=1) of KV pages,
+    /// * `storm:SEED:N` — N seeded pseudo-random windows of mixed
+    ///   kinds (the chaos generator).
+    ///
+    /// Times are microseconds of virtual time.
+    pub fn parse(spec: &str) -> anyhow::Result<FaultPlan> {
+        let mut windows = Vec::new();
+        for clause in spec.split(';').map(str::trim).filter(|c| !c.is_empty()) {
+            let parts: Vec<&str> = clause.split(':').collect();
+            let num = |s: &str, what: &str| -> anyhow::Result<f64> {
+                let v: f64 = s
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad {what} '{s}' in fault clause '{clause}'"))?;
+                anyhow::ensure!(
+                    v.is_finite() && v >= 0.0,
+                    "{what} must be finite and >= 0 in fault clause '{clause}'"
+                );
+                Ok(v)
+            };
+            match parts.as_slice() {
+                ["stall", onset, dur, mag] | ["stall", onset, dur, mag, _] => {
+                    let magnitude = num(mag, "magnitude")?;
+                    anyhow::ensure!(
+                        magnitude >= 1.0,
+                        "stall magnitude must be >= 1 (a slowdown factor), got '{mag}'"
+                    );
+                    let target = match parts.get(4) {
+                        Some(s) => {
+                            let id: u32 = s.parse().map_err(|_| {
+                                anyhow::anyhow!("bad stall stream '{s}' in fault clause '{clause}'")
+                            })?;
+                            format!("stream:{id}")
+                        }
+                        None => "stream:*".to_string(),
+                    };
+                    windows.push(FaultWindow {
+                        kind: FaultKind::DeviceStall,
+                        target,
+                        onset_us: num(onset, "onset")?,
+                        dur_us: num(dur, "duration")?,
+                        magnitude,
+                    });
+                }
+                ["jitter", onset, dur, mag] | ["jitter", onset, dur, mag, _] => {
+                    let magnitude = num(mag, "magnitude")?;
+                    anyhow::ensure!(
+                        magnitude >= 1.0,
+                        "jitter magnitude must be >= 1 (a dilation factor), got '{mag}'"
+                    );
+                    let target = match parts.get(4) {
+                        Some(&"prep") => "host:prep",
+                        Some(&"exec") => "host:exec",
+                        Some(&"all") | None => "host:all",
+                        Some(other) => anyhow::bail!(
+                            "bad jitter segment '{other}' in fault clause '{clause}' \
+                             (expected prep, exec or all)"
+                        ),
+                    }
+                    .to_string();
+                    windows.push(FaultWindow {
+                        kind: FaultKind::HostJitter,
+                        target,
+                        onset_us: num(onset, "onset")?,
+                        dur_us: num(dur, "duration")?,
+                        magnitude,
+                    });
+                }
+                ["launchfail", onset, dur, attempts] => {
+                    let magnitude = num(attempts, "attempts")?;
+                    anyhow::ensure!(
+                        magnitude >= 1.0 && magnitude == magnitude.trunc(),
+                        "launchfail attempts must be a whole number >= 1, got '{attempts}'"
+                    );
+                    windows.push(FaultWindow {
+                        kind: FaultKind::LaunchFail,
+                        target: "launch".to_string(),
+                        onset_us: num(onset, "onset")?,
+                        dur_us: num(dur, "duration")?,
+                        magnitude,
+                    });
+                }
+                ["kv", onset, dur, frac] => {
+                    let magnitude = num(frac, "fraction")?;
+                    anyhow::ensure!(
+                        magnitude <= 1.0,
+                        "kv pressure fraction must be in 0..=1, got '{frac}'"
+                    );
+                    windows.push(FaultWindow {
+                        kind: FaultKind::KvPressure,
+                        target: "kv".to_string(),
+                        onset_us: num(onset, "onset")?,
+                        dur_us: num(dur, "duration")?,
+                        magnitude,
+                    });
+                }
+                ["storm", seed, n] => {
+                    let seed: u64 = seed.parse().map_err(|_| {
+                        anyhow::anyhow!("bad storm seed '{seed}' in fault clause '{clause}'")
+                    })?;
+                    let n: usize = n.parse().map_err(|_| {
+                        anyhow::anyhow!("bad storm count '{n}' in fault clause '{clause}'")
+                    })?;
+                    anyhow::ensure!(
+                        (1..=256).contains(&n),
+                        "storm count must be in 1..=256, got {n}"
+                    );
+                    windows.extend(storm_windows(seed, n));
+                }
+                _ => anyhow::bail!(
+                    "bad fault clause '{clause}': expected stall:ONSET:DUR:MAG[:STREAM], \
+                     jitter:ONSET:DUR:MAG[:prep|exec|all], launchfail:ONSET:DUR:ATTEMPTS, \
+                     kv:ONSET:DUR:FRAC or storm:SEED:N"
+                ),
+            }
+        }
+        anyhow::ensure!(!windows.is_empty(), "fault spec '{spec}' contains no clauses");
+        Ok(FaultPlan {
+            spec: spec.to_string(),
+            windows,
+        })
+    }
+
+    /// Rebuild a plan from windows extracted out of a capture's spec-v4
+    /// `fault` events (`serving::replay` re-arming path).
+    pub fn from_windows(windows: Vec<FaultWindow>) -> FaultPlan {
+        FaultPlan {
+            spec: "(replayed)".to_string(),
+            windows,
+        }
+    }
+
+    /// Product of active host-jitter magnitudes for segment `seg` at
+    /// time `t_us` (1.0 outside every window).
+    pub fn host_factor(&self, t_us: f64, seg: HostSeg) -> f64 {
+        self.windows
+            .iter()
+            .filter(|w| {
+                w.kind == FaultKind::HostJitter && w.active_at(t_us) && w.hits_seg(seg)
+            })
+            .map(|w| w.magnitude)
+            .product()
+    }
+
+    /// Product of active device-stall magnitudes for `stream` at time
+    /// `t_us` (1.0 outside every window).
+    pub fn stall_factor(&self, t_us: f64, stream: u32) -> f64 {
+        self.windows
+            .iter()
+            .filter(|w| {
+                w.kind == FaultKind::DeviceStall && w.active_at(t_us) && w.hits_stream(stream)
+            })
+            .map(|w| w.magnitude)
+            .product()
+    }
+
+    /// Number of times a launch issued at `t_us` fails before
+    /// succeeding (0 outside every window; the max over overlapping
+    /// windows).
+    pub fn launch_failures(&self, t_us: f64) -> u32 {
+        self.windows
+            .iter()
+            .filter(|w| w.kind == FaultKind::LaunchFail && w.active_at(t_us))
+            .map(|w| w.magnitude as u32)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// KV pages sequestered at `t_us` out of a pool of `total` (the max
+    /// fraction over overlapping windows; never the whole pool, so a
+    /// storm cannot render the scheduler permanently stuck).
+    pub fn kv_sequestered(&self, t_us: f64, total: usize) -> usize {
+        let frac = self
+            .windows
+            .iter()
+            .filter(|w| w.kind == FaultKind::KvPressure && w.active_at(t_us))
+            .map(|w| w.magnitude)
+            .fold(0.0f64, f64::max);
+        ((total as f64 * frac) as usize).min(total.saturating_sub(1))
+    }
+
+    /// Does any window of `kind` exist in the plan?
+    pub fn has_kind(&self, kind: FaultKind) -> bool {
+        self.windows.iter().any(|w| w.kind == kind)
+    }
+}
+
+/// The chaos generator: `n` pseudo-random fault windows, a pure
+/// function of `seed`. Magnitudes stay in ranges the property suite
+/// can always survive (stalls/jitter 1..=8x, 1..=3 launch failures,
+/// up to 90% KV sequestration).
+fn storm_windows(seed: u64, n: usize) -> Vec<FaultWindow> {
+    let mut rng = Rng::new(seed).fork_str("fault-storm");
+    (0..n)
+        .map(|_| {
+            let onset_us = rng.next_f64() * 20_000.0;
+            let dur_us = 100.0 + rng.next_f64() * 5_000.0;
+            match rng.below(4) {
+                0 => FaultWindow {
+                    kind: FaultKind::DeviceStall,
+                    target: if rng.below(2) == 0 {
+                        "stream:*".to_string()
+                    } else {
+                        format!("stream:{}", rng.below(4))
+                    },
+                    onset_us,
+                    dur_us,
+                    magnitude: 1.0 + rng.next_f64() * 7.0,
+                },
+                1 => FaultWindow {
+                    kind: FaultKind::HostJitter,
+                    target: ["host:prep", "host:exec", "host:all"][rng.below(3)].to_string(),
+                    onset_us,
+                    dur_us,
+                    magnitude: 1.0 + rng.next_f64() * 7.0,
+                },
+                2 => FaultWindow {
+                    kind: FaultKind::LaunchFail,
+                    target: "launch".to_string(),
+                    onset_us,
+                    dur_us,
+                    magnitude: (1 + rng.below(3)) as f64,
+                },
+                _ => FaultWindow {
+                    kind: FaultKind::KvPressure,
+                    target: "kv".to_string(),
+                    onset_us,
+                    dur_us,
+                    magnitude: rng.next_f64() * 0.9,
+                },
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_clause_kind() {
+        let p = FaultPlan::parse(
+            "stall:1000:500:3.0:1;jitter:0:2000:4.0:prep;launchfail:100:50:2;kv:10:20:0.5",
+        )
+        .unwrap();
+        assert_eq!(p.windows.len(), 4);
+        assert_eq!(p.windows[0].kind, FaultKind::DeviceStall);
+        assert_eq!(p.windows[0].target, "stream:1");
+        assert_eq!(p.windows[1].target, "host:prep");
+        assert_eq!(p.windows[2].magnitude, 2.0);
+        assert_eq!(p.windows[3].target, "kv");
+        // Defaults: all streams, all host segments.
+        let d = FaultPlan::parse("stall:0:1:2;jitter:0:1:2").unwrap();
+        assert_eq!(d.windows[0].target, "stream:*");
+        assert_eq!(d.windows[1].target, "host:all");
+    }
+
+    #[test]
+    fn rejects_malformed_clauses() {
+        for bad in [
+            "",
+            "stall:0:1",
+            "stall:0:1:0.5",      // slowdown below 1
+            "jitter:0:1:2:weird", // unknown segment
+            "launchfail:0:1:1.5", // fractional attempts
+            "kv:0:1:1.5",         // fraction above 1
+            "storm:7:0",          // empty storm
+            "storm:x:4",
+            "nonsense:1:2:3",
+            "stall:a:1:2",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "'{bad}' should not parse");
+        }
+    }
+
+    #[test]
+    fn storm_is_deterministic_and_seeded() {
+        let a = FaultPlan::parse("storm:7:16").unwrap();
+        let b = FaultPlan::parse("storm:7:16").unwrap();
+        let c = FaultPlan::parse("storm:8:16").unwrap();
+        assert_eq!(a, b);
+        assert_ne!(a.windows, c.windows);
+        assert_eq!(a.windows.len(), 16);
+        for w in &a.windows {
+            assert!(w.onset_us >= 0.0 && w.dur_us > 0.0);
+            match w.kind {
+                FaultKind::DeviceStall | FaultKind::HostJitter => {
+                    assert!((1.0..=8.0).contains(&w.magnitude))
+                }
+                FaultKind::LaunchFail => {
+                    assert!(w.magnitude >= 1.0 && w.magnitude <= 3.0)
+                }
+                FaultKind::KvPressure => assert!((0.0..=0.9).contains(&w.magnitude)),
+            }
+        }
+    }
+
+    #[test]
+    fn factors_compose_and_respect_windows() {
+        let p = FaultPlan::parse(
+            "jitter:100:100:2.0:prep;jitter:150:100:3.0:all;stall:0:50:4.0:2",
+        )
+        .unwrap();
+        assert_eq!(p.host_factor(50.0, HostSeg::Prep), 1.0);
+        assert_eq!(p.host_factor(120.0, HostSeg::Prep), 2.0);
+        assert_eq!(p.host_factor(120.0, HostSeg::Exec), 1.0);
+        assert_eq!(p.host_factor(180.0, HostSeg::Prep), 6.0); // both active
+        assert_eq!(p.host_factor(220.0, HostSeg::Exec), 3.0);
+        assert_eq!(p.stall_factor(10.0, 2), 4.0);
+        assert_eq!(p.stall_factor(10.0, 1), 1.0, "stall targets stream 2 only");
+        assert_eq!(p.stall_factor(60.0, 2), 1.0, "window over");
+        // Half-open: the onset is in, the end is out.
+        assert_eq!(p.stall_factor(0.0, 2), 4.0);
+        assert_eq!(p.stall_factor(50.0, 2), 1.0);
+    }
+
+    #[test]
+    fn launch_failures_and_kv_sequestration() {
+        let p = FaultPlan::parse("launchfail:0:100:3;kv:0:100:0.5;kv:50:100:0.75").unwrap();
+        assert_eq!(p.launch_failures(50.0), 3);
+        assert_eq!(p.launch_failures(200.0), 0);
+        assert_eq!(p.kv_sequestered(10.0, 64), 32);
+        assert_eq!(p.kv_sequestered(60.0, 64), 48, "max of overlapping fractions");
+        assert_eq!(p.kv_sequestered(10.0, 1), 0, "never sequesters the whole pool");
+        assert_eq!(p.kv_sequestered(500.0, 64), 0);
+    }
+
+    #[test]
+    fn kind_tags_roundtrip() {
+        for k in [
+            FaultKind::DeviceStall,
+            FaultKind::HostJitter,
+            FaultKind::LaunchFail,
+            FaultKind::KvPressure,
+        ] {
+            assert_eq!(FaultKind::parse(k.as_str()).unwrap(), k);
+        }
+        assert!(FaultKind::parse("gremlin").is_err());
+    }
+}

@@ -66,6 +66,7 @@
 
 pub mod config;
 pub mod device;
+pub mod faults;
 pub mod hardware;
 pub mod host;
 pub mod kernels;

@@ -18,7 +18,11 @@
 //!   emits the compact benchmark datapoint, `--metrics-out` streams the
 //!   run through the live telemetry plane (`obs`) and writes a
 //!   Prometheus text + JSON metrics snapshot, with `--window-us`
-//!   controlling the per-window HDBI series resolution.
+//!   controlling the per-window HDBI series resolution; `--faults`
+//!   injects a deterministic fault plan (device stalls, host jitter
+//!   storms, transient launch failures, KV pressure) recorded as
+//!   spec-v4 `fault` events, and `--ttft-deadline-us` /
+//!   `--tpot-deadline-us` arm deadline-aware load shedding.
 //! * `replay` — deterministic re-execution of a spec-v3 serving capture
 //!   (`loadgen --capture`): arrivals, RNG draws and scheduler decisions
 //!   are replayed from the recorded events, not re-decided; `--verify`
@@ -33,7 +37,9 @@
 //!   baseline.
 //! * `convert` — round-trip a trace between the canonical JSON dialect
 //!   and the compact binary dialect (`.tbt`); input format is detected
-//!   by magic, output follows the extension (or `--to`).
+//!   by magic, output follows the extension (or `--to`); `--salvage`
+//!   recovers the longest valid event prefix of a truncated binary
+//!   capture (crashed writer, lost trailer) instead of erroring.
 //! * `bench-trace` — encode/decode throughput and bytes-per-event for
 //!   both trace dialects on the bundled moe-decode capture (the
 //!   `BENCH_trace.json` datapoint).
@@ -130,6 +136,15 @@ USAGE:
                    [--devices N] [--streams N] [--report FILE]
                    [--capture FILE] [--chrome-out FILE] [--bench-out FILE]
                    [--metrics-out FILE] [--window-us US]
+                   [--faults SPEC[;SPEC...]] [--ttft-deadline-us US]
+                   [--tpot-deadline-us US]
+                   fault SPEC: stall:ONSET:DUR:MAG[:STREAM]
+                         | jitter:ONSET:DUR:MAG[:prep|exec|all]
+                         | launchfail:ONSET:DUR:ATTEMPTS
+                         | kv:ONSET:DUR:FRAC | storm:SEED:N
+                   (faults are injected deterministically and recorded as
+                    spec-v4 `fault` events, so faulted captures replay
+                    byte-identically; deadlines enable load shedding)
   taxbreak replay  <TRACE> [--counterfactual SPEC[,SPEC...]] [--verify]
                    [--json] [--report FILE]
                    (re-drive a `loadgen --capture` recording; --verify
@@ -142,10 +157,12 @@ USAGE:
                    SPEC: host-cpu:<profile|factor> | cuda-graphs[:LAUNCH_US]
                          | lib-elision[:fam+fam] | fusion:elem
                          | fusion:moe[:KEEP] | device:<h100|h200>
-                         | tensor-parallel:<N>
-  taxbreak convert <IN> <OUT> [--to json|binary]
+                         | tensor-parallel:<N> | fault-free[:<kind|all>]
+  taxbreak convert <IN> <OUT> [--to json|binary] [--salvage]
                    (trace dialect round-trip: input detected by magic,
-                    output follows the extension — .tbt = binary)
+                    output follows the extension — .tbt = binary;
+                    --salvage recovers the longest valid event prefix of
+                    a truncated binary capture instead of erroring)
   taxbreak bench-trace [--out FILE] [--runs N]
   taxbreak models | platforms | help
 
@@ -197,7 +214,7 @@ fn cmd_repro(mut args: Args) -> anyhow::Result<()> {
     let output = repro::run(&id, &opts)?;
     match out_path {
         Some(p) => {
-            std::fs::write(&p, &output)?;
+            write_file(&p, &output)?;
             println!("wrote {p}");
         }
         None => print!("{output}"),
@@ -454,12 +471,15 @@ fn cmd_whatif(mut args: Args) -> anyhow::Result<()> {
         }
     }
     if let Some(p) = report_path {
-        std::fs::write(&p, whatif::report::to_json(&result).pretty())?;
+        write_file(&p, whatif::report::to_json(&result).pretty())?;
         println!("wrote {p}");
     }
     if let Some(p) = chrome_path {
         let (_, cf_trace) = whatif::schedule::resimulate_with_trace(&final_schedule, true);
-        chrome::save_chrome(&cf_trace.expect("recording requested"), std::path::Path::new(&p))?;
+        let cf_trace = cf_trace.ok_or_else(|| {
+            anyhow::anyhow!("counterfactual resimulation returned no trace for --chrome")
+        })?;
+        chrome::save_chrome(&cf_trace, std::path::Path::new(&p))?;
         println!("wrote {p} (counterfactual timeline, chrome://tracing format)");
     }
     Ok(())
@@ -602,7 +622,7 @@ fn cmd_replay(mut args: Args) -> anyhow::Result<()> {
     }
 
     if let Some(p) = report_path {
-        std::fs::write(&p, kpis.pretty())?;
+        write_file(&p, kpis.pretty())?;
         println!("wrote {p}");
     }
     Ok(())
@@ -654,7 +674,7 @@ fn cmd_serve(mut args: Args) -> anyhow::Result<()> {
     };
     print!("{}", summary.render());
     if let Some(p) = report_path {
-        std::fs::write(&p, summary.to_json().pretty())?;
+        write_file(&p, summary.to_json().pretty())?;
         println!("wrote {p}");
     }
     Ok(())
@@ -692,9 +712,21 @@ fn cmd_loadgen(mut args: Args) -> anyhow::Result<()> {
             max_groups: args.opt_usize("max-groups", base.sched.max_groups)?,
             kv_pages: args.opt_usize("kv-pages", base.sched.kv_pages)?,
             kv_page_tokens: args.opt_usize("kv-page-tokens", base.sched.kv_page_tokens)?,
+            ttft_deadline_us: args.opt_f64("ttft-deadline-us", base.sched.ttft_deadline_us)?,
+            tpot_deadline_us: args.opt_f64("tpot-deadline-us", base.sched.tpot_deadline_us)?,
         },
         devices: args.opt_usize("devices", base.devices)?,
         streams: args.opt_usize("streams", base.streams)?,
+        // Parse eagerly so a malformed spec dies before any simulation
+        // runs (the plan itself is re-derived per replica inside
+        // `run_sim_loadgen`, which owns the authoritative parse).
+        faults: match args.opt("faults").map(|s| s.to_string()) {
+            Some(spec) => {
+                taxbreak::faults::FaultPlan::parse(&spec)?;
+                Some(spec)
+            }
+            None => None,
+        },
         capture: false,
         metrics: false,
         window_us: 0.0,
@@ -740,17 +772,17 @@ fn cmd_loadgen(mut args: Args) -> anyhow::Result<()> {
     };
     print!("{}", report.render());
     if let Some(p) = report_path {
-        std::fs::write(&p, report.to_json().pretty())?;
+        write_file(&p, report.to_json().pretty())?;
         println!("wrote {p}");
     }
     if let Some(p) = metrics_path {
         let reg = report
             .metrics_registry()
             .ok_or_else(|| anyhow::anyhow!("--metrics-out produced no telemetry"))?;
-        std::fs::write(&p, reg.prometheus_text())?;
+        write_file(&p, reg.prometheus_text())?;
         println!("wrote {p} (Prometheus text exposition)");
         let jp = json_twin(&p);
-        std::fs::write(&jp, reg.to_json().pretty())?;
+        write_file(&jp, reg.to_json().pretty())?;
         println!("wrote {jp} (metrics JSON snapshot)");
     }
     if let Some(p) = bench_path {
@@ -804,7 +836,7 @@ fn cmd_loadgen(mut args: Args) -> anyhow::Result<()> {
             "online_decompose_events_per_sec",
             if osecs > 0.0 { online_events as f64 / osecs } else { 0.0 },
         );
-        std::fs::write(&p, bench.pretty())?;
+        write_file(&p, bench.pretty())?;
         println!("wrote {p}");
     }
     for run in &report.runs {
@@ -831,6 +863,13 @@ fn cmd_loadgen(mut args: Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `std::fs::write` with the destination in the error: a bad `--report`
+/// / `--metrics-out` / `--bench-out` path must die with a one-line
+/// diagnostic that names the file, not a bare OS error.
+fn write_file(path: &str, data: impl AsRef<[u8]>) -> anyhow::Result<()> {
+    std::fs::write(path, data).map_err(|e| anyhow::anyhow!("writing {path}: {e}"))
+}
+
 /// Path for the JSON twin of a metrics exposition file
 /// ("m.prom" -> "m.json"); appends ".json" when the input already has
 /// that extension.
@@ -854,10 +893,37 @@ fn cmd_convert(mut args: Args) -> anyhow::Result<()> {
         Some(s) if s == "binary" || s == "tbt" => Some(Dialect::Binary),
         Some(other) => anyhow::bail!("--to must be json|binary, got '{other}'"),
     };
-    let usage = "usage: taxbreak convert <IN> <OUT> [--to json|binary]";
+    let salvage = args.flag("salvage");
+    let usage = "usage: taxbreak convert <IN> <OUT> [--to json|binary] [--salvage]";
     let input = args.shift().ok_or_else(|| anyhow::anyhow!("{usage}"))?;
     let output = args.shift().ok_or_else(|| anyhow::anyhow!("{usage}"))?;
     args.finish()?;
+    if salvage {
+        // Crash recovery: accept a truncated / trailer-less binary
+        // capture and keep the longest prefix of complete events.
+        let bytes = std::fs::read(&input)
+            .map_err(|e| anyhow::anyhow!("reading {input}: {e}"))?;
+        anyhow::ensure!(
+            binary::is_binary(&bytes),
+            "--salvage only applies to binary (.tbt) traces; '{input}' is not one \
+             (JSON captures are either whole or unparseable)"
+        );
+        let out = binary::salvage(&bytes)?;
+        let dialect = to.unwrap_or_else(|| Dialect::of_path(std::path::Path::new(&output)));
+        let data = match dialect {
+            Dialect::Binary => binary::encode(&out.trace),
+            Dialect::Json => out.trace.to_json().dump().into_bytes(),
+        };
+        std::fs::write(&output, &data)
+            .map_err(|e| anyhow::anyhow!("writing {output}: {e}"))?;
+        println!(
+            "salvaged {input} -> {output} ({}): recovered {} events; {}",
+            dialect.as_str(),
+            out.recovered(),
+            out.reason,
+        );
+        return Ok(());
+    }
     let stats =
         binary::convert(std::path::Path::new(&input), std::path::Path::new(&output), to)?;
     println!(
@@ -962,7 +1028,7 @@ fn cmd_bench_trace(mut args: Args) -> anyhow::Result<()> {
         .with("binary_vs_compact_json", bin.len() as f64 / json_compact.len() as f64);
     println!("{}", datapoint.pretty());
     if let Some(p) = out_path {
-        std::fs::write(&p, datapoint.pretty())?;
+        write_file(&p, datapoint.pretty())?;
         println!("wrote {p}");
     }
     Ok(())

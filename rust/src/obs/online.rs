@@ -624,7 +624,7 @@ impl OnlineReport {
         for (name, help, v) in [
             (
                 "taxbreak_recording_events_total",
-                "Spec-v3 recording events (correlation id 0).",
+                "Recording events (correlation id 0): spec-v3 nondeterminism plus spec-v4 faults.",
                 c.recording as f64,
             ),
             (

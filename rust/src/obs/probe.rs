@@ -31,6 +31,14 @@ pub struct ServingProbe {
     last_reserved_pages: u64,
     last_free_pages: u64,
     total_pages: u64,
+    /// Requests terminated by deadline-aware load shedding.
+    sheds: u64,
+    /// Transient kernel-launch re-issues paid by the backend.
+    retries: u64,
+    /// Requests terminated by launch-retry exhaustion.
+    failed: u64,
+    /// Completed requests that blew a configured TTFT/TPOT deadline.
+    deadline_misses: u64,
 }
 
 impl ServingProbe {
@@ -83,6 +91,21 @@ impl ServingProbe {
         self.tpot_us.observe(v);
     }
 
+    /// Fold one drive's resilience counters (DESIGN.md §16) into the
+    /// probe — called once per replica after its drive completes.
+    pub fn observe_outcomes(
+        &mut self,
+        sheds: u64,
+        retries: u64,
+        failed: u64,
+        deadline_misses: u64,
+    ) {
+        self.sheds += sheds;
+        self.retries += retries;
+        self.failed += failed;
+        self.deadline_misses += deadline_misses;
+    }
+
     pub fn steps(&self) -> u64 {
         self.steps
     }
@@ -107,6 +130,30 @@ impl ServingProbe {
             m,
             self.steps as f64,
         );
+        for (name, help, v) in [
+            (
+                "taxbreak_sheds_total",
+                "Requests terminated by deadline-aware load shedding.",
+                self.sheds,
+            ),
+            (
+                "taxbreak_launch_retries_total",
+                "Transient kernel-launch re-issues paid by the backend.",
+                self.retries,
+            ),
+            (
+                "taxbreak_failed_requests_total",
+                "Requests terminated by launch-retry exhaustion.",
+                self.failed,
+            ),
+            (
+                "taxbreak_deadline_misses_total",
+                "Completed requests that blew a configured TTFT/TPOT deadline.",
+                self.deadline_misses,
+            ),
+        ] {
+            reg.counter_add(name, help, m, v as f64);
+        }
         for (name, help, v) in [
             (
                 "taxbreak_kv_pages_used",
@@ -197,10 +244,15 @@ mod tests {
         p.on_step(0.0, 3, 1, 4, 2);
         p.observe_ttft_us(1234.5);
         p.observe_tpot_us(88.0);
+        p.observe_outcomes(2, 3, 1, 4);
         let mut reg = MetricsRegistry::new();
         p.register_into(&mut reg, "gpt2");
         let text = reg.prometheus_text();
         assert!(text.contains("taxbreak_probe_steps_total{model=\"gpt2\"} 1\n"));
+        assert!(text.contains("taxbreak_sheds_total{model=\"gpt2\"} 2\n"));
+        assert!(text.contains("taxbreak_launch_retries_total{model=\"gpt2\"} 3\n"));
+        assert!(text.contains("taxbreak_failed_requests_total{model=\"gpt2\"} 1\n"));
+        assert!(text.contains("taxbreak_deadline_misses_total{model=\"gpt2\"} 4\n"));
         assert!(text.contains("taxbreak_kv_pages_used{model=\"gpt2\"} 3\n"));
         assert!(text.contains("taxbreak_kv_pages_reserved{model=\"gpt2\"} 1\n"));
         assert!(text.contains("taxbreak_kv_pages_total{model=\"gpt2\"} 8\n"));

@@ -21,6 +21,9 @@
 
 use std::collections::VecDeque;
 
+use crate::faults::{
+    FaultPlan, HostSeg, BACKOFF_BASE_US, MAX_LAUNCH_ATTEMPTS, TRANSIENT_LAUNCH_MARKER,
+};
 use crate::hardware::Platform;
 use crate::kernels::cost;
 use crate::kernels::family::Family;
@@ -68,6 +71,13 @@ pub trait Backend: ModelBackend {
 
     /// Current run metadata, wall-clock stamped "now".
     fn trace_meta(&self) -> TraceMeta;
+
+    /// Failed launch attempts the engine has re-issued so far (fault
+    /// injection, DESIGN.md §16). Engines without fault support
+    /// report 0.
+    fn retries(&self) -> u64 {
+        0
+    }
 }
 
 /// Compiled-shape grid of the simulated engine (mirrors the AOT toy
@@ -136,6 +146,14 @@ pub struct SimEngine {
     /// never re-seeded — Box-Muller spare caching makes re-seeding
     /// unsound mid-stream).
     script: Option<VecDeque<f64>>,
+    /// Armed fault plan (`--faults`, DESIGN.md §16): pre-realized
+    /// windows injected deterministically into host-latency draws,
+    /// device submissions and the launch path. `None` leaves every hot
+    /// path structurally untouched, so fault-free runs stay
+    /// byte-identical to pre-fault builds.
+    faults: Option<FaultPlan>,
+    /// Failed launch attempts re-issued so far (monotone counter).
+    retries: u64,
     trace: Trace,
     corr: u64,
 }
@@ -172,6 +190,8 @@ impl SimEngine {
             tl,
             next_stream: 0,
             script: None,
+            faults: None,
+            retries: 0,
             trace,
             corr: 0,
         }
@@ -215,6 +235,94 @@ impl SimEngine {
     /// with the `rng_draw` values of a recording, in stream order.
     pub fn script_draws(&mut self, draws: Vec<f64>) {
         self.script = Some(draws.into());
+    }
+
+    /// Arm a fault plan. Every window is recorded immediately as a
+    /// first-class spec-v4 `fault` event (correlation id 0, ts = the
+    /// onset, the full window in args), so a capture carries its own
+    /// fault schedule up front: `serving::replay` re-arms the identical
+    /// plan from these events, and their position in the stream (ahead
+    /// of the first step's work) is deterministic. Like every other
+    /// recording event, fault events are decomposition-blind.
+    pub fn set_faults(&mut self, plan: FaultPlan) {
+        for w in &plan.windows {
+            self.trace.push(TraceEvent {
+                kind: EventKind::Fault,
+                name: format!("fault::{}", w.kind.as_str()),
+                ts_us: w.onset_us,
+                dur_us: w.dur_us,
+                correlation_id: 0,
+                track: Track::Host,
+                device: self.stamp(),
+                args: Some(ReplayArgs::Fault {
+                    kind: w.kind.as_str().to_string(),
+                    target: w.target.clone(),
+                    onset_us: w.onset_us,
+                    dur_us: w.dur_us,
+                    magnitude: w.magnitude,
+                }),
+                meta: None,
+            });
+        }
+        self.faults = Some(plan);
+    }
+
+    /// The armed fault plan, if any.
+    pub fn faults(&self) -> Option<&FaultPlan> {
+        self.faults.as_ref()
+    }
+
+    /// Host-jitter dilation for a draw issued at the current host
+    /// clock: the plan's active-factor product, exactly 1.0 with no
+    /// plan armed (and `x * 1.0` is an IEEE identity, so the fault-free
+    /// path stays bit-exact).
+    fn jitter(&self, seg: HostSeg) -> f64 {
+        match &self.faults {
+            Some(p) => p.host_factor(self.tl.host_now(0), seg),
+            None => 1.0,
+        }
+    }
+
+    /// Fold transient launch failures into one invocation's exec span.
+    /// When a `launch_fail` window covers the invocation's host clock,
+    /// the launch is re-issued once per failed attempt: each re-issue
+    /// pays the launch path again — a fresh exec-segment draw (recorded
+    /// as a normal `rng_draw`, so replay re-consumes it) plus the
+    /// deterministic exponential backoff `BACKOFF_BASE_US * 2^i`.
+    /// Everything folds into the single RuntimeApi span, so the chain
+    /// keeps the recorder shape and the decomposition still partitions
+    /// wall time. A window demanding [`MAX_LAUNCH_ATTEMPTS`] or more
+    /// failures exhausts the retry budget: the invocation aborts with a
+    /// typed error carrying [`TRANSIENT_LAUNCH_MARKER`], which the
+    /// scheduler degrades to a `Failed` outcome — never a panic.
+    fn exec_with_retries(
+        &mut self,
+        name: &str,
+        base_exec_us: f64,
+        sample: impl Fn(&mut Rng) -> f64,
+    ) -> anyhow::Result<f64> {
+        let failures = match &self.faults {
+            Some(p) => p.launch_failures(self.tl.host_now(0)),
+            None => 0,
+        };
+        if failures == 0 {
+            return Ok(base_exec_us);
+        }
+        let mut exec_us = base_exec_us;
+        // The base draw was attempt 1; every failure after it re-issues
+        // (up to the budget), paying the launch path + backoff again.
+        let reissues = failures.min(MAX_LAUNCH_ATTEMPTS - 1);
+        for i in 0..reissues {
+            let re = self.draw(format!("exec::{name}#retry{i}"), &sample);
+            exec_us += re + BACKOFF_BASE_US * f64::from(1u32 << i);
+            self.retries += 1;
+        }
+        anyhow::ensure!(
+            failures < MAX_LAUNCH_ATTEMPTS,
+            "{TRANSIENT_LAUNCH_MARKER}: '{name}' failed {MAX_LAUNCH_ATTEMPTS} \
+             launch attempts, giving up"
+        );
+        Ok(exec_us)
     }
 
     /// One timing draw: sample (or pop the replay script) and record it
@@ -294,6 +402,14 @@ impl SimEngine {
         self.next_stream = (self.next_stream + 1) % self.cfg.streams as u32;
         let (t0, _) = self.tl.host_advance(0, prep_us);
         let (_, exec_end) = self.tl.host_advance(0, exec_us);
+        // Device stall: kernel time is *computed* (not drawn), so the
+        // straggler factor re-applies identically on replay once the
+        // plan is re-armed — the submission clock is bit-identical.
+        // The work (flops/bytes) is unchanged; only time stretches.
+        let device_us = match &self.faults {
+            Some(p) => device_us * p.stall_factor(exec_end, stream),
+            None => device_us,
+        };
         let timing = self.tl.submit(
             StreamRef { device: 0, stream },
             exec_end,
@@ -439,12 +555,17 @@ impl ModelBackend for SimEngine {
 
         let st = self.platform.cpu.st_speed;
         let name = format!("prefill_b{bucket}_s{padded}");
+        // Jitter dilation folds into the sampled values themselves, so
+        // the recorded `rng_draw` carries the fault and scripted replay
+        // never re-applies it.
+        let jp = self.jitter(HostSeg::Prep);
         let prep = self.draw(format!("prep::{name}"), |rng| {
-            rng.lognormal_med(40.0, 0.20) / st
+            rng.lognormal_med(40.0, 0.20) / st * jp
         });
-        let exec = self.draw(format!("exec::{name}"), |rng| {
-            rng.lognormal_med(8.0, 0.15) / st
-        });
+        let je = self.jitter(HostSeg::Exec);
+        let exec_sample = move |rng: &mut Rng| rng.lognormal_med(8.0, 0.15) / st * je;
+        let exec = self.draw(format!("exec::{name}"), exec_sample);
+        let exec = self.exec_with_retries(&name, exec, exec_sample)?;
         let dev = self.device_us(bucket * padded);
         let active = self.model.params_active();
         self.record(
@@ -482,12 +603,14 @@ impl ModelBackend for SimEngine {
 
         let st = self.platform.cpu.st_speed;
         let name = format!("decode_b{}", cache.bucket);
+        let jp = self.jitter(HostSeg::Prep);
         let prep = self.draw(format!("prep::{name}"), |rng| {
-            rng.lognormal_med(25.0, 0.20) / st
+            rng.lognormal_med(25.0, 0.20) / st * jp
         });
-        let exec = self.draw(format!("exec::{name}"), |rng| {
-            rng.lognormal_med(8.0, 0.15) / st
-        });
+        let je = self.jitter(HostSeg::Exec);
+        let exec_sample = move |rng: &mut Rng| rng.lognormal_med(8.0, 0.15) / st * je;
+        let exec = self.draw(format!("exec::{name}"), exec_sample);
+        let exec = self.exec_with_retries(&name, exec, exec_sample)?;
         let dev = self.device_us(cache.bucket);
         let active = self.model.params_active();
         self.record(
@@ -516,13 +639,19 @@ impl Backend for SimEngine {
     }
 
     fn null_run(&mut self) -> anyhow::Result<(f64, f64)> {
+        // The floor probe is an instrumentation path, not serving work:
+        // host jitter dilates it (a jittery host has a jittery probe),
+        // but launch-failure injection targets only scheduled
+        // invocations, so the probe never aborts a run.
         let st = self.platform.cpu.st_speed;
+        let jp = self.jitter(HostSeg::Prep);
         let dispatch = self.draw("prep::null_kernel".to_string(), |rng| {
-            rng.lognormal_med(5.0, 0.15) / st
+            rng.lognormal_med(5.0, 0.15) / st * jp
         });
         let (floor, sigma) = (self.platform.gpu.t_sys_floor_us, self.platform.gpu.floor_sigma);
+        let je = self.jitter(HostSeg::Exec);
         let launch = self.draw("exec::null_kernel".to_string(), |rng| {
-            rng.lognormal_med(floor, sigma)
+            rng.lognormal_med(floor, sigma) * je
         });
         self.record("null_kernel", dispatch, launch, 1.0, 0.0, 32.0);
         Ok((dispatch, launch))
@@ -542,6 +671,10 @@ impl Backend for SimEngine {
         let mut meta = self.trace.meta.clone();
         meta.wall_us = self.tl.host_now(0);
         meta
+    }
+
+    fn retries(&self) -> u64 {
+        self.retries
     }
 }
 
@@ -732,6 +865,169 @@ mod tests {
         replayed.script_draws(draws);
         let rerecorded = drive(&mut replayed);
         assert_eq!(recorded.to_json().dump(), rerecorded.to_json().dump());
+    }
+
+    #[test]
+    fn armed_fault_plan_emits_spec_v4_fault_events_up_front() {
+        use crate::faults::FaultPlan;
+        let mut e = engine(5);
+        e.set_faults(FaultPlan::parse("jitter:0:100:2.0;stall:50:10:3.0:0").unwrap());
+        let (next, cache) = e.prefill_group(&[vec![1, 2, 3]]).unwrap();
+        let _ = e.decode_group(cache, 3, &next).unwrap();
+        let t = e.take_trace();
+        // The two fault events lead the stream (armed before any work).
+        assert_eq!(t.events[0].kind, EventKind::Fault);
+        assert_eq!(t.events[1].kind, EventKind::Fault);
+        assert_eq!(t.events[0].correlation_id, 0);
+        assert_eq!(t.events[0].name, "fault::host_jitter");
+        assert_eq!(t.events[1].ts_us, 50.0);
+        assert_eq!(t.events[1].dur_us, 10.0);
+        match &t.events[1].args {
+            Some(ReplayArgs::Fault {
+                kind,
+                target,
+                magnitude,
+                ..
+            }) => {
+                assert_eq!(kind, "device_stall");
+                assert_eq!(target, "stream:0");
+                assert_eq!(*magnitude, 3.0);
+            }
+            other => panic!("expected fault args, got {other:?}"),
+        }
+        // Fault events are decomposition-blind: the trace still
+        // validates as a Phase-1 input.
+        crate::taxbreak::phase1::validate_trace(&t).unwrap();
+    }
+
+    #[test]
+    fn host_jitter_dilates_draws_only_inside_the_window() {
+        use crate::faults::FaultPlan;
+        let drive = |plan: Option<&str>| {
+            let mut e = engine(5);
+            if let Some(spec) = plan {
+                e.set_faults(FaultPlan::parse(spec).unwrap());
+            }
+            let (next, cache) = e.prefill_group(&[vec![1, 2, 3]]).unwrap();
+            let _ = e.decode_group(cache, 3, &next).unwrap();
+            e.take_trace()
+        };
+        let base = drive(None);
+        // A window covering the whole run dilates every host draw 2x:
+        // the recorded rng_draw values carry the factor.
+        let jit = drive(Some("jitter:0:1000000:2.0"));
+        let vals = |t: &Trace| -> Vec<f64> {
+            t.events
+                .iter()
+                .filter_map(|ev| match &ev.args {
+                    Some(ReplayArgs::RngDraw { value, .. }) => Some(*value),
+                    _ => None,
+                })
+                .collect()
+        };
+        let (b, j) = (vals(&base), vals(&jit));
+        assert_eq!(b.len(), j.len());
+        for (b, j) in b.iter().zip(j.iter()) {
+            assert!((j / b - 2.0).abs() < 1e-12, "draw {j} is not 2x {b}");
+        }
+        // A window that never activates leaves the run byte-identical.
+        let cold = drive(Some("jitter:900000000:10:4.0"));
+        let mut cold_stripped = cold.clone();
+        cold_stripped.events.retain(|ev| ev.kind != EventKind::Fault);
+        assert_eq!(cold_stripped.events, base.events);
+        assert_eq!(cold_stripped.meta.wall_us, base.meta.wall_us);
+    }
+
+    #[test]
+    fn device_stalls_stretch_kernels_on_the_target_stream() {
+        use crate::faults::FaultPlan;
+        let kernel_durs = |spec: Option<&str>| -> Vec<f64> {
+            let mut e =
+                SimEngine::with_topology(models::gpt2(), Platform::h200(), 5, 2, 0);
+            if let Some(s) = spec {
+                e.set_faults(FaultPlan::parse(s).unwrap());
+            }
+            let (next, cache) = e.prefill_group(&[vec![1, 2, 3]]).unwrap();
+            let _ = e.decode_group(cache, 3, &next).unwrap();
+            e.take_trace().kernels().map(|k| k.dur_us).collect()
+        };
+        let base = kernel_durs(None);
+        // Stream 1 only: the decode kernel (second invocation, round-
+        // robin stream 1) stretches 4x; the prefill kernel does not.
+        let stalled = kernel_durs(Some("stall:0:1000000:4.0:1"));
+        assert_eq!(base.len(), 2);
+        assert!((stalled[0] - base[0]).abs() < 1e-12);
+        assert!((stalled[1] / base[1] - 4.0).abs() < 1e-9);
+        // stream:* hits both.
+        let all = kernel_durs(Some("stall:0:1000000:4.0"));
+        assert!((all[0] / base[0] - 4.0).abs() < 1e-9);
+        assert!((all[1] / base[1] - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn launch_failures_pay_the_launch_path_again_and_eventually_fail_typed() {
+        use crate::faults::{FaultPlan, MAX_LAUNCH_ATTEMPTS, TRANSIENT_LAUNCH_MARKER};
+        // 2 failures: the invocation succeeds, 2 extra exec draws are
+        // recorded, the exec span grows by draws + backoff.
+        let mut e = engine(5);
+        e.set_faults(FaultPlan::parse("launchfail:0:1000000:2").unwrap());
+        let (_, _) = e.prefill_group(&[vec![1, 2, 3]]).unwrap();
+        assert_eq!(Backend::retries(&e), 2);
+        let t = e.take_trace();
+        let retry_draws: Vec<&TraceEvent> = t
+            .events
+            .iter()
+            .filter(|ev| ev.kind == EventKind::RngDraw && ev.name.contains("#retry"))
+            .collect();
+        assert_eq!(retry_draws.len(), 2);
+        crate::taxbreak::phase1::validate_trace(&t).unwrap();
+
+        // MAX_LAUNCH_ATTEMPTS failures: typed, marker-carrying error.
+        let mut e = engine(5);
+        e.set_faults(
+            FaultPlan::parse(&format!("launchfail:0:1000000:{MAX_LAUNCH_ATTEMPTS}")).unwrap(),
+        );
+        let err = e.prefill_group(&[vec![1, 2, 3]]).unwrap_err();
+        assert!(
+            err.to_string().contains(TRANSIENT_LAUNCH_MARKER),
+            "error should carry the transient marker: {err}"
+        );
+        // The exhausted attempts were still recorded (replay must
+        // re-consume them), and the engine stays usable afterwards.
+        assert_eq!(Backend::retries(&e), (MAX_LAUNCH_ATTEMPTS - 1) as u64);
+        let n_draws = e.drain_events().len();
+        assert_eq!(n_draws as u32, 1 + 2 + MAX_LAUNCH_ATTEMPTS - 1); // fault ev + prep/exec + retries
+        let _ = e.prefill_group(&[vec![1, 2, 3]]).unwrap_err(); // still inside the window
+    }
+
+    #[test]
+    fn faulted_recordings_replay_bit_identically_when_the_plan_is_rearmed() {
+        use crate::faults::FaultPlan;
+        let spec = "jitter:0:100000:3.0:exec;stall:0:100000:2.0;launchfail:0:100000:1";
+        let drive = |e: &mut SimEngine| {
+            let (next, cache) = e.prefill_group(&[vec![1, 2, 3]]).unwrap();
+            let _ = e.decode_group(cache, 3, &next).unwrap();
+            e.take_trace()
+        };
+        let mut rec = engine(5);
+        rec.set_faults(FaultPlan::parse(spec).unwrap());
+        let recorded = drive(&mut rec);
+        let draws: Vec<f64> = recorded
+            .events
+            .iter()
+            .filter_map(|ev| match &ev.args {
+                Some(ReplayArgs::RngDraw { value, .. }) => Some(*value),
+                _ => None,
+            })
+            .collect();
+        // Replay under a different seed: scripted draws carry the
+        // jitter + retry samples; the re-armed plan re-applies the
+        // computed stall and the retry/backoff structure.
+        let mut rep = engine(99);
+        rep.set_faults(FaultPlan::parse(spec).unwrap());
+        rep.script_draws(draws);
+        let replayed = drive(&mut rep);
+        assert_eq!(recorded.to_json().dump(), replayed.to_json().dump());
     }
 
     #[test]

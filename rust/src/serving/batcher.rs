@@ -30,6 +30,7 @@
 
 use std::collections::{HashSet, VecDeque};
 
+use crate::faults::{FaultPlan, TRANSIENT_LAUNCH_MARKER};
 use crate::serving::kv::PagedKvManager;
 use crate::serving::request::{Request, RequestState};
 
@@ -44,6 +45,11 @@ pub struct StepDecision {
     /// Request ids requeued by KV backpressure preemption this
     /// iteration, sorted ascending.
     pub preempted: Vec<u64>,
+    /// Request ids terminated by deadline-aware load shedding this
+    /// iteration (spec v4), sorted ascending. Serialized only when
+    /// non-empty, so deadline-free recordings stay byte-identical to
+    /// spec v3.
+    pub shed: Vec<u64>,
 }
 
 /// Abstract model execution so the scheduler is testable without PJRT.
@@ -123,6 +129,15 @@ pub struct SchedulerConfig {
     pub max_groups: usize,
     pub kv_pages: usize,
     pub kv_page_tokens: usize,
+    /// TTFT deadline, us (0 = disabled). A waiting request whose
+    /// deadline has already passed is shed instead of admitted — it
+    /// could never be served in time, and admitting it would only
+    /// head-of-line block feasible work behind it.
+    pub ttft_deadline_us: f64,
+    /// Per-output-token deadline, us (0 = disabled). Used to pick KV
+    /// backpressure preemption victims: a group dragging past its
+    /// token budget yields before a healthy one.
+    pub tpot_deadline_us: f64,
 }
 
 impl Default for SchedulerConfig {
@@ -132,6 +147,8 @@ impl Default for SchedulerConfig {
             max_groups: 2,
             kv_pages: 64,
             kv_page_tokens: 16,
+            ttft_deadline_us: 0.0,
+            tpot_deadline_us: 0.0,
         }
     }
 }
@@ -160,8 +177,18 @@ pub struct Scheduler<B: ModelBackend> {
     /// Iterations executed (for stats).
     pub iterations: usize,
     /// Groups preempted under KV backpressure (for stats; always 0
-    /// under reservation-backed admission).
+    /// under reservation-backed admission with no fault plan armed).
     pub preemptions: usize,
+    /// Requests terminated by deadline-aware load shedding.
+    pub sheds: usize,
+    /// Requests terminated by launch-retry exhaustion
+    /// ([`RequestOutcome::Failed`](crate::serving::request::RequestOutcome::Failed)).
+    pub failures: usize,
+    /// Armed fault plan (DESIGN.md §16): only its KV-pressure windows
+    /// act at this layer, converting sequestered capacity into
+    /// admission backpressure. Device/host/launch faults act inside the
+    /// backend.
+    faults: Option<crate::faults::FaultPlan>,
     /// What the most recent [`step`](Self::step) decided — recorded by
     /// the capture path as a `sched_decision` event.
     last_decision: StepDecision,
@@ -186,6 +213,9 @@ impl<B: ModelBackend> Scheduler<B> {
             finished: Vec::new(),
             iterations: 0,
             preemptions: 0,
+            sheds: 0,
+            failures: 0,
+            faults: None,
             last_decision: StepDecision::default(),
             script: None,
             script_admitted: HashSet::new(),
@@ -198,11 +228,32 @@ impl<B: ModelBackend> Scheduler<B> {
     /// events (and sizes the KV pool so reservations cannot fail — the
     /// recording already proved the schedule feasible).
     pub fn script_decisions(&mut self, decisions: Vec<StepDecision>) {
+        // Every id the script ever schedules: admitted ids and shed ids
+        // both entered the wait queue in the recording, so neither may
+        // be door-rejected on replay.
         self.script_admitted = decisions
             .iter()
-            .flat_map(|d| d.admitted.iter().flatten().copied())
+            .flat_map(|d| {
+                d.admitted
+                    .iter()
+                    .flatten()
+                    .copied()
+                    .chain(d.shed.iter().copied())
+            })
             .collect();
         self.script = Some(decisions.into());
+    }
+
+    /// Arm a fault plan at the scheduler layer. Only KV-pressure
+    /// windows act here: while one is active *and the scheduler is
+    /// serving*, the sequestered fraction of the pool is invisible to
+    /// admission, converting capacity into queueing (sheds and
+    /// preemptions). An idle scheduler admits from the real pool — the
+    /// virtual clock only advances through backend work, so pressure
+    /// on an empty system could otherwise freeze time and deadlock the
+    /// run (the chaos suite pins this liveness rule).
+    pub fn set_faults(&mut self, plan: FaultPlan) {
+        self.faults = Some(plan);
     }
 
     /// What the most recent [`step`](Self::step) decided.
@@ -306,15 +357,18 @@ impl<B: ModelBackend> Scheduler<B> {
         };
         match scripted {
             Some(d) => {
+                self.shed_scripted(&d.shed, &d.admitted);
                 self.admit_scripted(&d.admitted)?;
-                self.advance_scripted(&d.preempted)?;
+                self.advance_scripted(&d.preempted, &d.shed)?;
             }
             None => {
+                self.shed_overdue_waiting();
                 self.admit()?;
                 self.advance()?;
             }
         }
         self.last_decision.preempted.sort_unstable();
+        self.last_decision.shed.sort_unstable();
         self.retire();
         Ok(())
     }
@@ -355,6 +409,68 @@ impl<B: ModelBackend> Scheduler<B> {
                 .iter()
                 .map(|g| g.pos + g.members.iter().map(|m| m.generated.len()).sum::<usize>())
                 .sum::<usize>()
+    }
+
+    /// Deadline-aware load shedding: a waiting request whose TTFT
+    /// deadline has already passed can never be served in time, so it
+    /// is shed (terminal, typed) before admission candidates are
+    /// selected — admitting it would only head-of-line block feasible
+    /// work behind it. No-op with deadlines disabled.
+    fn shed_overdue_waiting(&mut self) {
+        if self.cfg.ttft_deadline_us <= 0.0 || self.waiting.is_empty() {
+            return;
+        }
+        let now = self.backend.now_us();
+        let deadline = self.cfg.ttft_deadline_us;
+        let mut kept = VecDeque::with_capacity(self.waiting.len());
+        for r in self.waiting.drain(..) {
+            if now - r.arrival_us > deadline {
+                let mut st = RequestState::new(r);
+                st.shed = true;
+                st.finish_us = Some(now);
+                self.last_decision.shed.push(st.request.id);
+                self.sheds += 1;
+                self.finished.push(st);
+            } else {
+                kept.push_back(r);
+            }
+        }
+        self.waiting = kept;
+    }
+
+    /// Replayed shedding: terminate the recorded shed ids still in the
+    /// wait queue. Ids that are also admitted this step were
+    /// preempt-shed *after* admission — those stay queued here and are
+    /// handled by [`advance_scripted`](Self::advance_scripted).
+    fn shed_scripted(&mut self, shed: &[u64], admitted: &[Vec<u64>]) {
+        for &id in shed {
+            if admitted.iter().flatten().any(|&a| a == id) {
+                continue;
+            }
+            if let Some(pos) = self.waiting.iter().position(|r| r.id == id) {
+                let r = self.waiting.remove(pos).unwrap();
+                let mut st = RequestState::new(r);
+                st.shed = true;
+                st.finish_us = Some(self.backend.now_us());
+                self.last_decision.shed.push(id);
+                self.sheds += 1;
+                self.finished.push(st);
+            }
+        }
+    }
+
+    /// Pages admission may draw on right now: the free pool minus any
+    /// KV-pressure sequestration. Pressure only acts while groups are
+    /// being served (see [`set_faults`](Self::set_faults) for the
+    /// liveness rule) and never hides the whole pool.
+    fn admission_free_pages(&self) -> usize {
+        let free = self.kv.free_pages();
+        match &self.faults {
+            Some(p) if !self.groups.is_empty() => free.saturating_sub(
+                p.kv_sequestered(self.backend.now_us(), self.cfg.kv_pages),
+            ),
+            _ => free,
+        }
     }
 
     /// Admission: reserve-then-register with partial admission.  The
@@ -406,7 +522,7 @@ impl<B: ModelBackend> Scheduler<B> {
                     .take(take)
                     .map(|r| self.kv.pages_for((padded_len + r.max_new_tokens).min(max_seq)))
                     .sum();
-                if worst <= self.kv.free_pages() {
+                if worst <= self.admission_free_pages() {
                     break Some((take, padded_len));
                 }
                 take -= 1;
@@ -446,17 +562,23 @@ impl<B: ModelBackend> Scheduler<B> {
     /// Replayed advance: drop the recorded preemption victims first (a
     /// preempted group never decodes in the step that drops it — the
     /// live path pops victims before reaching them), then run the
-    /// normal front-to-back decode over the survivors.
-    fn advance_scripted(&mut self, preempted: &[u64]) -> anyhow::Result<()> {
-        if !preempted.is_empty() {
+    /// normal front-to-back decode over the survivors. Victim groups
+    /// are matched against both the requeued (`preempted`) and the
+    /// shed ids — a fully-shed victim has no requeued members — and the
+    /// recorded shed set decides each member's shed-vs-requeue fate
+    /// verbatim, so replay never re-runs the deadline heuristics.
+    fn advance_scripted(&mut self, preempted: &[u64], shed: &[u64]) -> anyhow::Result<()> {
+        if !preempted.is_empty() || !shed.is_empty() {
+            let shed_set: HashSet<u64> = shed.iter().copied().collect();
             let mut gi = 0;
             while gi < self.groups.len() {
-                let hit = self.groups[gi]
-                    .members
-                    .iter()
-                    .any(|m| !m.done() && preempted.contains(&m.request.id));
+                let hit = self.groups[gi].members.iter().any(|m| {
+                    !m.done()
+                        && (preempted.contains(&m.request.id)
+                            || shed_set.contains(&m.request.id))
+                });
                 if hit {
-                    self.preempt_group(gi);
+                    self.preempt_group(gi, Some(&shed_set));
                 } else {
                     gi += 1;
                 }
@@ -492,7 +614,26 @@ impl<B: ModelBackend> Scheduler<B> {
             self.kv.reserve(r.id, (padded_len + r.max_new_tokens).min(max_seq))?;
             self.kv.extend(r.id, padded_len)?;
         }
-        let (next, cache) = self.backend.prefill_group(&prompts)?;
+        let (next, cache) = match self.backend.prefill_group(&prompts) {
+            Ok(v) => v,
+            // Transient launch-retry exhaustion (DESIGN.md §16): the
+            // group degrades to typed Failed outcomes — pages return
+            // to the pool, the run continues. Any other backend error
+            // still aborts the run.
+            Err(e) if e.to_string().contains(TRANSIENT_LAUNCH_MARKER) => {
+                let now = self.backend.now_us();
+                for r in members {
+                    let _ = self.kv.release(r.id);
+                    let mut st = RequestState::new(r);
+                    st.failed = true;
+                    st.finish_us = Some(now);
+                    self.failures += 1;
+                    self.finished.push(st);
+                }
+                return Ok(());
+            }
+            Err(e) => return Err(e),
+        };
         let now = self.backend.now_us();
 
         let mut states: Vec<RequestState> = members.into_iter().map(RequestState::new).collect();
@@ -541,14 +682,36 @@ impl<B: ModelBackend> Scheduler<B> {
                     .sum()
             };
             if step_need > self.kv.free_pages() {
-                self.preempt_youngest();
+                self.preempt_backpressure();
                 continue; // re-evaluate gi against the shrunk group list
             }
             let (pos, tokens, cache) = {
                 let g = &mut self.groups[gi];
                 (g.pos, g.last_tokens.clone(), g.cache.take().expect("cache present"))
             };
-            let (next, cache) = self.backend.decode_group(cache, pos, &tokens)?;
+            let (next, cache) = match self.backend.decode_group(cache, pos, &tokens) {
+                Ok(v) => v,
+                // Launch-retry exhaustion mid-decode: the group's cache
+                // is gone, so the whole group degrades — unfinished
+                // members become typed Failed outcomes, members that
+                // already hit their budgets keep their results, every
+                // page returns to the pool, and the run continues.
+                Err(e) if e.to_string().contains(TRANSIENT_LAUNCH_MARKER) => {
+                    let g = self.groups.remove(gi);
+                    let now = self.backend.now_us();
+                    for mut m in g.members {
+                        let _ = self.kv.release(m.request.id);
+                        if !m.done() {
+                            m.failed = true;
+                            m.finish_us = Some(now);
+                            self.failures += 1;
+                        }
+                        self.finished.push(m);
+                    }
+                    continue; // gi now indexes the next group
+                }
+                Err(e) => return Err(e),
+            };
             let now = self.backend.now_us();
             let g = &mut self.groups[gi];
             g.cache = Some(cache);
@@ -573,26 +736,75 @@ impl<B: ModelBackend> Scheduler<B> {
         Ok(())
     }
 
-    /// KV backpressure: drop the youngest group, requeueing its
-    /// unfinished members at the head of the wait queue (their partial
-    /// progress is discarded; admission re-reserves for them).  Members
-    /// that already finished keep their results.
-    fn preempt_youngest(&mut self) {
-        if !self.groups.is_empty() {
-            self.preempt_group(self.groups.len() - 1);
+    /// KV backpressure: drop a victim group, requeueing (or shedding)
+    /// its unfinished members; their partial progress is discarded and
+    /// admission re-reserves for requeued ones.  Members that already
+    /// finished keep their results.
+    fn preempt_backpressure(&mut self) {
+        if let Some(idx) = self.preemption_victim() {
+            self.preempt_group(idx, None);
         }
     }
 
-    /// Drop group `idx`, requeueing its unfinished members and logging
-    /// them in [`Self::last_decision`] (so the recording can replay the
-    /// preemption verbatim).
-    fn preempt_group(&mut self, idx: usize) {
+    /// Deadline-aware victim choice: with a TPOT deadline armed, the
+    /// youngest group containing a member already dragging past its
+    /// per-token budget yields first (it contributes the least
+    /// deliverable work); otherwise — and always with deadlines off —
+    /// the youngest group, preserving the pre-deadline behavior
+    /// exactly.
+    fn preemption_victim(&self) -> Option<usize> {
+        if self.groups.is_empty() {
+            return None;
+        }
+        if self.cfg.tpot_deadline_us > 0.0 {
+            let now = self.backend.now_us();
+            for idx in (0..self.groups.len()).rev() {
+                let over = self.groups[idx].members.iter().any(|m| {
+                    !m.done()
+                        && m.first_token_us.is_some_and(|t| {
+                            (now - t) / m.generated.len().max(1) as f64
+                                > self.cfg.tpot_deadline_us
+                        })
+                });
+                if over {
+                    return Some(idx);
+                }
+            }
+        }
+        Some(self.groups.len() - 1)
+    }
+
+    /// Drop group `idx`, requeueing or shedding its unfinished members
+    /// and logging them in [`Self::last_decision`] (so the recording
+    /// can replay the preemption verbatim). Live runs shed a member
+    /// whose TTFT deadline has already passed — requeueing it could
+    /// only produce a late answer, since TTFT is re-measured from
+    /// arrival after readmission. Replays (`scripted_shed` present)
+    /// follow the recorded shed set instead of re-deciding.
+    fn preempt_group(&mut self, idx: usize, scripted_shed: Option<&HashSet<u64>>) {
         let g = self.groups.remove(idx);
         self.preemptions += 1;
+        let now = self.backend.now_us();
         for m in g.members.into_iter().rev() {
             let _ = self.kv.release(m.request.id);
             if m.done() {
                 self.finished.push(m);
+                continue;
+            }
+            let shed = match scripted_shed {
+                Some(set) => set.contains(&m.request.id),
+                None => {
+                    self.cfg.ttft_deadline_us > 0.0
+                        && now - m.request.arrival_us > self.cfg.ttft_deadline_us
+                }
+            };
+            if shed {
+                let mut st = m;
+                st.shed = true;
+                st.finish_us = Some(now);
+                self.last_decision.shed.push(st.request.id);
+                self.sheds += 1;
+                self.finished.push(st);
             } else {
                 self.last_decision.preempted.push(m.request.id);
                 self.waiting.push_front(m.request);
@@ -753,7 +965,7 @@ pub mod mock_backend {
 mod tests {
     use super::mock_backend::MockBackend;
     use super::*;
-    use crate::serving::request::synthetic_requests;
+    use crate::serving::request::{synthetic_requests, RequestOutcome};
 
     fn scheduler(cfg: SchedulerConfig) -> Scheduler<MockBackend> {
         Scheduler::new(MockBackend::new(), cfg)
@@ -807,6 +1019,7 @@ mod tests {
             max_groups: 4,
             kv_pages: 20,
             kv_page_tokens: 16,
+            ..SchedulerConfig::default()
         };
         let mut s = scheduler(cfg);
         for r in synthetic_requests(12, 251, 128, 3) {
@@ -843,6 +1056,7 @@ mod tests {
             max_groups: 1,
             kv_pages: 64,
             kv_page_tokens: 16,
+            ..SchedulerConfig::default()
         };
         let mut s = scheduler(cfg);
         for r in synthetic_requests(8, 251, 128, 7) {
@@ -878,6 +1092,7 @@ mod tests {
             max_groups: 2,
             kv_pages: 8,
             kv_page_tokens: 16,
+            ..SchedulerConfig::default()
         };
         let mut s = scheduler(cfg);
         s.submit(request(0, 16, 32));
@@ -898,6 +1113,7 @@ mod tests {
             max_groups: 2,
             kv_pages: 5,
             kv_page_tokens: 16,
+            ..SchedulerConfig::default()
         };
         let mut s = scheduler(cfg);
         for id in 0..4 {
@@ -921,6 +1137,7 @@ mod tests {
             max_groups: 1,
             kv_pages: 16,
             kv_page_tokens: 16,
+            ..SchedulerConfig::default()
         };
         let mut s = scheduler(cfg);
         s.submit(request(0, 16, 3));
@@ -998,6 +1215,7 @@ mod tests {
             max_groups: 2,
             kv_pages: 4,
             kv_page_tokens: 16,
+            ..SchedulerConfig::default()
         };
         let mut s = scheduler(cfg);
         s.submit(request(0, 40, 40));
@@ -1021,6 +1239,7 @@ mod tests {
             max_groups: 1,
             kv_pages: 8,
             kv_page_tokens: 16,
+            ..SchedulerConfig::default()
         };
         let mut s = scheduler(cfg);
         s.submit(request(0, 8, 200));
@@ -1044,6 +1263,7 @@ mod tests {
             max_groups: 2,
             kv_pages: 4,
             kv_page_tokens: 16,
+            ..SchedulerConfig::default()
         };
         let mut s = scheduler(cfg);
         // Hand-roll the seed's check-only admission for both requests
@@ -1087,6 +1307,7 @@ mod tests {
             max_groups: 1,
             kv_pages: 64,
             kv_page_tokens: 16,
+            ..SchedulerConfig::default()
         };
         let mut rec = scheduler(cfg);
         submit_all(&mut rec);
@@ -1113,6 +1334,7 @@ mod tests {
             max_groups: 1,
             kv_pages: 1 << 20,
             kv_page_tokens: 16,
+            ..SchedulerConfig::default()
         });
         rep.script_decisions(decisions.clone());
         submit_all(&mut rep);
@@ -1125,5 +1347,310 @@ mod tests {
         assert_eq!(rep.backend.prefills, rec_prefills);
         assert_eq!(rep.backend.decodes, rec_decodes);
         assert_eq!(outputs(rep), recorded);
+    }
+
+    #[test]
+    fn overdue_waiting_requests_are_shed_not_served_late() {
+        // max_groups = 1 forces the second batch to queue behind the
+        // first; by the time the slot frees (t > 1300us on the mock
+        // clock) the 1200us TTFT deadline has passed, so the stragglers
+        // are shed — terminal, typed, never admitted.
+        let cfg = SchedulerConfig {
+            max_batch: 4,
+            max_groups: 1,
+            ttft_deadline_us: 1200.0,
+            ..SchedulerConfig::default()
+        };
+        let mut s = scheduler(cfg);
+        for id in 0..8 {
+            s.submit(request(id, 16, 4));
+        }
+        s.run_to_completion().unwrap();
+        assert_eq!(s.finished().len(), 8);
+        assert_eq!(s.sheds, 4, "the queued half sheds at the deadline");
+        for f in s.finished() {
+            match f.outcome() {
+                RequestOutcome::Completed => {
+                    assert!(f.request.id < 4);
+                    assert_eq!(f.generated.len(), 4);
+                }
+                RequestOutcome::Shed => {
+                    assert!(f.request.id >= 4);
+                    assert!(f.generated.is_empty(), "shed before any work");
+                    assert!(f.finish_us.is_some(), "shed is terminal");
+                }
+                other => panic!("unexpected outcome {other:?} for {}", f.request.id),
+            }
+        }
+        assert_eq!(s.kv.used_pages(), 0);
+    }
+
+    #[test]
+    fn recorded_sheds_replay_verbatim_without_deadline_config() {
+        // Record a deadline-shedding run, then replay its decisions on
+        // a scheduler with deadlines *off*: the script alone must
+        // reproduce every shed (replay never re-runs the heuristics).
+        let submit_all = |s: &mut Scheduler<MockBackend>| {
+            for id in 0..8 {
+                s.submit(request(id, 16, 4));
+            }
+        };
+        let mut rec = scheduler(SchedulerConfig {
+            max_batch: 4,
+            max_groups: 1,
+            ttft_deadline_us: 1200.0,
+            ..SchedulerConfig::default()
+        });
+        submit_all(&mut rec);
+        let mut decisions = Vec::new();
+        while !rec.is_idle() {
+            rec.step().unwrap();
+            decisions.push(rec.last_decision().clone());
+        }
+        assert!(decisions.iter().any(|d| !d.shed.is_empty()), "recording must shed");
+
+        let mut rep = scheduler(SchedulerConfig::default());
+        rep.script_decisions(decisions.clone());
+        submit_all(&mut rep);
+        let mut replayed = Vec::new();
+        while !rep.is_idle() {
+            rep.step().unwrap();
+            replayed.push(rep.last_decision().clone());
+        }
+        assert_eq!(decisions, replayed, "shed decisions replay verbatim");
+        assert_eq!(rep.sheds, rec.sheds);
+        let outcomes = |s: &Scheduler<MockBackend>| {
+            let mut f: Vec<_> = s
+                .finished()
+                .iter()
+                .map(|st| (st.request.id, st.outcome(), st.generated.clone()))
+                .collect();
+            f.sort_by_key(|(id, ..)| *id);
+            f
+        };
+        assert_eq!(outcomes(&rep), outcomes(&rec));
+    }
+
+    /// Wraps the mock backend with transient launch failures: the next
+    /// `fail_prefills` prefill calls and the decode call numbered
+    /// `fail_decode_at` (0-based over the run) error with the typed
+    /// exhaustion marker, the way `SimEngine` does after
+    /// `MAX_LAUNCH_ATTEMPTS` failed launches.
+    struct FlakyBackend {
+        inner: MockBackend,
+        fail_prefills: usize,
+        fail_decode_at: Option<usize>,
+    }
+
+    impl ModelBackend for FlakyBackend {
+        type Cache = super::mock_backend::MockCache;
+
+        fn max_seq(&self) -> usize {
+            self.inner.max_seq()
+        }
+        fn decode_buckets(&self) -> Vec<usize> {
+            self.inner.decode_buckets()
+        }
+        fn pad_id(&self) -> i32 {
+            self.inner.pad_id()
+        }
+        fn prefill_group(
+            &mut self,
+            prompts: &[Vec<i32>],
+        ) -> anyhow::Result<(Vec<i32>, Self::Cache)> {
+            if self.fail_prefills > 0 {
+                self.fail_prefills -= 1;
+                self.inner.clock_us += 500.0;
+                anyhow::bail!("{TRANSIENT_LAUNCH_MARKER}: injected prefill failure");
+            }
+            self.inner.prefill_group(prompts)
+        }
+        fn decode_group(
+            &mut self,
+            cache: Self::Cache,
+            pos: usize,
+            tokens: &[i32],
+        ) -> anyhow::Result<(Vec<i32>, Self::Cache)> {
+            if self.fail_decode_at == Some(self.inner.decodes) {
+                self.inner.clock_us += 500.0;
+                anyhow::bail!("{TRANSIENT_LAUNCH_MARKER}: injected decode failure");
+            }
+            self.inner.decode_group(cache, pos, tokens)
+        }
+        fn now_us(&self) -> f64 {
+            self.inner.now_us()
+        }
+        fn wait_until_us(&mut self, t_us: f64) {
+            self.inner.wait_until_us(t_us);
+        }
+    }
+
+    #[test]
+    fn launch_exhaustion_at_prefill_fails_the_group_and_run_continues() {
+        let backend = FlakyBackend {
+            inner: MockBackend::new(),
+            fail_prefills: 1,
+            fail_decode_at: None,
+        };
+        let mut s = Scheduler::new(
+            backend,
+            SchedulerConfig {
+                max_batch: 2,
+                ..SchedulerConfig::default()
+            },
+        );
+        for id in 0..3 {
+            s.submit(request(id, 16, 4));
+        }
+        // Regression: this used to be `?`-propagated and aborted the
+        // whole run; now the first group degrades to typed failures and
+        // the third request is still served.
+        s.run_to_completion().unwrap();
+        assert_eq!(s.finished().len(), 3);
+        assert_eq!(s.failures, 2, "both members of the failed group count");
+        for f in s.finished() {
+            match f.outcome() {
+                RequestOutcome::Failed => {
+                    assert!(f.request.id < 2);
+                    assert!(f.generated.is_empty());
+                    assert!(f.finish_us.is_some());
+                }
+                RequestOutcome::Completed => {
+                    assert_eq!(f.request.id, 2);
+                    assert_eq!(f.generated.len(), 4);
+                }
+                other => panic!("unexpected outcome {other:?}"),
+            }
+        }
+        assert_eq!(s.kv.used_pages(), 0, "failed group's pages all returned");
+    }
+
+    #[test]
+    fn launch_exhaustion_mid_decode_fails_unfinished_members_only() {
+        // Budgets 3 and 6 share a group; the decode that would produce
+        // the fourth token errors with the exhaustion marker.  The
+        // short member already finished and keeps its tokens; the long
+        // member degrades to Failed.
+        let backend = FlakyBackend {
+            inner: MockBackend::new(),
+            fail_prefills: 0,
+            fail_decode_at: Some(2),
+        };
+        let mut s = Scheduler::new(backend, SchedulerConfig::default());
+        s.submit(request(0, 16, 3));
+        s.submit(request(1, 16, 6));
+        s.run_to_completion().unwrap();
+        assert_eq!(s.finished().len(), 2);
+        assert_eq!(s.failures, 1);
+        let short = s.finished().iter().find(|f| f.request.id == 0).unwrap();
+        assert_eq!(short.outcome(), RequestOutcome::Completed);
+        assert_eq!(short.generated.len(), 3, "finished member keeps its results");
+        let long = s.finished().iter().find(|f| f.request.id == 1).unwrap();
+        assert_eq!(long.outcome(), RequestOutcome::Failed);
+        assert!(long.finish_us.is_some());
+        assert_eq!(s.kv.used_pages(), 0);
+    }
+
+    #[test]
+    fn preemption_storm_terminates_with_exactly_one_outcome_each() {
+        // Check-only admission (reservations bypassed) over a 4-page
+        // pool drives repeated preempt-and-requeue; a TTFT deadline
+        // sheds victims whose window has passed.  The storm must
+        // terminate with every request in exactly one terminal state.
+        let cfg = SchedulerConfig {
+            max_batch: 1,
+            max_groups: 2,
+            kv_pages: 4,
+            kv_page_tokens: 16,
+            ttft_deadline_us: 3000.0,
+            ..SchedulerConfig::default()
+        };
+        let mut s = scheduler(cfg);
+        for g in 0..2u64 {
+            s.kv.register(g, 16).unwrap();
+            let prompts = vec![vec![7i32; 16]];
+            let (next, cache) = s.backend.prefill_group(&prompts).unwrap();
+            let mut st = RequestState::new(request(g, 16, 32));
+            st.generated.push(next[0]);
+            st.first_token_us = Some(s.backend.now_us());
+            s.groups.push(Group {
+                members: vec![st],
+                padded_len: 16,
+                cache: Some(cache),
+                pos: 16,
+                bucket: 1,
+                last_tokens: vec![next[0]],
+            });
+        }
+        s.submit(request(2, 16, 8));
+        s.submit(request(3, 16, 8));
+        s.run_to_completion().unwrap();
+        assert_eq!(s.finished().len(), 4, "the storm terminates");
+        assert!(s.preemptions >= 1, "backpressure must have preempted");
+        for f in s.finished() {
+            let flags =
+                usize::from(f.rejected) + usize::from(f.shed) + usize::from(f.failed);
+            assert!(flags <= 1, "outcome flags are exclusive for {}", f.request.id);
+            assert!(f.finish_us.is_some(), "every outcome is terminal");
+            if f.outcome() == RequestOutcome::Completed {
+                assert_eq!(f.generated.len(), f.request.max_new_tokens);
+            }
+        }
+        assert_eq!(s.kv.used_pages(), 0);
+    }
+
+    #[test]
+    fn kv_pressure_fault_throttles_admission_but_never_deadlocks() {
+        // A window sequestering 90% of the pool for (virtually) the
+        // whole run: admissions serialize — pressure is invisible to an
+        // idle scheduler (the liveness rule in `set_faults`), so each
+        // new group starts only after the previous one retires — and
+        // every request still completes.
+        let mut s = scheduler(SchedulerConfig::default());
+        s.set_faults(FaultPlan::parse("kv:0:1000000000:0.9").unwrap());
+        for r in synthetic_requests(8, 251, 128, 21) {
+            s.submit(r);
+        }
+        let mut guard = StallGuard::default();
+        while !s.is_idle() {
+            s.step().unwrap();
+            assert!(s.groups.len() <= 1, "pressure serializes admission");
+            guard.observe(s.progress_marker(), || "kv pressure stall".into()).unwrap();
+        }
+        assert_eq!(s.finished().len(), 8);
+        assert_eq!(s.sheds, 0, "no deadlines armed: pressure queues, never sheds");
+        assert!(
+            s.finished().iter().all(|f| f.outcome() == RequestOutcome::Completed),
+            "pressure delays work but loses none"
+        );
+        assert_eq!(s.kv.used_pages(), 0);
+    }
+
+    #[test]
+    fn zero_admission_capacity_sheds_overdue_instead_of_blocking() {
+        // Full sequestration (capped at pool-1 internally) makes
+        // admission capacity zero while a group is in flight; the
+        // queued request's TTFT deadline passes during the blackout and
+        // it must shed rather than wait for capacity that never comes.
+        let cfg = SchedulerConfig {
+            max_batch: 1,
+            max_groups: 2,
+            kv_pages: 8,
+            kv_page_tokens: 16,
+            ttft_deadline_us: 1500.0,
+            ..SchedulerConfig::default()
+        };
+        let mut s = scheduler(cfg);
+        s.set_faults(FaultPlan::parse("kv:0:1000000000:1.0").unwrap());
+        s.submit(request(0, 16, 8));
+        s.submit(request(1, 16, 8));
+        s.run_to_completion().unwrap();
+        assert_eq!(s.finished().len(), 2);
+        let first = s.finished().iter().find(|f| f.request.id == 0).unwrap();
+        assert_eq!(first.outcome(), RequestOutcome::Completed);
+        let second = s.finished().iter().find(|f| f.request.id == 1).unwrap();
+        assert_eq!(second.outcome(), RequestOutcome::Shed);
+        assert_eq!(s.sheds, 1);
+        assert_eq!(s.kv.used_pages(), 0);
     }
 }

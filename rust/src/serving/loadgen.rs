@@ -17,9 +17,11 @@
 
 use std::collections::VecDeque;
 
+use crate::faults::FaultPlan;
 use crate::obs::{OnlineDecomposer, ServingProbe, Telemetry};
 use crate::runtime::backend::Backend;
 use crate::serving::batcher::{ModelBackend, StallGuard, StepDecision};
+use crate::serving::request::RequestOutcome;
 use crate::serving::{event_split, hdbi_of, prompt_token_bound, Request, Scheduler, SchedulerConfig};
 use crate::trace::{
     EventKind, NullSink, ReplayArgs, Trace, TraceBufferSink, TraceEvent, TraceMeta, TraceSink,
@@ -121,6 +123,12 @@ pub struct LoadgenConfig {
     /// Virtual-time window for the per-window decomposition series, us;
     /// `<= 0` collapses to a single whole-run window.
     pub window_us: f64,
+    /// Fault-injection spec (`--faults`, [`FaultPlan::parse`] syntax):
+    /// the same seeded plan arms every replica's engine (device stalls,
+    /// host jitter, launch failures) and scheduler (KV pressure), and
+    /// each window lands in the capture as a spec-v4 `fault` event.
+    /// `None` injects nothing and is byte-identical to pre-fault runs.
+    pub faults: Option<String>,
 }
 
 impl Default for LoadgenConfig {
@@ -137,6 +145,7 @@ impl Default for LoadgenConfig {
             capture: false,
             metrics: false,
             window_us: 0.0,
+            faults: None,
         }
     }
 }
@@ -304,6 +313,21 @@ pub struct ModelRun {
     /// (`RequestState::rejected`, e.g. prompt longer than the context
     /// window).
     pub rejected: usize,
+    /// Requests terminated by deadline-aware load shedding
+    /// ([`RequestOutcome::Shed`]).
+    pub sheds: usize,
+    /// Requests terminated by launch-retry exhaustion
+    /// ([`RequestOutcome::Failed`]).
+    pub failed: usize,
+    /// Transient kernel-launch re-issues the backend paid (each one
+    /// re-ran the launch path with exponential backoff, DESIGN.md §16).
+    pub retries: u64,
+    /// Completed requests that blew a configured TTFT/TPOT deadline
+    /// (0 when deadlines are disabled).
+    pub deadline_misses: usize,
+    /// p99 lateness (us past the deadline) over the missing requests;
+    /// 0 when nothing missed.
+    pub deadline_miss_p99_us: f64,
     pub iterations: usize,
     pub preemptions: usize,
     /// Requests injected before their scheduled arrival because the
@@ -405,7 +429,7 @@ impl LoadgenReport {
             &[
                 "model", "kind", "done", "tok/s", "TTFT p50(ms)", "TTFT p95(ms)",
                 "TTFT p99(ms)", "TPOT p50(ms)", "TPOT p99(ms)", "HDBI", "HDBI pf",
-                "HDBI dec", "KV occ", "preempt",
+                "HDBI dec", "KV occ", "preempt", "shed", "fail",
             ],
         );
         for r in &self.runs {
@@ -424,6 +448,8 @@ impl LoadgenReport {
                 r.phase("decode").map(|p| ratio(p.hdbi())).unwrap_or_default(),
                 format!("{:.0}%/{:.0}%", 100.0 * r.kv_occupancy_mean, 100.0 * r.kv_occupancy_max),
                 r.preemptions.to_string(),
+                r.sheds.to_string(),
+                r.failed.to_string(),
             ]);
         }
         out.push_str(&t.render());
@@ -463,6 +489,17 @@ impl LoadgenReport {
                     "  WARNING: {} arrivals injected early (wall-clock backend \
                      cannot honor the configured rate)\n",
                     r.late_arrivals
+                ));
+            }
+            if r.sheds + r.failed + r.deadline_misses > 0 || r.retries > 0 {
+                out.push_str(&format!(
+                    "  resilience: {} shed | {} failed | {} launch retries | \
+                     {} deadline misses (p99 lateness {:.2} ms)\n",
+                    r.sheds,
+                    r.failed,
+                    r.retries,
+                    r.deadline_misses,
+                    r.deadline_miss_p99_us / 1000.0,
                 ));
             }
             for p in &r.phases {
@@ -566,6 +603,11 @@ impl LoadgenReport {
                 .with("moe", r.moe)
                 .with("completed", r.completed)
                 .with("rejected", r.rejected)
+                .with("sheds", r.sheds)
+                .with("failed", r.failed)
+                .with("retries", r.retries)
+                .with("deadline_misses", r.deadline_misses)
+                .with("deadline_miss_p99_us", r.deadline_miss_p99_us)
                 .with("iterations", r.iterations)
                 .with("preemptions", r.preemptions)
                 .with("late_arrivals", r.late_arrivals)
@@ -638,6 +680,19 @@ impl LoadgenReport {
         // first-sight strings that had to allocate. A healthy hot path
         // keeps hits >> misses — the bench trajectory tracks the ratio.
         let (intern_hits, intern_misses) = crate::util::intern::stats();
+        // Resilience KPIs (DESIGN.md §16): rates are per offered
+        // request across the model mix; the p99 lateness is the worst
+        // model's. All exactly zero on fault-free, deadline-free runs —
+        // `scripts/check_bench.py` pins that the fault path costs
+        // nothing when disabled.
+        let offered = (self.requests * self.runs.len()).max(1) as f64;
+        let sheds: usize = self.runs.iter().map(|r| r.sheds).sum();
+        let retries: u64 = self.runs.iter().map(|r| r.retries).sum();
+        let miss_p99 = self
+            .runs
+            .iter()
+            .map(|r| r.deadline_miss_p99_us)
+            .fold(0.0f64, f64::max);
         Json::obj()
             .with("bench", "loadgen")
             .with("platform", self.platform.as_str())
@@ -652,6 +707,9 @@ impl LoadgenReport {
             )
             .with("tpot_p50_us", crate::util::stats::mean(&tpot_p50s))
             .with("hdbi", hdbi_of(host, dev))
+            .with("shed_rate", sheds as f64 / offered)
+            .with("retry_rate", retries as f64 / offered)
+            .with("deadline_miss_p99_us", miss_p99)
             .with("per_model", per_model)
     }
 
@@ -678,6 +736,9 @@ pub(crate) struct DriveOutcome {
     pub(crate) run: ModelRun,
     pub(crate) ttfts: Vec<f64>,
     pub(crate) tpots: Vec<f64>,
+    /// Per-request lateness past the configured deadline (us), misses
+    /// only — replica merging re-derives the p99 over the union.
+    pub(crate) lateness: Vec<f64>,
 }
 
 /// The `arrival` recording event for one request: every nondeterministic
@@ -737,7 +798,7 @@ pub fn drive<B: Backend>(
         Some(b) => b,
         None => &mut null,
     };
-    let mut out = drive_collect(backend, sched, requests, 0, None, None, sink)?;
+    let mut out = drive_collect(backend, sched, requests, 0, None, None, None, sink)?;
     if let Some(mut b) = buffer {
         TraceSink::finish(&mut b, out.run.wall_us)?;
         out.run.trace = Some(b.into_trace());
@@ -758,6 +819,7 @@ pub(crate) fn drive_collect<B: Backend>(
     requests: Vec<Request>,
     device: u32,
     decisions: Option<Vec<StepDecision>>,
+    faults: Option<&FaultPlan>,
     mut probe: Option<&mut ServingProbe>,
     sink: &mut dyn TraceSink,
 ) -> anyhow::Result<DriveOutcome> {
@@ -769,6 +831,13 @@ pub(crate) fn drive_collect<B: Backend>(
     let mut s = Scheduler::new(backend, sched);
     if let Some(d) = decisions {
         s.script_decisions(d);
+    }
+    if let Some(p) = faults {
+        // Scheduler-side arming (KV pressure); the caller arms the
+        // engine-side faults before handing the backend over, so the
+        // spec-v4 fault events are already buffered for the first
+        // drain.
+        s.set_faults(p.clone());
     }
     let mut occ = Welford::default();
     let mut occ_max = 0.0f64;
@@ -824,6 +893,7 @@ pub(crate) fn drive_collect<B: Backend>(
                 step: s.iterations as u64,
                 admitted: d.admitted,
                 preempted: d.preempted,
+                shed: d.shed,
                 batch: s.active_members() as u64,
             }),
             meta: None,
@@ -861,6 +931,9 @@ pub(crate) fn drive_collect<B: Backend>(
 
     let iterations = s.iterations;
     let preemptions = s.preemptions;
+    let sheds = s.sheds;
+    let failed = s.failures;
+    let retries = s.backend.retries();
     // Scalar summaries come off the borrowed slice — no need to clone
     // every prompt/token buffer.
     let finished = s.finished();
@@ -868,7 +941,36 @@ pub(crate) fn drive_collect<B: Backend>(
     let tpots: Vec<f64> = finished.iter().filter_map(|f| f.tpot_us()).collect();
     let tokens: usize = finished.iter().map(|f| f.generated.len()).sum();
     let rejected = finished.iter().filter(|f| f.rejected).count();
-    let completed = finished.len() - rejected;
+    let completed = finished
+        .iter()
+        .filter(|f| f.outcome() == RequestOutcome::Completed)
+        .count();
+    // Deadline audit over the *served* requests: lateness is how far a
+    // completed request's TTFT/TPOT landed past its configured budget
+    // (shed and failed requests are counted by their own counters, not
+    // here).
+    let mut lateness: Vec<f64> = Vec::new();
+    if sched.ttft_deadline_us > 0.0 || sched.tpot_deadline_us > 0.0 {
+        for f in finished {
+            if f.outcome() != RequestOutcome::Completed {
+                continue;
+            }
+            let mut worst = 0.0f64;
+            if sched.ttft_deadline_us > 0.0 {
+                if let Some(t) = f.ttft_us() {
+                    worst = worst.max(t - sched.ttft_deadline_us);
+                }
+            }
+            if sched.tpot_deadline_us > 0.0 {
+                if let Some(t) = f.tpot_us() {
+                    worst = worst.max(t - sched.tpot_deadline_us);
+                }
+            }
+            if worst > 0.0 {
+                lateness.push(worst);
+            }
+        }
+    }
     let meta = s.backend.trace_meta();
     let wall_us = meta.wall_us;
 
@@ -878,6 +980,11 @@ pub(crate) fn drive_collect<B: Backend>(
         moe: false,
         completed,
         rejected,
+        sheds,
+        failed,
+        retries,
+        deadline_misses: lateness.len(),
+        deadline_miss_p99_us: Summary::of(&lateness).p99,
         iterations,
         preemptions,
         late_arrivals,
@@ -901,7 +1008,7 @@ pub(crate) fn drive_collect<B: Backend>(
         telemetry: None,
         peak_buffered_events,
     };
-    Ok(DriveOutcome { run, ttfts, tpots })
+    Ok(DriveOutcome { run, ttfts, tpots, lateness })
 }
 
 /// Merge the per-replica outcomes of one model into a single
@@ -918,10 +1025,15 @@ pub(crate) fn merge_replicas(mut outcomes: Vec<DriveOutcome>) -> ModelRun {
     }
     let mut ttfts = Vec::new();
     let mut tpots = Vec::new();
+    let mut lateness = Vec::new();
     let mut per_device = Vec::with_capacity(outcomes.len());
     let mut base = outcomes[0].run.clone();
     base.completed = 0;
     base.rejected = 0;
+    base.sheds = 0;
+    base.failed = 0;
+    base.retries = 0;
+    base.deadline_misses = 0;
     base.iterations = 0;
     base.preemptions = 0;
     base.late_arrivals = 0;
@@ -939,6 +1051,10 @@ pub(crate) fn merge_replicas(mut outcomes: Vec<DriveOutcome>) -> ModelRun {
     for (r, mut o) in outcomes.into_iter().enumerate() {
         base.completed += o.run.completed;
         base.rejected += o.run.rejected;
+        base.sheds += o.run.sheds;
+        base.failed += o.run.failed;
+        base.retries += o.run.retries;
+        base.deadline_misses += o.run.deadline_misses;
         base.iterations += o.run.iterations;
         base.preemptions += o.run.preemptions;
         base.late_arrivals += o.run.late_arrivals;
@@ -949,6 +1065,7 @@ pub(crate) fn merge_replicas(mut outcomes: Vec<DriveOutcome>) -> ModelRun {
         base.kv_occupancy_max = base.kv_occupancy_max.max(o.run.kv_occupancy_max);
         ttfts.append(&mut o.ttfts);
         tpots.append(&mut o.tpots);
+        lateness.append(&mut o.lateness);
         for p in &o.run.phases {
             if let Some(m) = base.phases.iter_mut().find(|m| m.phase == p.phase) {
                 m.host_us += p.host_us;
@@ -962,6 +1079,7 @@ pub(crate) fn merge_replicas(mut outcomes: Vec<DriveOutcome>) -> ModelRun {
     }
     base.ttft_us = Summary::of(&ttfts);
     base.tpot_us = Summary::of(&tpots);
+    base.deadline_miss_p99_us = Summary::of(&lateness).p99;
     base.per_device = per_device;
     base
 }
@@ -1108,6 +1226,9 @@ fn run_sim_loadgen_inner(
         cfg.sched.kv_pages >= cfg.devices,
         "--kv-pages must cover at least one page per device"
     );
+    // Parse (and thereby validate) the fault spec once, before any
+    // engine spins up: a bad `--faults` must fail the run up front.
+    let fault_plan = cfg.faults.as_deref().map(FaultPlan::parse).transpose()?;
     let platform = crate::hardware::Platform::by_name(platform_name)?;
     let replica_sched = SchedulerConfig {
         kv_pages: (cfg.sched.kv_pages / cfg.devices).max(1),
@@ -1152,13 +1273,18 @@ fn run_sim_loadgen_inner(
                 .filter(|(i, _)| i % cfg.devices == r)
                 .map(|(_, req)| req.clone())
                 .collect();
-            let engine = crate::runtime::SimEngine::with_topology(
+            let mut engine = crate::runtime::SimEngine::with_topology(
                 model.clone(),
                 platform.clone(),
                 cfg.seed.wrapping_add((r as u64).wrapping_mul(0x9E3779B97F4A7C15)),
                 cfg.streams,
                 r as u32,
             );
+            if let Some(p) = &fault_plan {
+                // Engine-side arming emits the replica's spec-v4 fault
+                // events up front, so they lead the first drain.
+                engine.set_faults(p.clone());
+            }
             // Every capture destination sits behind the same tee +
             // correlation offset: replicas land in disjoint corr-id
             // ranges, and buffered vs streamed captures see the exact
@@ -1181,6 +1307,7 @@ fn run_sim_loadgen_inner(
                 sub,
                 r as u32,
                 None,
+                fault_plan.as_ref(),
                 kv_probe.as_mut(),
                 &mut off,
             )?;
@@ -1191,6 +1318,12 @@ fn run_sim_loadgen_inner(
                 for &v in &out.tpots {
                     p.observe_tpot_us(v);
                 }
+                p.observe_outcomes(
+                    out.run.sheds as u64,
+                    out.run.retries,
+                    out.run.failed as u64,
+                    out.run.deadline_misses as u64,
+                );
             }
             outcomes.push(out);
         }

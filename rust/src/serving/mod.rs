@@ -22,7 +22,7 @@ pub use loadgen::{
     run_sim_loadgen, run_sim_loadgen_streaming, LenDist, LoadgenConfig, LoadgenReport, SinkFactory,
 };
 pub use replay::{replay, ReplayOutcome};
-pub use request::{synthetic_requests, Request, RequestState};
+pub use request::{synthetic_requests, Request, RequestOutcome, RequestState};
 
 use crate::runtime::backend::Backend;
 use crate::trace::{EventKind, Trace, TraceEvent};
@@ -295,6 +295,7 @@ pub fn serve_with<B: Backend>(
         max_groups: 2,
         kv_pages: 64,
         kv_page_tokens: 16,
+        ..SchedulerConfig::default()
     };
     let mut sched = Scheduler::new(backend, cfg);
     for r in synthetic_requests(n_requests, vocab, max_seq, seed) {

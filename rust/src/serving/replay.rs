@@ -28,6 +28,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::faults::{FaultKind, FaultPlan, FaultWindow};
 use crate::serving::batcher::StepDecision;
 use crate::serving::loadgen::{
     drive_collect, merge_replicas, ModelRun, OffsetSink,
@@ -53,6 +54,12 @@ struct ReplicaScript {
     requests: Vec<Request>,
     draws: Vec<f64>,
     decisions: Vec<StepDecision>,
+    /// Fault windows recorded as spec-v4 `fault` events: re-armed on
+    /// the replayed engine so device stalls re-stretch the *computed*
+    /// kernel times exactly as recorded (host jitter and launch-retry
+    /// draws replay through the rng script; KV pressure only ever
+    /// shaped the recorded decisions, which replay verbatim).
+    fault_windows: Vec<FaultWindow>,
     /// Streams the replica's engine rotated over, inferred from the
     /// highest device-track stream id. Stream labels are assigned
     /// round-robin by invocation index, so `max + 1` reproduces the
@@ -83,6 +90,7 @@ fn extract_scripts(recording: &Trace) -> anyhow::Result<Vec<ReplicaScript>> {
             requests: Vec::new(),
             draws: Vec::new(),
             decisions: Vec::new(),
+            fault_windows: Vec::new(),
             streams: 1,
         };
         for e in events {
@@ -109,11 +117,24 @@ fn extract_scripts(recording: &Trace) -> anyhow::Result<Vec<ReplicaScript>> {
                 }
                 (
                     EventKind::SchedDecision,
-                    Some(ReplayArgs::SchedDecision { admitted, preempted, .. }),
+                    Some(ReplayArgs::SchedDecision { admitted, preempted, shed, .. }),
                 ) => {
                     s.decisions.push(StepDecision {
                         admitted: admitted.clone(),
                         preempted: preempted.clone(),
+                        shed: shed.clone(),
+                    });
+                }
+                (
+                    EventKind::Fault,
+                    Some(ReplayArgs::Fault { kind, target, onset_us, dur_us, magnitude }),
+                ) => {
+                    s.fault_windows.push(FaultWindow {
+                        kind: FaultKind::parse(kind)?,
+                        target: target.clone(),
+                        onset_us: *onset_us,
+                        dur_us: *dur_us,
+                        magnitude: *magnitude,
                     });
                 }
                 _ => {}
@@ -162,6 +183,15 @@ pub fn replay(recording: &Trace) -> anyhow::Result<ReplayOutcome> {
             script.device,
         );
         engine.script_draws(script.draws);
+        if !script.fault_windows.is_empty() {
+            // Re-arming re-emits the replica's fault events at the head
+            // of its stream — exactly where the recording placed them —
+            // and re-applies the device-stall factors to the computed
+            // kernel times. The *scheduler* stays unarmed: KV pressure
+            // already shaped the recorded decisions, which replay
+            // verbatim against the unbounded pool.
+            engine.set_faults(FaultPlan::from_windows(script.fault_windows));
+        }
         let sched = SchedulerConfig {
             kv_pages: REPLAY_KV_PAGES,
             ..SchedulerConfig::default()
@@ -173,6 +203,7 @@ pub fn replay(recording: &Trace) -> anyhow::Result<ReplayOutcome> {
             script.requests,
             script.device,
             Some(script.decisions),
+            None,
             None,
             &mut off,
         )?);

@@ -12,6 +12,37 @@ pub struct Request {
     pub arrival_us: f64,
 }
 
+/// Terminal outcome of a request — every submitted request ends in
+/// exactly one of these (the chaos property suite pins this).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestOutcome {
+    /// Generated its full decode budget (or hit the context cutoff).
+    Completed,
+    /// Unservable at the door (prompt exceeds the context window, or
+    /// worst-case KV demand exceeds the whole pool).
+    Rejected,
+    /// Dropped by deadline-aware load shedding: its TTFT deadline
+    /// passed while it was waiting (or while requeued by preemption),
+    /// so serving it could only head-of-line block feasible work.
+    Shed,
+    /// The backend exhausted the transient launch-retry budget while
+    /// running its group (DESIGN.md §16) — a typed failure, never a
+    /// panic.
+    Failed,
+}
+
+impl RequestOutcome {
+    /// Stable label for reports and metrics.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RequestOutcome::Completed => "completed",
+            RequestOutcome::Rejected => "rejected",
+            RequestOutcome::Shed => "shed",
+            RequestOutcome::Failed => "failed",
+        }
+    }
+}
+
 /// Lifecycle state tracked by the scheduler.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RequestState {
@@ -24,6 +55,10 @@ pub struct RequestState {
     /// The request was unservable (e.g. its prompt exceeds the
     /// backend's context window) and finished without running.
     pub rejected: bool,
+    /// Dropped by deadline-aware load shedding ([`RequestOutcome::Shed`]).
+    pub shed: bool,
+    /// Terminated by launch-retry exhaustion ([`RequestOutcome::Failed`]).
+    pub failed: bool,
 }
 
 impl RequestState {
@@ -34,6 +69,23 @@ impl RequestState {
             first_token_us: None,
             finish_us: None,
             rejected: false,
+            shed: false,
+            failed: false,
+        }
+    }
+
+    /// The typed terminal outcome. The flags are mutually exclusive by
+    /// construction (the scheduler sets at most one); precedence here
+    /// only guards against hand-rolled states.
+    pub fn outcome(&self) -> RequestOutcome {
+        if self.rejected {
+            RequestOutcome::Rejected
+        } else if self.failed {
+            RequestOutcome::Failed
+        } else if self.shed {
+            RequestOutcome::Shed
+        } else {
+            RequestOutcome::Completed
         }
     }
 
@@ -133,6 +185,34 @@ mod tests {
         assert!(s.done());
         assert_eq!(s.ttft_us(), Some(300.0));
         assert_eq!(s.tpot_us(), Some(300.0));
+    }
+
+    #[test]
+    fn outcomes_are_typed_and_exclusive() {
+        let r = || Request {
+            id: 1,
+            prompt: vec![1],
+            max_new_tokens: 1,
+            arrival_us: 0.0,
+        };
+        assert_eq!(RequestState::new(r()).outcome(), RequestOutcome::Completed);
+        let mut s = RequestState::new(r());
+        s.rejected = true;
+        assert_eq!(s.outcome(), RequestOutcome::Rejected);
+        let mut s = RequestState::new(r());
+        s.shed = true;
+        assert_eq!(s.outcome(), RequestOutcome::Shed);
+        let mut s = RequestState::new(r());
+        s.failed = true;
+        assert_eq!(s.outcome(), RequestOutcome::Failed);
+        for o in [
+            RequestOutcome::Completed,
+            RequestOutcome::Rejected,
+            RequestOutcome::Shed,
+            RequestOutcome::Failed,
+        ] {
+            assert!(!o.as_str().is_empty());
+        }
     }
 
     #[test]

@@ -61,6 +61,11 @@ const PRESENT_META: u8 = 0b010;
 /// Spec-v3 replay payload present (`args`, spec §10.4). Encoded
 /// between the device field and the kernel meta.
 const PRESENT_ARGS: u8 = 0b100;
+/// Spec-v4: the `sched_decision` payload carries a non-empty `shed`
+/// list (between `preempted` and `batch`). Set only when requests were
+/// actually shed, so fault-free captures stay byte-identical to the
+/// spec-v3 encoding.
+const PRESENT_SHED: u8 = 0b1000;
 
 /// Upper bound on any single string length — a corrupt length prefix
 /// must not trigger a huge allocation before the read fails.
@@ -141,6 +146,7 @@ pub fn kind_code(kind: EventKind) -> u8 {
         EventKind::RngDraw => 6,
         EventKind::SchedDecision => 7,
         EventKind::ClockJump => 8,
+        EventKind::Fault => 9,
     }
 }
 
@@ -155,6 +161,7 @@ pub fn kind_from_code(code: u8) -> Result<EventKind> {
         6 => EventKind::RngDraw,
         7 => EventKind::SchedDecision,
         8 => EventKind::ClockJump,
+        9 => EventKind::Fault,
         other => {
             return Err(BinaryTraceError::Corrupt(format!(
                 "unknown event kind code {other}"
@@ -219,6 +226,7 @@ fn encode_args(buf: &mut Vec<u8>, args: &ReplayArgs) {
             step,
             admitted,
             preempted,
+            shed,
             batch,
         } => {
             put_varint(buf, *step);
@@ -233,7 +241,29 @@ fn encode_args(buf: &mut Vec<u8>, args: &ReplayArgs) {
             for &id in preempted {
                 put_varint(buf, id);
             }
+            // Spec v4: the shed list is written only when non-empty,
+            // signaled by the PRESENT_SHED bit (decoders of spec-v3
+            // records never see it).
+            if !shed.is_empty() {
+                put_varint(buf, shed.len() as u64);
+                for &id in shed {
+                    put_varint(buf, id);
+                }
+            }
             put_varint(buf, *batch);
+        }
+        ReplayArgs::Fault {
+            kind,
+            target,
+            onset_us,
+            dur_us,
+            magnitude,
+        } => {
+            put_str(buf, kind);
+            put_str(buf, target);
+            put_f64(buf, *onset_us);
+            put_f64(buf, *dur_us);
+            put_f64(buf, *magnitude);
         }
     }
 }
@@ -250,6 +280,9 @@ fn encode_event(buf: &mut Vec<u8>, ev: &TraceEvent) {
     }
     if ev.args.is_some() {
         presence |= PRESENT_ARGS;
+    }
+    if matches!(&ev.args, Some(ReplayArgs::SchedDecision { shed, .. }) if !shed.is_empty()) {
+        presence |= PRESENT_SHED;
     }
     buf.push(presence);
     put_str(buf, &ev.name);
@@ -378,7 +411,13 @@ fn get_len<R: Read>(r: &mut R, what: &'static str) -> Result<usize> {
     Ok(len as usize)
 }
 
-fn decode_args<R: Read>(r: &mut R, kind: EventKind) -> Result<ReplayArgs> {
+fn decode_args<R: Read>(r: &mut R, kind: EventKind, shed_present: bool) -> Result<ReplayArgs> {
+    if shed_present && kind != EventKind::SchedDecision {
+        return Err(BinaryTraceError::Corrupt(format!(
+            "PRESENT_SHED bit on a '{}' event (only sched_decision sheds)",
+            kind.as_str()
+        )));
+    }
     Ok(match kind {
         EventKind::Arrival => ReplayArgs::Arrival {
             req: get_varint(r, "arrival req")?,
@@ -407,13 +446,36 @@ fn decode_args<R: Read>(r: &mut R, kind: EventKind) -> Result<ReplayArgs> {
             for _ in 0..n_pre {
                 preempted.push(get_varint(r, "sched_decision preempted id")?);
             }
+            let shed = if shed_present {
+                let n_shed = get_len(r, "sched_decision shed count")?;
+                if n_shed == 0 {
+                    return Err(BinaryTraceError::Corrupt(
+                        "PRESENT_SHED bit with an empty shed list".to_string(),
+                    ));
+                }
+                let mut shed = Vec::with_capacity(n_shed.min(1024));
+                for _ in 0..n_shed {
+                    shed.push(get_varint(r, "sched_decision shed id")?);
+                }
+                shed
+            } else {
+                Vec::new()
+            };
             ReplayArgs::SchedDecision {
                 step,
                 admitted,
                 preempted,
+                shed,
                 batch: get_varint(r, "sched_decision batch")?,
             }
         }
+        EventKind::Fault => ReplayArgs::Fault {
+            kind: get_str(r, "fault kind")?,
+            target: get_str(r, "fault target")?,
+            onset_us: get_f64(r, "fault onset_us")?,
+            dur_us: get_f64(r, "fault dur_us")?,
+            magnitude: get_f64(r, "fault magnitude")?,
+        },
         other => {
             return Err(BinaryTraceError::Corrupt(format!(
                 "event kind '{}' cannot carry an args payload",
@@ -426,10 +488,15 @@ fn decode_args<R: Read>(r: &mut R, kind: EventKind) -> Result<ReplayArgs> {
 fn decode_event<R: Read>(r: &mut R) -> Result<TraceEvent> {
     let kind = kind_from_code(get_u8(r, "event kind")?)?;
     let presence = get_u8(r, "event presence flags")?;
-    if presence & !(PRESENT_DEVICE | PRESENT_META | PRESENT_ARGS) != 0 {
+    if presence & !(PRESENT_DEVICE | PRESENT_META | PRESENT_ARGS | PRESENT_SHED) != 0 {
         return Err(BinaryTraceError::Corrupt(format!(
             "unknown presence bits {presence:#04x}"
         )));
+    }
+    if presence & PRESENT_SHED != 0 && presence & PRESENT_ARGS == 0 {
+        return Err(BinaryTraceError::Corrupt(
+            "PRESENT_SHED bit without an args payload".to_string(),
+        ));
     }
     let name = get_str(r, "event name")?;
     let ts_us = get_f64(r, "event ts")?;
@@ -445,7 +512,7 @@ fn decode_event<R: Read>(r: &mut R) -> Result<TraceEvent> {
         None
     };
     let args = if presence & PRESENT_ARGS != 0 {
-        Some(decode_args(r, kind)?)
+        Some(decode_args(r, kind, presence & PRESENT_SHED != 0)?)
     } else if kind.has_args() {
         return Err(BinaryTraceError::Corrupt(format!(
             "'{}' event lacks its args payload",
@@ -710,6 +777,73 @@ impl<R: Read> BinaryTraceReader<R> {
             events,
         })
     }
+
+    /// Crash salvage: recover the longest valid event *prefix* of a
+    /// stream whose tail is truncated, trailer-less or corrupt
+    /// (`taxbreak convert --salvage`).
+    ///
+    /// Unlike [`into_trace`](Self::into_trace), a malformed tail does
+    /// not fail the read — the scan stops at the first undecodable
+    /// record and reports why. Events are only ever appended *whole*
+    /// ([`decode_event`] either returns a complete event or an error),
+    /// so salvage never yields a partial event; the every-prefix
+    /// property test pins this. A validated trailer marks the capture
+    /// `complete` and back-fills `wall_us`; anything else leaves
+    /// `wall_us` 0 (the capture never learned its wall-clock).
+    pub fn salvage(mut self) -> SalvageOutcome {
+        let mut events = Vec::new();
+        let (complete, reason) = loop {
+            match self.next_event() {
+                Ok(Some(ev)) => events.push(ev),
+                Ok(None) => break (true, "complete (trailer validated)".to_string()),
+                Err(e) => break (false, e.to_string()),
+            }
+        };
+        SalvageOutcome {
+            trace: Trace {
+                meta: self.meta,
+                events,
+            },
+            complete,
+            reason,
+        }
+    }
+}
+
+/// What [`BinaryTraceReader::salvage`] recovered.
+#[derive(Debug)]
+pub struct SalvageOutcome {
+    /// The recovered event prefix (every event is complete).
+    pub trace: Trace,
+    /// Did the stream end with a validated trailer (nothing was lost)?
+    pub complete: bool,
+    /// Why the scan stopped: the trailer validation note, or the
+    /// rendered decode error that cut the recovery short.
+    pub reason: String,
+}
+
+impl SalvageOutcome {
+    pub fn recovered(&self) -> usize {
+        self.trace.events.len()
+    }
+}
+
+/// Salvage a whole byte buffer. The header + meta record must still be
+/// intact — without them there is no trace to attach events to — but
+/// any event-stream damage past that point degrades to a shorter
+/// recovered prefix instead of an error. Trailing bytes after a valid
+/// trailer are reported in `reason` rather than rejected.
+pub fn salvage(bytes: &[u8]) -> Result<SalvageOutcome> {
+    let mut cursor = std::io::Cursor::new(bytes);
+    let reader = BinaryTraceReader::new(&mut cursor)?;
+    let mut out = reader.salvage();
+    if out.complete && (cursor.position() as usize) < bytes.len() {
+        out.reason = format!(
+            "complete (trailer validated; {} trailing bytes ignored)",
+            bytes.len() - cursor.position() as usize
+        );
+    }
+    Ok(out)
 }
 
 // ---------------------------------------------------------------------------
@@ -902,6 +1036,111 @@ mod tests {
             BinaryTraceReader::new(&b"TX"[..]).err(),
             Some(BinaryTraceError::Truncated("magic"))
         );
+    }
+
+    #[test]
+    fn shed_list_rides_a_presence_bit_and_stays_v3_compatible() {
+        let mk = |shed: Vec<u64>| TraceEvent {
+            kind: EventKind::SchedDecision,
+            name: "sched_decision".to_string(),
+            ts_us: 1.0,
+            dur_us: 0.0,
+            correlation_id: 0,
+            track: Track::Host,
+            device: None,
+            args: Some(ReplayArgs::SchedDecision {
+                step: 3,
+                admitted: vec![vec![1, 2]],
+                preempted: vec![4],
+                shed,
+                batch: 2,
+            }),
+            meta: None,
+        };
+        // Empty shed: encoding is byte-identical to a record that never
+        // heard of the field (the presence bit stays clear).
+        let mut with = Vec::new();
+        encode_event(&mut with, &mk(vec![]));
+        assert_eq!(with[2] & PRESENT_SHED, 0, "empty shed must not set the bit");
+        // Non-empty shed round-trips through the bit.
+        let mut buf = Vec::new();
+        encode_event(&mut buf, &mk(vec![7, 9]));
+        assert_ne!(buf[2] & PRESENT_SHED, 0);
+        let mut r = std::io::Cursor::new(&buf[1..]); // skip the record tag
+        let back = decode_event(&mut r).unwrap();
+        assert_eq!(back, mk(vec![7, 9]));
+    }
+
+    #[test]
+    fn fault_args_roundtrip_with_exact_bit_patterns() {
+        let ev = TraceEvent {
+            kind: EventKind::Fault,
+            name: "fault".to_string(),
+            ts_us: 100.0,
+            dur_us: 0.0,
+            correlation_id: 0,
+            track: Track::Host,
+            device: Some(1),
+            args: Some(ReplayArgs::Fault {
+                kind: "device_stall".to_string(),
+                target: "stream:1".to_string(),
+                onset_us: 100.0,
+                dur_us: 0.1 + 0.2, // not exactly 0.3: bit pattern must survive
+                magnitude: 3.5,
+            }),
+            meta: None,
+        };
+        let mut buf = Vec::new();
+        encode_event(&mut buf, &ev);
+        assert_eq!(buf[1], 9, "fault kind-code is 9");
+        let mut r = std::io::Cursor::new(&buf[1..]);
+        assert_eq!(decode_event(&mut r).unwrap(), ev);
+    }
+
+    #[test]
+    fn salvage_recovers_the_longest_valid_prefix() {
+        let meta = TraceMeta {
+            platform: "h200".into(),
+            model: "gpt2".into(),
+            phase: "serve".into(),
+            batch: 0,
+            seq: 0,
+            m_tokens: 0,
+            wall_us: 42.0,
+        };
+        let mut trace = Trace::new(meta);
+        for i in 0..5u64 {
+            trace.push(TraceEvent {
+                kind: EventKind::Nvtx,
+                name: format!("r{i}"),
+                ts_us: i as f64,
+                dur_us: 1.0,
+                correlation_id: i,
+                track: Track::Host,
+                device: None,
+                args: None,
+                meta: None,
+            });
+        }
+        let bytes = encode(&trace);
+        // Complete: everything, trailer validated, wall back-filled.
+        let ok = salvage(&bytes).unwrap();
+        assert!(ok.complete);
+        assert_eq!(ok.recovered(), 5);
+        assert_eq!(ok.trace.meta.wall_us, 42.0);
+        // Trailer cut off: all events survive, reason says truncated.
+        let cut = salvage(&bytes[..bytes.len() - TRAILER_LEN]).unwrap();
+        assert!(!cut.complete);
+        assert_eq!(cut.recovered(), 5);
+        assert_eq!(cut.trace.events, trace.events);
+        assert_eq!(cut.trace.meta.wall_us, 0.0, "wall never learned");
+        // Cut mid-event: only whole events survive.
+        let mid = salvage(&bytes[..bytes.len() - TRAILER_LEN - 3]).unwrap();
+        assert!(!mid.complete);
+        assert_eq!(mid.recovered(), 4);
+        assert_eq!(mid.trace.events, trace.events[..4]);
+        // Headerless bytes cannot be salvaged at all.
+        assert!(salvage(b"NOPE").is_err());
     }
 
     #[test]

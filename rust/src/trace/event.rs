@@ -40,6 +40,13 @@ pub enum EventKind {
     /// The virtual clock jumping forward over idle time (spec v3).
     /// `ts` is the clock before the jump, `dur` the jump amount.
     ClockJump,
+    /// One injected fault window (spec v4): a deterministic, seeded
+    /// perturbation (device stall, host jitter, launch failure, KV
+    /// pressure) armed on the run. `ts` is the onset; the full window
+    /// (`kind`/`target`/`onset_us`/`dur_us`/`magnitude`) lives in
+    /// `args` so replay can re-arm the identical fault schedule.
+    /// Rides correlation id 0 and is decomposition-blind.
+    Fault,
 }
 
 impl EventKind {
@@ -49,7 +56,7 @@ impl EventKind {
     /// The wildcard-free `guard` match makes a new variant a compile
     /// error *here* (not just in `as_str`): extend this array AND the
     /// §4.1 table in `docs/trace_format.md` together.
-    pub const ALL: [EventKind; 9] = {
+    pub const ALL: [EventKind; 10] = {
         const fn guard(k: EventKind) -> EventKind {
             match k {
                 EventKind::TorchOp
@@ -60,7 +67,8 @@ impl EventKind {
                 | EventKind::Arrival
                 | EventKind::RngDraw
                 | EventKind::SchedDecision
-                | EventKind::ClockJump => k,
+                | EventKind::ClockJump
+                | EventKind::Fault => k,
             }
         }
         [
@@ -73,6 +81,7 @@ impl EventKind {
             guard(EventKind::RngDraw),
             guard(EventKind::SchedDecision),
             guard(EventKind::ClockJump),
+            guard(EventKind::Fault),
         ]
     };
 
@@ -87,6 +96,7 @@ impl EventKind {
             EventKind::RngDraw => "rng_draw",
             EventKind::SchedDecision => "sched_decision",
             EventKind::ClockJump => "clock_jump",
+            EventKind::Fault => "fault",
         }
     }
 
@@ -101,6 +111,7 @@ impl EventKind {
             "rng_draw" => EventKind::RngDraw,
             "sched_decision" => EventKind::SchedDecision,
             "clock_jump" => EventKind::ClockJump,
+            "fault" => EventKind::Fault,
             other => anyhow::bail!("unknown event kind '{other}'"),
         })
     }
@@ -110,7 +121,10 @@ impl EventKind {
     pub fn has_args(&self) -> bool {
         matches!(
             self,
-            EventKind::Arrival | EventKind::RngDraw | EventKind::SchedDecision
+            EventKind::Arrival
+                | EventKind::RngDraw
+                | EventKind::SchedDecision
+                | EventKind::Fault
         )
     }
 }
@@ -292,13 +306,30 @@ pub enum ReplayArgs {
     /// `SchedDecision`: one scheduler step. `admitted` preserves group
     /// boundaries (one inner list per admitted batch group, member
     /// request ids in admission order); `preempted` is sorted
-    /// ascending; `batch` is the number of active sequences after the
-    /// step.
+    /// ascending; `shed` (spec v4) lists requests dropped by
+    /// deadline-aware load shedding this step, sorted ascending —
+    /// serialized only when non-empty so fault-free captures stay
+    /// byte-identical to spec v3; `batch` is the number of active
+    /// sequences after the step.
     SchedDecision {
         step: u64,
         admitted: Vec<Vec<u64>>,
         preempted: Vec<u64>,
+        shed: Vec<u64>,
         batch: u64,
+    },
+    /// `Fault` (spec v4): one injected fault window, re-armable on
+    /// replay. `kind` is the fault kind tag (`device_stall` /
+    /// `host_jitter` / `launch_fail` / `kv_pressure`), `target` the
+    /// perturbed resource (e.g. `stream:1`, `host:all`), and
+    /// `magnitude` the kind-specific intensity (a multiplier, an
+    /// attempt count, or a sequestered-page fraction).
+    Fault {
+        kind: String,
+        target: String,
+        onset_us: f64,
+        dur_us: f64,
+        magnitude: f64,
     },
 }
 
@@ -322,23 +353,47 @@ impl ReplayArgs {
                 step,
                 admitted,
                 preempted,
+                shed,
                 batch,
+            } => {
+                let mut o = Json::obj()
+                    .with("step", *step)
+                    .with(
+                        "admitted",
+                        Json::Arr(
+                            admitted
+                                .iter()
+                                .map(|g| Json::Arr(g.iter().map(|&id| Json::from(id)).collect()))
+                                .collect(),
+                        ),
+                    )
+                    .with(
+                        "preempted",
+                        Json::Arr(preempted.iter().map(|&id| Json::from(id)).collect()),
+                    );
+                // The `shed` key is a spec-v4 extension: omitted when
+                // empty, so fault-free captures stay byte-identical to
+                // spec v3.
+                if !shed.is_empty() {
+                    o.set(
+                        "shed",
+                        Json::Arr(shed.iter().map(|&id| Json::from(id)).collect()),
+                    );
+                }
+                o.with("batch", *batch)
+            }
+            ReplayArgs::Fault {
+                kind,
+                target,
+                onset_us,
+                dur_us,
+                magnitude,
             } => Json::obj()
-                .with("step", *step)
-                .with(
-                    "admitted",
-                    Json::Arr(
-                        admitted
-                            .iter()
-                            .map(|g| Json::Arr(g.iter().map(|&id| Json::from(id)).collect()))
-                            .collect(),
-                    ),
-                )
-                .with(
-                    "preempted",
-                    Json::Arr(preempted.iter().map(|&id| Json::from(id)).collect()),
-                )
-                .with("batch", *batch),
+                .with("kind", kind.as_str())
+                .with("target", target.as_str())
+                .with("onset_us", *onset_us)
+                .with("dur_us", *dur_us)
+                .with("magnitude", *magnitude),
         }
     }
 
@@ -383,7 +438,19 @@ impl ReplayArgs {
                     })
                     .collect::<anyhow::Result<Vec<Vec<u64>>>>()?,
                 preempted: ids("preempted")?,
+                shed: if v.get("shed").is_some() {
+                    ids("shed")?
+                } else {
+                    Vec::new()
+                },
                 batch: v.req("batch")?.as_u64().unwrap_or(0),
+            },
+            EventKind::Fault => ReplayArgs::Fault {
+                kind: v.str_of("kind")?.to_string(),
+                target: v.str_of("target")?.to_string(),
+                onset_us: v.f64_of("onset_us")?,
+                dur_us: v.f64_of("dur_us")?,
+                magnitude: v.f64_of("magnitude")?,
             },
             other => anyhow::bail!("event kind '{}' carries no args", other.as_str()),
         })

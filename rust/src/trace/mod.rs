@@ -18,7 +18,7 @@ pub mod chrome;
 pub mod event;
 pub mod sink;
 
-pub use binary::{BinaryTraceError, BinaryTraceReader, BinaryTraceWriter, Dialect};
+pub use binary::{BinaryTraceError, BinaryTraceReader, BinaryTraceWriter, Dialect, SalvageOutcome};
 pub use event::{DedupKey, EventKind, KernelMeta, ReplayArgs, Track, TraceEvent};
 pub use sink::{CountingSink, NullSink, TraceBufferSink, TraceSink};
 
@@ -151,13 +151,14 @@ impl Trace {
                 EventKind::RuntimeApi => chain.runtime_api = Some(e),
                 EventKind::Kernel => chain.kernel = Some(e),
                 EventKind::Nvtx => chain.nvtx = Some(e),
-                // Replay recordings (spec v3) belong to no kernel chain;
-                // they always carry correlation id 0, so the guard above
-                // already skipped them.
+                // Replay recordings (spec v3/v4) belong to no kernel
+                // chain; they always carry correlation id 0, so the
+                // guard above already skipped them.
                 EventKind::Arrival
                 | EventKind::RngDraw
                 | EventKind::SchedDecision
-                | EventKind::ClockJump => {}
+                | EventKind::ClockJump
+                | EventKind::Fault => {}
             }
         }
         map

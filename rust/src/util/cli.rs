@@ -25,12 +25,7 @@ impl Args {
             if let Some(name) = arg.strip_prefix("--") {
                 if let Some((k, v)) = name.split_once('=') {
                     out.options.insert(k.to_string(), v.to_string());
-                } else if iter
-                    .peek()
-                    .map(|n| !n.starts_with("--"))
-                    .unwrap_or(false)
-                {
-                    let v = iter.next().unwrap();
+                } else if let Some(v) = iter.next_if(|n| !n.starts_with("--")) {
                     out.options.insert(name.to_string(), v);
                 } else {
                     out.flags.insert(name.to_string());

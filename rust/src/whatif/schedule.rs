@@ -89,6 +89,12 @@ pub struct Step {
     /// Stream label within the device (serving engines rotate
     /// invocations over streams; host-blocking keeps them serial).
     pub stream: u32,
+    /// Host-op start in the *source* trace's clock (us). Fault factors
+    /// were evaluated against that clock at injection time, so the
+    /// `fault-free` transform needs it to look the factors back up;
+    /// nothing else consults it, and re-simulation rebuilds its own
+    /// timeline regardless.
+    pub ts_us: f64,
 }
 
 impl Step {
@@ -120,6 +126,11 @@ pub struct Schedule {
     pub devices: usize,
     /// Stream lanes per device the re-simulation topology needs.
     pub streams_per_device: usize,
+    /// Fault windows the source capture carried as spec-v4 `fault`
+    /// events (empty for fault-free and eager traces). Every replica
+    /// records the same armed plan, so this is one replica's list —
+    /// the `fault-free` counterfactual inverts against it.
+    pub fault_windows: Vec<crate::faults::FaultWindow>,
 }
 
 impl Schedule {
@@ -233,6 +244,7 @@ impl Schedule {
                 graphed: false,
                 device: 0,
                 stream: 0,
+                ts_us: torch.ts_us,
             });
             prev_api_end = api.end_us();
             prev_kernel_end = prev_kernel_end.max(kernel.end_us());
@@ -250,6 +262,7 @@ impl Schedule {
             floor_hint_us: floor_hint,
             devices: 1,
             streams_per_device: 1,
+            fault_windows: Vec::new(),
         })
     }
 
@@ -317,11 +330,40 @@ impl Schedule {
                 graphed: false,
                 device,
                 stream,
+                ts_us: torch.ts_us,
             });
             *prev = kernel.end_us();
         }
         let last = prev_end.values().fold(0.0f64, |a, &b| a.max(b));
         let tail = (trace.e2e_us() - last).max(0.0);
+
+        // Fault windows ride corr id 0 and never form chains, so they
+        // are collected straight off the event stream. Every replica's
+        // engine records the same armed plan; keep one replica's list
+        // (the lowest device id) so overlapping-window factor products
+        // are not double-counted across replicas.
+        let mut by_dev: std::collections::BTreeMap<u32, Vec<crate::faults::FaultWindow>> =
+            std::collections::BTreeMap::new();
+        for e in &trace.events {
+            if let (EventKind::Fault, Some(crate::trace::ReplayArgs::Fault {
+                kind,
+                target,
+                onset_us,
+                dur_us,
+                magnitude,
+            })) = (&e.kind, &e.args)
+            {
+                by_dev.entry(e.device_id()).or_default().push(crate::faults::FaultWindow {
+                    kind: crate::faults::FaultKind::parse(kind)?,
+                    target: target.clone(),
+                    onset_us: *onset_us,
+                    dur_us: *dur_us,
+                    magnitude: *magnitude,
+                });
+            }
+        }
+        let fault_windows = by_dev.into_values().next().unwrap_or_default();
+
         Ok(Schedule {
             mode: ScheduleMode::Synchronous,
             platform: trace.meta.platform.clone(),
@@ -333,6 +375,7 @@ impl Schedule {
             floor_hint_us: 0.0,
             devices,
             streams_per_device: streams,
+            fault_windows,
         })
     }
 }

@@ -23,6 +23,7 @@
 
 use std::collections::BTreeSet;
 
+use crate::faults::{FaultKind, FaultPlan, HostSeg, BACKOFF_BASE_US, MAX_LAUNCH_ATTEMPTS};
 use crate::hardware::{HostProfile, Platform};
 use crate::kernels::cost;
 use crate::kernels::family::Family;
@@ -119,6 +120,20 @@ pub fn parse_spec(spec: &str) -> anyhow::Result<Box<dyn Counterfactual>> {
                 platform: Platform::by_name(name)?,
             })
         }
+        "fault-free" => {
+            let kind = match rest {
+                None | Some("all") => None,
+                Some(k) => Some(FaultKind::parse(k)?),
+            };
+            anyhow::ensure!(
+                kind != Some(FaultKind::KvPressure),
+                "fault-free:kv_pressure is not expressible as a schedule rescale: \
+                 KV pressure converts capacity into queueing, so its cost lives in \
+                 the recorded admission/shed decisions, not in any time segment — \
+                 re-run `taxbreak loadgen` without the kv clause to compare"
+            );
+            Box::new(FaultFree { kind })
+        }
         "tensor-parallel" => {
             let arg = rest.ok_or_else(|| {
                 anyhow::anyhow!("tensor-parallel needs a way count, e.g. tensor-parallel:2")
@@ -136,7 +151,7 @@ pub fn parse_spec(spec: &str) -> anyhow::Result<Box<dyn Counterfactual>> {
             "unknown counterfactual '{other}' \
              (host-cpu:<profile|factor> | cuda-graphs[:<launch_us>] | \
              lib-elision[:fam+fam] | fusion:elem | fusion:moe[:<keep>] | \
-             device:<platform> | tensor-parallel:<N>)"
+             device:<platform> | tensor-parallel:<N> | fault-free[:<kind|all>])"
         ),
     })
 }
@@ -463,6 +478,7 @@ impl TensorParallel {
             graphed: false,
             device: 0,
             stream: 0,
+            ts_us: 0.0,
         }
     }
 }
@@ -528,6 +544,94 @@ impl Counterfactual for TensorParallel {
     }
 }
 
+/// (7) Fault removal: invert the injected fault factors of a faulted
+/// serving capture (`loadgen --faults`), turning "what did that
+/// straggler window cost us" into a counterfactual row. The schedule
+/// carries the capture's spec-v4 fault windows and each step's source
+/// timestamp, so every factor is looked up against the *same clock the
+/// injection used* (`runtime::backend`): jitter and launch failures at
+/// the host-op start, the device stall at the submit clock.
+///
+/// * `device_stall` — exact: kernel time divides by the recorded
+///   stall-factor product for the step's stream.
+/// * `host_jitter` — exact on the prep span; on the exec span the
+///   division is exact unless a launch-fail window overlapped (the
+///   deterministic backoff part of the span was never jitter-scaled).
+/// * `launch_fail` — the deterministic backoff is subtracted exactly;
+///   the re-issued launch draws are folded out by an even split of the
+///   remaining span over `1 + retries` attempts (the individual retry
+///   draws are i.i.d. with the base draw, so the split is the unbiased
+///   estimate — the capture only stores their sum).
+/// * `kv_pressure` — rejected at parse time: its cost is queueing shape
+///   (admissions/sheds), not a time segment, so there is nothing to
+///   rescale. `fault-free`/`fault-free:all` removes the three timing
+///   kinds and leaves kv windows in place.
+pub struct FaultFree {
+    /// `None` = every timing-visible kind (`all`).
+    pub kind: Option<FaultKind>,
+}
+
+impl FaultFree {
+    fn wants(&self, kind: FaultKind) -> bool {
+        match self.kind {
+            Some(sel) => sel == kind,
+            None => kind != FaultKind::KvPressure,
+        }
+    }
+}
+
+impl Counterfactual for FaultFree {
+    fn label(&self) -> String {
+        match self.kind {
+            None => "fault-free".to_string(),
+            Some(k) => format!("fault-free:{}", k.as_str()),
+        }
+    }
+
+    fn apply(&self, s: &mut Schedule) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            s.mode == ScheduleMode::Synchronous,
+            "fault-free applies to serving captures — faults are injected by the \
+             serving engine (`taxbreak loadgen --faults`), so only those schedules \
+             carry fault windows"
+        );
+        anyhow::ensure!(
+            !s.fault_windows.is_empty(),
+            "this capture carries no fault events; there is nothing to remove \
+             (record one with `taxbreak loadgen --faults ... --capture ...`)"
+        );
+        let plan = FaultPlan::from_windows(s.fault_windows.clone());
+        for st in &mut s.steps {
+            // Every lookup uses the step's original clock, captured
+            // before any span below is rewritten.
+            let t0 = st.ts_us;
+            let submit_us = t0 + st.t_base_us + st.api_us;
+            if self.wants(FaultKind::DeviceStall) {
+                st.device_us /= plan.stall_factor(submit_us, st.stream);
+            }
+            if self.wants(FaultKind::LaunchFail) {
+                let failures = plan.launch_failures(t0);
+                if failures > 0 {
+                    let reissues = failures.min(MAX_LAUNCH_ATTEMPTS - 1);
+                    let backoff: f64 = (0..reissues)
+                        .map(|i| BACKOFF_BASE_US * f64::from(1u32 << i))
+                        .sum();
+                    st.api_us = (st.api_us - backoff).max(0.0) / f64::from(reissues + 1);
+                }
+            }
+            if self.wants(FaultKind::HostJitter) {
+                st.t_base_us /= plan.host_factor(t0, HostSeg::Prep);
+                st.api_us /= plan.host_factor(t0, HostSeg::Exec);
+            }
+        }
+        // Composed transforms (and a second fault-free) see only the
+        // windows that are still in force.
+        let keep = |k: FaultKind| !self.wants(k);
+        s.fault_windows.retain(|w| keep(w.kind));
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -552,6 +656,7 @@ mod tests {
             graphed: false,
             device: 0,
             stream: 0,
+            ts_us: 0.0,
         }
     }
 
@@ -567,6 +672,7 @@ mod tests {
             floor_hint_us: 4.7,
             devices: 1,
             streams_per_device: 1,
+            fault_windows: Vec::new(),
         }
     }
 
@@ -584,6 +690,9 @@ mod tests {
         assert!(parse_spec("tensor-parallel").is_err());
         assert!(parse_spec("tensor-parallel:1").is_err());
         assert!(parse_spec("tensor-parallel:x").is_err());
+        assert!(parse_spec("fault-free:gremlin").is_err());
+        let err = parse_spec("fault-free:kv_pressure").unwrap_err().to_string();
+        assert!(err.contains("queueing"), "{err}");
     }
 
     #[test]
@@ -600,6 +709,11 @@ mod tests {
             "fusion:moe:0.25",
             "device:h200",
             "tensor-parallel:2",
+            "fault-free",
+            "fault-free:all",
+            "fault-free:device_stall",
+            "fault-free:host_jitter",
+            "fault-free:launch_fail",
         ] {
             let cf = parse_spec(spec).unwrap();
             assert!(cf.label().starts_with(spec.split(':').next().unwrap()));
@@ -747,5 +861,73 @@ mod tests {
         assert_eq!(faster_host_spec(1.0), "host-cpu:xeon-6538y");
         assert_eq!(faster_host_spec(1.30), "host-cpu:hypothetical-2x");
         assert_eq!(faster_host_spec(2.5), "host-cpu:1.3");
+    }
+
+    /// A serving-mode schedule carrying one faulted step per fault kind,
+    /// with timings hand-placed inside/outside the windows.
+    fn faulted_serving_sched() -> Schedule {
+        let mut faulted = step("f", "sim_exec", true);
+        faulted.ts_us = 1000.0; // inside every window below
+        faulted.t_base_us = 40.0; // prep, jitter-dilated 2x from 20
+        faulted.api_us = 99.0; // exec: (8 + 8) * 3 + 75 backoff (see tests)
+        faulted.device_us = 500.0; // stalled 5x from 100
+        let mut clean = step("c", "sim_exec", true);
+        clean.ts_us = 50_000.0; // outside every window
+        clean.t_base_us = 20.0;
+        clean.api_us = 8.0;
+        clean.device_us = 100.0;
+        let mut s = sched(vec![faulted, clean]);
+        s.mode = ScheduleMode::Synchronous;
+        s.fault_windows = FaultPlan::parse(
+            "stall:0:10000:5.0;jitter:0:10000:2.0:prep;jitter:0:10000:3.0:exec;\
+             launchfail:0:10000:1;kv:0:10000:0.5",
+        )
+        .unwrap()
+        .windows;
+        s
+    }
+
+    #[test]
+    fn fault_free_inverts_stall_jitter_and_launch_retries() {
+        let mut s = faulted_serving_sched();
+        parse_spec("fault-free").unwrap().apply(&mut s).unwrap();
+        let f = &s.steps[0];
+        // Stall: device time divides by the 5x window factor.
+        assert!((f.device_us - 100.0).abs() < 1e-9, "device {}", f.device_us);
+        // Jitter: prep divides by the 2x prep window.
+        assert!((f.t_base_us - 20.0).abs() < 1e-9, "prep {}", f.t_base_us);
+        // Launch retry: one re-issue = 25us backoff out, even split of
+        // the 99 - 25 = 74 remainder over 2 attempts = 37, then the 3x
+        // exec jitter divides out -> 37/3.
+        assert!((f.api_us - 37.0 / 3.0).abs() < 1e-9, "exec {}", f.api_us);
+        // Steps outside every window are untouched.
+        let c = &s.steps[1];
+        assert_eq!((c.t_base_us, c.api_us, c.device_us), (20.0, 8.0, 100.0));
+        // kv windows survive `all` (their cost is queueing shape, not a
+        // segment); the three timing kinds are consumed.
+        assert_eq!(s.fault_windows.len(), 1);
+        assert_eq!(s.fault_windows[0].kind, FaultKind::KvPressure);
+    }
+
+    #[test]
+    fn fault_free_single_kind_leaves_the_others() {
+        let mut s = faulted_serving_sched();
+        parse_spec("fault-free:device_stall").unwrap().apply(&mut s).unwrap();
+        let f = &s.steps[0];
+        assert!((f.device_us - 100.0).abs() < 1e-9);
+        assert_eq!(f.t_base_us, 40.0, "jitter untouched");
+        assert_eq!(f.api_us, 99.0, "launch retries untouched");
+        assert_eq!(s.fault_windows.len(), 4, "only the stall window consumed");
+    }
+
+    #[test]
+    fn fault_free_rejects_eager_and_fault_free_captures() {
+        let mut eager = sched(vec![step("a", "reduce", true)]);
+        let err = parse_spec("fault-free").unwrap().apply(&mut eager).unwrap_err();
+        assert!(err.to_string().contains("serving"), "{err}");
+        let mut clean = sched(vec![step("a", "reduce", true)]);
+        clean.mode = ScheduleMode::Synchronous;
+        let err = parse_spec("fault-free").unwrap().apply(&mut clean).unwrap_err();
+        assert!(err.to_string().contains("no fault events"), "{err}");
     }
 }

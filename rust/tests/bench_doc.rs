@@ -19,7 +19,7 @@ use taxbreak::util::json::Json;
 /// or this test fails.  (The `replay` object and the trace-codec
 /// fields are assembled in `main.rs`; their names are pinned here and
 /// by the CI smoke's greps.)
-const BENCH_FIELDS: [&str; 35] = [
+const BENCH_FIELDS: [&str; 38] = [
     // shared envelope
     "bench",
     "source",
@@ -52,6 +52,10 @@ const BENCH_FIELDS: [&str; 35] = [
     "per_device",
     "device",
     "kv_occupancy_mean",
+    // resilience KPIs (DESIGN.md §16): zero on fault-free runs
+    "shed_rate",
+    "retry_rate",
+    "deadline_miss_p99_us",
     "replay",
     "tokens",
     "wall_s",

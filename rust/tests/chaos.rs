@@ -1,0 +1,212 @@
+//! Chaos property suite: arbitrary seeded fault plans through the full
+//! serving stack (DESIGN.md §16).
+//!
+//! For storms of pseudo-random fault windows (`storm:SEED:N`) the run
+//! must degrade *gracefully*, never wrongly:
+//!
+//! 1. it terminates (no deadlock — the stall guard would error, not
+//!    hang, and even that must not fire);
+//! 2. every request ends in exactly one outcome — completed, rejected,
+//!    shed or failed — and the report's counters partition the request
+//!    count;
+//! 3. KV occupancy stays a valid fraction of the pool on every replica
+//!    (pressure sequesters pages, it never mints or leaks them);
+//! 4. the decomposition still partitions the captured trace: per-phase
+//!    host/device totals equal the whole-trace split, fault events are
+//!    decomposition-blind;
+//! 5. record → replay → re-record is a byte-equal fixed point in both
+//!    dialects — faults are replay-deterministic spec-v4 events, not
+//!    noise.
+//!
+//! Plus the liveness rule pinned explicitly: a KV-pressure window that
+//! sequesters the *whole* pool must not freeze an idle scheduler
+//! (pressure applies only while groups are being served).
+
+use taxbreak::prop_assert;
+use taxbreak::serving::loadgen::{per_phase_split, run_sim_loadgen, LoadgenConfig};
+use taxbreak::serving::{real_trace_split, replay, SchedulerConfig};
+use taxbreak::trace::{binary, EventKind};
+use taxbreak::util::prop::forall;
+
+fn models(names: &[&str]) -> Vec<String> {
+    names.iter().map(|s| s.to_string()).collect()
+}
+
+#[test]
+fn property_storms_degrade_gracefully_and_replay_byte_identically() {
+    forall("seeded fault storms", 8, |g| {
+        let storm_seed = g.u64() >> 32;
+        let n_windows = g.usize_in(1, 24);
+        let devices = *g.choice(&[1, 1, 2]);
+        let requests = g.usize_in(devices.max(4), 10);
+        let cfg = LoadgenConfig {
+            requests,
+            rate_per_s: *g.choice(&[0.0, 2000.0]),
+            devices,
+            seed: g.u64() >> 32,
+            sched: SchedulerConfig {
+                kv_pages: g.usize_in(devices * 16, 64),
+                ttft_deadline_us: *g.choice(&[0.0, 0.0, 4000.0]),
+                tpot_deadline_us: *g.choice(&[0.0, 0.0, 800.0]),
+                ..SchedulerConfig::default()
+            },
+            capture: true,
+            faults: Some(format!("storm:{storm_seed}:{n_windows}")),
+            ..LoadgenConfig::default()
+        };
+        let report = match run_sim_loadgen(&models(&["gpt2"]), "h200", &cfg) {
+            Ok(r) => r,
+            // Termination means *returning* — an error (e.g. the stall
+            // guard) is as much a failure as a hang.
+            Err(e) => {
+                g.fail(format!("storm:{storm_seed}:{n_windows} errored: {e:#}"));
+                return false;
+            }
+        };
+        let run = &report.runs[0];
+
+        // (2) exactly one outcome per request.
+        let accounted = run.completed + run.rejected + run.sheds + run.failed;
+        prop_assert!(
+            g,
+            accounted == requests,
+            "outcomes must partition the {requests} requests: \
+             {} completed + {} rejected + {} shed + {} failed = {accounted}",
+            run.completed,
+            run.rejected,
+            run.sheds,
+            run.failed
+        );
+        prop_assert!(
+            g,
+            run.deadline_misses <= run.completed,
+            "only completed requests can miss a deadline"
+        );
+
+        // (3) KV conservation: occupancy is a fraction of each pool.
+        for d in std::iter::once((run.kv_occupancy_mean, run.kv_occupancy_max))
+            .chain(run.per_device.iter().map(|d| (d.kv_occupancy_mean, d.kv_occupancy_max)))
+        {
+            prop_assert!(
+                g,
+                (0.0..=1.0).contains(&d.0) && (0.0..=1.0).contains(&d.1) && d.0 <= d.1 + 1e-12,
+                "KV occupancy must stay in [0, 1]: mean {} max {}",
+                d.0,
+                d.1
+            );
+        }
+
+        // (4) the decomposition partitions the captured trace, faults
+        // and all.
+        let trace = run.trace.as_ref().expect("capture was requested");
+        let n_faults = trace.events.iter().filter(|e| e.kind == EventKind::Fault).count();
+        prop_assert!(
+            g,
+            n_faults == n_windows * devices,
+            "every replica records the full {n_windows}-window plan, got {n_faults} fault events"
+        );
+        prop_assert!(
+            g,
+            trace
+                .events
+                .iter()
+                .filter(|e| e.kind == EventKind::Fault)
+                .all(|e| e.correlation_id == 0),
+            "fault events ride correlation id 0 (decomposition-blind)"
+        );
+        let phases = per_phase_split(trace);
+        let (host, dev, kernels) = real_trace_split(trace);
+        let (p_host, p_dev, p_kernels) = phases.iter().fold((0.0, 0.0, 0), |acc, p| {
+            (acc.0 + p.host_us, acc.1 + p.device_us, acc.2 + p.kernels)
+        });
+        prop_assert!(g, p_kernels == kernels, "phase split must cover every kernel");
+        prop_assert!(
+            g,
+            (p_host - host).abs() < 1e-9 && (p_dev - dev).abs() < 1e-9,
+            "per-phase totals must partition the whole-trace split"
+        );
+
+        // (5) replay fixed point, both dialects.
+        let out = match replay(trace) {
+            Ok(o) => o,
+            Err(e) => {
+                g.fail(format!("replay of the faulted capture errored: {e:#}"));
+                return false;
+            }
+        };
+        prop_assert!(
+            g,
+            out.trace.events == trace.events && out.trace.meta == trace.meta,
+            "replay must re-record the exact faulted event stream"
+        );
+        prop_assert!(
+            g,
+            out.trace.to_json().dump() == trace.to_json().dump(),
+            "JSON dialect fixed point under faults"
+        );
+        prop_assert!(
+            g,
+            binary::encode(&out.trace) == binary::encode(trace),
+            "binary dialect fixed point under faults"
+        );
+        true
+    });
+}
+
+#[test]
+fn full_pool_sequestration_cannot_deadlock_an_idle_scheduler() {
+    // `kv:0:1e9:1.0` hides the *entire* pool for the whole run. If
+    // pressure applied while the scheduler is idle, no request could
+    // ever be admitted, the virtual clock (which only advances through
+    // backend work) would freeze, and the run would deadlock. The
+    // liveness rule — pressure acts only while groups are being served
+    // — makes the run terminate with every request accounted for.
+    let cfg = LoadgenConfig {
+        requests: 6,
+        rate_per_s: 0.0,
+        capture: true,
+        faults: Some("kv:0:1000000000:1.0".to_string()),
+        ..LoadgenConfig::default()
+    };
+    let report = run_sim_loadgen(&models(&["gpt2"]), "h200", &cfg).unwrap();
+    let run = &report.runs[0];
+    assert_eq!(
+        run.completed + run.rejected + run.sheds + run.failed,
+        6,
+        "the fully-sequestered run must terminate with every request accounted for"
+    );
+    assert!(run.completed > 0, "an idle scheduler admits from the real pool");
+}
+
+#[test]
+fn mixed_fault_plan_under_deadlines_keeps_the_counters_consistent() {
+    // A hand-built worst case: stall + jitter + launch failures + KV
+    // pressure all overlapping, with tight deadlines. The run must
+    // terminate, count every request exactly once, and report the
+    // degradation through the typed counters rather than erroring.
+    let cfg = LoadgenConfig {
+        requests: 10,
+        rate_per_s: 3000.0,
+        sched: SchedulerConfig {
+            kv_pages: 24,
+            ttft_deadline_us: 2500.0,
+            tpot_deadline_us: 400.0,
+            ..SchedulerConfig::default()
+        },
+        capture: true,
+        faults: Some(
+            "stall:0:40000:6.0;jitter:0:40000:3.0:all;launchfail:0:20000:2;kv:0:30000:0.75"
+                .to_string(),
+        ),
+        ..LoadgenConfig::default()
+    };
+    let report = run_sim_loadgen(&models(&["gpt2"]), "h200", &cfg).unwrap();
+    let run = &report.runs[0];
+    assert_eq!(run.completed + run.rejected + run.sheds + run.failed, 10);
+    assert!(run.retries > 0, "launch-fail windows must charge retries");
+    // The capture still replays byte-identically even at this severity.
+    let trace = run.trace.as_ref().unwrap();
+    let out = replay(trace).unwrap();
+    assert_eq!(out.trace.events, trace.events);
+    assert_eq!(binary::encode(&out.trace), binary::encode(trace));
+}

@@ -175,6 +175,56 @@ fn empty_db_phase2_yields_floor_only() {
     assert_eq!(p2.dispatch_base_us, 0.0);
 }
 
+/// The binary dies with `error: {e:#}` (main.rs), so every diagnostic
+/// a bad invocation can produce must render as a single line that
+/// names the offending input — never a backtrace or a multi-line
+/// chain. Pins the three user-facing failure paths of the audit:
+/// a nonexistent trace path, an unwritable output path, and a
+/// malformed `--faults` spec.
+#[test]
+fn cli_failure_diagnostics_are_one_line_and_name_the_input() {
+    fn one_line(e: &anyhow::Error) -> String {
+        let msg = format!("{e:#}");
+        assert!(
+            !msg.contains('\n') && !msg.is_empty(),
+            "diagnostic must be one non-empty line, got {msg:?}"
+        );
+        msg
+    }
+
+    // `taxbreak analyze --trace MISSING` (and every other loader).
+    let missing = std::env::temp_dir().join("taxbreak_no_such_trace.json");
+    let msg = one_line(&Trace::load(&missing).unwrap_err());
+    assert!(msg.contains("taxbreak_no_such_trace.json"), "must name the path: {msg}");
+
+    // `--report` / `--metrics-out` / `--capture` into a directory
+    // that does not exist.
+    let unwritable = std::env::temp_dir()
+        .join("taxbreak_no_such_dir")
+        .join("out.json");
+    let trace = simulate(&models::gpt2(), &Platform::h100(), &Workload::prefill(1, 4), 7);
+    let msg = one_line(&trace.save(&unwritable).unwrap_err());
+    assert!(msg.contains("taxbreak_no_such_dir"), "must name the path: {msg}");
+
+    // Malformed `--faults` specs (rejected eagerly, before any work).
+    for spec in [
+        "bogus:0:1:2",
+        "stall:0:1",
+        "stall:0:1:0.5",
+        "jitter:0:1:2:sideways",
+        "launchfail:0:1:1.5",
+        "kv:0:1:1.5",
+        "storm:1:0",
+        "",
+    ] {
+        let msg = one_line(&taxbreak::faults::FaultPlan::parse(spec).unwrap_err());
+        if !spec.is_empty() {
+            let clause = spec.split(':').next().unwrap();
+            assert!(msg.contains(clause), "'{spec}' diagnostic must name the clause: {msg}");
+        }
+    }
+}
+
 #[test]
 fn cli_args_hostile_inputs() {
     use taxbreak::util::cli::Args;

@@ -1,6 +1,6 @@
 #!/usr/bin/env python3
-"""Regenerate the golden trace corpus (v1_min / v2_multi / v3_replay,
-both dialects) and re-bless the recorded replay corpus.
+"""Regenerate the golden trace corpus (v1_min / v2_multi / v3_replay /
+v4_fault, both dialects) and re-bless the recorded replay corpus.
 
 Byte-exact replica of the Rust canonical JSON dumper
 (`util::json::Json::dump`, spec docs/trace_format.md §6) and of the
@@ -92,7 +92,19 @@ def args_json(kind, a):
             '"step":' + jnum(a["step"]),
             '"admitted":[' + groups + "]",
             '"preempted":[' + ",".join(jnum(i) for i in a["preempted"]) + "]",
-            '"batch":' + jnum(a["batch"]),
+        ]
+        # Spec v4: `shed` slots between `preempted` and `batch`, and is
+        # omitted when empty so v3 captures stay byte-identical.
+        if a.get("shed"):
+            parts.append('"shed":[' + ",".join(jnum(i) for i in a["shed"]) + "]")
+        parts.append('"batch":' + jnum(a["batch"]))
+    elif kind == "fault":
+        parts = [
+            '"kind":' + jstr(a["kind"]),
+            '"target":' + jstr(a["target"]),
+            '"onset_us":' + jnum(a["onset_us"]),
+            '"dur_us":' + jnum(a["dur_us"]),
+            '"magnitude":' + jnum(a["magnitude"]),
         ]
     else:
         raise ValueError(f"kind {kind} carries no args")
@@ -147,6 +159,7 @@ KIND_CODE = {
     "rng_draw": 6,
     "sched_decision": 7,
     "clock_jump": 8,
+    "fault": 9,
 }
 
 
@@ -189,6 +202,9 @@ def trace_binary(t):
             presence |= 0b010
         if e.get("args") is not None:
             presence |= 0b100
+        # Spec v4 PRESENT_SHED: set only for a non-empty shed list.
+        if e["kind"] == "sched_decision" and e.get("args", {}).get("shed"):
+            presence |= 0b1000
         out += b"\x02" + bytes([KIND_CODE[e["kind"]], presence])
         out += bstr(e["name"]) + bf64(e["ts"]) + bf64(e["dur"])
         out += varint(e["corr"])
@@ -211,7 +227,15 @@ def trace_binary(t):
                 out += varint(len(a["preempted"]))
                 for i in a["preempted"]:
                     out += varint(i)
+                if a.get("shed"):
+                    out += varint(len(a["shed"]))
+                    for i in a["shed"]:
+                        out += varint(i)
                 out += varint(a["batch"])
+            elif e["kind"] == "fault":
+                out += bstr(a["kind"]) + bstr(a["target"])
+                out += bf64(a["onset_us"]) + bf64(a["dur_us"])
+                out += bf64(a["magnitude"])
             else:
                 raise ValueError(f"kind {e['kind']} carries no args")
         km = e.get("meta")
@@ -421,6 +445,131 @@ V3_REPLAY = {
 }
 
 
+# v4_fault: spec-v4 fault injection — one `fault` event per window kind
+# (the full window re-armable from `args`), a deadline-shed scheduler
+# decision carrying the non-empty `shed` list, and a v3-shaped decision
+# whose empty shed must leave both encodings exactly v3. Fault events
+# carry correlation id 0 and the recording replica's `device` stamp.
+V4_FAULT = {
+    "meta": {
+        "platform": "h200",
+        "model": "gpt2",
+        "phase": "serve",
+        "batch": 0,
+        "seq": 0,
+        "m_tokens": 0,
+        "wall_us": 5000.25,
+    },
+    "events": [
+        {
+            "kind": "fault",
+            "name": "fault::device_stall",
+            "ts": 1000.0,
+            "dur": 500.5,
+            "corr": 0,
+            "track": "host",
+            "device": 0,
+            "args": {
+                "kind": "device_stall",
+                "target": "stream:*",
+                "onset_us": 1000.0,
+                "dur_us": 500.5,
+                "magnitude": 3.5,
+            },
+        },
+        {
+            "kind": "fault",
+            "name": "fault::host_jitter",
+            "ts": 0.0,
+            "dur": 2000.0,
+            "corr": 0,
+            "track": "host",
+            "device": 0,
+            "args": {
+                "kind": "host_jitter",
+                "target": "host:all",
+                "onset_us": 0.0,
+                "dur_us": 2000.0,
+                "magnitude": 1.5,
+            },
+        },
+        {
+            "kind": "fault",
+            "name": "fault::launch_fail",
+            "ts": 250.25,
+            "dur": 100.0,
+            "corr": 0,
+            "track": "host",
+            "device": 0,
+            "args": {
+                "kind": "launch_fail",
+                "target": "launch",
+                "onset_us": 250.25,
+                "dur_us": 100.0,
+                "magnitude": 2.0,
+            },
+        },
+        {
+            "kind": "fault",
+            "name": "fault::kv_pressure",
+            "ts": 0.0,
+            "dur": 4000.0,
+            "corr": 0,
+            "track": "host",
+            "device": 0,
+            "args": {
+                "kind": "kv_pressure",
+                "target": "kv",
+                "onset_us": 0.0,
+                "dur_us": 4000.0,
+                "magnitude": 0.5,
+            },
+        },
+        {
+            "kind": "arrival",
+            "name": "arrival",
+            "ts": 0.0,
+            "dur": 0.0,
+            "corr": 0,
+            "track": "host",
+            "args": {"req": 0, "plen": 16, "max_new": 2, "model": "gpt2"},
+        },
+        {
+            "kind": "sched_decision",
+            "name": "sched_decision",
+            "ts": 500.0,
+            "dur": 0.0,
+            "corr": 0,
+            "track": "host",
+            "device": 0,
+            "args": {
+                "step": 1,
+                "admitted": [[0], [1, 2]],
+                "preempted": [4],
+                "shed": [3, 5],
+                "batch": 3,
+            },
+        },
+        {
+            "kind": "sched_decision",
+            "name": "sched_decision",
+            "ts": 600.0,
+            "dur": 0.0,
+            "corr": 0,
+            "track": "host",
+            "device": 0,
+            "args": {
+                "step": 2,
+                "admitted": [],
+                "preempted": [],
+                "shed": [],
+                "batch": 3,
+            },
+        },
+    ],
+}
+
+
 def bless_replay_corpus():
     """Re-record `replay/serve_v3.{json,tbt}` through the Rust stack.
 
@@ -446,7 +595,13 @@ def bless_replay_corpus():
 
 
 def main():
-    for name, trace in [("v1_min", V1_MIN), ("v2_multi", V2_MULTI), ("v3_replay", V3_REPLAY)]:
+    corpus = [
+        ("v1_min", V1_MIN),
+        ("v2_multi", V2_MULTI),
+        ("v3_replay", V3_REPLAY),
+        ("v4_fault", V4_FAULT),
+    ]
+    for name, trace in corpus:
         (HERE / f"{name}.json").write_bytes(trace_json(trace).encode("utf-8"))
         (HERE / f"{name}.tbt").write_bytes(trace_binary(trace))
         print(f"wrote {name}.json ({len(trace_json(trace).encode('utf-8'))} bytes), "

@@ -38,6 +38,7 @@ fn deadlock_regression_two_groups_tight_kv() {
         max_groups: 2,
         kv_pages: 4,
         kv_page_tokens: 16,
+        ..SchedulerConfig::default()
     };
     let mut s = Scheduler::new(MockBackend::new(), cfg);
     s.submit(request(0, 16, 32));
@@ -149,6 +150,7 @@ fn prop_randomized_workloads_complete_without_errors() {
             max_groups,
             kv_pages,
             kv_page_tokens: 16,
+            ..SchedulerConfig::default()
         };
         let mut s = Scheduler::new(MockBackend::new(), cfg);
         let mut budgets = Vec::new();

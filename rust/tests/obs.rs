@@ -280,7 +280,7 @@ fn moe_serving_windows_separate_prefill_from_decode_hdbi() {
 /// Every metric the registry can emit, by name. `docs/metrics.md` is
 /// the user-facing contract: adding, renaming or dropping a metric
 /// must update both this list and the doc, or this test fails.
-const METRIC_NAMES: [&str; 32] = [
+const METRIC_NAMES: [&str; 36] = [
     "taxbreak_events_total",
     "taxbreak_recording_events_total",
     "taxbreak_arrivals_total",
@@ -305,6 +305,10 @@ const METRIC_NAMES: [&str; 32] = [
     "taxbreak_stream_active_us",
     "taxbreak_stream_idle_fraction",
     "taxbreak_probe_steps_total",
+    "taxbreak_sheds_total",
+    "taxbreak_launch_retries_total",
+    "taxbreak_failed_requests_total",
+    "taxbreak_deadline_misses_total",
     "taxbreak_kv_pages_used",
     "taxbreak_kv_pages_reserved",
     "taxbreak_kv_pages_free",

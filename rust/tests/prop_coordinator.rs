@@ -43,6 +43,7 @@ fn prop_scheduler_completes_every_request_exactly() {
             max_groups,
             kv_pages,
             kv_page_tokens: 16,
+            ..SchedulerConfig::default()
         };
         let mut s = Scheduler::new(MockBackend::new(), cfg);
         let reqs = random_requests(g, n, 128);

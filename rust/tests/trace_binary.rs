@@ -34,7 +34,7 @@ fn temp_dir(tag: &str) -> PathBuf {
     dir
 }
 
-const GOLDEN: [&str; 3] = ["v1_min", "v2_multi", "v3_replay"];
+const GOLDEN: [&str; 4] = ["v1_min", "v2_multi", "v3_replay", "v4_fault"];
 
 // -- golden corpus: byte stability in both directions -----------------------
 
@@ -130,6 +130,38 @@ fn golden_corpus_covers_every_spec_version() {
         ),
         None => panic!("v3_replay lacks a sched_decision args payload"),
     }
+
+    // v4: one fault event per window kind, each re-armable from args
+    // (corr 0, device-stamped), plus sched decisions with a populated
+    // and an empty shed list.
+    let v4 = binary::decode(&golden_bytes("v4_fault.tbt")).unwrap();
+    let fault_kinds: Vec<&str> = v4
+        .events
+        .iter()
+        .filter_map(|e| match &e.args {
+            Some(ReplayArgs::Fault { kind, .. }) => {
+                assert_eq!(e.kind, EventKind::Fault);
+                assert_eq!(e.correlation_id, 0, "fault events must carry corr 0");
+                assert_eq!(e.device, Some(0), "fault events carry the replica stamp");
+                Some(kind.as_str())
+            }
+            _ => None,
+        })
+        .collect();
+    assert_eq!(
+        fault_kinds,
+        vec!["device_stall", "host_jitter", "launch_fail", "kv_pressure"],
+        "v4_fault must cover every fault kind"
+    );
+    let sheds: Vec<&Vec<u64>> = v4
+        .events
+        .iter()
+        .filter_map(|e| match &e.args {
+            Some(ReplayArgs::SchedDecision { shed, .. }) => Some(shed),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(sheds, vec![&vec![3, 5], &vec![]], "v4_fault must pin both shed shapes");
 }
 
 #[test]
@@ -258,7 +290,19 @@ fn arb_trace(g: &mut taxbreak::util::prop::Gen) -> Trace {
                             .collect()
                     },
                     preempted: (0..g.usize_in(0, 4)).map(|_| g.u64() >> 11).collect(),
+                    // Sometimes-empty: pins both the omitted-key (v3
+                    // shape) and present-key (v4 shape) encodings.
+                    shed: (0..g.usize_in(0, 3)).map(|_| g.u64() >> 11).collect(),
                     batch: g.usize_in(0, 256) as u64,
+                }),
+                EventKind::Fault => Some(ReplayArgs::Fault {
+                    kind: g
+                        .choice(&["device_stall", "host_jitter", "launch_fail", "kv_pressure"])
+                        .to_string(),
+                    target: g.choice(&["stream:0", "stream:*", "host:all", "launch", "kv"]).to_string(),
+                    onset_us: g.f64_in(0.0, 1e9),
+                    dur_us: g.f64_in(0.0, 1e7),
+                    magnitude: g.f64_in(0.0, 64.0),
                 }),
                 _ => None,
             },
@@ -360,6 +404,39 @@ fn every_truncation_is_a_typed_error_never_a_partial_parse() {
             Err(other) => panic!("unexpected error class at prefix {len}: {other}"),
         }
     }
+}
+
+#[test]
+fn property_salvage_recovers_a_whole_event_prefix_at_every_cut() {
+    // The crash-salvage counterpart of the truncation test above:
+    // cutting a valid stream at *every* byte offset either fails
+    // (header/meta not yet intact — there is no trace to attach events
+    // to) or recovers a whole-event prefix of the original, never a
+    // partial event; only the intact buffer reports `complete`.
+    // Generated traces (not goldens) so the corpus exercises the v4
+    // fault/shed payloads too.
+    forall("salvage at every truncation point", 12, |g| {
+        let canon = Trace::from_json(
+            &Json::parse(&arb_trace(g).to_json().dump()).unwrap(),
+        )
+        .unwrap();
+        let full = binary::encode(&canon);
+        for len in 0..=full.len() {
+            let Ok(out) = binary::salvage(&full[..len]) else { continue };
+            prop_assert!(
+                g,
+                out.recovered() <= canon.events.len()
+                    && canon.events[..out.recovered()] == out.trace.events[..],
+                "cut at {len}: salvage must yield a whole-event prefix"
+            );
+            prop_assert!(
+                g,
+                out.complete == (len == full.len()),
+                "cut at {len}: only the intact buffer is complete"
+            );
+        }
+        true
+    });
 }
 
 #[test]

@@ -182,9 +182,61 @@ fn v3_sample_trace() -> Trace {
             step: 1,
             admitted: vec![vec![0, 2], vec![1]],
             preempted: vec![3],
+            shed: vec![],
             batch: 4,
         }),
     ));
+    t
+}
+
+/// A trace exercising the spec-v4 extensions: a `fault` event and a
+/// scheduler decision with a non-empty `shed` list (kept separate from
+/// [`v3_sample_trace`] so the v3 byte-identity guarantee — empty shed
+/// serializes to exactly the v3 shape — stays pinned there).
+fn v4_sample_trace() -> Trace {
+    let mut t = Trace::new(TraceMeta {
+        platform: "h200".into(),
+        model: "gpt2".into(),
+        phase: "serve".into(),
+        batch: 0,
+        seq: 0,
+        m_tokens: 0,
+        wall_us: 420.0,
+    });
+    t.push(TraceEvent {
+        kind: EventKind::Fault,
+        name: "fault".into(),
+        ts_us: 100.0,
+        dur_us: 250.5,
+        correlation_id: 0,
+        track: Track::Host,
+        device: None,
+        args: Some(ReplayArgs::Fault {
+            kind: "device_stall".into(),
+            target: "stream:1".into(),
+            onset_us: 100.0,
+            dur_us: 250.5,
+            magnitude: 4.0,
+        }),
+        meta: None,
+    });
+    t.push(TraceEvent {
+        kind: EventKind::SchedDecision,
+        name: "sched_decision".into(),
+        ts_us: 150.0,
+        dur_us: 0.0,
+        correlation_id: 0,
+        track: Track::Host,
+        device: Some(2),
+        args: Some(ReplayArgs::SchedDecision {
+            step: 3,
+            admitted: vec![vec![7]],
+            preempted: vec![],
+            shed: vec![5, 9],
+            batch: 2,
+        }),
+        meta: None,
+    });
     t
 }
 
@@ -371,6 +423,7 @@ fn event_kind_tags_roundtrip_the_documented_set() {
         "rng_draw",
         "sched_decision",
         "clock_jump",
+        "fault",
     ];
     assert_eq!(EventKind::ALL.len(), documented.len());
     for (kind, tag) in EventKind::ALL.iter().zip(documented) {
@@ -434,4 +487,35 @@ fn v3_trace_is_byte_stable_and_replay_kinds_carry_corr_zero() {
     }
     let err = Trace::from_json(&stripped).unwrap_err().to_string();
     assert!(err.contains("lacks its args payload"), "{err}");
+}
+
+#[test]
+fn v4_args_payloads_match_documented_keys_exactly() {
+    // Spec §4.3: `fault` args keys are pinned, in order; a non-empty
+    // `shed` list slots between `preempted` and `batch`.
+    let j = v4_sample_trace().to_json();
+    let events = j.arr_of("events").unwrap();
+    assert_eq!(
+        keys(events[0].req("args").unwrap()),
+        vec!["kind", "target", "onset_us", "dur_us", "magnitude"]
+    );
+    assert_eq!(
+        keys(events[1].req("args").unwrap()),
+        vec!["step", "admitted", "preempted", "shed", "batch"]
+    );
+    let shed = events[1].req("args").unwrap().arr_of("shed").unwrap();
+    assert_eq!(shed.len(), 2);
+}
+
+#[test]
+fn v4_trace_is_byte_stable_and_empty_shed_stays_v3_shaped() {
+    let t = v4_sample_trace();
+    let text = t.to_json().dump();
+    let back = Trace::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(back, t, "v4 JSON round trip must reconstruct the trace");
+    assert_eq!(back.to_json().dump(), text, "v4 JSON must be byte-stable");
+    assert!(t.events.iter().all(|e| e.correlation_id == 0));
+    // The v3 sample (empty shed everywhere) must not leak a `shed` key:
+    // pre-fault captures re-saved under v4 code stay byte-identical.
+    assert!(!v3_sample_trace().to_json().dump().contains("\"shed\""));
 }

@@ -36,6 +36,15 @@ GUARDED = {
     ],
 }
 
+# Fault-path-off pins (DESIGN.md s16): the bench workloads run without
+# --faults or deadlines, so the resilience KPIs must be *exactly* zero
+# in every fresh datapoint — the fault machinery may cost nothing when
+# disabled.  A nonzero value here means the clean path started
+# shedding, retrying or missing deadlines on its own.
+ZERO_WHEN_CLEAN = {
+    "loadgen": [("shed_rate",), ("retry_rate",), ("deadline_miss_p99_us",)],
+}
+
 
 def lookup(obj, path):
     for key in path:
@@ -74,6 +83,18 @@ def check(baseline_path, fresh_path):
         if ratio < RATIO_FLOOR:
             failures.append(
                 f"{dotted}: {measured:.6g} < {RATIO_FLOOR} x committed {committed:.6g}"
+            )
+    for path in ZERO_WHEN_CLEAN.get(kind, []):
+        dotted = ".".join(path)
+        measured = lookup(fresh, path)
+        if measured is None:
+            failures.append(f"{dotted}: missing from {fresh_path}")
+            continue
+        status = "ok" if measured == 0 else "FAIL"
+        print(f"  {status} {dotted}: {measured:.6g} (must be 0 on fault-free runs)")
+        if measured != 0:
+            failures.append(
+                f"{dotted}: {measured:.6g} != 0 on a fault-free bench run"
             )
     return failures
 

@@ -19,4 +19,15 @@ cargo run --release -- loadgen --models olmoe-1b-7b --requests 48 \
   --rate 2000 --devices 2 --streams 2 --kv-pages 128 \
   --bench-out BENCH_timeline.json
 
+# Fault-path datapoint: the loadgen runs above are fault-free, so the
+# resilience KPIs they carry must come out exactly zero — proof that
+# the fault machinery costs nothing when --faults is disabled
+# (scripts/check_bench.py pins the same invariant in CI, DESIGN.md
+# s16).  Json prints 0.0 as "0", so the greps are exact.
+for f in BENCH_loadgen.json BENCH_timeline.json; do
+  grep -q '"shed_rate": 0,' "$f"
+  grep -q '"retry_rate": 0,' "$f"
+  grep -q '"deadline_miss_p99_us": 0,' "$f"
+done
+
 echo "refreshed BENCH_trace.json BENCH_loadgen.json BENCH_timeline.json"
